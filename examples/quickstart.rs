@@ -1,0 +1,72 @@
+//! Quickstart: the whole AL-DRAM flow on one DIMM in ~a minute.
+//!
+//!   1. generate a synthetic DIMM,
+//!   2. profile it (refresh sweep + timing sweeps) through the profiling
+//!      backend (PJRT artifact if built, native mirror otherwise),
+//!   3. build the temperature-indexed AL-DRAM timing table,
+//!   4. run a memory-intensive workload on the cycle-level simulator with
+//!      standard vs AL-DRAM timings and print the speedup.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use aldram::aldram::AlDram;
+use aldram::mem::{System, SystemConfig};
+use aldram::model::params;
+use aldram::population::generate_dimm;
+use aldram::profiler::profile_dimm;
+use aldram::runtime::{artifacts_dir, auto_backend};
+use aldram::timing::TimingParams;
+use aldram::workloads::by_name;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a DIMM (deterministic: dimm 3 is the Fig-2 representative module)
+    let cells = 512; // quickstart resolution; figures use 2048
+    let dimm = generate_dimm(3, cells, params());
+    println!("DIMM {:03} from {}", dimm.id, dimm.vendor);
+
+    // 2. profile
+    let mut backend = auto_backend(&artifacts_dir(), cells);
+    println!("profiling backend: {}", backend.name());
+    let profile = profile_dimm(backend.as_mut(), &dimm)?;
+    println!(
+        "max error-free refresh @85C: read {:.0} ms / write {:.0} ms",
+        profile.refresh85.module_max_read_ms,
+        profile.refresh85.module_max_write_ms
+    );
+    for tp in [&profile.at85, &profile.at55] {
+        let r = tp.param_reductions();
+        println!(
+            "@{:>2.0}C acceptable reductions: tRCD {:.1}% tRAS {:.1}% tWR {:.1}% tRP {:.1}%",
+            tp.temp_c, 100.0 * r[0], 100.0 * r[1], 100.0 * r[2], 100.0 * r[3]
+        );
+    }
+
+    // 3. the mechanism: a temperature-indexed timing table
+    let table = AlDram::from_profile(&profile, 10.0);
+    println!("AL-DRAM table ({} bins):", table.entries().len());
+    for e in table.entries() {
+        let t = &e.timings;
+        println!(
+            "  <= {:>5.1}C: tRCD {:5.2} tRAS {:5.2} tWR {:5.2} tRP {:5.2} ns",
+            e.max_c, t.trcd_ns, t.tras_ns, t.twr_ns, t.trp_ns
+        );
+    }
+
+    // 4. base vs AL-DRAM on the simulator
+    let w = by_name("mcf").expect("workload");
+    let cycles = 200_000;
+    let mut run = |timings: TimingParams| {
+        let cfg = SystemConfig { timings, ..SystemConfig::paper_default() };
+        let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("qs/{i}"))).collect();
+        let mut sys = System::new(&cfg, &wl);
+        let s = sys.run(cycles);
+        s.cores.iter().map(|c| c.ipc).sum::<f64>()
+    };
+    let base = run(TimingParams::ddr3_standard());
+    let fast = run(table.timings_for(55.0));
+    println!(
+        "4-core {} throughput: {:.3} -> {:.3} ipc  ({:+.1}% with AL-DRAM @55C)",
+        w.name, base, fast, 100.0 * (fast / base - 1.0)
+    );
+    Ok(())
+}

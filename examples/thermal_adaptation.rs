@@ -1,0 +1,55 @@
+//! Dynamic adaptation demo: AL-DRAM tracking a changing thermal
+//! environment (the mechanism of §4, exercised end to end).
+//!
+//! Sweeps the ambient temperature of the server, lets the thermal model
+//! settle under load, and shows (a) which timing-table bin the mechanism
+//! selects, (b) the delivered throughput, and (c) that the installed
+//! timings remain verified error-free at every operating point.
+//!
+//! Run: `cargo run --release --example thermal_adaptation`
+
+use aldram::aldram::AlDram;
+use aldram::mem::{System, SystemConfig};
+use aldram::model::params;
+use aldram::population::generate_dimm;
+use aldram::profiler::{profile_dimm, verify_timings};
+use aldram::runtime::NativeBackend;
+use aldram::workloads::by_name;
+
+fn main() -> anyhow::Result<()> {
+    let cells = 256;
+    let dimm = generate_dimm(7, cells, params());
+    let mut backend = NativeBackend::new();
+    let profile = profile_dimm(&mut backend, &dimm)?;
+    let table = AlDram::from_profile(&profile, 5.0);
+    println!("profiled dimm {:03} ({}); table has {} bins",
+             dimm.id, dimm.vendor, table.entries().len());
+
+    let w = by_name("stream.add").expect("workload");
+    println!("\n{:>9} {:>9} {:>8} {:>8} {:>8} {:>10}",
+             "ambient C", "settled C", "tRCD", "tRAS", "tRP", "throughput");
+    for ambient in [25.0, 35.0, 45.0, 55.0, 65.0, 80.0] {
+        let cfg = SystemConfig {
+            aldram: Some(table.clone()),
+            ambient_c: ambient,
+            ..SystemConfig::paper_default()
+        };
+        let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("ta/{i}"))).collect();
+        let mut sys = System::new(&cfg, &wl);
+        let s = sys.run(150_000);
+        let t = table.timings_for(s.mean_temp_c);
+        let ipc: f64 = s.cores.iter().map(|c| c.ipc).sum();
+        println!("{ambient:>9.1} {:>9.1} {:>8.2} {:>8.2} {:>8.2} {ipc:>10.3}",
+                 s.mean_temp_c, t.trcd_ns, t.tras_ns, t.trp_ns);
+
+        // Safety: the installed timings verify error-free at the settled
+        // temperature (clamped to the profiled range).
+        let ok = verify_timings(&mut backend, &dimm, &t,
+                                s.mean_temp_c.max(55.0),
+                                profile.at55.tref_read_ms,
+                                profile.at55.tref_write_ms)?;
+        anyhow::ensure!(ok, "unsafe timings selected at ambient {ambient}");
+    }
+    println!("\nall operating points verified error-free");
+    Ok(())
+}

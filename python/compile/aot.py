@@ -1,0 +1,109 @@
+"""AOT compiler: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not ``lowered.compile().serialize()`` and not the serialized
+``HloModuleProto``) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Artifacts:
+  profile_full.hlo.txt   profiling step, [8,8,2048] cells, K=64 combos
+  profile_small.hlo.txt  same graph at [8,8,256] for tests/CI
+  margin_full.hlo.txt    per-cell margins for one combo (repeatability)
+  ode_check.hlo.txt      Euler-integrated sense margins (ablation)
+  manifest.json          shapes + combo batch size for the rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .params import PARAMS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_profile(n_cells: int):
+    g = PARAMS.geometry
+    b, c, k = g["banks"], g["chips"], g["combo_batch"]
+    cell = _spec((b, c, n_cells))
+    return jax.jit(model.profile_step).lower(
+        cell, cell, cell, cell, cell, _spec((k, 6)))
+
+
+def lower_margin(n_cells: int):
+    g = PARAMS.geometry
+    b, c = g["banks"], g["chips"]
+    cell = _spec((b, c, n_cells))
+    return jax.jit(model.margin_step).lower(
+        cell, cell, cell, cell, cell, _spec((6,)))
+
+
+def lower_ode(n_cells: int):
+    cell = _spec((n_cells,))
+    return jax.jit(model.ode_step).lower(cell, cell, cell, _spec((8,)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    g = PARAMS.geometry
+    n_full = g["cells_per_chip_bank"]
+    n_small = g["cells_per_chip_bank_small"]
+    ode_n = 16384
+
+    jobs = {
+        "profile_full": (lower_profile(n_full),
+                         {"cells": n_full, "kind": "profile"}),
+        "profile_small": (lower_profile(n_small),
+                          {"cells": n_small, "kind": "profile"}),
+        "margin_full": (lower_margin(n_full),
+                        {"cells": n_full, "kind": "margin"}),
+        "ode_check": (lower_ode(ode_n), {"cells": ode_n, "kind": "ode"}),
+    }
+
+    manifest = {
+        "banks": g["banks"],
+        "chips": g["chips"],
+        "combo_batch": g["combo_batch"],
+        "artifacts": {},
+    }
+    for name, (lowered, meta) in jobs.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {**meta, "file": f"{name}.hlo.txt",
+                                       "hlo_bytes": len(text)}
+        print(f"wrote {path} ({len(text)} bytes)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

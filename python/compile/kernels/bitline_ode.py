@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: explicit-Euler bitline/sense-amp integration.
+
+High-fidelity cross-check for the closed-form sensing equation in
+``charge_math.sense_margin``. Instead of the analytic
+``amp * (1 - exp(-t/tau))`` development, this kernel integrates the
+first-order sense dynamics
+
+    dv/dt = (amp - v) / tau_s(T)
+
+with a fixed number of Euler steps over the [t_soff, tRCD] window (static
+step count, dynamic dt, so one compiled artifact serves every tRCD). The
+``repro ablate ode`` command and ``python/tests/test_ode.py`` compare the
+integrated margin against the analytic margin; agreement validates that the
+closed form used by the fast profiling path is not hiding integration
+error.
+
+Cells are tiled in VMEM blocks of ``BLOCK`` along a flat cell axis; the
+timing scalars arrive as a [8]-vector (trcd, trp, tref_ms, temp_c, pad...).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import PARAMS, ModelParams
+from . import charge_math as cm
+
+BLOCK = 1024
+N_STEPS = 128
+
+
+def _kernel(q0_ref, tau_s_ref, tau_p_ref, scal_ref, margin_ref,
+            *, p: ModelParams):
+    q0 = q0_ref[...]
+    tau_s = tau_s_ref[...]
+    tau_p = tau_p_ref[...]
+    trcd = scal_ref[0]
+    trp = scal_ref[1]
+    temp = scal_ref[3]
+
+    amp = p.a_max * jnp.minimum((q0 / p.q_knee) ** p.knee_pow, 1.0)
+    tau_t = tau_s * (1.0 + p.alpha_t_per_c * jnp.maximum(temp - 55.0, 0.0))
+    window = jnp.maximum(trcd - p.t_soff_ns, 0.0)
+    dt = window / N_STEPS
+
+    def step(_, v):
+        return v + dt * (amp - v) / tau_t
+
+    v = jax.lax.fori_loop(0, N_STEPS, step, jnp.zeros_like(q0))
+    off = cm.precharge_offset(tau_p, trp, p)
+    margin_ref[...] = v - p.g_off * off - p.v_read
+
+
+def sense_margin_ode(q0, tau_s, tau_p, scalars, p: ModelParams = PARAMS):
+    """q0/tau_s/tau_p [N] f32, scalars [8] f32 -> margin [N] f32."""
+    (n,) = q0.shape
+    assert n % BLOCK == 0, f"cell count {n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+
+    cell_spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    scal_spec = pl.BlockSpec((8,), lambda i: (0,))
+
+    kern = functools.partial(_kernel, p=p)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[cell_spec, cell_spec, cell_spec, scal_spec],
+        out_specs=cell_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(q0, tau_s, tau_p, scalars)
+
+
+def sense_margin_analytic(q0, tau_s, tau_p, scalars, p: ModelParams = PARAMS):
+    """Closed-form twin of ``sense_margin_ode`` for the comparison."""
+    trcd, trp, _tref, temp = scalars[0], scalars[1], scalars[2], scalars[3]
+    off = cm.precharge_offset(tau_p, trp, p)
+    return cm.sense_margin(q0, tau_s, trcd, off, temp, p)

@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: batched DRAM-cell test-chain evaluation.
+
+This is the profiling hot-spot. One invocation evaluates a batch of K
+timing combinations against a full DIMM's sampled cell population and
+reduces to per-(bank, chip) error counts and minimum margins.
+
+Tiling (see DESIGN.md §Hardware-Adaptation): the grid iterates over the
+(bank, chip) plane; each grid step holds one chip-bank's cell-parameter
+vectors (5 x N f32) resident in VMEM and loops over all K combos against
+them. This is the same reuse structure the FPGA testbed gets by re-running
+test sequences against the same physical cells: the expensive operand (the
+cell arrays) is loaded once per (bank, chip) and amortized over the whole
+combo batch. The combo table ([K, 6]) is tiny and replicated to every step.
+
+The kernel is elementwise-transcendental (VPU work, no MXU); on a real TPU
+the roofline is HBM-bandwidth on the cell-parameter streams. VMEM footprint
+per step: 5 * N * 4 B (N = 2048 -> 40 KiB) + outputs 4 * K * 4 B — far
+under VMEM, leaving room for double-buffering the next chip-bank's params.
+
+Must be lowered with ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import PARAMS, ModelParams
+from . import charge_math as cm
+from .ref import SENTINEL_MARGIN
+
+
+def _kernel(qcap_ref, tau_s_ref, tau_r_ref, tau_p_ref, lam_ref, combos_ref,
+            err_r_ref, err_w_ref, mmin_r_ref, mmin_w_ref,
+            *, n_combos: int, p: ModelParams):
+    """Kernel body for one (bank, chip) grid step.
+
+    Inputs are [1, 1, N] cell-parameter blocks plus the full [K, 6] combo
+    table; outputs are [K, 1, 1] per-combo reductions for this chip-bank.
+    """
+    qcap = qcap_ref[0, :, :]
+    tau_s = tau_s_ref[0, :, :]
+    tau_r = tau_r_ref[0, :, :]
+    tau_p = tau_p_ref[0, :, :]
+    lam85 = lam_ref[0, :, :]
+
+    def body(k, _):
+        trcd = combos_ref[k, 0]
+        tras = combos_ref[k, 1]
+        twr = combos_ref[k, 2]
+        trp = combos_ref[k, 3]
+        tref = combos_ref[k, 4]
+        temp = combos_ref[k, 5]
+
+        m_r, m_w = cm.test_margins(qcap, tau_s, tau_r, tau_p, lam85,
+                                   trcd, tras, twr, trp, tref, temp, p)
+        valid = temp >= 0.0
+        m_r = jnp.where(valid, m_r, SENTINEL_MARGIN)
+        m_w = jnp.where(valid, m_w, SENTINEL_MARGIN)
+
+        # reduce over the cell axis only: per-(combo, chip) outputs.
+        err_r_ref[k, 0, :] = jnp.sum((m_r < 0.0).astype(jnp.float32), axis=-1)
+        err_w_ref[k, 0, :] = jnp.sum((m_w < 0.0).astype(jnp.float32), axis=-1)
+        mmin_r_ref[k, 0, :] = jnp.min(m_r, axis=-1)
+        mmin_w_ref[k, 0, :] = jnp.min(m_w, axis=-1)
+        return 0
+
+    jax.lax.fori_loop(0, n_combos, body, 0)
+
+
+def profile_kernel(qcap, tau_s, tau_r, tau_p, lam85, combos,
+                   p: ModelParams = PARAMS):
+    """Pallas entry point; same contract as ``ref.profile_ref``.
+
+    cell params [B, C, N] f32, combos [K, 6] f32 ->
+    (err_r, err_w, mmin_r, mmin_w) each [K, B, C] f32.
+    """
+    b, c, n = qcap.shape
+    k = combos.shape[0]
+
+    # Perf (EXPERIMENTS.md §Perf, L1): grid over banks only, with the full
+    # (chips x cells) plane of one bank resident per step. Fewer grid
+    # steps (8 vs 64) at 8x wider vector work amortizes the per-step loop
+    # overhead of the interpret-lowered HLO while keeping the VMEM block
+    # at 5 params x C x N x 4 B (= 320 KiB at full resolution) — still
+    # comfortably double-bufferable on a real TPU.
+    cell_spec = pl.BlockSpec((1, c, n), lambda i: (i, 0, 0))
+    combo_spec = pl.BlockSpec((k, 6), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((k, 1, c), lambda i: (0, i, 0))
+    out_shape = jax.ShapeDtypeStruct((k, b, c), jnp.float32)
+
+    kern = functools.partial(_kernel, n_combos=k, p=p)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[cell_spec] * 5 + [combo_spec],
+        out_specs=[out_spec] * 4,
+        out_shape=[out_shape] * 4,
+        interpret=True,
+    )(qcap, tau_s, tau_r, tau_p, lam85, combos)

@@ -1,0 +1,124 @@
+"""Closed-form charge dynamics shared by the Pallas kernel and the oracle.
+
+These are the elementwise equations of DESIGN.md §4. They are written as
+plain jnp functions over arrays so that:
+
+  * ``ref.py`` can apply them directly (pure-jnp oracle),
+  * ``cell_charge.py`` can apply them to VMEM-resident blocks inside the
+    Pallas kernel body,
+  * the rust native mirror (rust/src/model/charge.rs) implements the exact
+    same expressions scalar-by-scalar.
+
+All times are in ns except refresh intervals (ms). Charge is normalized to
+VDD = 1. Temperatures are degC.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..params import ModelParams
+
+
+def leak_factor(lam85, temp_c, tref_ms, p: ModelParams):
+    """Multiplicative charge decay over one refresh window.
+
+    ``lam85`` is the per-cell leak rate (1/ms) at the 85degC reference;
+    leakage doubles every ``leak_doubling_c`` degC (retention halves), the
+    standard DRAM retention/temperature model [Liu+ ISCA'13].
+    """
+    lam = lam85 * 2.0 ** ((temp_c - p.t_ref_base_c) / p.leak_doubling_c)
+    return jnp.exp(-lam * tref_ms)
+
+
+def restore_read(qcap, tau_r, tras_ns, p: ModelParams):
+    """Cell charge at the end of a read access (ACT .. PRE window = tRAS).
+
+    After the sense amplifier latches (at ``t_rest0_ns``) the cell sits at
+    ``q_share`` of full charge and is restored exponentially toward its full
+    per-cell capacity ``qcap`` with time constant ``tau_r``. Cutting tRAS
+    truncates restoration — the paper's second charge/latency coupling.
+    """
+    w = jnp.maximum(tras_ns - p.t_rest0_ns, 0.0)
+    return qcap * (1.0 - (1.0 - p.q_share) * jnp.exp(-w / tau_r))
+
+
+def restore_write(qcap, tau_r, twr_ns, p: ModelParams):
+    """Cell charge at the end of a write-recovery window (tWR).
+
+    Writes drive the cell from the opposite rail, so restoration starts from
+    zero stored charge; ``kw_pattern`` derates the final level for the
+    worst-case coupling data pattern (writes are the harder test — Fig 2a).
+    """
+    tau_w = p.wr_tau_ratio * tau_r
+    return qcap * p.kw_pattern * (1.0 - jnp.exp(-(twr_ns + p.t_wr0_ns) / tau_w))
+
+
+def precharge_offset(tau_p, trp_ns, p: ModelParams):
+    """Residual bitline differential left by a truncated precharge (tRP).
+
+    The bitline equalizes toward VDD/2 exponentially; whatever offset is
+    left over subtracts from the *next* access's sense margin — the paper's
+    third coupling.
+    """
+    w = jnp.maximum(trp_ns - p.t_pre0_ns, 0.0)
+    return p.v_bl * jnp.exp(-w / tau_p)
+
+
+def sense_margin(q0, tau_s, trcd_ns, offset, temp_c, p: ModelParams):
+    """Sense margin after tRCD given initial charge ``q0``.
+
+    Charge sharing produces an initial differential whose amplitude
+    saturates at ``a_max`` once the cell holds more than ``q_knee`` charge
+    and collapses steeply (a ``knee_pow`` power law — the retention cliff)
+    below it. The cliff is what decouples the retention tail from sensing
+    speed and lets tRCD shrink even at a 200 ms refresh interval: a cell
+    either retains enough charge to sense at full amplitude or it fails
+    outright. The differential then develops exponentially with the
+    per-cell ``tau_s`` (slower when hot, via ``alpha_t_per_c``). A read is
+    correct iff the developed differential, less the residual precharge
+    offset, reaches ``v_read``. Margin >= 0 means PASS.
+    """
+    amp = p.a_max * jnp.minimum((q0 / p.q_knee) ** p.knee_pow, 1.0)
+    tau_t = tau_s * (1.0 + p.alpha_t_per_c * jnp.maximum(temp_c - 55.0, 0.0))
+    w = jnp.maximum(trcd_ns - p.t_soff_ns, 0.0)
+    v = amp * (1.0 - jnp.exp(-w / tau_t))
+    return v - p.g_off * offset - p.v_read
+
+
+def test_margins(qcap, tau_s, tau_r, tau_p, lam85,
+                 trcd, tras, twr, trp, tref_ms, temp_c, p: ModelParams):
+    """Full test chains for one timing combination; returns
+    ``(margin_read, margin_write)`` per cell (negative margin = error).
+
+    Read test (tRCD x tRAS x tRP): access with the combo's reduced
+    timings — truncated restoration (tRAS), leak over one refresh window,
+    sense with the combo's tRCD against the residual precharge offset of
+    the combo's tRP.
+
+    Write test (tRCD x tWR x tRP): write with the combo's reduced
+    timings, then *read back with standard timings* (the tester verifies
+    with safe timings — this is why the paper's write test tolerates far
+    more aggressive tRCD/tRP than the read test, Fig 3d vs 3c). In the
+    write test, tRCD gates the ACT -> WRITE driver-settle window and tRP
+    gates bitline equalization before the write; both are modeled as
+    linear slack terms scaled by ``k_lin`` (V/ns) since the write drivers
+    overpower the bitline rather than racing a sense threshold.
+    """
+    decay = leak_factor(lam85, temp_c, tref_ms, p)
+    tau_t = tau_s * (1.0 + p.alpha_t_per_c * jnp.maximum(temp_c - 55.0, 0.0))
+
+    # --- read test ---
+    off = precharge_offset(tau_p, trp, p)
+    q_r = restore_read(qcap, tau_r, tras, p) * decay
+    m_r = sense_margin(q_r, tau_s, trcd, off, temp_c, p)
+
+    # --- write test ---
+    q_w = restore_write(qcap, tau_r, twr, p) * decay
+    spec = p.spec
+    off_std = precharge_offset(tau_p, spec["trp_ns"], p)
+    m_w_rb = sense_margin(q_w, tau_s, spec["trcd_ns"], off_std, temp_c, p)
+    m_w_rcd = p.k_lin * (trcd - (p.t_soff_ns + p.c_rcd_w * tau_t))
+    m_w_rp = p.k_lin * (trp - (p.t_pre0_ns + p.c_rp_w * tau_p))
+    m_w = jnp.minimum(m_w_rb, jnp.minimum(m_w_rcd, m_w_rp))
+    return m_r, m_w

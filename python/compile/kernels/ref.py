@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the profiling kernel (no Pallas).
+
+This is the correctness reference: ``python/tests`` asserts the Pallas
+kernel (interpret mode) matches this implementation to float tolerance, and
+the rust native model is cross-checked against the AOT artifact that wraps
+the Pallas kernel. Shapes:
+
+  cell params : [B, C, N]  (banks x chips x cells-per-chip-per-bank)
+  combos      : [K, 6]     (trcd, tras, twr, trp, tref_ms, temp_c)
+
+A combo with ``temp_c < 0`` is a padding sentinel: it contributes zero
+errors and +inf margins.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..params import PARAMS, ModelParams
+from . import charge_math as cm
+
+SENTINEL_MARGIN = 1.0e9
+
+
+def profile_ref(qcap, tau_s, tau_r, tau_p, lam85, combos,
+                p: ModelParams = PARAMS):
+    """Evaluate every combo against every cell; reduce to per-(bank, chip).
+
+    Returns ``(err_r, err_w, mmin_r, mmin_w)`` each of shape [K, B, C]:
+    error counts (as f32) and minimum margins for the read test and the
+    write test.
+    """
+    # Broadcast combos over the cell axes: [K, 1, 1, 1] vs [B, C, N].
+    col = lambda j: combos[:, j][:, None, None, None]
+    trcd, tras, twr, trp, tref, temp = (col(j) for j in range(6))
+
+    m_r, m_w = cm.test_margins(
+        qcap[None], tau_s[None], tau_r[None], tau_p[None], lam85[None],
+        trcd, tras, twr, trp, tref, temp, p,
+    )
+
+    valid = (temp >= 0.0)
+    m_r = jnp.where(valid, m_r, SENTINEL_MARGIN)
+    m_w = jnp.where(valid, m_w, SENTINEL_MARGIN)
+
+    err_r = jnp.sum((m_r < 0.0).astype(jnp.float32), axis=-1)
+    err_w = jnp.sum((m_w < 0.0).astype(jnp.float32), axis=-1)
+    mmin_r = jnp.min(m_r, axis=-1)
+    mmin_w = jnp.min(m_w, axis=-1)
+    return err_r, err_w, mmin_r, mmin_w
+
+
+def margins_ref(qcap, tau_s, tau_r, tau_p, lam85, combo,
+                p: ModelParams = PARAMS):
+    """Per-cell margins for a single combo (no reduction) — used by the
+    repeatability analysis and the ODE cross-check."""
+    trcd, tras, twr, trp, tref, temp = (combo[j] for j in range(6))
+    return cm.test_margins(qcap, tau_s, tau_r, tau_p, lam85,
+                           trcd, tras, twr, trp, tref, temp, p)

@@ -1,0 +1,48 @@
+"""Layer-2 JAX model: the profiling step graph around the Pallas kernel.
+
+The L2 graph is deliberately thin for this paper — AL-DRAM's contribution
+is a characterization + a memory-controller mechanism (Layer 3), and the
+compute hot-spot is the per-cell test-chain evaluation (Layer 1). L2
+composes the kernel with the surrounding reductions that the rust
+coordinator wants per batch:
+
+  profile_step  : full per-(bank, chip) reductions + per-combo totals
+  margin_step   : per-cell margins for one combo (repeatability analysis)
+  ode_step      : Euler-integrated sense margins (analytic-model ablation)
+
+Everything here is lowered once by ``aot.py`` to HLO text and executed from
+rust via PJRT; python never runs on the profiling path at runtime.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import bitline_ode, cell_charge
+from .kernels import ref as kref
+from .params import PARAMS
+
+
+def profile_step(qcap, tau_s, tau_r, tau_p, lam85, combos):
+    """cell params [B,C,N], combos [K,6] ->
+    (err_r, err_w, mmin_r, mmin_w) [K,B,C] + (tot_r, tot_w) [K].
+
+    The per-combo totals are computed here (fused into the same HLO) so the
+    rust sweep loop can binary-search on a single scalar per combo without
+    re-reducing on the host.
+    """
+    err_r, err_w, mmin_r, mmin_w = cell_charge.profile_kernel(
+        qcap, tau_s, tau_r, tau_p, lam85, combos, PARAMS)
+    tot_r = jnp.sum(err_r, axis=(1, 2))
+    tot_w = jnp.sum(err_w, axis=(1, 2))
+    return err_r, err_w, mmin_r, mmin_w, tot_r, tot_w
+
+
+def margin_step(qcap, tau_s, tau_r, tau_p, lam85, combo):
+    """Per-cell read/write margins for a single combo [6] (no reduction)."""
+    return kref.margins_ref(qcap, tau_s, tau_r, tau_p, lam85, combo, PARAMS)
+
+
+def ode_step(q0, tau_s, tau_p, scalars):
+    """Euler-integrated sense margins (see kernels/bitline_ode.py)."""
+    return (bitline_ode.sense_margin_ode(q0, tau_s, tau_p, scalars, PARAMS),)

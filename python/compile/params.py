@@ -1,0 +1,81 @@
+"""Charge-model parameters, loaded from the repo-level ``model_params.json``.
+
+This module is the *only* python-side reader of the JSON so that the AOT
+artifacts and the rust native model (rust/src/model/params.rs) are guaranteed
+to agree on constants. The constants are baked into the lowered HLO at
+``make artifacts`` time; the rust side re-reads the JSON at runtime for its
+native mirror, and ``rust/tests/runtime_native_xcheck.rs`` asserts the two
+paths produce identical error counts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import List
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "model_params.json")
+
+
+@dataclass(frozen=True)
+class Vendor:
+    name: str
+    share: float
+    mu_ln_tau_s: float
+    lam_shift: float
+    tau_shift: float
+
+
+@dataclass(frozen=True)
+class ModelParams:
+    """Analytic charge-model constants (see DESIGN.md §4)."""
+
+    # --- sensing ---
+    t_soff_ns: float       # wordline dead time before differential develops
+    a_max: float           # saturated charge-sharing amplitude (V, VDD=1)
+    q_knee: float          # charge knee below which amplitude degrades
+    knee_pow: float        # cliff steepness of the amplitude below the knee
+    v_read_frac: float     # required amplification fraction of a_max
+    g_off: float           # gain of residual precharge offset into margin
+    alpha_t_per_c: float   # tau_s thermal coefficient (per degC above 55)
+    # --- restoration ---
+    q_share: float         # fractional charge right after sense latch
+    t_rest0_ns: float      # latch point; restoration starts here
+    # --- write ---
+    t_wr0_ns: float        # fixed write-path time before tWR window
+    wr_tau_ratio: float    # tau_w = ratio * tau_r
+    kw_pattern: float      # worst-case coupling derating of written charge
+    # --- precharge ---
+    v_bl: float            # bitline swing to equalize
+    t_pre0_ns: float       # precharge driver dead time
+    # --- leakage ---
+    leak_doubling_c: float # leak doubles every this many degC
+    t_ref_base_c: float    # temperature at which lam85 is specified
+    # --- write-access settle terms (write test) ---
+    c_rcd_w: float         # ACT->WRITE settle, in units of tau_s
+    c_rp_w: float          # pre-write equalization, in units of tau_p
+    k_lin: float           # linear-slack margin scale (V/ns)
+    # --- spec / floors / geometry (dicts straight from JSON) ---
+    spec: dict
+    floors: dict
+    geometry: dict
+    population: dict
+
+    @property
+    def v_read(self) -> float:
+        return self.v_read_frac * self.a_max
+
+    @property
+    def vendors(self) -> List[Vendor]:
+        return [Vendor(**v) for v in self.population["vendors"]]
+
+
+def load(path: str = _JSON_PATH) -> ModelParams:
+    with open(path) as f:
+        raw = json.load(f)
+    raw.pop("_comment", None)
+    return ModelParams(**raw)
+
+
+PARAMS = load()

@@ -1,0 +1,56 @@
+"""Shared fixtures: synthetic cell populations matching the rust generator's
+distributional shape (the exact rust RNG streams are cross-checked in
+rust/tests/, not here — here we only need representative parameter ranges).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile.params import PARAMS
+
+
+def make_cells(rng: np.random.Generator, shape):
+    """Draw per-cell parameters from the calibrated population families."""
+    pop = PARAMS.population
+    tau_s = rng.lognormal(1.61, pop["sigma_tau_s"], shape)
+    tau_r = pop["tau_r_ratio"] * tau_s * rng.lognormal(0.0, pop["sigma_tau_r"], shape)
+    tau_p = rng.lognormal(pop["mu_ln_tau_p"], pop["sigma_tau_p"], shape)
+    lam85 = rng.lognormal(pop["mu_ln_lam85"], pop["sigma_lam"], shape)
+    qcap = np.clip(rng.lognormal(0.0, pop["sigma_qcap"], shape),
+                   pop["qcap_clip_lo"], pop["qcap_clip_hi"])
+    to32 = lambda a: a.astype(np.float32)
+    return tuple(map(to32, (qcap, tau_s, tau_r, tau_p, lam85)))
+
+
+STD = [13.75, 35.0, 15.0, 13.75]  # tRCD, tRAS, tWR, tRP (DDR3 spec)
+
+
+def make_combos(k: int) -> np.ndarray:
+    """A representative spread of combos: std timings, reduced timings,
+    aggressive timings, varying refresh/temperature, plus one sentinel."""
+    rng = np.random.default_rng(1234)
+    combos = np.zeros((k, 6), dtype=np.float32)
+    for i in range(k):
+        combos[i, 0] = rng.uniform(5.0, 13.75)    # tRCD
+        combos[i, 1] = rng.uniform(16.25, 35.0)   # tRAS
+        combos[i, 2] = rng.uniform(5.0, 15.0)     # tWR
+        combos[i, 3] = rng.uniform(5.0, 13.75)    # tRP
+        combos[i, 4] = rng.uniform(16.0, 448.0)   # refresh interval (ms)
+        combos[i, 5] = rng.choice([45.0, 55.0, 70.0, 85.0])
+    combos[0] = STD + [64.0, 85.0]
+    combos[1] = STD + [64.0, 55.0]
+    combos[-1, 5] = -1.0  # sentinel / padding
+    return combos
+
+
+@pytest.fixture(scope="session")
+def small_pop():
+    rng = np.random.default_rng(42)
+    return make_cells(rng, (2, 2, 256))
+
+
+@pytest.fixture(scope="session")
+def combos16():
+    return make_combos(16)

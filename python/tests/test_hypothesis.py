@@ -1,0 +1,104 @@
+"""Property-based sweeps of the kernel: shapes, dtypes, and parameter
+ranges drawn by hypothesis; every draw must match the oracle and respect
+the model's monotonicity invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cell_charge, ref
+from compile.kernels import charge_math as cm
+from compile.params import PARAMS
+
+from .conftest import make_cells
+
+
+def _cells(seed, shape):
+    return make_cells(np.random.default_rng(seed), shape)
+
+
+combo_st = st.tuples(
+    st.floats(3.0, 13.75),    # tRCD
+    st.floats(12.0, 35.0),    # tRAS
+    st.floats(3.0, 15.0),     # tWR
+    st.floats(3.0, 13.75),    # tRP
+    st.floats(8.0, 512.0),    # tref (ms)
+    st.floats(25.0, 85.0),    # temp (C)
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    c=st.integers(1, 3),
+    n_pow=st.integers(4, 8),
+    combos=st.lists(combo_st, min_size=1, max_size=9),
+)
+def test_kernel_matches_ref_any_shape(seed, b, c, n_pow, combos):
+    cells = _cells(seed, (b, c, 2 ** n_pow))
+    carr = np.asarray(combos, dtype=np.float32)
+    args = tuple(jnp.asarray(a) for a in cells) + (jnp.asarray(carr),)
+    r = ref.profile_ref(*args)
+    k = cell_charge.profile_kernel(*args)
+    for a_, b_ in zip(r, k):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), combo=combo_st,
+       scale=st.floats(0.3, 0.95))
+def test_scaling_any_timing_down_never_helps(seed, combo, scale):
+    """Monotonicity: uniformly shrinking all four timing parameters can
+    only reduce (or keep) every cell's margin."""
+    cells = _cells(seed, (1, 1, 64))
+    full = np.asarray(combo, dtype=np.float32)
+    cut = full.copy()
+    cut[:4] *= scale
+    args = tuple(jnp.asarray(a) for a in cells)
+    m_full = ref.margins_ref(*args, jnp.asarray(full))
+    m_cut = ref.margins_ref(*args, jnp.asarray(cut))
+    for mf, mc in zip(m_full, m_cut):
+        assert (np.asarray(mc) <= np.asarray(mf) + 1e-6).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), combo=combo_st,
+       dtemp=st.floats(1.0, 40.0))
+def test_heating_never_helps(seed, combo, dtemp):
+    cells = _cells(seed, (1, 1, 64))
+    cool = np.asarray(combo, dtype=np.float32)
+    hot = cool.copy()
+    hot[5] = min(hot[5] + dtemp, 85.0)
+    args = tuple(jnp.asarray(a) for a in cells)
+    m_cool = ref.margins_ref(*args, jnp.asarray(cool))
+    m_hot = ref.margins_ref(*args, jnp.asarray(hot))
+    for mc, mh in zip(m_cool, m_hot):
+        assert (np.asarray(mh) <= np.asarray(mc) + 1e-6).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    qcap=st.floats(0.5, 1.2), tau_r=st.floats(0.5, 12.0),
+    tras=st.floats(0.0, 40.0), twr=st.floats(0.0, 20.0),
+)
+def test_restore_bounded_by_capacity(qcap, tau_r, tras, twr):
+    """Restoration can never exceed the cell's own full charge, and write
+    restoration can never exceed the pattern-derated level."""
+    p = PARAMS
+    q_r = float(cm.restore_read(jnp.float32(qcap), jnp.float32(tau_r),
+                                jnp.float32(tras), p))
+    q_w = float(cm.restore_write(jnp.float32(qcap), jnp.float32(tau_r),
+                                 jnp.float32(twr), p))
+    assert 0.0 <= q_r <= qcap + 1e-6
+    assert 0.0 <= q_w <= p.kw_pattern * qcap + 1e-6
+    assert q_r >= p.q_share * qcap - 1e-6  # latch floor
+
+
+@settings(max_examples=100, deadline=None)
+@given(tau_p=st.floats(0.5, 5.0), trp=st.floats(0.0, 20.0))
+def test_precharge_offset_bounded(tau_p, trp):
+    off = float(cm.precharge_offset(jnp.float32(tau_p), jnp.float32(trp),
+                                    PARAMS))
+    assert 0.0 <= off <= PARAMS.v_bl + 1e-6

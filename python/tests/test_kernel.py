@@ -1,0 +1,133 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import cell_charge, ref
+from compile.params import PARAMS
+
+from .conftest import STD, make_cells, make_combos
+
+
+def run_both(cells, combos):
+    args = tuple(jnp.asarray(a) for a in cells) + (jnp.asarray(combos),)
+    return ref.profile_ref(*args), cell_charge.profile_kernel(*args)
+
+
+class TestKernelVsRef:
+    def test_matches_oracle(self, small_pop, combos16):
+        r, k = run_both(small_pop, combos16)
+        for name, a, b in zip(["err_r", "err_w", "mmin_r", "mmin_w"], r, k):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6, err_msg=name)
+
+    def test_output_shapes(self, small_pop, combos16):
+        _, out = run_both(small_pop, combos16)
+        b, c, _ = small_pop[0].shape
+        k = combos16.shape[0]
+        for o in out:
+            assert o.shape == (k, b, c)
+
+    def test_error_counts_are_integral(self, small_pop, combos16):
+        _, (err_r, err_w, _, _) = run_both(small_pop, combos16)
+        for e in (err_r, err_w):
+            a = np.asarray(e)
+            assert np.all(a == np.round(a))
+            assert np.all(a >= 0)
+
+    def test_sentinel_combo_is_error_free(self, small_pop, combos16):
+        _, (err_r, err_w, mmin_r, mmin_w) = run_both(small_pop, combos16)
+        assert float(err_r[-1].sum()) == 0.0
+        assert float(err_w[-1].sum()) == 0.0
+        assert float(np.min(np.asarray(mmin_r)[-1])) == ref.SENTINEL_MARGIN
+        assert float(np.min(np.asarray(mmin_w)[-1])) == ref.SENTINEL_MARGIN
+
+
+class TestPhysicalInvariants:
+    """Direction-of-effect checks on the oracle (and, by the equivalence
+    test above, on the kernel): each timing parameter moves margins the way
+    §3 of the paper says it must."""
+
+    @pytest.fixture(scope="class")
+    def cells(self):
+        rng = np.random.default_rng(7)
+        return make_cells(rng, (1, 1, 512))
+
+    def margins(self, cells, trcd=13.75, tras=35.0, twr=15.0, trp=13.75,
+                tref=64.0, temp=55.0):
+        combo = jnp.asarray([trcd, tras, twr, trp, tref, temp], jnp.float32)
+        args = tuple(jnp.asarray(a) for a in cells) + (combo,)
+        m_r, m_w = ref.margins_ref(*args)
+        return np.asarray(m_r), np.asarray(m_w)
+
+    def test_std_timings_pass_at_85c(self, cells):
+        m_r, m_w = self.margins(cells, temp=85.0)
+        assert (m_r >= 0).all() and (m_w >= 0).all()
+
+    def test_lower_trcd_lowers_margin(self, cells):
+        hi, _ = self.margins(cells, trcd=13.75)
+        lo, _ = self.margins(cells, trcd=7.5)
+        assert (lo <= hi + 1e-7).all() and lo.mean() < hi.mean()
+
+    def test_lower_tras_lowers_read_margin_only(self, cells):
+        hi_r, hi_w = self.margins(cells, tras=35.0)
+        lo_r, lo_w = self.margins(cells, tras=15.0)
+        assert (lo_r <= hi_r + 1e-7).all()
+        np.testing.assert_allclose(lo_w, hi_w, rtol=1e-6)
+
+    def test_lower_twr_lowers_write_margin_only(self, cells):
+        hi_r, hi_w = self.margins(cells, twr=15.0)
+        lo_r, lo_w = self.margins(cells, twr=5.0)
+        assert (lo_w <= hi_w + 1e-7).all()
+        np.testing.assert_allclose(lo_r, hi_r, rtol=1e-6)
+
+    def test_lower_trp_lowers_margin(self, cells):
+        hi_r, _ = self.margins(cells, trp=13.75)
+        lo_r, _ = self.margins(cells, trp=5.0)
+        assert (lo_r <= hi_r + 1e-7).all() and lo_r.mean() < hi_r.mean()
+
+    def test_hotter_is_worse(self, cells):
+        cool_r, cool_w = self.margins(cells, temp=55.0, tref=200.0)
+        hot_r, hot_w = self.margins(cells, temp=85.0, tref=200.0)
+        assert (hot_r <= cool_r + 1e-7).all()
+        assert (hot_w <= cool_w + 1e-7).all()
+
+    def test_longer_refresh_is_worse(self, cells):
+        short_r, _ = self.margins(cells, tref=64.0, temp=85.0)
+        long_r, _ = self.margins(cells, tref=448.0, temp=85.0)
+        assert (long_r <= short_r + 1e-7).all()
+
+    def test_write_test_is_harder_than_read(self, cells):
+        # kw_pattern < 1 means the write chain stores less charge. Above
+        # the amplitude knee both saturate to identical margins, so the
+        # difference shows once leakage drags the (smaller) written-back
+        # charge below the knee first (Fig 2a: write max refresh interval
+        # 160 ms < read 208 ms). Stress with a long refresh interval and
+        # compare failure counts.
+        m_r, m_w = self.margins(cells, tref=560.0, temp=85.0)
+        assert (m_w <= m_r + 1e-7).all()
+        assert (m_w < 0).sum() > (m_r < 0).sum()
+
+    def test_refresh_latency_tradeoff(self, cells):
+        """§7.1: refreshing more often enables more latency reduction —
+        at aggressive timings, failures shrink as tref shrinks. (Margins of
+        knee-saturated cells are tref-invariant by design, so the signal is
+        in the leak-dominated tail: compare margins and counts at long
+        refresh intervals.)"""
+        aggressive = dict(trcd=10.0, tras=22.5, twr=7.5, trp=8.75, temp=85.0)
+        m200, w200 = self.margins(cells, tref=200.0, **aggressive)
+        m560, w560 = self.margins(cells, tref=560.0, **aggressive)
+        m900, w900 = self.margins(cells, tref=900.0, **aggressive)
+        assert (m560 <= m200 + 1e-7).all() and (m900 <= m560 + 1e-7).all()
+        fails = lambda m: int((m < 0).sum())
+        assert fails(w200) <= fails(w560) <= fails(w900)
+        assert fails(w900) > fails(w200)
+
+
+def test_large_batch_matches(small_pop):
+    combos = make_combos(PARAMS.geometry["combo_batch"])
+    r, k = run_both(small_pop, combos)
+    for a, b in zip(r, k):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

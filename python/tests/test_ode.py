@@ -1,0 +1,62 @@
+"""Euler-integrated bitline dynamics vs the analytic closed form.
+
+Validates that the fast profiling path's ``amp * (1 - exp(-t/tau))``
+sensing model is the true solution of the first-order sense dynamics the
+ODE kernel integrates (DESIGN.md §4 ablation)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitline_ode
+
+
+def _inputs(seed, n):
+    rng = np.random.default_rng(seed)
+    q0 = rng.uniform(0.05, 1.1, n).astype(np.float32)
+    tau_s = rng.lognormal(1.61, 0.05, n).astype(np.float32)
+    tau_p = rng.lognormal(0.615, 0.04, n).astype(np.float32)
+    return jnp.asarray(q0), jnp.asarray(tau_s), jnp.asarray(tau_p)
+
+
+def _scalars(trcd, trp, temp):
+    return jnp.asarray([trcd, trp, 64.0, temp, 0, 0, 0, 0], jnp.float32)
+
+
+@pytest.mark.parametrize("trcd,trp,temp", [
+    (13.75, 13.75, 55.0),
+    (13.75, 13.75, 85.0),
+    (8.75, 8.75, 55.0),
+    (5.0, 5.0, 85.0),
+])
+def test_ode_matches_analytic(trcd, trp, temp):
+    q0, tau_s, tau_p = _inputs(3, bitline_ode.BLOCK * 2)
+    s = _scalars(trcd, trp, temp)
+    ode = np.asarray(bitline_ode.sense_margin_ode(q0, tau_s, tau_p, s))
+    ana = np.asarray(bitline_ode.sense_margin_analytic(q0, tau_s, tau_p, s))
+    # Explicit Euler with 128 steps: first-order global error ~ dt.
+    np.testing.assert_allclose(ode, ana, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       trcd=st.floats(3.0, 13.75), trp=st.floats(3.0, 13.75),
+       temp=st.floats(25.0, 85.0))
+def test_ode_matches_analytic_hypothesis(seed, trcd, trp, temp):
+    q0, tau_s, tau_p = _inputs(seed, bitline_ode.BLOCK)
+    s = _scalars(trcd, trp, temp)
+    ode = np.asarray(bitline_ode.sense_margin_ode(q0, tau_s, tau_p, s))
+    ana = np.asarray(bitline_ode.sense_margin_analytic(q0, tau_s, tau_p, s))
+    np.testing.assert_allclose(ode, ana, atol=3e-3)
+
+
+def test_ode_sign_agreement():
+    """The pass/fail decision (the thing the profiler consumes) agrees
+    between the ODE and analytic paths away from the decision boundary."""
+    q0, tau_s, tau_p = _inputs(11, bitline_ode.BLOCK * 4)
+    s = _scalars(9.0, 9.0, 85.0)
+    ode = np.asarray(bitline_ode.sense_margin_ode(q0, tau_s, tau_p, s))
+    ana = np.asarray(bitline_ode.sense_margin_analytic(q0, tau_s, tau_p, s))
+    boundary = np.abs(ana) < 5e-3
+    assert (np.sign(ode[~boundary]) == np.sign(ana[~boundary])).all()

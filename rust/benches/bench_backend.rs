@@ -1,0 +1,61 @@
+//! Backend benchmarks: profiling throughput of the PJRT artifact vs the
+//! native mirror (the L1/L2 hot path), at both artifact resolutions and
+//! several combo-batch sizes. These are the numbers behind EXPERIMENTS.md
+//! §Perf (L1/L2).
+
+use aldram::model::{params, Combo};
+use aldram::population::generate_dimm;
+use aldram::runtime::{artifacts_dir, NativeBackend, PjrtBackend,
+                      ProfilingBackend};
+use aldram::util::bench::Bench;
+
+fn combos(n: usize) -> Vec<Combo> {
+    (0..n)
+        .map(|i| Combo {
+            trcd: 13.75 - (i % 7) as f32 * 1.25,
+            tras: 35.0 - (i % 11) as f32 * 1.25,
+            twr: 15.0 - (i % 8) as f32 * 1.25,
+            trp: 13.75 - (i % 7) as f32 * 1.25,
+            tref_ms: 64.0 + (i % 48) as f32 * 8.0,
+            temp_c: if i % 2 == 0 { 85.0 } else { 55.0 },
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::from_env("backend");
+
+    for cells in [256usize, 2048] {
+        let d = generate_dimm(0, cells, params());
+        let batch = combos(64);
+
+        let mut native = NativeBackend::new();
+        b.bench(&format!("native/cells{cells}/combos64"), || {
+            native.profile(&d.arrays, &batch).unwrap().tot_r[0]
+        });
+
+        match PjrtBackend::for_cells(&artifacts_dir(), cells) {
+            Ok(mut pjrt) => {
+                b.bench(&format!("pjrt/cells{cells}/combos64"), || {
+                    pjrt.profile(&d.arrays, &batch).unwrap().tot_r[0]
+                });
+                let one = combos(1);
+                b.bench(&format!("pjrt/cells{cells}/combos1"), || {
+                    pjrt.profile(&d.arrays, &one).unwrap().tot_r[0]
+                });
+                let big = combos(256);
+                b.bench(&format!("pjrt/cells{cells}/combos256"), || {
+                    pjrt.profile(&d.arrays, &big).unwrap().tot_r[0]
+                });
+            }
+            Err(e) => eprintln!("skipping pjrt at {cells} cells: {e}"),
+        }
+    }
+
+    // Population generation (the other substrate on the campaign path).
+    b.bench("population/generate_dimm_2048", || {
+        generate_dimm(9, 2048, params()).arrays.qcap[0]
+    });
+
+    b.finish();
+}

@@ -1,0 +1,63 @@
+//! L3 hot-path benchmarks: the memory-controller scheduling loop and the
+//! full-system step, per workload pattern and timing set. EXPERIMENTS.md
+//! §Perf (L3) tracks the cmd/s and cycles/s figures here.
+
+use aldram::mem::{AddrMap, Controller, Request, RowPolicy, System,
+                  SystemConfig};
+use aldram::timing::TimingParams;
+use aldram::util::bench::Bench;
+use aldram::workloads::by_name;
+
+/// Drive one controller for `cycles` with synthetic open-loop traffic.
+fn controller_run(cycles: u64, stride: u64, timings: TimingParams) -> u64 {
+    let mut ctrl = Controller::new(AddrMap::ddr3_2gb(1), timings,
+                                   RowPolicy::Open);
+    let mut id = 0u64;
+    for now in 0..cycles {
+        if now % 3 == 0 {
+            id += 1;
+            ctrl.enqueue(Request {
+                id,
+                core: 0,
+                addr: (id * stride) % (1 << 30) & !63,
+                is_write: id % 4 == 0,
+                arrival: now,
+            });
+        }
+        ctrl.tick(now);
+    }
+    ctrl.stats.reads_done + ctrl.stats.writes_done
+}
+
+fn main() {
+    let mut b = Bench::from_env("controller");
+    let std = TimingParams::ddr3_standard();
+    let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+
+    const CYC: u64 = 10_000;
+    b.bench_batch("ctrl/streaming/std", CYC, || {
+        controller_run(CYC, 64, std)
+    });
+    b.bench_batch("ctrl/streaming/aldram", CYC, || {
+        controller_run(CYC, 64, fast)
+    });
+    b.bench_batch("ctrl/row-conflict/std", CYC, || {
+        controller_run(CYC, 65536, std)
+    });
+    b.bench_batch("ctrl/row-conflict/aldram", CYC, || {
+        controller_run(CYC, 65536, fast)
+    });
+
+    // Full system step rate (4 cores, 1 channel) per workload family.
+    for name in ["stream.copy", "gups", "mcf", "povray"] {
+        let w = by_name(name).unwrap();
+        let cfg = SystemConfig::paper_default();
+        let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("b/{i}"))).collect();
+        let mut sys = System::new(&cfg, &wl);
+        b.bench_batch(&format!("system/4core/{name}"), 2_000, || {
+            sys.run(2_000).cycles
+        });
+    }
+
+    b.finish();
+}

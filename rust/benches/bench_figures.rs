@@ -1,0 +1,81 @@
+//! One benchmark per paper table/figure: times the full regeneration
+//! pipeline at reduced scale (the full-scale runs are the `repro figure`
+//! commands recorded in EXPERIMENTS.md). Keeps the figure pipelines
+//! regression-tested for performance.
+
+use std::path::PathBuf;
+
+use aldram::eval::PAPER_REDUCTIONS_55C;
+use aldram::figures::{calibrate, fig2};
+use aldram::model::params;
+use aldram::population::generate_dimm;
+use aldram::profiler::{profile_dimm, profile_refresh, sweep, TestKind};
+use aldram::runtime::NativeBackend;
+use aldram::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("figures").with_window(200, 1500);
+    let out = PathBuf::from(std::env::temp_dir().join("aldram_bench_fig"));
+
+    // Fig 2a: refresh sweep on the representative module.
+    let rep = generate_dimm(fig2::REPRESENTATIVE_DIMM, 256, params());
+    let mut nb = NativeBackend::new();
+    b.bench("fig2a/refresh_sweep/256c", || {
+        profile_refresh(&mut nb, &rep.arrays, 85.0).unwrap().module_max_read_ms
+    });
+
+    // Fig 2b/2c: one timing sweep each (wave bisection).
+    b.bench("fig2b/read_sweep/256c", || {
+        sweep(&mut nb, &rep.arrays, TestKind::Read, 55.0, 200.0)
+            .unwrap().best.unwrap().sum_ns
+    });
+    b.bench("fig2c/write_sweep/256c", || {
+        sweep(&mut nb, &rep.arrays, TestKind::Write, 55.0, 152.0)
+            .unwrap().best.unwrap().sum_ns
+    });
+
+    // Fig 3: one full-DIMM profile (the per-module unit of the campaign).
+    let d = generate_dimm(11, 256, params());
+    b.bench("fig3/profile_dimm/256c", || {
+        profile_dimm(&mut nb, &d).unwrap().at55.read.sum_ns
+    });
+
+    // Fig 3 population slice end to end (campaign kernel).
+    b.bench("fig3/campaign_4dimms/64c", || {
+        calibrate::run(&mut nb, 4, 64).unwrap().summary.read_reduction_55
+    });
+
+    // Fig 4: one workload speedup measurement at reduced cycles.
+    b.bench("fig4/one_workload_speedup/20kcyc", || {
+        let r = aldram::eval::fig4(20_000, 1, PAPER_REDUCTIONS_55C);
+        let _ = &out;
+        r.per_workload.len()
+    });
+
+    // §7.6 repeatability battery.
+    b.bench("s7.6/repeatability/256c", || {
+        aldram::profiler::repeatability(
+            &d.arrays,
+            &aldram::model::Combo { trcd: 8.75, tras: 20.0, twr: 6.25,
+                                    trp: 7.5, tref_ms: 448.0, temp_c: 85.0 },
+            5,
+        )
+        .unwrap()
+        .base_failures
+    });
+
+    // §8.4 power model.
+    let pi = aldram::power::PowerInputs {
+        cycles: 1_000_000, tck_ns: 1.25, n_act: 10_000, n_read: 60_000,
+        n_write: 20_000, n_refresh: 160, open_bank_cycles: 3_000_000,
+        banks: 8, tras_cycles: 28, trfc_cycles: 128, burst_cycles: 4,
+    };
+    let spec = aldram::power::IddSpec::default();
+    b.bench_batch("s8.4/power_model", 1000, || {
+        (0..1000)
+            .map(|_| aldram::power::power(&pi, &spec).total_w())
+            .sum::<f64>()
+    });
+
+    b.finish();
+}

@@ -1,0 +1,146 @@
+//! The AL-DRAM mechanism (the paper's §4): per-DIMM, temperature-indexed
+//! timing tables in the memory controller, populated from profiling and
+//! consulted at refresh-epoch granularity. No DRAM-side changes — only
+//! multiple timing sets plus a temperature input, exactly the hardware
+//! cost the paper claims.
+
+pub mod thermal;
+
+pub use thermal::ThermalModel;
+
+use crate::profiler::DimmProfile;
+use crate::timing::TimingParams;
+
+/// One table row: use `timings` when the DIMM temperature is <= `max_c`.
+#[derive(Debug, Clone)]
+pub struct TableEntry {
+    pub max_c: f64,
+    pub timings: TimingParams,
+}
+
+/// Temperature-indexed timing table for one DIMM.
+#[derive(Debug, Clone)]
+pub struct AlDram {
+    /// Ascending by `max_c`; the last entry is the standard worst-case set
+    /// (the fallback above the highest profiled temperature).
+    entries: Vec<TableEntry>,
+    /// Guardband added to the measured temperature before lookup (degC) —
+    /// conservative against sensor error and intra-DIMM gradients.
+    pub guard_c: f64,
+}
+
+impl AlDram {
+    /// Build from a profile: entries at the profiled temperatures (55degC
+    /// and 85degC), with linear interpolation bins every `bin_c` degrees
+    /// in between (interpolating *toward the conservative side*: each
+    /// bin uses the timings valid at its upper edge).
+    pub fn from_profile(p: &DimmProfile, bin_c: f64) -> Self {
+        let t55 = p.at55.combined();
+        let t85 = p.at85.combined();
+        let mut entries = Vec::new();
+        entries.push(TableEntry { max_c: 55.0, timings: t55 });
+        let mut temp = 55.0 + bin_c;
+        while temp < 85.0 - 1e-9 {
+            let f = (temp - 55.0) / 30.0;
+            let lerp = |a: f64, b: f64| a + (b - a) * f;
+            entries.push(TableEntry {
+                max_c: temp,
+                timings: t55.with_core(
+                    lerp(t55.trcd_ns, t85.trcd_ns),
+                    lerp(t55.tras_ns, t85.tras_ns),
+                    lerp(t55.twr_ns, t85.twr_ns),
+                    lerp(t55.trp_ns, t85.trp_ns),
+                ),
+            });
+            temp += bin_c;
+        }
+        entries.push(TableEntry { max_c: 85.0, timings: t85 });
+        // Above 85degC: the standard worst-case set.
+        entries.push(TableEntry {
+            max_c: f64::INFINITY,
+            timings: TimingParams::ddr3_standard(),
+        });
+        AlDram { entries, guard_c: 2.0 }
+    }
+
+    /// A fixed-operating-point table (the paper's Fig-4 evaluation: one
+    /// reduced set installed for 55degC operation).
+    pub fn fixed(timings: TimingParams) -> Self {
+        AlDram {
+            entries: vec![TableEntry { max_c: f64::INFINITY, timings }],
+            guard_c: 0.0,
+        }
+    }
+
+    /// Timing set for the current DIMM temperature.
+    pub fn timings_for(&self, temp_c: f64) -> TimingParams {
+        let t = temp_c + self.guard_c;
+        for e in &self.entries {
+            if t <= e.max_c {
+                return e.timings;
+            }
+        }
+        self.entries.last().expect("table non-empty").timings
+    }
+
+    pub fn entries(&self) -> &[TableEntry] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::profiler::profile_dimm;
+    use crate::runtime::NativeBackend;
+
+    fn table() -> AlDram {
+        let d = generate_dimm(1, 64, params());
+        let mut b = NativeBackend::new();
+        let p = profile_dimm(&mut b, &d).unwrap();
+        AlDram::from_profile(&p, 10.0)
+    }
+
+    #[test]
+    fn cooler_bins_are_no_slower() {
+        let t = table();
+        let a = t.timings_for(40.0);
+        let b = t.timings_for(84.0);
+        assert!(a.trcd_ns <= b.trcd_ns + 1e-9);
+        assert!(a.tras_ns <= b.tras_ns + 1e-9);
+        assert!(a.twr_ns <= b.twr_ns + 1e-9);
+        assert!(a.trp_ns <= b.trp_ns + 1e-9);
+    }
+
+    #[test]
+    fn above_85_falls_back_to_standard() {
+        let t = table();
+        let hot = t.timings_for(95.0);
+        let std = TimingParams::ddr3_standard();
+        assert_eq!(hot, std);
+    }
+
+    #[test]
+    fn guardband_is_conservative() {
+        let t = table();
+        // Just under a bin edge with the guardband must select the bin
+        // above (slower timings), never the one below.
+        let at_edge = t.timings_for(55.0 - t.guard_c / 2.0);
+        let below = t.timings_for(40.0);
+        assert!(at_edge.trcd_ns >= below.trcd_ns - 1e-9);
+    }
+
+    #[test]
+    fn all_bins_are_at_least_as_fast_as_standard() {
+        let t = table();
+        let std = TimingParams::ddr3_standard();
+        for e in t.entries() {
+            assert!(e.timings.trcd_ns <= std.trcd_ns + 1e-9);
+            assert!(e.timings.tras_ns <= std.tras_ns + 1e-9);
+            assert!(e.timings.twr_ns <= std.twr_ns + 1e-9);
+            assert!(e.timings.trp_ns <= std.trp_ns + 1e-9);
+        }
+    }
+}

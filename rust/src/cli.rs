@@ -1,0 +1,90 @@
+//! Hand-rolled CLI (the offline mirror has no clap). Flags are
+//! `--name value`; the first free token is the subcommand, subsequent free
+//! tokens are its arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn cmd(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn sub(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.flags.get(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{name} expects a {}", std::any::type_name::<T>())
+            }),
+            None => default,
+        }
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommands_and_flags() {
+        let a = parse("figure fig2a --cells 256 --backend native --verbose");
+        assert_eq!(a.cmd(), Some("figure"));
+        assert_eq!(a.sub(1), Some("fig2a"));
+        assert_eq!(a.get::<usize>("cells", 0), 256);
+        assert_eq!(a.str("backend", "pjrt"), "native");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("calibrate");
+        assert_eq!(a.get::<usize>("dimms", 30), 30);
+        assert_eq!(a.str("out", "results"), "results");
+    }
+}

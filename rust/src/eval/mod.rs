@@ -1,0 +1,414 @@
+//! System-level evaluation harnesses: Fig 4 (real-system speedups), the
+//! §8.4 sensitivity and power analyses, and the §6 long-run stress test.
+
+use crate::aldram::AlDram;
+use crate::mem::{RowPolicy, System, SystemConfig, SystemStats};
+use crate::power::{power, IddSpec};
+use crate::timing::TimingParams;
+use crate::util;
+use crate::workloads::{suite, WorkloadSpec};
+
+/// The paper's evaluated AL-DRAM operating point at 55degC: the minimum
+/// timing values that were error-free for every module (§6).
+pub const PAPER_REDUCTIONS_55C: [f64; 4] = [0.27, 0.32, 0.33, 0.18];
+
+/// How many cores the "multi-core" configuration runs (paper: multi-core
+/// runs of the same application / multi-threaded workloads).
+pub const MULTI_CORES: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct WorkloadResult {
+    pub name: String,
+    pub mpki: f64,
+    pub intensive: bool,
+    pub single_speedup: f64,
+    pub single_stddev: f64,
+    pub multi_speedup: f64,
+    pub multi_stddev: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig4Result {
+    pub per_workload: Vec<WorkloadResult>,
+    pub gmean_intensive_multi: f64,
+    pub gmean_nonintensive_multi: f64,
+    pub gmean_intensive_single: f64,
+    pub gmean_nonintensive_single: f64,
+    pub mean_all_multi: f64,
+    pub max_multi: f64,
+}
+
+fn throughput(stats: &SystemStats) -> f64 {
+    stats.cores.iter().map(|c| c.ipc).sum::<f64>()
+}
+
+fn run_config(w: &WorkloadSpec, cores: usize, timings: TimingParams,
+              cycles: u64, rep: usize, cfg_base: &SystemConfig) -> f64 {
+    let cfg = SystemConfig { timings, ..cfg_base.clone() };
+    let wl: Vec<(WorkloadSpec, String)> = (0..cores)
+        .map(|c| (w.clone(), format!("rep{rep}/core{c}")))
+        .collect();
+    let mut sys = System::new(&cfg, &wl);
+    throughput(&sys.run(cycles))
+}
+
+/// Speedup of `fast` timings over `base` timings, averaged over reps;
+/// returns (mean, stddev).
+fn speedup(w: &WorkloadSpec, cores: usize, base: TimingParams,
+           fast: TimingParams, cycles: u64, reps: usize,
+           cfg: &SystemConfig) -> (f64, f64) {
+    let ratios: Vec<f64> = (0..reps)
+        .map(|rep| {
+            let b = run_config(w, cores, base, cycles, rep, cfg);
+            let f = run_config(w, cores, fast, cycles, rep, cfg);
+            f / b
+        })
+        .collect();
+    (util::mean(&ratios), util::stddev(&ratios))
+}
+
+/// Reproduce Fig 4: per-workload single-core and multi-core speedups of
+/// AL-DRAM's 55degC timings over the DDR3 standard.
+pub fn fig4(cycles: u64, reps: usize, reductions: [f64; 4]) -> Fig4Result {
+    let base = TimingParams::ddr3_standard();
+    let fast = base.reduced(reductions[0], reductions[1], reductions[2],
+                            reductions[3]);
+    let cfg = SystemConfig::paper_default();
+
+    let mut per_workload = Vec::new();
+    for w in suite() {
+        let (s1, e1) = speedup(&w, 1, base, fast, cycles, reps, &cfg);
+        let (sm, em) = speedup(&w, MULTI_CORES, base, fast, cycles, reps, &cfg);
+        per_workload.push(WorkloadResult {
+            name: w.name.to_string(),
+            mpki: w.mpki,
+            intensive: w.memory_intensive(),
+            single_speedup: s1,
+            single_stddev: e1,
+            multi_speedup: sm,
+            multi_stddev: em,
+        });
+    }
+
+    let group = |intensive: bool, multi: bool| -> f64 {
+        let v: Vec<f64> = per_workload
+            .iter()
+            .filter(|r| r.intensive == intensive)
+            .map(|r| if multi { r.multi_speedup } else { r.single_speedup })
+            .collect();
+        util::geomean(&v)
+    };
+
+    Fig4Result {
+        gmean_intensive_multi: group(true, true),
+        gmean_nonintensive_multi: group(false, true),
+        gmean_intensive_single: group(true, false),
+        gmean_nonintensive_single: group(false, false),
+        mean_all_multi: util::mean(
+            &per_workload.iter().map(|r| r.multi_speedup).collect::<Vec<_>>(),
+        ),
+        max_multi: per_workload
+            .iter()
+            .map(|r| r.multi_speedup)
+            .fold(0.0, f64::max),
+        per_workload,
+    }
+}
+
+// ---------------------------------------------------------------------
+// §8.4: sensitivity to channels / ranks / row policy.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SensitivityRow {
+    pub label: String,
+    pub channels: usize,
+    pub ranks: usize,
+    pub policy: RowPolicy,
+    pub gmean_speedup: f64,
+}
+
+/// AL-DRAM speedup (memory-intensive gmean, multi-core) across system
+/// configurations — the paper's claim is that it helps in *all* of them.
+pub fn sensitivity(cycles: u64, reductions: [f64; 4]) -> Vec<SensitivityRow> {
+    let base = TimingParams::ddr3_standard();
+    let fast = base.reduced(reductions[0], reductions[1], reductions[2],
+                            reductions[3]);
+    let picks: Vec<WorkloadSpec> = suite()
+        .into_iter()
+        .filter(|w| w.memory_intensive())
+        .take(6)
+        .collect();
+
+    let mut rows = Vec::new();
+    for (channels, ranks, policy, label) in [
+        (1, 1, RowPolicy::Open, "1ch/1rank/open"),
+        (2, 1, RowPolicy::Open, "2ch/1rank/open"),
+        (1, 2, RowPolicy::Open, "1ch/2rank/open"),
+        (2, 2, RowPolicy::Open, "2ch/2rank/open"),
+        (1, 1, RowPolicy::Closed, "1ch/1rank/closed"),
+    ] {
+        let cfg = SystemConfig {
+            channels,
+            ranks_per_channel: ranks,
+            policy,
+            ..SystemConfig::paper_default()
+        };
+        let speedups: Vec<f64> = picks
+            .iter()
+            .map(|w| {
+                let (s, _) = speedup(w, MULTI_CORES, base, fast, cycles, 1,
+                                     &cfg);
+                s
+            })
+            .collect();
+        rows.push(SensitivityRow {
+            label: label.to_string(),
+            channels,
+            ranks,
+            policy,
+            gmean_speedup: util::geomean(&speedups),
+        });
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// §8.4: heterogeneous multi-programmed workloads.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct HeteroResult {
+    pub mix: Vec<String>,
+    /// Weighted speedup: mean over cores of per-core IPC ratios (the
+    /// standard multi-programmed metric — insensitive to one core
+    /// dominating the throughput sum).
+    pub weighted_speedup: f64,
+}
+
+/// §8.4: random 4-application mixes drawn across intensity classes.
+/// AL-DRAM must help every mix (no workload pays for another's gain).
+pub fn hetero_eval(cycles: u64, n_mixes: usize, reductions: [f64; 4])
+                   -> Vec<HeteroResult> {
+    use crate::util::rng::Rng;
+    let base_t = TimingParams::ddr3_standard();
+    let fast_t = base_t.reduced(reductions[0], reductions[1], reductions[2],
+                                reductions[3]);
+    let pool = suite();
+    let cfg = SystemConfig::paper_default();
+    let mut rng = Rng::from_label("hetero-mixes");
+
+    (0..n_mixes)
+        .map(|mi| {
+            // 2 intensive + 2 drawn from the whole pool: the paper's mixes
+            // keep memory pressure while mixing intensity classes.
+            let mut mix: Vec<WorkloadSpec> = Vec::new();
+            let intensive: Vec<&WorkloadSpec> =
+                pool.iter().filter(|w| w.memory_intensive()).collect();
+            mix.push((*rng.choose(&intensive)).clone());
+            mix.push((*rng.choose(&intensive)).clone());
+            mix.push(rng.choose(&pool).clone());
+            mix.push(rng.choose(&pool).clone());
+
+            let run = |t: TimingParams| -> Vec<f64> {
+                let c = SystemConfig { timings: t, ..cfg.clone() };
+                let wl: Vec<_> = mix
+                    .iter()
+                    .enumerate()
+                    .map(|(i, w)| (w.clone(), format!("hx{mi}/{i}")))
+                    .collect();
+                let mut sys = System::new(&c, &wl);
+                sys.run(cycles).cores.iter().map(|c| c.ipc).collect()
+            };
+            let base = run(base_t);
+            let fast = run(fast_t);
+            let ws = util::mean(
+                &base
+                    .iter()
+                    .zip(&fast)
+                    .map(|(b, f)| f / b)
+                    .collect::<Vec<_>>(),
+            );
+            HeteroResult {
+                mix: mix.iter().map(|w| w.name.to_string()).collect(),
+                weighted_speedup: ws,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// §8.4: DRAM power.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct PowerResult {
+    pub name: String,
+    pub base_w: f64,
+    pub aldram_w: f64,
+    /// Energy to complete the same instruction count.
+    pub base_j_per_ginst: f64,
+    pub aldram_j_per_ginst: f64,
+}
+
+/// DRAM power comparison on memory-intensive multi-core runs. The paper's
+/// §8.4 reports 5.8% average DRAM power reduction.
+pub fn power_eval(cycles: u64, reductions: [f64; 4]) -> Vec<PowerResult> {
+    let base_t = TimingParams::ddr3_standard();
+    let fast_t = base_t.reduced(reductions[0], reductions[1], reductions[2],
+                                reductions[3]);
+    let spec = IddSpec::default();
+    let cfg = SystemConfig::paper_default();
+
+    let mut out = Vec::new();
+    for w in suite().into_iter().filter(|w| w.memory_intensive()).take(8) {
+        let run = |t: TimingParams| -> (f64, f64) {
+            let c = SystemConfig { timings: t, ..cfg.clone() };
+            let wl: Vec<_> = (0..MULTI_CORES)
+                .map(|i| (w.clone(), format!("pw/{i}")))
+                .collect();
+            let mut sys = System::new(&c, &wl);
+            let stats = sys.run(cycles);
+            let watts: f64 = stats
+                .power_inputs
+                .iter()
+                .map(|pi| power(pi, &spec).total_w())
+                .sum();
+            let ginsts: f64 = stats.cores.iter()
+                .map(|c| c.insts as f64)
+                .sum::<f64>() / 1e9;
+            let joules = watts * stats.cycles as f64 * 1.25e-9;
+            (watts, joules / ginsts.max(1e-12))
+        };
+        let (bw, bj) = run(base_t);
+        let (aw, aj) = run(fast_t);
+        out.push(PowerResult {
+            name: w.name.to_string(),
+            base_w: bw,
+            aldram_w: aw,
+            base_j_per_ginst: bj,
+            aldram_j_per_ginst: aj,
+        });
+    }
+    out
+}
+
+/// Average fractional energy-per-work reduction across the power rows.
+pub fn power_saving(rows: &[PowerResult]) -> f64 {
+    util::mean(
+        &rows
+            .iter()
+            .map(|r| 1.0 - r.aldram_j_per_ginst / r.base_j_per_ginst)
+            .collect::<Vec<_>>(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// §6: long-run stress test (scaled stand-in for the 33-day run).
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct StressResult {
+    pub epochs: u64,
+    pub errors: u64,
+    pub min_margin: f32,
+    pub temp_range: (f64, f64),
+}
+
+/// Run the AL-DRAM-managed system for `epochs` verification epochs; at
+/// every epoch the installed timing set is re-verified against the DIMM's
+/// charge model at the *current* thermal-model temperature. This is the
+/// simulated analogue of "33 days without interruption, no errors".
+pub fn stress(dimm_id: usize, epochs: u64, cycles_per_epoch: u64)
+              -> anyhow::Result<StressResult> {
+    use crate::model::{params, Combo};
+    use crate::population::generate_dimm;
+    use crate::profiler::profile_dimm;
+    use crate::runtime::NativeBackend;
+
+    let d = generate_dimm(dimm_id, 128, params());
+    let mut backend = NativeBackend::new();
+    let prof = profile_dimm(&mut backend, &d)?;
+    let table = AlDram::from_profile(&prof, 10.0);
+
+    let w = crate::workloads::by_name("stream.copy").unwrap();
+    let cfg = SystemConfig {
+        aldram: Some(table.clone()),
+        ..SystemConfig::paper_default()
+    };
+    let wl: Vec<_> = (0..MULTI_CORES)
+        .map(|i| (w.clone(), format!("stress/{i}")))
+        .collect();
+    let mut sys = System::new(&cfg, &wl);
+
+    let mut errors = 0u64;
+    let mut min_margin = f32::INFINITY;
+    let mut tmin = f64::MAX;
+    let mut tmax = f64::MIN;
+    for _ in 0..epochs {
+        let stats = sys.run(cycles_per_epoch);
+        let temp = stats.mean_temp_c;
+        tmin = tmin.min(temp);
+        tmax = tmax.max(temp);
+        let t = table.timings_for(temp);
+        let combo = |tref: f64| Combo {
+            trcd: t.trcd_ns as f32,
+            tras: t.tras_ns as f32,
+            twr: t.twr_ns as f32,
+            trp: t.trp_ns as f32,
+            tref_ms: tref as f32,
+            temp_c: temp as f32,
+        };
+        let combos = [combo(prof.at55.tref_read_ms),
+                      combo(prof.at55.tref_write_ms)];
+        let out = crate::runtime::ProfilingBackend::profile(
+            &mut backend, &d.arrays, &combos)?;
+        errors += (out.read_errors(0) + out.write_errors(1)) as u64;
+        let m = out
+            .mmin_r
+            .iter()
+            .chain(out.mmin_w.iter())
+            .cloned()
+            .fold(f32::INFINITY, f32::min);
+        min_margin = min_margin.min(m);
+    }
+    Ok(StressResult { epochs, errors, min_margin, temp_range: (tmin, tmax) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stress_run_is_error_free() {
+        let r = stress(0, 4, 20_000).unwrap();
+        assert_eq!(r.errors, 0, "AL-DRAM stress errors");
+        assert!(r.min_margin > 0.0);
+        assert!(r.temp_range.0 >= 30.0 && r.temp_range.1 <= 85.0);
+    }
+
+    #[test]
+    fn hetero_mixes_all_benefit() {
+        let mixes = hetero_eval(30_000, 3, PAPER_REDUCTIONS_55C);
+        assert_eq!(mixes.len(), 3);
+        for m in &mixes {
+            assert_eq!(m.mix.len(), 4);
+            assert!(m.weighted_speedup > 0.99,
+                    "mix {:?} regressed: {}", m.mix, m.weighted_speedup);
+        }
+    }
+
+    #[test]
+    fn intensive_beats_nonintensive() {
+        // Small-cycle smoke of the Fig-4 machinery on two workloads.
+        let base = TimingParams::ddr3_standard();
+        let fast = base.reduced(0.27, 0.32, 0.33, 0.18);
+        let cfg = SystemConfig::paper_default();
+        let hi = crate::workloads::by_name("gups").unwrap();
+        let lo = crate::workloads::by_name("povray").unwrap();
+        let (s_hi, _) = speedup(&hi, 2, base, fast, 60_000, 1, &cfg);
+        let (s_lo, _) = speedup(&lo, 2, base, fast, 60_000, 1, &cfg);
+        assert!(s_hi > s_lo, "gups {s_hi} <= povray {s_lo}");
+        assert!(s_lo > 0.95, "non-intensive should be ~flat, got {s_lo}");
+    }
+}

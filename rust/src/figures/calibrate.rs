@@ -1,0 +1,105 @@
+//! Calibration: population statistics vs. the paper's headline numbers.
+//!
+//! Run `repro calibrate` after touching `model_params.json`; the
+//! distributions were iterated until these match (log in EXPERIMENTS.md).
+
+use anyhow::Result;
+
+use crate::model::params;
+use crate::population::generate_dimm;
+use crate::profiler::{profile_dimm, summarize, DimmProfile};
+use crate::runtime::ProfilingBackend;
+use crate::util;
+
+/// Paper targets (§5, Fig 2/3).
+pub struct Targets;
+
+impl Targets {
+    pub const READ_RED_85: f64 = 0.211;
+    pub const READ_RED_55: f64 = 0.327;
+    pub const WRITE_RED_85: f64 = 0.344;
+    pub const WRITE_RED_55: f64 = 0.551;
+    pub const PARAM_RED_85: [f64; 4] = [0.156, 0.204, 0.206, 0.285];
+    pub const PARAM_RED_55: [f64; 4] = [0.173, 0.377, 0.548, 0.352];
+    /// Representative module (Fig 2a): max error-free refresh intervals.
+    pub const REP_MAX_READ_MS: f64 = 208.0;
+    pub const REP_MAX_WRITE_MS: f64 = 160.0;
+}
+
+pub struct CalibrationReport {
+    pub profiles: Vec<DimmProfile>,
+    pub summary: crate::profiler::PopulationSummary,
+    pub max_read_ms: Vec<f64>,
+    pub max_write_ms: Vec<f64>,
+}
+
+/// Profile `n_dimms` modules at `cells` resolution with the given backend.
+pub fn run(backend: &mut dyn ProfilingBackend, n_dimms: usize, cells: usize)
+           -> Result<CalibrationReport> {
+    let p = params();
+    let mut profiles = Vec::new();
+    for id in 0..n_dimms {
+        let d = generate_dimm(id, cells, p);
+        profiles.push(profile_dimm(backend, &d)?);
+        if (id + 1) % 10 == 0 {
+            eprintln!("  profiled {}/{} modules", id + 1, n_dimms);
+        }
+    }
+    let summary = summarize(&profiles);
+    let max_read_ms =
+        profiles.iter().map(|p| p.refresh85.module_max_read_ms).collect();
+    let max_write_ms =
+        profiles.iter().map(|p| p.refresh85.module_max_write_ms).collect();
+    Ok(CalibrationReport { summary, profiles, max_read_ms, max_write_ms })
+}
+
+pub fn print_report(r: &CalibrationReport) {
+    let s = &r.summary;
+    let pct = |x: f64| format!("{:5.1}%", 100.0 * x);
+    println!("== calibration: {} modules ==", s.n_dimms);
+    println!("{:<34} {:>10} {:>10}", "metric", "measured", "paper");
+    let row = |name: &str, got: f64, want: f64| {
+        println!("{:<34} {:>10} {:>10}", name, pct(got), pct(want));
+    };
+    row("read latency reduction @85C", s.read_reduction_85,
+        Targets::READ_RED_85);
+    row("read latency reduction @55C", s.read_reduction_55,
+        Targets::READ_RED_55);
+    row("write latency reduction @85C", s.write_reduction_85,
+        Targets::WRITE_RED_85);
+    row("write latency reduction @55C", s.write_reduction_55,
+        Targets::WRITE_RED_55);
+    for (i, name) in ["tRCD", "tRAS", "tWR", "tRP"].iter().enumerate() {
+        row(&format!("{name} reduction @85C"), s.param_reduction_85[i],
+            Targets::PARAM_RED_85[i]);
+    }
+    for (i, name) in ["tRCD", "tRAS", "tWR", "tRP"].iter().enumerate() {
+        row(&format!("{name} reduction @55C"), s.param_reduction_55[i],
+            Targets::PARAM_RED_55[i]);
+    }
+    let sorted = |v: &[f64]| {
+        let mut x = v.to_vec();
+        x.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        x
+    };
+    let mr = sorted(&r.max_read_ms);
+    let mw = sorted(&r.max_write_ms);
+    println!(
+        "max refresh read  ms: min {:.0} / med {:.0} / max {:.0}  (paper rep. module {:.0})",
+        mr[0], util::percentile_sorted(&mr, 0.5),
+        mr[mr.len() - 1], Targets::REP_MAX_READ_MS
+    );
+    println!(
+        "max refresh write ms: min {:.0} / med {:.0} / max {:.0}  (paper rep. module {:.0})",
+        mw[0], util::percentile_sorted(&mw, 0.5),
+        mw[mw.len() - 1], Targets::REP_MAX_WRITE_MS
+    );
+    println!(
+        "min param reductions @55C (Fig-4 operating point): \
+         tRCD {} tRAS {} tWR {} tRP {}  (paper 27/32/33/18%)",
+        pct(s.min_param_reduction_55[0]),
+        pct(s.min_param_reduction_55[1]),
+        pct(s.min_param_reduction_55[2]),
+        pct(s.min_param_reduction_55[3]),
+    );
+}

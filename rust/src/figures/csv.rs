@@ -1,0 +1,57 @@
+//! Tiny CSV emitter for figure data (written under `results/`).
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct Csv {
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { rows: vec![header.iter().map(|s| s.to_string()).collect()] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.rows[0].len(), "csv arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
+    }
+
+    pub fn write(&self, dir: &Path, name: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path)?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        eprintln!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv() {
+        let dir = std::env::temp_dir().join("aldram_csv_test");
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "x".into()]);
+        c.rowf(&[2.5, 3.0]);
+        c.write(&dir, "t.csv").unwrap();
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(text, "a,b\n1,x\n2.5,3\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Fig 3: population-level analysis of 115 DIMMs.
+//!
+//! 3a/3b — per-DIMM maximum error-free refresh interval (module line +
+//!          per-bank dots), read and write tests.
+//! 3c/3d — per-DIMM acceptable latency sums at 85degC and 55degC against
+//!          the DDR3 standard, with population averages.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::figures::calibrate::{run as campaign, CalibrationReport};
+use crate::runtime::ProfilingBackend;
+use crate::timing::TimingParams;
+
+use super::csv::Csv;
+
+pub fn fig3(backend: &mut dyn ProfilingBackend, n_dimms: usize, cells: usize,
+            out: &Path) -> Result<CalibrationReport> {
+    let report = campaign(backend, n_dimms, cells)?;
+
+    // --- 3a / 3b ---------------------------------------------------------
+    let mut csv = Csv::new(&["dimm", "vendor", "kind", "module_max_ms",
+                             "bank_min_ms", "bank_max_ms"]);
+    println!("== Fig 3a/3b: max error-free refresh interval per DIMM @85C ==");
+    for p in &report.profiles {
+        let bmin = |v: &[f64]| v.iter().cloned().fold(f64::MAX, f64::min);
+        let bmax = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+        csv.row(&[
+            format!("{}", p.id), p.vendor.clone(), "read".into(),
+            format!("{}", p.refresh85.module_max_read_ms),
+            format!("{}", bmin(&p.refresh85.bank_max_read_ms)),
+            format!("{}", bmax(&p.refresh85.bank_max_read_ms)),
+        ]);
+        csv.row(&[
+            format!("{}", p.id), p.vendor.clone(), "write".into(),
+            format!("{}", p.refresh85.module_max_write_ms),
+            format!("{}", bmin(&p.refresh85.bank_max_write_ms)),
+            format!("{}", bmax(&p.refresh85.bank_max_write_ms)),
+        ]);
+    }
+    csv.write(out, "fig3ab.csv")?;
+    let reads: Vec<f64> = report.max_read_ms.clone();
+    let writes: Vec<f64> = report.max_write_ms.clone();
+    let minmax = |v: &[f64]| (v.iter().cloned().fold(f64::MAX, f64::min),
+                              v.iter().cloned().fold(f64::MIN, f64::max));
+    let (rlo, rhi) = minmax(&reads);
+    let (wlo, whi) = minmax(&writes);
+    println!("read : {rlo:.0}..{rhi:.0} ms across {} DIMMs (std: 64 ms)",
+             reads.len());
+    println!("write: {wlo:.0}..{whi:.0} ms across {} DIMMs", writes.len());
+
+    // --- 3c / 3d ---------------------------------------------------------
+    let std = TimingParams::ddr3_standard();
+    let mut csv = Csv::new(&["dimm", "vendor", "test", "sum85_ns", "sum55_ns",
+                             "std_ns"]);
+    for p in &report.profiles {
+        csv.row(&[
+            format!("{}", p.id), p.vendor.clone(), "read".into(),
+            format!("{}", p.at85.read.sum_ns),
+            format!("{}", p.at55.read.sum_ns),
+            format!("{}", std.read_sum_ns()),
+        ]);
+        csv.row(&[
+            format!("{}", p.id), p.vendor.clone(), "write".into(),
+            format!("{}", p.at85.write.sum_ns),
+            format!("{}", p.at55.write.sum_ns),
+            format!("{}", std.write_sum_ns()),
+        ]);
+    }
+    csv.write(out, "fig3cd.csv")?;
+
+    let s = &report.summary;
+    println!("== Fig 3c: read latency (tRCD+tRAS+tRP, std {:.1} ns) ==",
+             std.read_sum_ns());
+    println!("average reduction: {:.1}% @85C (paper 21.1), {:.1}% @55C (paper 32.7)",
+             100.0 * s.read_reduction_85, 100.0 * s.read_reduction_55);
+    println!("== Fig 3d: write latency (tRCD+tWR+tRP, std {:.1} ns) ==",
+             std.write_sum_ns());
+    println!("average reduction: {:.1}% @85C (paper 34.4), {:.1}% @55C (paper 55.1)",
+             100.0 * s.write_reduction_85, 100.0 * s.write_reduction_55);
+    println!(
+        "per-parameter averages @55C: tRCD {:.1}% tRAS {:.1}% tWR {:.1}% tRP {:.1}% \
+         (paper 17.3/37.7/54.8/35.2)",
+        100.0 * s.param_reduction_55[0], 100.0 * s.param_reduction_55[1],
+        100.0 * s.param_reduction_55[2], 100.0 * s.param_reduction_55[3]
+    );
+    println!(
+        "per-parameter averages @85C: tRCD {:.1}% tRAS {:.1}% tWR {:.1}% tRP {:.1}% \
+         (paper 15.6/20.4/20.6/28.5)",
+        100.0 * s.param_reduction_85[0], 100.0 * s.param_reduction_85[1],
+        100.0 * s.param_reduction_85[2], 100.0 * s.param_reduction_85[3]
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn fig3_small_population_runs() {
+        let mut b = NativeBackend::new();
+        let dir = std::env::temp_dir().join("aldram_fig3_test");
+        let r = fig3(&mut b, 4, 64, &dir).unwrap();
+        assert_eq!(r.profiles.len(), 4);
+        assert!(dir.join("fig3ab.csv").exists());
+        assert!(dir.join("fig3cd.csv").exists());
+        // vendor labels present
+        assert!(r.profiles.iter().all(|p| p.vendor.starts_with("vendor_")));
+    }
+}

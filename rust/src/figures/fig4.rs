@@ -1,0 +1,60 @@
+//! Fig 4: real-system performance improvement of AL-DRAM.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::eval::{fig4 as run_fig4, Fig4Result, PAPER_REDUCTIONS_55C};
+
+use super::csv::Csv;
+
+pub fn fig4(cycles: u64, reps: usize, out: &Path) -> Result<Fig4Result> {
+    let r = run_fig4(cycles, reps, PAPER_REDUCTIONS_55C);
+
+    println!("== Fig 4: AL-DRAM speedup over DDR3 standard (55C point) ==");
+    println!("{:<14} {:>6} {:>10} {:>10} {:>10} {:>10}",
+             "workload", "mpki", "1core", "+/-", "4core", "+/-");
+    let mut csv = Csv::new(&["workload", "mpki", "intensive",
+                             "single_speedup", "single_stddev",
+                             "multi_speedup", "multi_stddev"]);
+    for w in &r.per_workload {
+        println!(
+            "{:<14} {:>6.1} {:>9.1}% {:>9.2}% {:>9.1}% {:>9.2}%",
+            w.name, w.mpki,
+            100.0 * (w.single_speedup - 1.0), 100.0 * w.single_stddev,
+            100.0 * (w.multi_speedup - 1.0), 100.0 * w.multi_stddev
+        );
+        csv.row(&[
+            w.name.clone(), format!("{}", w.mpki),
+            format!("{}", w.intensive),
+            format!("{}", w.single_speedup), format!("{}", w.single_stddev),
+            format!("{}", w.multi_speedup), format!("{}", w.multi_stddev),
+        ]);
+    }
+    csv.write(out, "fig4.csv")?;
+
+    println!("---");
+    println!("multi-core  memory-intensive gmean: {:>5.1}%  (paper 14.0%)",
+             100.0 * (r.gmean_intensive_multi - 1.0));
+    println!("multi-core  non-intensive gmean:    {:>5.1}%  (paper  2.9%)",
+             100.0 * (r.gmean_nonintensive_multi - 1.0));
+    println!("multi-core  all-35 average:         {:>5.1}%  (paper 10.5%)",
+             100.0 * (r.mean_all_multi - 1.0));
+    println!("best multi-core speedup:            {:>5.1}%  (paper 20.5%, STREAM)",
+             100.0 * (r.max_multi - 1.0));
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_smoke() {
+        // Tiny cycle budget: just proves the plumbing + CSV.
+        let dir = std::env::temp_dir().join("aldram_fig4_test");
+        let r = fig4(4_000, 1, &dir).unwrap();
+        assert_eq!(r.per_workload.len(), 35);
+        assert!(dir.join("fig4.csv").exists());
+    }
+}

@@ -1,0 +1,10 @@
+//! Per-figure reproduction drivers: each paper table/figure has a function
+//! that prints the paper's rows/series and writes CSV under `results/`.
+//! See DESIGN.md §6 for the experiment index.
+
+pub mod ablate;
+pub mod calibrate;
+pub mod csv;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;

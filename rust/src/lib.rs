@@ -1,0 +1,29 @@
+//! # AL-DRAM reproduction
+//!
+//! Reproduction of *"Adaptive-Latency DRAM: Reducing DRAM Latency by
+//! Exploiting Timing Margins"* (Lee et al., HPCA'15 / 2018 summary) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build-time python)** — the per-cell charge model as a
+//!   Pallas kernel inside a JAX profiling graph, AOT-lowered to HLO text.
+//! * **Layer 3 (this crate)** — everything else: the synthetic DIMM
+//!   population, the SoftMC-style profiler, the AL-DRAM mechanism, a
+//!   cycle-level DDR3 memory-system simulator, the power model, and the
+//!   figure/evaluation harnesses.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod aldram;
+pub mod cli;
+pub mod eval;
+pub mod figures;
+pub mod mem;
+pub mod model;
+pub mod population;
+pub mod power;
+pub mod profiler;
+pub mod runtime;
+pub mod timing;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,219 @@
+//! `repro` — the AL-DRAM reproduction CLI (Layer-3 leader binary).
+//!
+//! Commands (see DESIGN.md §6 for the experiment index):
+//!   repro calibrate  [--dimms N] [--cells N] [--backend native|pjrt|auto]
+//!   repro profile    --dimm N [--cells N] [--backend ...]
+//!   repro figure     fig2a|fig2bc|fig3|fig4|all [--out DIR] [...]
+//!   repro ablate     refresh-latency|interdependence|repeatability|
+//!                    bank-granularity|ecc|sweep|ode
+//!   repro eval       sensitivity|hetero|power|stress [--cycles N]
+//!   repro bench-sim  [--cycles N]          (quick end-to-end smoke)
+
+use std::path::PathBuf;
+
+use aldram::cli::Args;
+use aldram::figures::{ablate, calibrate, fig2, fig3, fig4};
+use aldram::model::params;
+use aldram::population::generate_dimm;
+use aldram::profiler::profile_dimm;
+use aldram::runtime::{artifacts_dir, auto_backend, NativeBackend,
+                      PjrtBackend, ProfilingBackend};
+
+fn backend_for(args: &Args, cells: usize) -> Box<dyn ProfilingBackend> {
+    match args.str("backend", "auto").as_str() {
+        "native" => Box::new(NativeBackend::new()),
+        "pjrt" => Box::new(
+            PjrtBackend::for_cells(&artifacts_dir(), cells)
+                .expect("PJRT backend requested but unavailable — run `make artifacts`"),
+        ),
+        "auto" => auto_backend(&artifacts_dir(), cells),
+        other => panic!("unknown backend `{other}`"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let out = PathBuf::from(args.str("out", "results"));
+    let g = &params().geometry;
+
+    match args.cmd() {
+        Some("calibrate") => {
+            let dimms = args.get("dimms", 30usize);
+            let cells = args.get("cells", g.cells_per_chip_bank);
+            let mut b = backend_for(&args, cells);
+            let r = calibrate::run(b.as_mut(), dimms, cells)?;
+            calibrate::print_report(&r);
+        }
+
+        Some("profile") => {
+            let id = args.get("dimm", 0usize);
+            let cells = args.get("cells", g.cells_per_chip_bank);
+            let mut b = backend_for(&args, cells);
+            let d = generate_dimm(id, cells, params());
+            let p = profile_dimm(b.as_mut(), &d)?;
+            println!("dimm {:03} ({})", p.id, p.vendor);
+            println!("  max refresh @85C: read {:.0} ms, write {:.0} ms",
+                     p.refresh85.module_max_read_ms,
+                     p.refresh85.module_max_write_ms);
+            for tp in [&p.at85, &p.at55] {
+                let c = tp.combined();
+                let r = tp.param_reductions();
+                println!(
+                    "  @{:.0}C: tRCD {:.2} tRAS {:.2} tWR {:.2} tRP {:.2} ns \
+                     (reductions {:.1}/{:.1}/{:.1}/{:.1}%)",
+                    tp.temp_c, c.trcd_ns, c.tras_ns, c.twr_ns, c.trp_ns,
+                    100.0 * r[0], 100.0 * r[1], 100.0 * r[2], 100.0 * r[3]
+                );
+            }
+        }
+
+        Some("figure") => {
+            let which = args.sub(1).unwrap_or("all");
+            let cells = args.get("cells", g.cells_per_chip_bank);
+            let rep = args.get("dimm", fig2::REPRESENTATIVE_DIMM);
+            if which == "fig2a" || which == "fig2bc" || which == "all" {
+                let mut b = backend_for(&args, cells);
+                let d = generate_dimm(rep, cells, params());
+                let refresh = fig2::fig2a(b.as_mut(), &d.arrays, &out)?;
+                if which != "fig2a" {
+                    fig2::fig2bc(b.as_mut(), &d.arrays, &refresh, &out)?;
+                }
+            }
+            if which == "fig3" || which == "all" {
+                let dimms =
+                    args.get("dimms", params().population.n_dimms);
+                let mut b = backend_for(&args, cells);
+                fig3::fig3(b.as_mut(), dimms, cells, &out)?;
+            }
+            if which == "fig4" || which == "all" {
+                let cycles = args.get("cycles", 300_000u64);
+                let reps = args.get("reps", 3usize);
+                fig4::fig4(cycles, reps, &out)?;
+            }
+            if !["fig2a", "fig2bc", "fig3", "fig4", "all"].contains(&which) {
+                anyhow::bail!("unknown figure `{which}`");
+            }
+        }
+
+        Some("ablate") => {
+            let which = args.sub(1).unwrap_or("all");
+            let cells = args.get("cells", g.cells_per_chip_bank_small);
+            let dimm = args.get("dimm", 0usize);
+            let mut b = backend_for(&args, cells);
+            match which {
+                "refresh-latency" => {
+                    ablate::refresh_latency(b.as_mut(), dimm, cells, &out)?
+                }
+                "interdependence" => {
+                    ablate::interdependence(b.as_mut(), dimm, cells, &out)?
+                }
+                "repeatability" => ablate::repeat(dimm, cells, &out)?,
+                "bank-granularity" => {
+                    ablate::bank_granularity(b.as_mut(), dimm, cells, &out)?
+                }
+                "ecc" => ablate::ecc(b.as_mut(), dimm, cells, &out)?,
+                "sweep" => ablate::sweep_check(b.as_mut(), dimm, cells)?,
+                "ode" => ablate::ode_check(&artifacts_dir())?,
+                "all" => {
+                    ablate::refresh_latency(b.as_mut(), dimm, cells, &out)?;
+                    ablate::interdependence(b.as_mut(), dimm, cells, &out)?;
+                    ablate::repeat(dimm, cells, &out)?;
+                    ablate::bank_granularity(b.as_mut(), dimm, cells, &out)?;
+                    ablate::ecc(b.as_mut(), dimm, cells, &out)?;
+                    ablate::sweep_check(b.as_mut(), dimm, cells)?;
+                    ablate::ode_check(&artifacts_dir())?;
+                }
+                other => anyhow::bail!("unknown ablation `{other}`"),
+            }
+        }
+
+        Some("eval") => {
+            let which = args.sub(1).unwrap_or("sensitivity");
+            let cycles = args.get("cycles", 200_000u64);
+            match which {
+                "sensitivity" => {
+                    println!("== §8.4: sensitivity (memory-intensive gmean) ==");
+                    for row in aldram::eval::sensitivity(
+                        cycles, aldram::eval::PAPER_REDUCTIONS_55C) {
+                        println!("{:<18} {:>6.1}%", row.label,
+                                 100.0 * (row.gmean_speedup - 1.0));
+                    }
+                }
+                "hetero" => {
+                    let mixes = aldram::eval::hetero_eval(
+                        cycles, args.get("mixes", 8usize),
+                        aldram::eval::PAPER_REDUCTIONS_55C);
+                    println!("== §8.4: heterogeneous 4-app mixes ==");
+                    let mut ws = Vec::new();
+                    for m in &mixes {
+                        println!("{:<54} {:>6.1}%", m.mix.join("+"),
+                                 100.0 * (m.weighted_speedup - 1.0));
+                        ws.push(m.weighted_speedup);
+                    }
+                    println!("gmean weighted speedup: {:.1}%",
+                             100.0 * (aldram::util::geomean(&ws) - 1.0));
+                }
+                "power" => {
+                    let rows = aldram::eval::power_eval(
+                        cycles, aldram::eval::PAPER_REDUCTIONS_55C);
+                    println!("== §8.4: DRAM power ==");
+                    println!("{:<14} {:>9} {:>9} {:>12} {:>12}", "workload",
+                             "base W", "aldram W", "base J/Gi", "aldram J/Gi");
+                    for r in &rows {
+                        println!("{:<14} {:>9.3} {:>9.3} {:>12.4} {:>12.4}",
+                                 r.name, r.base_w, r.aldram_w,
+                                 r.base_j_per_ginst, r.aldram_j_per_ginst);
+                    }
+                    println!("average energy-per-work reduction: {:.1}% (paper 5.8%)",
+                             100.0 * aldram::eval::power_saving(&rows));
+                }
+                "stress" => {
+                    let epochs = args.get("epochs", 64u64);
+                    let r = aldram::eval::stress(
+                        args.get("dimm", 0usize), epochs,
+                        args.get("cycles", 50_000u64))?;
+                    println!("== §6: stress run (scaled 33-day analogue) ==");
+                    println!(
+                        "epochs {}  errors {}  min margin {:.4}  temp {:.1}..{:.1}C",
+                        r.epochs, r.errors, r.min_margin,
+                        r.temp_range.0, r.temp_range.1
+                    );
+                    anyhow::ensure!(r.errors == 0, "stress run saw errors");
+                }
+                other => anyhow::bail!("unknown eval `{other}`"),
+            }
+        }
+
+        Some("bench-sim") => {
+            // quick end-to-end smoke: one workload, base vs AL-DRAM.
+            use aldram::mem::{System, SystemConfig};
+            use aldram::timing::TimingParams;
+            use aldram::workloads::by_name;
+            let cycles = args.get("cycles", 100_000u64);
+            let w = by_name(&args.str("workload", "stream.copy"))
+                .expect("unknown workload");
+            for (label, t) in [
+                ("ddr3-standard", TimingParams::ddr3_standard()),
+                ("al-dram-55C", TimingParams::ddr3_standard()
+                    .reduced(0.27, 0.32, 0.33, 0.18)),
+            ] {
+                let cfg = SystemConfig { timings: t,
+                                         ..SystemConfig::paper_default() };
+                let mut sys = System::new(
+                    &cfg, &[(w.clone(), "bench".into())]);
+                let s = sys.run(cycles);
+                println!(
+                    "{label:<14} ipc {:.3}  read-lat {:.1} cyc  bw {:.1}%  hits {:.1}%",
+                    s.cores[0].ipc, s.avg_read_latency_cycles,
+                    100.0 * s.bus_utilization, 100.0 * s.row_hit_rate
+                );
+            }
+        }
+
+        _ => {
+            println!("repro — AL-DRAM reproduction (see DESIGN.md)");
+            println!("commands: calibrate | profile | figure | ablate | eval | bench-sim");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Physical-address decomposition. Row:Rank:Bank:Column:Offset layout —
+//! consecutive cache lines stripe across columns within a row, then banks,
+//! so streaming workloads see row hits and bank-level parallelism (the
+//! standard open-page-friendly interleaving).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddrMap {
+    pub line_bits: u32, // 64 B cache line
+    pub col_bits: u32,  // columns per row (of cache-line granularity)
+    pub bank_bits: u32,
+    pub rank_bits: u32,
+    pub row_bits: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decoded {
+    pub rank: usize,
+    pub bank: usize,
+    pub row: u64,
+    pub col: u64,
+}
+
+impl AddrMap {
+    /// 1 rank x 8 banks x 32k rows x 128 lines/row (8 KB row) — a 2 GB
+    /// channel, matching the evaluated system's single-rank channel.
+    pub fn ddr3_2gb(ranks: usize) -> Self {
+        AddrMap {
+            line_bits: 6,
+            col_bits: 7,
+            bank_bits: 3,
+            rank_bits: ranks.trailing_zeros(),
+            row_bits: 15,
+        }
+    }
+
+    pub fn decode(&self, addr: u64) -> Decoded {
+        let mut a = addr >> self.line_bits;
+        let col = a & ((1 << self.col_bits) - 1);
+        a >>= self.col_bits;
+        let bank = (a & ((1 << self.bank_bits) - 1)) as usize;
+        a >>= self.bank_bits;
+        let rank = (a & ((1 << self.rank_bits) - 1)) as usize;
+        a >>= self.rank_bits;
+        let row = a & ((1 << self.row_bits) - 1);
+        Decoded { rank, bank, row, col }
+    }
+
+    pub fn encode(&self, d: &Decoded) -> u64 {
+        let mut a = d.row;
+        a = (a << self.rank_bits) | d.rank as u64;
+        a = (a << self.bank_bits) | d.bank as u64;
+        a = (a << self.col_bits) | d.col;
+        a << self.line_bits
+    }
+
+    pub fn ranks(&self) -> usize {
+        1 << self.rank_bits
+    }
+
+    pub fn banks(&self) -> usize {
+        1 << self.bank_bits
+    }
+
+    pub fn row_bytes(&self) -> u64 {
+        1 << (self.col_bits + self.line_bits)
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        1u64 << (self.line_bits + self.col_bits + self.bank_bits
+                 + self.rank_bits + self.row_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_bijective() {
+        let m = AddrMap::ddr3_2gb(2);
+        for addr in [0u64, 64, 4096, 1 << 20, (1 << 31) - 64, 0x1234_5678 & !63]
+        {
+            let d = m.decode(addr);
+            assert_eq!(m.encode(&d), addr & !((1 << m.line_bits) - 1));
+        }
+    }
+
+    #[test]
+    fn sequential_lines_share_a_row() {
+        let m = AddrMap::ddr3_2gb(1);
+        let d0 = m.decode(0);
+        let d1 = m.decode(64);
+        assert_eq!(d0.row, d1.row);
+        assert_eq!(d0.bank, d1.bank);
+        assert_eq!(d1.col, d0.col + 1);
+    }
+
+    #[test]
+    fn row_stride_changes_bank_first() {
+        let m = AddrMap::ddr3_2gb(1);
+        let row_bytes = m.row_bytes();
+        let d0 = m.decode(0);
+        let d1 = m.decode(row_bytes);
+        assert_eq!(d0.row, d1.row);
+        assert_ne!(d0.bank, d1.bank);
+    }
+
+    #[test]
+    fn capacity_2gb_single_rank() {
+        let m = AddrMap::ddr3_2gb(1);
+        assert_eq!(m.capacity_bytes(), 2 * 1024 * 1024 * 1024);
+        assert_eq!(m.ranks(), 1);
+        assert_eq!(m.banks(), 8);
+    }
+}

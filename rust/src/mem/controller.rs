@@ -1,0 +1,496 @@
+//! The memory controller: per-channel request queues, FR-FCFS scheduling,
+//! row-buffer policies, refresh management, and — the AL-DRAM hook — a
+//! runtime-swappable timing set (the paper's evaluated system exposes
+//! exactly this through BIOS-visible config registers [10, 11]).
+
+use std::collections::VecDeque;
+
+use super::address::AddrMap;
+use super::dram::{Cycle, Rank};
+use crate::timing::{TimingCycles, TimingParams};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowPolicy {
+    /// Keep rows open; precharge on conflict (FR-FCFS default).
+    Open,
+    /// Precharge as soon as no queued request hits the open row.
+    Closed,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub id: u64,
+    pub core: usize,
+    pub addr: u64,
+    pub is_write: bool,
+    pub arrival: Cycle,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub id: u64,
+    pub core: usize,
+    pub is_write: bool,
+    pub arrival: Cycle,
+    pub finish: Cycle,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    req: Request,
+    rank: usize,
+    bank: usize,
+    row: u64,
+}
+
+/// Aggregate controller statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CtrlStats {
+    pub reads_done: u64,
+    pub writes_done: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    pub total_read_latency: u64,
+    pub refreshes: u64,
+    pub issued_cycles: u64,
+    pub busy_cycles: u64,
+}
+
+impl CtrlStats {
+    pub fn avg_read_latency(&self) -> f64 {
+        if self.reads_done == 0 {
+            0.0
+        } else {
+            self.total_read_latency as f64 / self.reads_done as f64
+        }
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses + self.row_conflicts;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+}
+
+pub struct Controller {
+    pub map: AddrMap,
+    ranks: Vec<Rank>,
+    policy: RowPolicy,
+    read_q: VecDeque<Pending>,
+    write_q: VecDeque<Pending>,
+    /// Write drain hysteresis (vLLM-router-style watermark batching, here
+    /// the classic write-drain watermarks).
+    draining_writes: bool,
+    wq_hi: usize,
+    wq_lo: usize,
+    capacity: usize,
+    /// Refresh bookkeeping: next refresh deadline per rank.
+    next_refresh: Vec<Cycle>,
+    refresh_due: Vec<bool>,
+    /// In-flight column accesses: (data-ready cycle, completion record).
+    inflight: Vec<(Cycle, Completion)>,
+    pub stats: CtrlStats,
+    timings_ns: TimingParams,
+    tck_ns: f64,
+    /// Refresh-interval multiple of the 64 ms standard (AL-DRAM leaves it
+    /// at 1.0; §7.1 experiments vary it).
+    refresh_scale: f64,
+}
+
+impl Controller {
+    pub fn new(map: AddrMap, timings: TimingParams, policy: RowPolicy) -> Self {
+        let tck = 1.25;
+        let tc = timings.to_cycles(tck);
+        let ranks = (0..map.ranks()).map(|_| Rank::new(map.banks(), tc)).collect();
+        let n_ranks = map.ranks();
+        Controller {
+            map,
+            ranks,
+            policy,
+            read_q: VecDeque::new(),
+            write_q: VecDeque::new(),
+            draining_writes: false,
+            wq_hi: 24,
+            wq_lo: 8,
+            capacity: 32,
+            next_refresh: vec![tc.trefi as u64; n_ranks],
+            refresh_due: vec![false; n_ranks],
+            inflight: Vec::new(),
+            stats: CtrlStats::default(),
+            timings_ns: timings,
+            tck_ns: tck,
+            refresh_scale: 1.0,
+        }
+    }
+
+    pub fn timings(&self) -> &TimingParams {
+        &self.timings_ns
+    }
+
+    pub fn tck_ns(&self) -> f64 {
+        self.tck_ns
+    }
+
+    /// AL-DRAM hook: install a new timing set. Takes effect immediately
+    /// for new commands (the controller applies it between requests, and
+    /// the mechanism only calls this at refresh boundaries).
+    pub fn set_timings(&mut self, timings: TimingParams) {
+        self.timings_ns = timings;
+        let tc = timings.to_cycles(self.tck_ns);
+        for r in &mut self.ranks {
+            r.set_timings(tc);
+        }
+    }
+
+    /// Bank-granular AL-DRAM (§5.2 future work): install per-bank core
+    /// timings on one bank of the given rank (None restores the rank set).
+    pub fn set_bank_timings(&mut self, rank: usize, bank: usize,
+                            timings: Option<TimingParams>) {
+        let tc = timings.map(|t| t.to_cycles(self.tck_ns));
+        self.ranks[rank].set_bank_timings(bank, tc);
+    }
+
+    /// §7.1: scale the refresh interval (1.0 = standard 64 ms).
+    pub fn set_refresh_scale(&mut self, scale: f64) {
+        assert!(scale > 0.0);
+        self.refresh_scale = scale;
+    }
+
+    fn trefi(&self) -> u64 {
+        let tc: TimingCycles = self.timings_ns.to_cycles(self.tck_ns);
+        ((tc.trefi as f64) * self.refresh_scale).max(1.0) as u64
+    }
+
+    pub fn can_accept(&self, is_write: bool) -> bool {
+        if is_write {
+            self.write_q.len() < self.capacity
+        } else {
+            self.read_q.len() < self.capacity
+        }
+    }
+
+    pub fn enqueue(&mut self, req: Request) -> bool {
+        if !self.can_accept(req.is_write) {
+            return false;
+        }
+        let d = self.map.decode(req.addr);
+        let p = Pending { req, rank: d.rank, bank: d.bank, row: d.row };
+        if req.is_write {
+            self.write_q.push_back(p);
+        } else {
+            self.read_q.push_back(p);
+        }
+        true
+    }
+
+    pub fn read_queue_len(&self) -> usize {
+        self.read_q.len()
+    }
+
+    pub fn write_queue_len(&self) -> usize {
+        self.write_q.len()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.read_q.len() + self.write_q.len() + self.inflight.len()
+    }
+
+    pub fn ranks(&self) -> &[Rank] {
+        &self.ranks
+    }
+
+    /// Advance one controller cycle; returns completions whose data burst
+    /// finished this cycle.
+    pub fn tick(&mut self, now: Cycle) -> Vec<Completion> {
+        // 1. Retire finished bursts.
+        let mut done = Vec::new();
+        self.inflight.retain(|(ready, c)| {
+            if *ready <= now {
+                done.push(*c);
+                false
+            } else {
+                true
+            }
+        });
+        for c in &done {
+            if c.is_write {
+                self.stats.writes_done += 1;
+            } else {
+                self.stats.reads_done += 1;
+                self.stats.total_read_latency += c.finish - c.arrival;
+            }
+        }
+
+        // 2. Refresh management: when tREFI elapses, drain the rank and
+        //    issue REF (highest priority — postponement is bounded).
+        for r in 0..self.ranks.len() {
+            if now >= self.next_refresh[r] {
+                self.refresh_due[r] = true;
+            }
+            if self.refresh_due[r] {
+                // Close open rows as they become precharge-able.
+                if !self.ranks[r].all_banks_idle() {
+                    for b in 0..self.map.banks() {
+                        if self.ranks[r].banks[b].open_row().is_some()
+                            && self.ranks[r].can_pre(b, now)
+                        {
+                            self.ranks[r].issue_pre(b, now);
+                            self.stats.issued_cycles += 1;
+                            return done; // one command per cycle
+                        }
+                    }
+                } else if self.ranks[r].can_refresh(now) {
+                    self.ranks[r].issue_refresh(now);
+                    self.refresh_due[r] = false;
+                    self.next_refresh[r] += self.trefi();
+                    self.stats.refreshes += 1;
+                    self.stats.issued_cycles += 1;
+                    return done;
+                }
+            }
+        }
+
+        // 3. Write drain hysteresis.
+        if self.write_q.len() >= self.wq_hi {
+            self.draining_writes = true;
+        }
+        if self.write_q.len() <= self.wq_lo {
+            self.draining_writes = false;
+        }
+        let writes_first = self.draining_writes || self.read_q.is_empty();
+
+        // 4. FR-FCFS over the preferred queue, then the other.
+        let issued = if writes_first {
+            self.schedule_queue(true, now) || self.schedule_queue(false, now)
+        } else {
+            self.schedule_queue(false, now) || self.schedule_queue(true, now)
+        };
+        if issued {
+            self.stats.issued_cycles += 1;
+        }
+        if self.pending() > 0 {
+            self.stats.busy_cycles += 1;
+        }
+
+        // 5. Closed-page policy: precharge banks nobody wants.
+        if self.policy == RowPolicy::Closed && !issued {
+            'outer: for r in 0..self.ranks.len() {
+                for b in 0..self.map.banks() {
+                    if let Some(row) = self.ranks[r].banks[b].open_row() {
+                        let wanted = self
+                            .read_q
+                            .iter()
+                            .chain(self.write_q.iter())
+                            .any(|p| p.rank == r && p.bank == b && p.row == row);
+                        if !wanted && self.ranks[r].can_pre(b, now) {
+                            self.ranks[r].issue_pre(b, now);
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+
+        done
+    }
+
+    /// FR-FCFS: (1) oldest row-hit column command, (2) oldest request's
+    /// ACT/PRE as needed. Returns true if a command issued.
+    fn schedule_queue(&mut self, writes: bool, now: Cycle) -> bool {
+        let q = if writes { &self.write_q } else { &self.read_q };
+        if q.is_empty() {
+            return false;
+        }
+
+        // First-ready: oldest request whose column command can go now.
+        let mut hit_idx = None;
+        for (i, p) in q.iter().enumerate() {
+            let rk = &self.ranks[p.rank];
+            let ok = if writes {
+                rk.can_write(p.bank, p.row, now)
+            } else {
+                rk.can_read(p.bank, p.row, now)
+            };
+            if ok {
+                hit_idx = Some(i);
+                break;
+            }
+        }
+        if let Some(i) = hit_idx {
+            let p = if writes {
+                self.write_q.remove(i).unwrap()
+            } else {
+                self.read_q.remove(i).unwrap()
+            };
+            let rk = &mut self.ranks[p.rank];
+            let data_end = if writes {
+                rk.issue_write(p.bank, p.row, now)
+            } else {
+                rk.issue_read(p.bank, p.row, now)
+            };
+            self.stats.row_hits += 1;
+            self.inflight.push((
+                data_end,
+                Completion {
+                    id: p.req.id,
+                    core: p.req.core,
+                    is_write: writes,
+                    arrival: p.req.arrival,
+                    finish: data_end,
+                },
+            ));
+            return true;
+        }
+
+        // Otherwise service the oldest request: open its row (ACT) or close
+        // a conflicting row (PRE).
+        let head = *match q.front() {
+            Some(p) => p,
+            None => return false,
+        };
+        let rk = &mut self.ranks[head.rank];
+        match rk.banks[head.bank].open_row() {
+            Some(row) if row != head.row => {
+                if rk.can_pre(head.bank, now) {
+                    rk.issue_pre(head.bank, now);
+                    self.stats.row_conflicts += 1;
+                    return true;
+                }
+            }
+            None => {
+                if rk.can_act(head.bank, now) {
+                    rk.issue_act(head.bank, head.row, now);
+                    self.stats.row_misses += 1;
+                    return true;
+                }
+            }
+            Some(_) => {
+                // Row open but the column gate (tRCD/tCCD/turnaround) is
+                // still closed — nothing to do this cycle.
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctrl(policy: RowPolicy) -> Controller {
+        Controller::new(AddrMap::ddr3_2gb(1), TimingParams::ddr3_standard(),
+                        policy)
+    }
+
+    fn run_until_done(c: &mut Controller, mut now: Cycle, limit: Cycle)
+                      -> (Vec<Completion>, Cycle) {
+        let mut out = Vec::new();
+        while c.pending() > 0 && now < limit {
+            out.extend(c.tick(now));
+            now += 1;
+        }
+        (out, now)
+    }
+
+    #[test]
+    fn single_read_completes_with_miss_latency() {
+        let mut c = ctrl(RowPolicy::Open);
+        c.enqueue(Request { id: 1, core: 0, addr: 0x100_0000, is_write: false,
+                            arrival: 0 });
+        let (done, _) = run_until_done(&mut c, 0, 10_000);
+        assert_eq!(done.len(), 1);
+        let t = TimingParams::ddr3_standard().to_cycles(1.25);
+        let expect = (t.trcd + t.tcl + t.tburst) as u64;
+        assert_eq!(done[0].finish, expect);
+        assert_eq!(c.stats.row_misses, 1);
+    }
+
+    #[test]
+    fn reduced_timings_cut_read_latency() {
+        let mut base = ctrl(RowPolicy::Open);
+        let mut fast = ctrl(RowPolicy::Open);
+        fast.set_timings(TimingParams::ddr3_standard()
+            .reduced(0.27, 0.32, 0.33, 0.18));
+        for c in [&mut base, &mut fast] {
+            // row conflict chain: same bank, different rows
+            c.enqueue(Request { id: 1, core: 0, addr: 0, is_write: false,
+                                arrival: 0 });
+            let row_stride = 8 * c.map.row_bytes(); // same bank, next row
+            c.enqueue(Request { id: 2, core: 0, addr: row_stride,
+                                is_write: false, arrival: 0 });
+        }
+        let (db, _) = run_until_done(&mut base, 0, 100_000);
+        let (df, _) = run_until_done(&mut fast, 0, 100_000);
+        let base_t = db.iter().map(|c| c.finish).max().unwrap();
+        let fast_t = df.iter().map(|c| c.finish).max().unwrap();
+        assert!(fast_t < base_t, "fast {fast_t} >= base {base_t}");
+    }
+
+    #[test]
+    fn row_hits_beat_row_misses() {
+        let mut c = ctrl(RowPolicy::Open);
+        for i in 0..8u64 {
+            c.enqueue(Request { id: i, core: 0, addr: i * 64,
+                                is_write: false, arrival: 0 });
+        }
+        let (done, _) = run_until_done(&mut c, 0, 100_000);
+        assert_eq!(done.len(), 8);
+        assert_eq!(c.stats.row_misses, 1, "one ACT for the stream");
+        assert_eq!(c.stats.row_hits, 8);
+        assert!(c.stats.row_hit_rate() > 0.8);
+    }
+
+    #[test]
+    fn writes_drain_with_hysteresis() {
+        let mut c = ctrl(RowPolicy::Open);
+        for i in 0..26u64 {
+            assert!(c.enqueue(Request { id: i, core: 0, addr: i * 64,
+                                        is_write: true, arrival: 0 }));
+        }
+        let (done, _) = run_until_done(&mut c, 0, 1_000_000);
+        assert_eq!(done.len(), 26);
+        assert_eq!(c.stats.writes_done, 26);
+    }
+
+    #[test]
+    fn refresh_happens_on_schedule() {
+        let mut c = ctrl(RowPolicy::Open);
+        let trefi = TimingParams::ddr3_standard().to_cycles(1.25).trefi as u64;
+        let horizon = trefi * 4 + 1000;
+        for now in 0..horizon {
+            c.tick(now);
+        }
+        assert!(c.stats.refreshes >= 4,
+                "only {} refreshes in 4 tREFI", c.stats.refreshes);
+    }
+
+    #[test]
+    fn closed_policy_precharges_idle_rows() {
+        let mut c = ctrl(RowPolicy::Closed);
+        c.enqueue(Request { id: 1, core: 0, addr: 0, is_write: false,
+                            arrival: 0 });
+        let (_, end) = run_until_done(&mut c, 0, 10_000);
+        // Let the policy close the row afterwards.
+        for now in end..end + 200 {
+            c.tick(now);
+        }
+        assert!(c.ranks()[0].all_banks_idle());
+    }
+
+    #[test]
+    fn queue_capacity_backpressures() {
+        let mut c = ctrl(RowPolicy::Open);
+        let mut accepted = 0;
+        for i in 0..100u64 {
+            if c.enqueue(Request { id: i, core: 0, addr: i * 131072,
+                                   is_write: false, arrival: 0 }) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 32, "read queue capacity");
+    }
+}

@@ -1,0 +1,267 @@
+//! Trace-driven core model: an out-of-order core abstraction with bounded
+//! MLP (outstanding misses), a reorder-buffer run-ahead limit, and
+//! dependent-load support (pointer chasing). Deliberately simple — the
+//! paper's Fig 4 effect is the translation of DRAM latency into IPC as a
+//! function of memory intensity, which this captures.
+
+use super::controller::Request;
+use crate::workloads::{MemRef, Trace};
+
+/// CPU-to-DRAM-controller clock ratio (3.2 GHz core, 800 MHz controller).
+pub const CPU_PER_DRAM: u32 = 4;
+/// Peak retire width (instructions per CPU cycle).
+pub const IPC_MAX: u32 = 4;
+/// Max instructions the core may run ahead of the oldest outstanding miss.
+pub const ROB_INSTS: u64 = 192;
+/// Max outstanding read misses (MSHRs).
+pub const MAX_MLP: usize = 6;
+
+#[derive(Debug, Clone, Copy)]
+struct Outstanding {
+    id: u64,
+    inst_pos: u64,
+}
+
+pub struct Core {
+    pub id: usize,
+    trace: Box<dyn Trace>,
+    /// Instructions retired so far.
+    pub insts: u64,
+    /// Remaining non-memory instructions before the next reference.
+    gap_left: u64,
+    next_ref: Option<MemRef>,
+    outstanding: Vec<Outstanding>,
+    next_req_id: u64,
+    /// Stalled-cycle statistics.
+    pub stall_cycles: u64,
+    pub reads_issued: u64,
+    pub writes_issued: u64,
+}
+
+impl Core {
+    pub fn new(id: usize, trace: Box<dyn Trace>) -> Self {
+        Core {
+            id,
+            trace,
+            insts: 0,
+            gap_left: 0,
+            next_ref: None,
+            outstanding: Vec::new(),
+            next_req_id: 1,
+            stall_cycles: 0,
+            reads_issued: 0,
+            writes_issued: 0,
+        }
+    }
+
+    fn refill(&mut self) {
+        if self.next_ref.is_none() {
+            let r = self.trace.next();
+            self.gap_left = r.gap_insts as u64;
+            self.next_ref = Some(r);
+        }
+    }
+
+    pub fn on_completion(&mut self, req_id: u64) {
+        self.outstanding.retain(|o| o.id != req_id);
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Advance one DRAM-controller cycle. `try_send` submits a request to
+    /// the memory system and returns the request id on acceptance.
+    pub fn step(&mut self, now: u64,
+                try_send: &mut dyn FnMut(Request) -> bool) {
+        let mut budget = (CPU_PER_DRAM * IPC_MAX) as u64;
+        let mut progressed = false;
+
+        while budget > 0 {
+            self.refill();
+
+            // ROB limit: cannot retire past oldest outstanding + ROB_INSTS.
+            let rob_limit = self
+                .outstanding
+                .iter()
+                .map(|o| o.inst_pos + ROB_INSTS)
+                .min()
+                .unwrap_or(u64::MAX);
+
+            if self.gap_left > 0 {
+                let can = budget
+                    .min(self.gap_left)
+                    .min(rob_limit.saturating_sub(self.insts));
+                if can == 0 {
+                    break; // ROB full — stalled on a miss
+                }
+                self.insts += can;
+                self.gap_left -= can;
+                budget -= can;
+                progressed = true;
+                continue;
+            }
+
+            // gap exhausted: issue the memory reference.
+            let r = self.next_ref.expect("refill invariant");
+            if r.is_write {
+                let req = Request {
+                    id: self.next_req_id,
+                    core: self.id,
+                    addr: r.addr,
+                    is_write: true,
+                    arrival: now,
+                };
+                if try_send(req) {
+                    // Writes retire via the store buffer: non-blocking.
+                    self.next_req_id += 1;
+                    self.writes_issued += 1;
+                    self.insts += 1;
+                    budget -= 1;
+                    self.next_ref = None;
+                    progressed = true;
+                } else {
+                    break; // write queue full
+                }
+            } else {
+                let dep_ok = !r.dependent || self.outstanding.is_empty();
+                if self.outstanding.len() >= MAX_MLP || !dep_ok {
+                    break;
+                }
+                let req = Request {
+                    id: self.next_req_id,
+                    core: self.id,
+                    addr: r.addr,
+                    is_write: false,
+                    arrival: now,
+                };
+                if try_send(req) {
+                    self.outstanding.push(Outstanding {
+                        id: self.next_req_id,
+                        inst_pos: self.insts,
+                    });
+                    self.next_req_id += 1;
+                    self.reads_issued += 1;
+                    self.insts += 1;
+                    budget -= 1;
+                    self.next_ref = None;
+                    progressed = true;
+                } else {
+                    break; // read queue full
+                }
+            }
+        }
+
+        if !progressed {
+            self.stall_cycles += 1;
+        }
+    }
+
+    /// Retired instructions per CPU cycle.
+    pub fn ipc(&self, dram_cycles: u64) -> f64 {
+        if dram_cycles == 0 {
+            return 0.0;
+        }
+        self.insts as f64 / (dram_cycles * CPU_PER_DRAM as u64) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{MemRef, Trace};
+
+    /// Trace with a fixed gap and sequential addresses.
+    struct FixedTrace {
+        gap: u32,
+        addr: u64,
+        dependent: bool,
+    }
+
+    impl Trace for FixedTrace {
+        fn next(&mut self) -> MemRef {
+            self.addr += 64;
+            MemRef { gap_insts: self.gap, addr: self.addr, is_write: false,
+                     dependent: self.dependent }
+        }
+    }
+
+    #[test]
+    fn compute_bound_core_hits_peak_ipc() {
+        let mut core = Core::new(0, Box::new(FixedTrace {
+            gap: 100_000, addr: 0, dependent: false }));
+        let mut send = |_req: Request| true;
+        for now in 0..1000u64 {
+            core.step(now, &mut send);
+        }
+        let ipc = core.ipc(1000);
+        assert!((ipc - IPC_MAX as f64).abs() < 0.1, "ipc {ipc}");
+    }
+
+    #[test]
+    fn mlp_bounds_outstanding_reads() {
+        let mut core = Core::new(0, Box::new(FixedTrace {
+            gap: 0, addr: 0, dependent: false }));
+        let mut send = |_req: Request| true; // memory never completes
+        for now in 0..100u64 {
+            core.step(now, &mut send);
+        }
+        assert_eq!(core.outstanding(), MAX_MLP);
+        assert!(core.stall_cycles > 0);
+    }
+
+    #[test]
+    fn dependent_loads_serialize() {
+        let mut core = Core::new(0, Box::new(FixedTrace {
+            gap: 0, addr: 0, dependent: true }));
+        let mut send = |_req: Request| true;
+        for now in 0..100u64 {
+            core.step(now, &mut send);
+        }
+        assert_eq!(core.outstanding(), 1, "pointer chase has MLP 1");
+    }
+
+    #[test]
+    fn completion_unblocks_core() {
+        let mut core = Core::new(0, Box::new(FixedTrace {
+            gap: 0, addr: 0, dependent: true }));
+        let mut ids = Vec::new();
+        {
+            let mut send = |req: Request| {
+                ids.push(req.id);
+                true
+            };
+            for now in 0..10u64 {
+                core.step(now, &mut send);
+            }
+        }
+        assert_eq!(core.outstanding(), 1);
+        let before = core.reads_issued;
+        core.on_completion(ids[0]);
+        let mut send2 = |_req: Request| true;
+        core.step(11, &mut send2);
+        assert!(core.reads_issued > before);
+    }
+
+    #[test]
+    fn rob_limits_runahead() {
+        // One unfulfilled miss, then a huge gap: the core must stop at
+        // ROB_INSTS past the miss.
+        let mut core = Core::new(0, Box::new(FixedTrace {
+            gap: 1_000_000, addr: 0, dependent: false }));
+        let mut send = |_req: Request| true;
+        // First step issues the miss quickly (gap consumed across steps).
+        for now in 0..100_000u64 {
+            core.step(now, &mut send);
+            if core.reads_issued >= 1 {
+                break;
+            }
+        }
+        let at_issue = core.insts;
+        for now in 0..10_000u64 {
+            core.step(200_000 + now, &mut send);
+        }
+        assert!(core.insts <= at_issue + ROB_INSTS,
+                "ran ahead {} past miss", core.insts - at_issue);
+    }
+}

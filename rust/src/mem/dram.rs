@@ -1,0 +1,410 @@
+//! Cycle-level DDR3 device model: per-bank state machines plus the rank-
+//! level constraints (tRRD, tFAW, tRFC, shared data bus). The controller
+//! may only issue a command when `can_*` says the JEDEC timing rules are
+//! met; `issue_*` advances the state. All times are controller clock
+//! cycles (tCK = 1.25 ns at DDR3-1600).
+
+use crate::timing::TimingCycles;
+use std::collections::VecDeque;
+
+pub type Cycle = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankState {
+    Idle,
+    Open(u64), // row open (row id)
+}
+
+#[derive(Debug, Clone)]
+pub struct Bank {
+    pub state: BankState,
+    /// Earliest cycle an ACT may issue (tRC from last ACT, tRP from PRE).
+    pub next_act: Cycle,
+    /// Earliest cycle a column command may issue (tRCD from ACT).
+    pub next_col: Cycle,
+    /// Earliest cycle a PRE may issue (tRAS from ACT, tRTP/tWR from col).
+    pub next_pre: Cycle,
+    /// Bank-granular AL-DRAM (paper §5.2 future work): per-bank timing
+    /// override for the core parameters; rank-level constraints (tRRD,
+    /// tFAW, bus, tRFC) always come from the rank set.
+    pub t_override: Option<TimingCycles>,
+}
+
+impl Bank {
+    fn new() -> Self {
+        Bank { state: BankState::Idle, next_act: 0, next_col: 0,
+               next_pre: 0, t_override: None }
+    }
+
+    pub fn open_row(&self) -> Option<u64> {
+        match self.state {
+            BankState::Open(r) => Some(r),
+            BankState::Idle => None,
+        }
+    }
+}
+
+/// One rank of DDR3 devices (8 banks).
+#[derive(Debug, Clone)]
+pub struct Rank {
+    pub banks: Vec<Bank>,
+    t: TimingCycles,
+    /// ACT-to-ACT (tRRD) gate.
+    next_act_any: Cycle,
+    /// Sliding window of the last 4 ACT times (tFAW).
+    act_window: VecDeque<Cycle>,
+    /// Earliest cycle the shared data bus is free.
+    data_free: Cycle,
+    /// Earliest cycle a READ may issue (tCCD, write->read tWTR).
+    next_read: Cycle,
+    /// Earliest cycle a WRITE may issue (tCCD, read->write turnaround).
+    next_write: Cycle,
+    /// Rank busy until (refresh).
+    busy_until: Cycle,
+    /// Statistics: command counts.
+    pub n_act: u64,
+    pub n_pre: u64,
+    pub n_read: u64,
+    pub n_write: u64,
+    pub n_refresh: u64,
+    /// Cycles any row was open (for IDD3N vs IDD2N power weighting).
+    open_cycles: u64,
+    last_open_update: Cycle,
+    open_banks: u32,
+}
+
+impl Rank {
+    pub fn new(banks: usize, t: TimingCycles) -> Self {
+        Rank {
+            banks: (0..banks).map(|_| Bank::new()).collect(),
+            t,
+            next_act_any: 0,
+            act_window: VecDeque::new(),
+            data_free: 0,
+            next_read: 0,
+            next_write: 0,
+            busy_until: 0,
+            n_act: 0,
+            n_pre: 0,
+            n_read: 0,
+            n_write: 0,
+            n_refresh: 0,
+            open_cycles: 0,
+            last_open_update: 0,
+            open_banks: 0,
+        }
+    }
+
+    pub fn timings(&self) -> &TimingCycles {
+        &self.t
+    }
+
+    /// Effective timing set for one bank (its override or the rank set).
+    #[inline]
+    pub fn bank_timings(&self, bank: usize) -> TimingCycles {
+        self.banks[bank].t_override.unwrap_or(self.t)
+    }
+
+    /// Install a bank-granular timing override (None restores rank set).
+    pub fn set_bank_timings(&mut self, bank: usize,
+                            t: Option<TimingCycles>) {
+        self.banks[bank].t_override = t;
+    }
+
+    /// AL-DRAM: swap the timing set (performed at a refresh boundary when
+    /// the temperature bin changes; in-flight constraints keep their
+    /// already-computed deadlines, which is exactly how a real controller
+    /// applies a mode-register-less timing update).
+    pub fn set_timings(&mut self, t: TimingCycles) {
+        self.t = t;
+    }
+
+    fn track_open(&mut self, now: Cycle) {
+        self.open_cycles += (now - self.last_open_update) * self.open_banks as u64;
+        self.last_open_update = now;
+    }
+
+    /// Cycles of (bank x cycle) row-open time so far — power model input.
+    pub fn open_bank_cycles(&self, now: Cycle) -> u64 {
+        self.open_cycles + (now - self.last_open_update) * self.open_banks as u64
+    }
+
+    // ---- legality ------------------------------------------------------
+
+    pub fn can_act(&self, bank: usize, now: Cycle) -> bool {
+        let b = &self.banks[bank];
+        b.state == BankState::Idle
+            && now >= b.next_act
+            && now >= self.next_act_any
+            && now >= self.busy_until
+            && (self.act_window.len() < 4
+                || now >= self.act_window[0] + self.t.tfaw as u64)
+    }
+
+    pub fn can_read(&self, bank: usize, row: u64, now: Cycle) -> bool {
+        let b = &self.banks[bank];
+        b.state == BankState::Open(row)
+            && now >= b.next_col
+            && now >= self.next_read
+            && now >= self.busy_until
+    }
+
+    pub fn can_write(&self, bank: usize, row: u64, now: Cycle) -> bool {
+        let b = &self.banks[bank];
+        b.state == BankState::Open(row)
+            && now >= b.next_col
+            && now >= self.next_write
+            && now >= self.busy_until
+    }
+
+    pub fn can_pre(&self, bank: usize, now: Cycle) -> bool {
+        let b = &self.banks[bank];
+        matches!(b.state, BankState::Open(_))
+            && now >= b.next_pre
+            && now >= self.busy_until
+    }
+
+    pub fn can_refresh(&self, now: Cycle) -> bool {
+        now >= self.busy_until
+            && self.banks.iter().all(|b| b.state == BankState::Idle)
+            && self.banks.iter().all(|b| now >= b.next_act)
+    }
+
+    pub fn all_banks_idle(&self) -> bool {
+        self.banks.iter().all(|b| b.state == BankState::Idle)
+    }
+
+    // ---- issue ---------------------------------------------------------
+
+    pub fn issue_act(&mut self, bank: usize, row: u64, now: Cycle) {
+        debug_assert!(self.can_act(bank, now));
+        self.track_open(now);
+        let rank_t = self.t;
+        let t = self.bank_timings(bank);
+        let b = &mut self.banks[bank];
+        b.state = BankState::Open(row);
+        b.next_col = now + t.trcd as u64;
+        b.next_pre = now + t.tras as u64;
+        b.next_act = now + t.trc as u64;
+        self.next_act_any = now + rank_t.trrd as u64;
+        self.act_window.push_back(now);
+        if self.act_window.len() > 4 {
+            self.act_window.pop_front();
+        }
+        self.open_banks += 1;
+        self.n_act += 1;
+    }
+
+    /// Returns the cycle the read data burst completes.
+    pub fn issue_read(&mut self, bank: usize, row: u64, now: Cycle) -> Cycle {
+        debug_assert!(self.can_read(bank, row, now));
+        let t = self.bank_timings(bank);
+        let data_start = (now + t.tcl as u64).max(self.data_free);
+        let data_end = data_start + t.tburst as u64;
+        self.data_free = data_end;
+        self.next_read = now + t.tccd as u64;
+        // read->write turnaround: write CAS may not collide on the bus.
+        self.next_write = self
+            .next_write
+            .max(now + t.tcl as u64 + t.tburst as u64 + 2 - t.tcwl as u64);
+        let b = &mut self.banks[bank];
+        b.next_pre = b.next_pre.max(now + t.trtp as u64);
+        self.n_read += 1;
+        data_end
+    }
+
+    /// Returns the cycle the write data burst completes (write latency is
+    /// posted; the requester does not wait for the array restore).
+    pub fn issue_write(&mut self, bank: usize, row: u64, now: Cycle) -> Cycle {
+        debug_assert!(self.can_write(bank, row, now));
+        let t = self.bank_timings(bank);
+        let data_start = (now + t.tcwl as u64).max(self.data_free);
+        let data_end = data_start + t.tburst as u64;
+        self.data_free = data_end;
+        self.next_write = now + t.tccd as u64;
+        // write->read same rank: tWTR after the data burst.
+        self.next_read = self.next_read.max(data_end + t.twtr as u64);
+        let b = &mut self.banks[bank];
+        // tWR: write recovery after the data burst before PRE.
+        b.next_pre = b.next_pre.max(data_end + t.twr as u64);
+        self.n_write += 1;
+        data_end
+    }
+
+    pub fn issue_pre(&mut self, bank: usize, now: Cycle) {
+        debug_assert!(self.can_pre(bank, now));
+        self.track_open(now);
+        let t = self.bank_timings(bank);
+        let b = &mut self.banks[bank];
+        b.state = BankState::Idle;
+        b.next_act = b.next_act.max(now + t.trp as u64);
+        self.open_banks -= 1;
+        self.n_pre += 1;
+    }
+
+    pub fn issue_refresh(&mut self, now: Cycle) {
+        debug_assert!(self.can_refresh(now));
+        self.busy_until = now + self.t.trfc as u64;
+        for b in &mut self.banks {
+            b.next_act = b.next_act.max(self.busy_until);
+        }
+        self.n_refresh += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::TimingParams;
+
+    fn rank() -> Rank {
+        Rank::new(8, TimingParams::ddr3_standard().to_cycles(1.25))
+    }
+
+    #[test]
+    fn act_then_read_honors_trcd() {
+        let mut r = rank();
+        assert!(r.can_act(0, 0));
+        r.issue_act(0, 42, 0);
+        let trcd = r.timings().trcd as u64;
+        assert!(!r.can_read(0, 42, trcd - 1));
+        assert!(r.can_read(0, 42, trcd));
+        assert!(!r.can_read(0, 43, trcd), "wrong row must not read");
+    }
+
+    #[test]
+    fn pre_honors_tras_and_act_honors_trp() {
+        let mut r = rank();
+        r.issue_act(0, 1, 0);
+        let tras = r.timings().tras as u64;
+        let trp = r.timings().trp as u64;
+        assert!(!r.can_pre(0, tras - 1));
+        assert!(r.can_pre(0, tras));
+        r.issue_pre(0, tras);
+        assert!(!r.can_act(0, tras + trp - 1));
+        assert!(r.can_act(0, tras + trp));
+    }
+
+    #[test]
+    fn trrd_and_tfaw_limit_activates() {
+        let mut r = rank();
+        let trrd = r.timings().trrd as u64;
+        let tfaw = r.timings().tfaw as u64;
+        let mut now = 0;
+        for b in 0..4 {
+            assert!(r.can_act(b, now));
+            r.issue_act(b, 0, now);
+            now += trrd;
+        }
+        // 5th ACT within the tFAW window of the 1st must wait.
+        assert!(!r.can_act(4, now));
+        assert!(r.can_act(4, tfaw.max(now)));
+    }
+
+    #[test]
+    fn write_recovery_blocks_pre() {
+        let mut r = rank();
+        r.issue_act(0, 7, 0);
+        let t = *r.timings();
+        let col = t.trcd as u64;
+        let data_end = r.issue_write(0, 7, col);
+        assert_eq!(data_end, col + t.tcwl as u64 + t.tburst as u64);
+        let pre_ok = data_end + t.twr as u64;
+        assert!(!r.can_pre(0, pre_ok - 1));
+        assert!(r.can_pre(0, pre_ok));
+    }
+
+    #[test]
+    fn refresh_needs_idle_banks_and_blocks_for_trfc() {
+        let mut r = rank();
+        r.issue_act(0, 1, 0);
+        assert!(!r.can_refresh(100));
+        let tras = r.timings().tras as u64;
+        let trp = r.timings().trp as u64;
+        r.issue_pre(0, tras);
+        let idle = tras + trp;
+        assert!(r.can_refresh(idle));
+        r.issue_refresh(idle);
+        let trfc = r.timings().trfc as u64;
+        assert!(!r.can_act(1, idle + trfc - 1));
+        assert!(r.can_act(1, idle + trfc));
+    }
+
+    #[test]
+    fn reduced_timings_shorten_the_critical_path() {
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        let (ts, tf) = (std.to_cycles(1.25), fast.to_cycles(1.25));
+        assert!(tf.trcd < ts.trcd);
+        assert!(tf.tras < ts.tras);
+        assert!(tf.twr < ts.twr);
+        assert!(tf.trp < ts.trp);
+        // A full row-miss cycle (ACT..PRE..ACT) is shorter.
+        assert!(tf.trc < ts.trc);
+    }
+
+    #[test]
+    fn data_bus_serializes_bursts() {
+        let mut r = rank();
+        r.issue_act(0, 1, 0);
+        r.issue_act(1, 1, r.timings().trrd as u64);
+        let t = *r.timings();
+        let col0 = t.trcd as u64 + t.trrd as u64;
+        let end0 = r.issue_read(0, 1, col0);
+        let col1 = col0 + t.tccd as u64;
+        let end1 = r.issue_read(1, 1, col1);
+        assert!(end1 >= end0 + t.tburst as u64,
+                "bursts overlap: {end0} {end1}");
+    }
+}
+
+#[cfg(test)]
+mod bank_override_tests {
+    use super::*;
+    use crate::timing::TimingParams;
+
+    #[test]
+    fn per_bank_override_applies_only_to_that_bank() {
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        let mut r = Rank::new(8, std.to_cycles(1.25));
+        r.set_bank_timings(2, Some(fast.to_cycles(1.25)));
+
+        // Bank 2 opens its column gate earlier than bank 0.
+        r.issue_act(0, 1, 0);
+        let trrd = r.timings().trrd as u64;
+        r.issue_act(2, 1, trrd);
+        let trcd_std = std.to_cycles(1.25).trcd as u64;
+        let trcd_fast = fast.to_cycles(1.25).trcd as u64;
+        assert!(trcd_fast < trcd_std);
+        assert!(!r.can_read(0, 1, trcd_std - 1));
+        assert!(r.can_read(0, 1, trcd_std));
+        assert!(r.can_read(2, 1, trrd + trcd_fast));
+    }
+
+    #[test]
+    fn clearing_override_restores_rank_timings() {
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        let mut r = Rank::new(8, std.to_cycles(1.25));
+        r.set_bank_timings(5, Some(fast.to_cycles(1.25)));
+        assert_eq!(r.bank_timings(5), fast.to_cycles(1.25));
+        r.set_bank_timings(5, None);
+        assert_eq!(r.bank_timings(5), *r.timings());
+    }
+
+    #[test]
+    fn rank_constraints_stay_shared_under_overrides() {
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        let mut r = Rank::new(8, std.to_cycles(1.25));
+        for b in 0..8 {
+            r.set_bank_timings(b, Some(fast.to_cycles(1.25)));
+        }
+        // tRRD/tFAW still enforced at rank level (standard values).
+        let trrd = r.timings().trrd as u64;
+        r.issue_act(0, 0, 0);
+        assert!(!r.can_act(1, trrd - 1));
+        assert!(r.can_act(1, trrd));
+    }
+}

@@ -1,0 +1,15 @@
+//! Cycle-level DDR3 memory-system simulator: device timing state machines,
+//! the memory controller (FR-FCFS, row policies, refresh, AL-DRAM timing
+//! hook), a bounded-MLP core model, and the full-system harness.
+
+pub mod address;
+pub mod controller;
+pub mod cpu;
+pub mod dram;
+pub mod system;
+
+pub use address::AddrMap;
+pub use controller::{Controller, CtrlStats, Request, RowPolicy};
+pub use cpu::Core;
+pub use dram::{Bank, BankState, Cycle, Rank};
+pub use system::{System, SystemConfig, SystemStats};

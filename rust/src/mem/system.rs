@@ -1,0 +1,317 @@
+//! Full-system simulation: N cores x M channels, cycle-stepped. This is
+//! the "real system" of §6/Fig 4 — baseline DDR3 timings vs. AL-DRAM's
+//! reduced timings, with the AL-DRAM mechanism optionally managing the
+//! timing set from the thermal model at refresh granularity.
+
+use super::address::AddrMap;
+use super::controller::{Controller, Request, RowPolicy};
+use super::cpu::Core;
+use crate::aldram::{AlDram, ThermalModel};
+use crate::timing::TimingParams;
+use crate::workloads::WorkloadSpec;
+
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub channels: usize,
+    pub ranks_per_channel: usize,
+    pub policy: RowPolicy,
+    pub timings: TimingParams,
+    /// Ambient temperature for the thermal model (degC).
+    pub ambient_c: f64,
+    /// If set, AL-DRAM manages timings dynamically from the thermal model.
+    pub aldram: Option<AlDram>,
+}
+
+impl SystemConfig {
+    /// The paper's evaluated configuration: one channel, one rank,
+    /// open-page, 55degC operating temperature.
+    pub fn paper_default() -> Self {
+        SystemConfig {
+            channels: 1,
+            ranks_per_channel: 1,
+            policy: RowPolicy::Open,
+            timings: TimingParams::ddr3_standard(),
+            ambient_c: 55.0,
+            aldram: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CoreStats {
+    pub name: String,
+    pub insts: u64,
+    pub ipc: f64,
+    pub reads: u64,
+    pub writes: u64,
+    pub stall_cycles: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SystemStats {
+    pub cycles: u64,
+    pub cores: Vec<CoreStats>,
+    pub avg_read_latency_cycles: f64,
+    pub row_hit_rate: f64,
+    pub reads_done: u64,
+    pub writes_done: u64,
+    pub refreshes: u64,
+    /// Bus data cycles / total cycles (bandwidth utilization proxy).
+    pub bus_utilization: f64,
+    /// Power-model inputs per channel.
+    pub power_inputs: Vec<crate::power::PowerInputs>,
+    /// Mean DIMM temperature over the run (thermal model).
+    pub mean_temp_c: f64,
+}
+
+pub struct System {
+    controllers: Vec<Controller>,
+    cores: Vec<Core>,
+    core_names: Vec<String>,
+    thermal: ThermalModel,
+    aldram: Option<AlDram>,
+    chan_bits_mask: u64,
+    now: u64,
+    temp_acc: f64,
+    temp_samples: u64,
+}
+
+impl System {
+    pub fn new(cfg: &SystemConfig, workloads: &[(WorkloadSpec, String)]) -> Self {
+        assert!(cfg.channels.is_power_of_two());
+        let map = AddrMap::ddr3_2gb(cfg.ranks_per_channel);
+        let controllers = (0..cfg.channels)
+            .map(|_| Controller::new(map, cfg.timings, cfg.policy))
+            .collect();
+        let cores = workloads
+            .iter()
+            .enumerate()
+            .map(|(i, (w, seed))| Core::new(i, w.trace(seed)))
+            .collect();
+        let core_names =
+            workloads.iter().map(|(w, _)| w.name.to_string()).collect();
+        System {
+            controllers,
+            cores,
+            core_names,
+            thermal: ThermalModel::new(cfg.ambient_c),
+            aldram: cfg.aldram.clone(),
+            chan_bits_mask: cfg.channels as u64 - 1,
+            now: 0,
+            temp_acc: 0.0,
+            temp_samples: 0,
+        }
+    }
+
+    /// Channel selection: interleave by row-sized blocks so streams spread
+    /// across channels without breaking row locality.
+    pub fn channel_of(&self, addr: u64) -> usize {
+        ((addr >> 13) & self.chan_bits_mask) as usize
+    }
+
+    pub fn step(&mut self) {
+        let now = self.now;
+
+        // Cores issue (channel_of inlined: closures cannot borrow self
+        // while controllers are mutably split out).
+        for core in &mut self.cores {
+            let controllers = &mut self.controllers;
+            let mask = self.chan_bits_mask;
+            let mut try_send = |req: Request| {
+                let ch = ((req.addr >> 13) & mask) as usize;
+                controllers[ch].enqueue(req)
+            };
+            core.step(now, &mut try_send);
+        }
+
+        // Memory advances; completions wake cores.
+        for ctrl in &mut self.controllers {
+            for c in ctrl.tick(now) {
+                if !c.is_write {
+                    self.cores[c.core].on_completion(c.id);
+                }
+            }
+        }
+
+        // Thermal + AL-DRAM management at a coarse epoch (every 1024
+        // cycles ~ 1.28 us) — far finer than the <= 0.1 degC/s drift.
+        if now % 1024 == 0 {
+            let util = self.bus_utilization_instant();
+            let temp = self.thermal.step(1024.0 * 1.25e-9, util);
+            self.temp_acc += temp;
+            self.temp_samples += 1;
+            if let Some(al) = &self.aldram {
+                let t = al.timings_for(temp);
+                for ctrl in &mut self.controllers {
+                    ctrl.set_timings(t);
+                }
+            }
+        }
+
+        self.now += 1;
+    }
+
+    fn bus_utilization_instant(&self) -> f64 {
+        // Approximate utilization from issued column commands so far.
+        let data: u64 = self
+            .controllers
+            .iter()
+            .map(|c| (c.stats.reads_done + c.stats.writes_done) * 4)
+            .sum();
+        let total = (self.now.max(1)) * self.controllers.len() as u64;
+        (data as f64 / total as f64).min(1.0)
+    }
+
+    pub fn run(&mut self, cycles: u64) -> SystemStats {
+        let start = self.now;
+        while self.now - start < cycles {
+            self.step();
+        }
+        self.stats()
+    }
+
+    pub fn stats(&self) -> SystemStats {
+        let cycles = self.now;
+        let cores = self
+            .cores
+            .iter()
+            .zip(&self.core_names)
+            .map(|(c, name)| CoreStats {
+                name: name.clone(),
+                insts: c.insts,
+                ipc: c.ipc(cycles),
+                reads: c.reads_issued,
+                writes: c.writes_issued,
+                stall_cycles: c.stall_cycles,
+            })
+            .collect();
+        let mut reads = 0;
+        let mut writes = 0;
+        let mut refreshes = 0;
+        let mut lat_num = 0.0;
+        let mut hit_num = 0.0;
+        let mut hit_den = 0.0;
+        let mut power_inputs = Vec::new();
+        for ctrl in &self.controllers {
+            let s = &ctrl.stats;
+            reads += s.reads_done;
+            writes += s.writes_done;
+            refreshes += s.refreshes;
+            lat_num += s.avg_read_latency() * s.reads_done as f64;
+            hit_num += s.row_hits as f64;
+            hit_den +=
+                (s.row_hits + s.row_misses + s.row_conflicts) as f64;
+            power_inputs.push(crate::power::PowerInputs::from_controller(
+                ctrl, cycles));
+        }
+        SystemStats {
+            cycles,
+            cores,
+            avg_read_latency_cycles: if reads > 0 {
+                lat_num / reads as f64
+            } else {
+                0.0
+            },
+            row_hit_rate: if hit_den > 0.0 { hit_num / hit_den } else { 0.0 },
+            reads_done: reads,
+            writes_done: writes,
+            refreshes,
+            bus_utilization: ((reads + writes) * 4) as f64
+                / (cycles.max(1) * self.controllers.len() as u64) as f64,
+            power_inputs,
+            mean_temp_c: if self.temp_samples > 0 {
+                self.temp_acc / self.temp_samples as f64
+            } else {
+                self.thermal.temperature()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    fn run_one(name: &str, timings: TimingParams, cycles: u64) -> SystemStats {
+        let mut cfg = SystemConfig::paper_default();
+        cfg.timings = timings;
+        let w = by_name(name).unwrap();
+        let mut sys = System::new(&cfg, &[(w, "t/0".to_string())]);
+        sys.run(cycles)
+    }
+
+    #[test]
+    fn stream_saturates_bandwidth() {
+        let s = run_one("stream.copy", TimingParams::ddr3_standard(), 200_000);
+        assert!(s.bus_utilization > 0.3, "util {}", s.bus_utilization);
+        assert!(s.row_hit_rate > 0.5, "hit rate {}", s.row_hit_rate);
+    }
+
+    #[test]
+    fn compute_bound_workload_is_memory_insensitive() {
+        let base = run_one("povray", TimingParams::ddr3_standard(), 150_000);
+        let fast = run_one(
+            "povray",
+            TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18),
+            150_000,
+        );
+        let speedup = fast.cores[0].ipc / base.cores[0].ipc;
+        assert!(speedup < 1.05, "povray speedup {speedup}");
+        assert!(base.cores[0].ipc > 3.0, "ipc {}", base.cores[0].ipc);
+    }
+
+    #[test]
+    fn aldram_timings_speed_up_memory_bound_workload() {
+        let base = run_one("mcf", TimingParams::ddr3_standard(), 200_000);
+        let fast = run_one(
+            "mcf",
+            TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18),
+            200_000,
+        );
+        let speedup = fast.cores[0].ipc / base.cores[0].ipc;
+        assert!(speedup > 1.03, "mcf speedup {speedup}");
+    }
+
+    #[test]
+    fn multicore_contention_increases_latency() {
+        let cfg = SystemConfig::paper_default();
+        let w = by_name("gups").unwrap();
+        let mut one = System::new(&cfg, &[(w.clone(), "a".into())]);
+        let s1 = one.run(150_000);
+        let four: Vec<_> = (0..4)
+            .map(|i| (w.clone(), format!("c{i}")))
+            .collect();
+        let mut m = System::new(&cfg, &four);
+        let s4 = m.run(150_000);
+        assert!(s4.avg_read_latency_cycles > s1.avg_read_latency_cycles,
+                "queueing must raise latency: {} vs {}",
+                s4.avg_read_latency_cycles, s1.avg_read_latency_cycles);
+    }
+
+    #[test]
+    fn refreshes_track_runtime() {
+        let s = run_one("hmmer", TimingParams::ddr3_standard(), 50_000);
+        // 50k cycles / 6240-cycle tREFI ~ 8 refreshes.
+        assert!(s.refreshes >= 6 && s.refreshes <= 10, "{}", s.refreshes);
+    }
+}
+
+#[cfg(test)]
+mod channel_tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    #[test]
+    fn channel_interleave_is_row_granular() {
+        let cfg = SystemConfig { channels: 2,
+                                 ..SystemConfig::paper_default() };
+        let w = by_name("gups").unwrap();
+        let sys = System::new(&cfg, &[(w, "c".into())]);
+        assert_eq!(sys.channel_of(0), 0);
+        assert_eq!(sys.channel_of(8192), 1);
+        assert_eq!(sys.channel_of(16384), 0);
+        // same 8 KiB block -> same channel (row locality preserved)
+        assert_eq!(sys.channel_of(64), sys.channel_of(4096));
+    }
+}

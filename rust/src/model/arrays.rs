@@ -1,0 +1,214 @@
+//! Flattened per-DIMM cell-parameter arrays — the common currency between
+//! the population generator, the native backend, and the PJRT runtime
+//! (which uploads them as [banks, chips, cells] f32 literals).
+
+use super::charge::Cell;
+
+/// Sampled cell population of one DIMM: five parallel [B, C, N] arrays in
+/// row-major (bank, chip, cell) order.
+#[derive(Debug, Clone)]
+pub struct CellArrays {
+    pub banks: usize,
+    pub chips: usize,
+    pub cells: usize,
+    pub qcap: Vec<f32>,
+    pub tau_s: Vec<f32>,
+    pub tau_r: Vec<f32>,
+    pub tau_p: Vec<f32>,
+    pub lam85: Vec<f32>,
+}
+
+impl CellArrays {
+    pub fn zeroed(banks: usize, chips: usize, cells: usize) -> Self {
+        let n = banks * chips * cells;
+        CellArrays {
+            banks,
+            chips,
+            cells,
+            qcap: vec![0.0; n],
+            tau_s: vec![0.0; n],
+            tau_r: vec![0.0; n],
+            tau_p: vec![0.0; n],
+            lam85: vec![0.0; n],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.banks * self.chips * self.cells
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn idx(&self, bank: usize, chip: usize, cell: usize) -> usize {
+        debug_assert!(bank < self.banks && chip < self.chips && cell < self.cells);
+        (bank * self.chips + chip) * self.cells + cell
+    }
+
+    #[inline]
+    pub fn cell(&self, i: usize) -> Cell {
+        Cell {
+            qcap: self.qcap[i],
+            tau_s: self.tau_s[i],
+            tau_r: self.tau_r[i],
+            tau_p: self.tau_p[i],
+            lam85: self.lam85[i],
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, c: Cell) {
+        self.qcap[i] = c.qcap;
+        self.tau_s[i] = c.tau_s;
+        self.tau_r[i] = c.tau_r;
+        self.tau_p[i] = c.tau_p;
+        self.lam85[i] = c.lam85;
+    }
+
+    /// Downsample to `cells_out` cells per (bank, chip) — used to feed the
+    /// `profile_small` artifact and fast test paths. Takes every k-th cell
+    /// so the weak-tail cells stay representative rather than clustered.
+    pub fn downsample(&self, cells_out: usize) -> CellArrays {
+        assert!(cells_out <= self.cells && cells_out > 0);
+        let stride = self.cells / cells_out;
+        let mut out = CellArrays::zeroed(self.banks, self.chips, cells_out);
+        for b in 0..self.banks {
+            for c in 0..self.chips {
+                for j in 0..cells_out {
+                    let src = self.idx(b, c, j * stride);
+                    let dst = out.idx(b, c, j);
+                    out.set(dst, self.cell(src));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Result of one profiling batch: per-(combo, bank, chip) reductions plus
+/// per-combo totals — mirrors the 6-tuple returned by the AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ProfileOutput {
+    pub k: usize,
+    pub banks: usize,
+    pub chips: usize,
+    /// Error counts, shape [K, B, C] flattened row-major.
+    pub err_r: Vec<f32>,
+    pub err_w: Vec<f32>,
+    /// Minimum margins, shape [K, B, C].
+    pub mmin_r: Vec<f32>,
+    pub mmin_w: Vec<f32>,
+    /// Per-combo totals, shape [K].
+    pub tot_r: Vec<f32>,
+    pub tot_w: Vec<f32>,
+}
+
+impl ProfileOutput {
+    pub fn zeroed(k: usize, banks: usize, chips: usize) -> Self {
+        ProfileOutput {
+            k,
+            banks,
+            chips,
+            err_r: vec![0.0; k * banks * chips],
+            err_w: vec![0.0; k * banks * chips],
+            mmin_r: vec![f32::INFINITY; k * banks * chips],
+            mmin_w: vec![f32::INFINITY; k * banks * chips],
+            tot_r: vec![0.0; k],
+            tot_w: vec![0.0; k],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, combo: usize, bank: usize, chip: usize) -> usize {
+        (combo * self.banks + bank) * self.chips + chip
+    }
+
+    /// Total read-test errors for combo `k` across the module.
+    pub fn read_errors(&self, k: usize) -> f64 {
+        self.tot_r[k] as f64
+    }
+
+    pub fn write_errors(&self, k: usize) -> f64 {
+        self.tot_w[k] as f64
+    }
+
+    /// Per-bank error counts (summed over chips) for combo `k`.
+    pub fn bank_errors_read(&self, k: usize) -> Vec<f64> {
+        (0..self.banks)
+            .map(|b| {
+                (0..self.chips)
+                    .map(|c| self.err_r[self.idx(k, b, c)] as f64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    pub fn bank_errors_write(&self, k: usize) -> Vec<f64> {
+        (0..self.banks)
+            .map(|b| {
+                (0..self.chips)
+                    .map(|c| self.err_w[self.idx(k, b, c)] as f64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Per-chip error counts (summed over banks) for combo `k`.
+    pub fn chip_errors_read(&self, k: usize) -> Vec<f64> {
+        (0..self.chips)
+            .map(|c| {
+                (0..self.banks)
+                    .map(|b| self.err_r[self.idx(k, b, c)] as f64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    pub fn chip_errors_write(&self, k: usize) -> Vec<f64> {
+        (0..self.chips)
+            .map(|c| {
+                (0..self.banks)
+                    .map(|b| self.err_w[self.idx(k, b, c)] as f64)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut a = CellArrays::zeroed(2, 3, 4);
+        let c = Cell { qcap: 1.0, tau_s: 2.0, tau_r: 3.0, tau_p: 4.0, lam85: 5.0 };
+        let i = a.idx(1, 2, 3);
+        a.set(i, c);
+        assert_eq!(a.cell(i), c);
+        assert_eq!(a.len(), 24);
+    }
+
+    #[test]
+    fn downsample_strides() {
+        let mut a = CellArrays::zeroed(1, 1, 8);
+        for j in 0..8 {
+            let i = a.idx(0, 0, j);
+            a.qcap[i] = j as f32;
+        }
+        let d = a.downsample(4);
+        assert_eq!(d.cells, 4);
+        assert_eq!(d.qcap, vec![0.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn output_reductions() {
+        let mut o = ProfileOutput::zeroed(1, 2, 2);
+        o.err_r = vec![1.0, 2.0, 3.0, 4.0]; // banks x chips
+        assert_eq!(o.bank_errors_read(0), vec![3.0, 7.0]);
+        assert_eq!(o.chip_errors_read(0), vec![4.0, 6.0]);
+    }
+}

@@ -1,0 +1,193 @@
+//! Native mirror of the charge model (python/compile/kernels/charge_math.py).
+//!
+//! Scalar f32 expressions kept term-for-term identical to the jnp versions
+//! so the native backend and the AOT artifact agree to float tolerance
+//! (asserted by rust/tests/runtime_native_xcheck.rs). See DESIGN.md §4 for
+//! the physics.
+
+use super::params::ModelParams;
+
+/// Per-cell process-variation parameters (one sampled DRAM cell).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    /// Full stored charge (normalized to VDD = 1); capacitance variation.
+    pub qcap: f32,
+    /// Sensing time constant (ns); bitline/access-transistor RC.
+    pub tau_s: f32,
+    /// Restoration time constant (ns).
+    pub tau_r: f32,
+    /// Precharge/equalization time constant (ns).
+    pub tau_p: f32,
+    /// Leak rate at 85degC (1/ms); retention variation.
+    pub lam85: f32,
+}
+
+/// One timing combination under test (ns / ms / degC) — matches the
+/// [K, 6] combo rows fed to the kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Combo {
+    pub trcd: f32,
+    pub tras: f32,
+    pub twr: f32,
+    pub trp: f32,
+    pub tref_ms: f32,
+    pub temp_c: f32,
+}
+
+impl Combo {
+    pub fn to_row(&self) -> [f32; 6] {
+        [self.trcd, self.tras, self.twr, self.trp, self.tref_ms, self.temp_c]
+    }
+
+    /// Padding sentinel (ignored by the kernel: zero errors, +inf margin).
+    pub fn sentinel() -> Self {
+        Combo { trcd: 0.0, tras: 0.0, twr: 0.0, trp: 0.0, tref_ms: 0.0, temp_c: -1.0 }
+    }
+
+    pub fn is_sentinel(&self) -> bool {
+        self.temp_c < 0.0
+    }
+}
+
+/// Multiplicative charge decay over one refresh window at `temp_c`.
+#[inline]
+pub fn leak_factor(lam85: f32, temp_c: f32, tref_ms: f32, p: &ModelParams) -> f32 {
+    let lam = lam85 * 2f32.powf((temp_c - p.t_ref_base_c) / p.leak_doubling_c);
+    (-lam * tref_ms).exp()
+}
+
+/// Cell charge after a read access's truncated restoration window (tRAS).
+#[inline]
+pub fn restore_read(qcap: f32, tau_r: f32, tras_ns: f32, p: &ModelParams) -> f32 {
+    let w = (tras_ns - p.t_rest0_ns).max(0.0);
+    qcap * (1.0 - (1.0 - p.q_share) * (-w / tau_r).exp())
+}
+
+/// Cell charge after a write-recovery window (tWR), worst-pattern derated.
+#[inline]
+pub fn restore_write(qcap: f32, tau_r: f32, twr_ns: f32, p: &ModelParams) -> f32 {
+    let tau_w = p.wr_tau_ratio * tau_r;
+    qcap * p.kw_pattern * (1.0 - (-(twr_ns + p.t_wr0_ns) / tau_w).exp())
+}
+
+/// Residual bitline differential left by a truncated precharge (tRP).
+#[inline]
+pub fn precharge_offset(tau_p: f32, trp_ns: f32, p: &ModelParams) -> f32 {
+    let w = (trp_ns - p.t_pre0_ns).max(0.0);
+    p.v_bl * (-w / tau_p).exp()
+}
+
+/// Sense margin after tRCD given initial charge `q0` (>= 0 means PASS).
+#[inline]
+pub fn sense_margin(q0: f32, tau_s: f32, trcd_ns: f32, offset: f32,
+                    temp_c: f32, p: &ModelParams) -> f32 {
+    let amp = p.a_max * (q0 / p.q_knee).max(0.0).powf(p.knee_pow).min(1.0);
+    let tau_t = tau_s * (1.0 + p.alpha_t_per_c * (temp_c - 55.0).max(0.0));
+    let w = (trcd_ns - p.t_soff_ns).max(0.0);
+    let v = amp * (1.0 - (-w / tau_t).exp());
+    v - p.g_off * offset - p.v_read()
+}
+
+/// Full test chains: `(margin_read, margin_write)`. Mirrors
+/// `charge_math.test_margins` exactly: the read test accesses with the
+/// combo's timings; the write test writes with the combo's timings and
+/// reads back with *standard* timings, with linear driver-settle slack
+/// terms for the write-side tRCD/tRP (see the python docstring).
+#[inline]
+pub fn test_margins(c: &Cell, k: &Combo, p: &ModelParams) -> (f32, f32) {
+    let decay = leak_factor(c.lam85, k.temp_c, k.tref_ms, p);
+    let tau_t = c.tau_s * (1.0 + p.alpha_t_per_c * (k.temp_c - 55.0).max(0.0));
+
+    // read test
+    let off = precharge_offset(c.tau_p, k.trp, p);
+    let q_r = restore_read(c.qcap, c.tau_r, k.tras, p) * decay;
+    let m_r = sense_margin(q_r, c.tau_s, k.trcd, off, k.temp_c, p);
+
+    // write test
+    let q_w = restore_write(c.qcap, c.tau_r, k.twr, p) * decay;
+    let off_std = precharge_offset(c.tau_p, p.spec.trp_ns as f32, p);
+    let m_w_rb =
+        sense_margin(q_w, c.tau_s, p.spec.trcd_ns as f32, off_std, k.temp_c, p);
+    let m_w_rcd = p.k_lin * (k.trcd - (p.t_soff_ns + p.c_rcd_w * tau_t));
+    let m_w_rp = p.k_lin * (k.trp - (p.t_pre0_ns + p.c_rp_w * c.tau_p));
+    let m_w = m_w_rb.min(m_w_rcd).min(m_w_rp);
+    (m_r, m_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::params;
+
+    fn typical_cell() -> Cell {
+        Cell { qcap: 1.0, tau_s: 5.0, tau_r: 3.1, tau_p: 1.85, lam85: 6.5e-4 }
+    }
+
+    fn std_combo(temp_c: f32) -> Combo {
+        Combo { trcd: 13.75, tras: 35.0, twr: 15.0, trp: 13.75,
+                tref_ms: 64.0, temp_c }
+    }
+
+    #[test]
+    fn typical_cell_passes_std_at_85() {
+        let p = params();
+        let (m_r, m_w) = test_margins(&typical_cell(), &std_combo(85.0), p);
+        assert!(m_r > 0.0, "read margin {m_r}");
+        assert!(m_w > 0.0, "write margin {m_w}");
+    }
+
+    #[test]
+    fn leak_doubles_per_10c() {
+        let p = params();
+        let l55 = leak_factor(1e-3, 55.0, 100.0, p).ln();
+        let l65 = leak_factor(1e-3, 65.0, 100.0, p).ln();
+        assert!((l65 / l55 - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn restore_monotone_in_time() {
+        let p = params();
+        let mut prev = -1.0f32;
+        for t in [8.0f32, 12.0, 20.0, 35.0, 60.0] {
+            let q = restore_read(1.0, 3.0, t, p);
+            assert!(q >= prev);
+            prev = q;
+        }
+        assert!(restore_read(1.0, 3.0, 1e6, p) <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn write_floor_is_zero_not_negative() {
+        let p = params();
+        let q = restore_write(1.0, 3.0, 0.0, p);
+        assert!(q >= 0.0 && q < p.kw_pattern);
+    }
+
+    #[test]
+    fn precharge_offset_decays() {
+        let p = params();
+        let o1 = precharge_offset(1.85, 5.0, p);
+        let o2 = precharge_offset(1.85, 13.75, p);
+        assert!(o1 > o2 && o2 > 0.0);
+        assert!(precharge_offset(1.85, 0.0, p) <= p.v_bl);
+    }
+
+    #[test]
+    fn amplitude_knee_saturates() {
+        let p = params();
+        // Above the knee, margin no longer improves with charge.
+        let hi = sense_margin(1.0, 5.0, 13.75, 0.0, 55.0, p);
+        let knee = sense_margin(p.q_knee, 5.0, 13.75, 0.0, 55.0, p);
+        let lo = sense_margin(p.q_knee * 0.5, 5.0, 13.75, 0.0, 55.0, p);
+        assert!((hi - knee).abs() < 1e-7);
+        assert!(lo < knee);
+    }
+
+    #[test]
+    fn hot_sensing_is_slower() {
+        let p = params();
+        let cool = sense_margin(1.0, 5.0, 8.0, 0.0, 55.0, p);
+        let hot = sense_margin(1.0, 5.0, 8.0, 0.0, 85.0, p);
+        assert!(hot < cool);
+    }
+}

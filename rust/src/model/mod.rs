@@ -1,0 +1,14 @@
+//! Charge-level DRAM cell model — native mirror of the L1/L2 python stack.
+//!
+//! The single source of truth for constants is `model_params.json` at the
+//! repo root (embedded into the binary at build time); the physics is
+//! documented in DESIGN.md §4.
+
+pub mod arrays;
+pub mod charge;
+pub mod params;
+pub mod profile;
+
+pub use arrays::{CellArrays, ProfileOutput};
+pub use charge::{Cell, Combo};
+pub use params::{params, ModelParams};

@@ -1,0 +1,228 @@
+//! Charge-model constants, read from the repo-level `model_params.json` —
+//! the same file `python/compile/params.py` bakes into the AOT artifacts.
+//! `rust/tests/runtime_native_xcheck.rs` guards against drift between the
+//! two readers.
+
+use std::sync::OnceLock;
+
+use crate::util::json::Json;
+
+/// The embedded copy: the binary is self-contained after build. A path
+/// override (`MODEL_PARAMS` env var) exists for calibration experiments.
+const EMBEDDED: &str = include_str!("../../../model_params.json");
+
+#[derive(Debug, Clone)]
+pub struct Vendor {
+    pub name: String,
+    pub share: f64,
+    pub mu_ln_tau_s: f64,
+    pub lam_shift: f64,
+    pub tau_shift: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Population {
+    pub n_dimms: usize,
+    pub sigma_tau_s: f64,
+    pub tau_r_ratio: f64,
+    pub sigma_tau_r: f64,
+    pub mu_ln_tau_p: f64,
+    pub sigma_tau_p: f64,
+    pub mu_ln_lam85: f64,
+    pub sigma_lam: f64,
+    pub weak_frac: f64,
+    pub weak_mult_min: f64,
+    pub weak_mult_max: f64,
+    pub sigma_qcap: f64,
+    pub qcap_clip_lo: f64,
+    pub qcap_clip_hi: f64,
+    pub vendors: Vec<Vendor>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub tck_ns: f64,
+    pub trcd_ns: f64,
+    pub tras_ns: f64,
+    pub twr_ns: f64,
+    pub trp_ns: f64,
+    pub trefi_standard_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Floors {
+    pub trcd_min_ns: f64,
+    pub twr_min_ns: f64,
+    pub trp_min_ns: f64,
+    pub tras_over_trcd_ns: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub banks: usize,
+    pub chips: usize,
+    pub cells_per_chip_bank: usize,
+    pub cells_per_chip_bank_small: usize,
+    pub combo_batch: usize,
+}
+
+/// All analytic charge-model constants (DESIGN.md §4). Field-for-field
+/// mirror of `python/compile/params.py::ModelParams`.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub t_soff_ns: f32,
+    pub a_max: f32,
+    pub q_knee: f32,
+    pub knee_pow: f32,
+    pub v_read_frac: f32,
+    pub g_off: f32,
+    pub alpha_t_per_c: f32,
+    pub q_share: f32,
+    pub t_rest0_ns: f32,
+    pub t_wr0_ns: f32,
+    pub wr_tau_ratio: f32,
+    pub kw_pattern: f32,
+    pub v_bl: f32,
+    pub t_pre0_ns: f32,
+    pub leak_doubling_c: f32,
+    pub t_ref_base_c: f32,
+    /// Write-access settle terms (write test; DESIGN.md §4).
+    pub c_rcd_w: f32,
+    pub c_rp_w: f32,
+    pub k_lin: f32,
+    pub spec: Spec,
+    pub floors: Floors,
+    pub geometry: Geometry,
+    pub population: Population,
+}
+
+impl ModelParams {
+    pub fn v_read(&self) -> f32 {
+        self.v_read_frac * self.a_max
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        let spec = j.req("spec");
+        let floors = j.req("floors");
+        let g = j.req("geometry");
+        let pop = j.req("population");
+        ModelParams {
+            t_soff_ns: j.f32("t_soff_ns"),
+            a_max: j.f32("a_max"),
+            q_knee: j.f32("q_knee"),
+            knee_pow: j.f32("knee_pow"),
+            v_read_frac: j.f32("v_read_frac"),
+            g_off: j.f32("g_off"),
+            alpha_t_per_c: j.f32("alpha_t_per_c"),
+            q_share: j.f32("q_share"),
+            t_rest0_ns: j.f32("t_rest0_ns"),
+            t_wr0_ns: j.f32("t_wr0_ns"),
+            wr_tau_ratio: j.f32("wr_tau_ratio"),
+            kw_pattern: j.f32("kw_pattern"),
+            v_bl: j.f32("v_bl"),
+            t_pre0_ns: j.f32("t_pre0_ns"),
+            leak_doubling_c: j.f32("leak_doubling_c"),
+            t_ref_base_c: j.f32("t_ref_base_c"),
+            c_rcd_w: j.f32("c_rcd_w"),
+            c_rp_w: j.f32("c_rp_w"),
+            k_lin: j.f32("k_lin"),
+            spec: Spec {
+                tck_ns: spec.f64("tck_ns"),
+                trcd_ns: spec.f64("trcd_ns"),
+                tras_ns: spec.f64("tras_ns"),
+                twr_ns: spec.f64("twr_ns"),
+                trp_ns: spec.f64("trp_ns"),
+                trefi_standard_ms: spec.f64("trefi_standard_ms"),
+            },
+            floors: Floors {
+                trcd_min_ns: floors.f64("trcd_min_ns"),
+                twr_min_ns: floors.f64("twr_min_ns"),
+                trp_min_ns: floors.f64("trp_min_ns"),
+                tras_over_trcd_ns: floors.f64("tras_over_trcd_ns"),
+            },
+            geometry: Geometry {
+                banks: g.usize("banks"),
+                chips: g.usize("chips"),
+                cells_per_chip_bank: g.usize("cells_per_chip_bank"),
+                cells_per_chip_bank_small: g.usize("cells_per_chip_bank_small"),
+                combo_batch: g.usize("combo_batch"),
+            },
+            population: Population {
+                n_dimms: pop.usize("n_dimms"),
+                sigma_tau_s: pop.f64("sigma_tau_s"),
+                tau_r_ratio: pop.f64("tau_r_ratio"),
+                sigma_tau_r: pop.f64("sigma_tau_r"),
+                mu_ln_tau_p: pop.f64("mu_ln_tau_p"),
+                sigma_tau_p: pop.f64("sigma_tau_p"),
+                mu_ln_lam85: pop.f64("mu_ln_lam85"),
+                sigma_lam: pop.f64("sigma_lam"),
+                weak_frac: pop.f64("weak_frac"),
+                weak_mult_min: pop.f64("weak_mult_min"),
+                weak_mult_max: pop.f64("weak_mult_max"),
+                sigma_qcap: pop.f64("sigma_qcap"),
+                qcap_clip_lo: pop.f64("qcap_clip_lo"),
+                qcap_clip_hi: pop.f64("qcap_clip_hi"),
+                vendors: pop
+                    .arr("vendors")
+                    .iter()
+                    .map(|v| Vendor {
+                        name: v.str("name").to_string(),
+                        share: v.f64("share"),
+                        mu_ln_tau_s: v.f64("mu_ln_tau_s"),
+                        lam_shift: v.f64("lam_shift"),
+                        tau_shift: v.f64("tau_shift"),
+                    })
+                    .collect(),
+            },
+        }
+    }
+
+    pub fn load() -> Self {
+        let text = match std::env::var("MODEL_PARAMS") {
+            Ok(path) => std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("MODEL_PARAMS={path}: {e}")),
+            Err(_) => EMBEDDED.to_string(),
+        };
+        let j = Json::parse(&text).expect("model_params.json must parse");
+        ModelParams::from_json(&j)
+    }
+}
+
+static PARAMS: OnceLock<ModelParams> = OnceLock::new();
+
+/// Process-wide parameters (the common case; calibration constructs its
+/// own instances instead).
+pub fn params() -> &'static ModelParams {
+    PARAMS.get_or_init(ModelParams::load)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_embedded() {
+        let p = ModelParams::load();
+        assert_eq!(p.geometry.banks, 8);
+        assert_eq!(p.geometry.chips, 8);
+        assert_eq!(p.population.vendors.len(), 3);
+        assert!(p.a_max > 0.0 && p.q_knee > 0.0);
+        assert!((p.v_read() - p.v_read_frac * p.a_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vendor_shares_sum_to_one() {
+        let p = ModelParams::load();
+        let s: f64 = p.population.vendors.iter().map(|v| v.share).sum();
+        assert!((s - 1.0).abs() < 1e-9, "vendor shares sum to {s}");
+    }
+
+    #[test]
+    fn spec_is_ddr3() {
+        let p = ModelParams::load();
+        assert_eq!(p.spec.trcd_ns, 13.75);
+        assert_eq!(p.spec.tras_ns, 35.0);
+        assert_eq!(p.spec.twr_ns, 15.0);
+        assert_eq!(p.spec.trp_ns, 13.75);
+    }
+}

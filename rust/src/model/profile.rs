@@ -1,0 +1,265 @@
+//! Native (pure-rust) evaluation of the profiling batch — the same
+//! computation as the AOT `profile_step` artifact, used as the
+//! cross-validation oracle, the no-artifact fallback backend, and the
+//! calibration fast path.
+
+use super::arrays::{CellArrays, ProfileOutput};
+use super::charge::{self, Combo};
+use super::params::ModelParams;
+
+/// Matches `ref.SENTINEL_MARGIN` on the python side.
+pub const SENTINEL_MARGIN: f32 = 1.0e9;
+
+/// Evaluate `combos` against every sampled cell; reduce per (bank, chip).
+///
+/// Loop order mirrors the Pallas kernel's tiling: cells outer (parameter
+/// loads amortized), combos inner. Perf (EXPERIMENTS.md §Perf, L3-native):
+/// the combo-only sub-expressions (the `2^((T-85)/10)` temperature scaling,
+/// the `tau_s` thermal factor, the clamped timing windows) are hoisted out
+/// of the inner loop, and the combo-independent per-cell standard-timing
+/// precharge offset is computed once per cell. All hoists preserve the
+/// floating-point evaluation *order* of `charge_math.py`, so error counts
+/// stay bit-identical to the AOT artifact (runtime_native_xcheck).
+pub fn profile_native(arrays: &CellArrays, combos: &[Combo],
+                      p: &ModelParams) -> ProfileOutput {
+    let mut out = ProfileOutput::zeroed(combos.len(), arrays.banks, arrays.chips);
+
+    let pre: Vec<ComboPre> = combos.iter().map(|k| ComboPre::new(k, p)).collect();
+    let w_rcd_std = (p.spec.trcd_ns as f32 - p.t_soff_ns).max(0.0);
+    let w_rp_std = (p.spec.trp_ns as f32 - p.t_pre0_ns).max(0.0);
+    let q_deficit = 1.0 - p.q_share;
+    let v_read = p.v_read();
+    // knee_pow is integral (6.0): x.powi is ~8x faster than powf. Guarded
+    // by runtime_native_xcheck — if the rounding ever diverges from the
+    // artifact's pow lowering, fall back to powf by making knee_pow
+    // non-integral in model_params.json.
+    let knee_int = if p.knee_pow.fract() == 0.0 { Some(p.knee_pow as i32) } else { None };
+    let knee = |x: f32| -> f32 {
+        match knee_int {
+            Some(n) => x.powi(n),
+            None => x.powf(p.knee_pow),
+        }
+    };
+
+    for b in 0..arrays.banks {
+        for c in 0..arrays.chips {
+            let base = (b * arrays.chips + c) * arrays.cells;
+            for j in 0..arrays.cells {
+                let i = base + j;
+                let cell = arrays.cell(i);
+                // Combo-independent per-cell terms.
+                let off_std = p.v_bl * (-w_rp_std / cell.tau_p).exp();
+
+                for (ki, kp) in pre.iter().enumerate() {
+                    let oi = out.idx(ki, b, c);
+                    if kp.sentinel {
+                        if out.mmin_r[oi] > SENTINEL_MARGIN {
+                            out.mmin_r[oi] = SENTINEL_MARGIN;
+                            out.mmin_w[oi] = SENTINEL_MARGIN;
+                        }
+                        continue;
+                    }
+                    let k = &kp.combo;
+
+                    // leak (temperature scaling hoisted; same op order as
+                    // charge_math.leak_factor: lam = lam85 * pow2).
+                    let lam = cell.lam85 * kp.pow2;
+                    let decay = (-lam * k.tref_ms).exp();
+
+                    // read chain
+                    let off = p.v_bl * (-kp.w_rp / cell.tau_p).exp();
+                    let q_r = cell.qcap
+                        * (1.0 - q_deficit * (-kp.w_ras / cell.tau_r).exp())
+                        * decay;
+                    let tau_t = cell.tau_s * kp.tau_fac;
+                    let amp_r =
+                        p.a_max * knee((q_r / p.q_knee).max(0.0)).min(1.0);
+                    let v_r = amp_r * (1.0 - (-kp.w_rcd / tau_t).exp());
+                    let m_r = v_r - p.g_off * off - v_read;
+
+                    // write chain (readback at standard timings)
+                    let q_w = cell.qcap * p.kw_pattern
+                        * (1.0 - (-kp.w_wr / (p.wr_tau_ratio * cell.tau_r)).exp())
+                        * decay;
+                    let amp_w =
+                        p.a_max * knee((q_w / p.q_knee).max(0.0)).min(1.0);
+                    let v_w = amp_w * (1.0 - (-w_rcd_std / tau_t).exp());
+                    let m_w_rb = v_w - p.g_off * off_std - v_read;
+                    let m_w_rcd =
+                        p.k_lin * (k.trcd - (p.t_soff_ns + p.c_rcd_w * tau_t));
+                    let m_w_rp =
+                        p.k_lin * (k.trp - (p.t_pre0_ns + p.c_rp_w * cell.tau_p));
+                    let m_w = m_w_rb.min(m_w_rcd).min(m_w_rp);
+
+                    if m_r < 0.0 {
+                        out.err_r[oi] += 1.0;
+                    }
+                    if m_w < 0.0 {
+                        out.err_w[oi] += 1.0;
+                    }
+                    if m_r < out.mmin_r[oi] {
+                        out.mmin_r[oi] = m_r;
+                    }
+                    if m_w < out.mmin_w[oi] {
+                        out.mmin_w[oi] = m_w;
+                    }
+                }
+            }
+        }
+    }
+
+    // Sentinel combos report the sentinel margin (mirrors the kernel);
+    // also fix up any (combo, bank, chip) that saw no cells.
+    for v in out.mmin_r.iter_mut().chain(out.mmin_w.iter_mut()) {
+        if !v.is_finite() || *v > SENTINEL_MARGIN {
+            *v = SENTINEL_MARGIN;
+        }
+    }
+
+    for ki in 0..combos.len() {
+        let (mut tr, mut tw) = (0.0f32, 0.0f32);
+        for b in 0..arrays.banks {
+            for c in 0..arrays.chips {
+                let oi = out.idx(ki, b, c);
+                tr += out.err_r[oi];
+                tw += out.err_w[oi];
+            }
+        }
+        out.tot_r[ki] = tr;
+        out.tot_w[ki] = tw;
+    }
+    out
+}
+
+/// Hoisted per-combo constants (see `profile_native`).
+struct ComboPre {
+    combo: Combo,
+    sentinel: bool,
+    /// 2^((T - 85) / 10) — the leak temperature scaling.
+    pow2: f32,
+    /// 1 + alpha_t * max(T - 55, 0) — the tau_s thermal factor.
+    tau_fac: f32,
+    w_rcd: f32,
+    w_ras: f32,
+    w_wr: f32,
+    w_rp: f32,
+}
+
+impl ComboPre {
+    fn new(k: &Combo, p: &ModelParams) -> Self {
+        ComboPre {
+            combo: *k,
+            sentinel: k.is_sentinel(),
+            pow2: 2f32.powf((k.temp_c - p.t_ref_base_c) / p.leak_doubling_c),
+            tau_fac: 1.0 + p.alpha_t_per_c * (k.temp_c - 55.0).max(0.0),
+            w_rcd: (k.trcd - p.t_soff_ns).max(0.0),
+            w_ras: (k.tras - p.t_rest0_ns).max(0.0),
+            w_wr: k.twr + p.t_wr0_ns,
+            w_rp: (k.trp - p.t_pre0_ns).max(0.0),
+        }
+    }
+}
+
+/// Per-cell margins for a single combo — mirror of the `margin_step`
+/// artifact (used by the repeatability battery, which needs cell identity).
+pub fn margins_native(arrays: &CellArrays, combo: &Combo,
+                      p: &ModelParams) -> (Vec<f32>, Vec<f32>) {
+    let n = arrays.len();
+    let mut m_r = vec![0.0f32; n];
+    let mut m_w = vec![0.0f32; n];
+    for i in 0..n {
+        let (r, w) = charge::test_margins(&arrays.cell(i), combo, p);
+        m_r[i] = r;
+        m_w[i] = w;
+    }
+    (m_r, m_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::params;
+    use crate::util::rng::Rng;
+
+    fn tiny_arrays() -> CellArrays {
+        let p = params();
+        let mut rng = Rng::from_label("test/profile");
+        let mut a = CellArrays::zeroed(2, 2, 64);
+        for i in 0..a.len() {
+            a.qcap[i] = rng
+                .lognormal(0.0, p.population.sigma_qcap)
+                .clamp(p.population.qcap_clip_lo, p.population.qcap_clip_hi)
+                as f32;
+            a.tau_s[i] = rng.lognormal(1.61, p.population.sigma_tau_s) as f32;
+            a.tau_r[i] = (p.population.tau_r_ratio * a.tau_s[i] as f64
+                * rng.lognormal(0.0, p.population.sigma_tau_r))
+                as f32;
+            a.tau_p[i] = rng
+                .lognormal(p.population.mu_ln_tau_p, p.population.sigma_tau_p)
+                as f32;
+            a.lam85[i] = rng
+                .lognormal(p.population.mu_ln_lam85, p.population.sigma_lam)
+                as f32;
+        }
+        a
+    }
+
+    fn std(tref: f32, temp: f32) -> Combo {
+        Combo { trcd: 13.75, tras: 35.0, twr: 15.0, trp: 13.75,
+                tref_ms: tref, temp_c: temp }
+    }
+
+    #[test]
+    fn std_timings_error_free_at_85() {
+        let a = tiny_arrays();
+        let out = profile_native(&a, &[std(64.0, 85.0)], params());
+        assert_eq!(out.read_errors(0), 0.0);
+        assert_eq!(out.write_errors(0), 0.0);
+        assert!(out.mmin_r.iter().all(|m| *m > 0.0));
+    }
+
+    #[test]
+    fn sentinel_contributes_nothing() {
+        let a = tiny_arrays();
+        let out = profile_native(&a, &[Combo::sentinel()], params());
+        assert_eq!(out.read_errors(0), 0.0);
+        assert_eq!(out.mmin_r[0], SENTINEL_MARGIN);
+    }
+
+    #[test]
+    fn aggressive_timings_fail_many_cells() {
+        let a = tiny_arrays();
+        let combo = Combo { trcd: 5.0, tras: 16.25, twr: 5.0, trp: 5.0,
+                            tref_ms: 448.0, temp_c: 85.0 };
+        let out = profile_native(&a, &[combo], params());
+        assert!(out.read_errors(0) > 0.0);
+        assert!(out.write_errors(0) > 0.0);
+    }
+
+    #[test]
+    fn totals_match_bank_sums() {
+        let a = tiny_arrays();
+        let combo = Combo { trcd: 6.25, tras: 20.0, twr: 6.25, trp: 6.25,
+                            tref_ms: 300.0, temp_c: 85.0 };
+        let out = profile_native(&a, &[std(64.0, 85.0), combo], params());
+        for k in 0..2 {
+            let bank_sum: f64 = out.bank_errors_read(k).iter().sum();
+            assert_eq!(bank_sum, out.read_errors(k));
+            let chip_sum: f64 = out.chip_errors_write(k).iter().sum();
+            assert_eq!(chip_sum, out.write_errors(k));
+        }
+    }
+
+    #[test]
+    fn margins_native_matches_profile_counts() {
+        let a = tiny_arrays();
+        let combo = Combo { trcd: 7.5, tras: 22.5, twr: 7.5, trp: 7.5,
+                            tref_ms: 256.0, temp_c: 85.0 };
+        let out = profile_native(&a, &[combo], params());
+        let (m_r, m_w) = margins_native(&a, &combo, params());
+        let n_r = m_r.iter().filter(|m| **m < 0.0).count() as f64;
+        let n_w = m_w.iter().filter(|m| **m < 0.0).count() as f64;
+        assert_eq!(n_r, out.read_errors(0));
+        assert_eq!(n_w, out.write_errors(0));
+    }
+}

@@ -1,0 +1,180 @@
+//! Synthetic DIMM population — the stand-in for the paper's 115 real DDR3
+//! modules (920 chips). See DESIGN.md §2 for the substitution argument.
+//!
+//! Each module is generated from a stable label (`dimm/NNN`) so every
+//! experiment (and both profiling backends) sees identical silicon. The
+//! three synthetic vendors differ in their sensing-speed and leakage
+//! distributions, reproducing the vendor spread visible in Fig. 3.
+
+use crate::model::{params, CellArrays, ModelParams};
+use crate::util::rng::Rng;
+
+/// Identity + sampled cells of one synthetic DIMM.
+#[derive(Debug, Clone)]
+pub struct Dimm {
+    pub id: usize,
+    pub vendor: String,
+    /// Vendor index into `ModelParams::population.vendors`.
+    pub vendor_idx: usize,
+    pub arrays: CellArrays,
+}
+
+impl Dimm {
+    pub fn label(&self) -> String {
+        format!("dimm/{:03}", self.id)
+    }
+}
+
+/// Assign DIMM `id` to a vendor by the configured market shares —
+/// deterministic striping so every population slice is well-mixed.
+pub fn vendor_of(id: usize, p: &ModelParams) -> usize {
+    let mut rng = Rng::from_label(&format!("vendor-assign/{id}"));
+    let x = rng.f64();
+    let mut acc = 0.0;
+    for (vi, v) in p.population.vendors.iter().enumerate() {
+        acc += v.share;
+        if x < acc {
+            return vi;
+        }
+    }
+    p.population.vendors.len() - 1
+}
+
+/// Generate one DIMM's sampled cell arrays at full profiling resolution.
+///
+/// Per-cell draws (all lognormal, per DESIGN.md §4):
+///   tau_s  — sensing RC; vendor-shifted mean.
+///   tau_r  — restoration RC, correlated with tau_s (same access path).
+///   tau_p  — bitline equalization RC.
+///   lam85  — leak rate at 85degC; vendor-shifted; a `weak_frac` mixture
+///            tail multiplies lam by U(weak_mult_min, weak_mult_max),
+///            modelling the retention-weak outlier cells that set each
+///            module's maximum error-free refresh interval (Fig. 2a/3a).
+///   qcap   — full-charge capacity, clipped.
+pub fn generate_dimm(id: usize, cells_per_chip_bank: usize,
+                     p: &ModelParams) -> Dimm {
+    let pop = &p.population;
+    let vi = vendor_of(id, p);
+    let vendor = &pop.vendors[vi];
+    let g = &p.geometry;
+
+    let mut arrays = CellArrays::zeroed(g.banks, g.chips, cells_per_chip_bank);
+    // One stream per (dimm, bank, chip) so downsampled and full populations
+    // share structure and bank-level statistics are independent.
+    for b in 0..g.banks {
+        for c in 0..g.chips {
+            let mut rng = Rng::from_label(&format!("dimm/{id:03}/b{b}/c{c}"));
+            for j in 0..cells_per_chip_bank {
+                let i = arrays.idx(b, c, j);
+                let tau_s = rng.lognormal(
+                    vendor.mu_ln_tau_s + vendor.tau_shift, pop.sigma_tau_s);
+                let tau_r = pop.tau_r_ratio * tau_s
+                    * rng.lognormal(0.0, pop.sigma_tau_r);
+                let tau_p = rng.lognormal(pop.mu_ln_tau_p, pop.sigma_tau_p);
+                let mut lam85 = rng.lognormal(
+                    pop.mu_ln_lam85 + vendor.lam_shift, pop.sigma_lam);
+                if rng.chance(pop.weak_frac) {
+                    lam85 *= rng.range(pop.weak_mult_min, pop.weak_mult_max);
+                }
+                let qcap = rng
+                    .lognormal(0.0, pop.sigma_qcap)
+                    .clamp(pop.qcap_clip_lo, pop.qcap_clip_hi);
+                arrays.qcap[i] = qcap as f32;
+                arrays.tau_s[i] = tau_s as f32;
+                arrays.tau_r[i] = tau_r as f32;
+                arrays.tau_p[i] = tau_p as f32;
+                arrays.lam85[i] = lam85 as f32;
+            }
+        }
+    }
+    Dimm { id, vendor: vendor.name.clone(), vendor_idx: vi, arrays }
+}
+
+/// The full population at a given per-chip-bank sampling resolution.
+pub fn generate_population(cells_per_chip_bank: usize) -> Vec<Dimm> {
+    let p = params();
+    (0..p.population.n_dimms)
+        .map(|id| generate_dimm(id, cells_per_chip_bank, p))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let p = params();
+        let a = generate_dimm(7, 64, p);
+        let b = generate_dimm(7, 64, p);
+        assert_eq!(a.arrays.qcap, b.arrays.qcap);
+        assert_eq!(a.arrays.lam85, b.arrays.lam85);
+        assert_eq!(a.vendor, b.vendor);
+    }
+
+    #[test]
+    fn different_dimms_differ() {
+        let p = params();
+        let a = generate_dimm(1, 64, p);
+        let b = generate_dimm(2, 64, p);
+        assert_ne!(a.arrays.tau_s, b.arrays.tau_s);
+    }
+
+    #[test]
+    fn vendor_assignment_covers_all() {
+        let p = params();
+        let mut seen = vec![0usize; p.population.vendors.len()];
+        for id in 0..p.population.n_dimms {
+            seen[vendor_of(id, p)] += 1;
+        }
+        for (vi, count) in seen.iter().enumerate() {
+            assert!(*count > 10, "vendor {vi} got only {count} dimms");
+        }
+    }
+
+    #[test]
+    fn parameters_in_physical_ranges() {
+        let p = params();
+        let d = generate_dimm(0, 256, p);
+        let a = &d.arrays;
+        for i in 0..a.len() {
+            assert!(a.qcap[i] >= p.population.qcap_clip_lo as f32
+                && a.qcap[i] <= p.population.qcap_clip_hi as f32);
+            assert!(a.tau_s[i] > 1.0 && a.tau_s[i] < 20.0, "tau_s {}", a.tau_s[i]);
+            assert!(a.tau_r[i] > 0.3 && a.tau_r[i] < 20.0);
+            assert!(a.tau_p[i] > 0.5 && a.tau_p[i] < 5.0);
+            assert!(a.lam85[i] > 0.0 && a.lam85[i] < 0.1);
+        }
+    }
+
+    #[test]
+    fn weak_tail_exists_at_scale() {
+        // Across the whole population at small resolution there must be at
+        // least a handful of weak cells (the Fig 2a/3a retention setters).
+        let p = params();
+        let mut weak = 0usize;
+        for id in 0..20 {
+            let d = generate_dimm(id, 256, p);
+            let lam_med = p.population.mu_ln_lam85.exp();
+            weak += d.arrays.lam85.iter()
+                .filter(|l| **l as f64 > lam_med * 5.0).count();
+        }
+        assert!(weak > 0, "no weak-tail cells generated");
+    }
+
+    #[test]
+    fn downsample_preserves_bank_structure() {
+        let p = params();
+        let d = generate_dimm(3, 256, p);
+        let small = d.arrays.downsample(64);
+        assert_eq!(small.banks, d.arrays.banks);
+        assert_eq!(small.cells, 64);
+        // First cell of each (bank, chip) must match the full population.
+        for b in 0..small.banks {
+            for c in 0..small.chips {
+                assert_eq!(small.qcap[small.idx(b, c, 0)],
+                           d.arrays.qcap[d.arrays.idx(b, c, 0)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! IDD-based DRAM power model (Micron power-calculator methodology,
+//! simplified to the terms the §8.4 analysis needs).
+//!
+//! AL-DRAM's 5.8% DRAM power saving has two sources: (i) shorter tRAS
+//! means rows spend less time open (IDD3N vs IDD2N background), and (ii)
+//! the same work finishes in fewer cycles, shrinking background energy per
+//! unit of work. Both fall out of the counters the controller already
+//! keeps.
+
+use crate::mem::Controller;
+
+/// DDR3-1600 x8 2Gb device currents (mA) and voltage — representative
+/// datasheet values, 8 devices per rank.
+#[derive(Debug, Clone, Copy)]
+pub struct IddSpec {
+    pub vdd: f64,
+    pub idd0: f64,   // ACT-PRE average
+    pub idd2n: f64,  // precharge standby
+    pub idd3n: f64,  // active standby (row open)
+    pub idd4r: f64,  // read burst
+    pub idd4w: f64,  // write burst
+    pub idd5: f64,   // refresh
+    pub devices_per_rank: f64,
+}
+
+impl Default for IddSpec {
+    fn default() -> Self {
+        IddSpec {
+            vdd: 1.5,
+            idd0: 95.0,
+            idd2n: 42.0,
+            idd3n: 67.0,
+            idd4r: 180.0,
+            idd4w: 185.0,
+            idd5: 215.0,
+            devices_per_rank: 8.0,
+        }
+    }
+}
+
+/// Activity counters for one channel over a run.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerInputs {
+    pub cycles: u64,
+    pub tck_ns: f64,
+    pub n_act: u64,
+    pub n_read: u64,
+    pub n_write: u64,
+    pub n_refresh: u64,
+    pub open_bank_cycles: u64,
+    pub banks: u64,
+    pub tras_cycles: u64,
+    pub trfc_cycles: u64,
+    pub burst_cycles: u64,
+}
+
+impl PowerInputs {
+    pub fn from_controller(ctrl: &Controller, cycles: u64) -> Self {
+        let t = ctrl.timings().to_cycles(ctrl.tck_ns());
+        let mut n_act = 0;
+        let mut n_read = 0;
+        let mut n_write = 0;
+        let mut n_refresh = 0;
+        let mut open = 0;
+        let mut banks = 0;
+        for r in ctrl.ranks() {
+            n_act += r.n_act;
+            n_read += r.n_read;
+            n_write += r.n_write;
+            n_refresh += r.n_refresh;
+            open += r.open_bank_cycles(cycles);
+            banks += r.banks.len() as u64;
+        }
+        PowerInputs {
+            cycles,
+            tck_ns: ctrl.tck_ns(),
+            n_act,
+            n_read,
+            n_write,
+            n_refresh,
+            open_bank_cycles: open,
+            banks,
+            tras_cycles: t.tras as u64,
+            trfc_cycles: t.trfc as u64,
+            burst_cycles: t.tburst as u64,
+        }
+    }
+}
+
+/// Average power (W) and total energy (J) for a run.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBreakdown {
+    pub background_w: f64,
+    pub activate_w: f64,
+    pub rdwr_w: f64,
+    pub refresh_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f64 {
+        self.background_w + self.activate_w + self.rdwr_w + self.refresh_w
+    }
+
+    /// Energy over the run (J).
+    pub fn energy_j(&self, cycles: u64, tck_ns: f64) -> f64 {
+        self.total_w() * cycles as f64 * tck_ns * 1e-9
+    }
+}
+
+pub fn power(inputs: &PowerInputs, spec: &IddSpec) -> PowerBreakdown {
+    let n = spec.devices_per_rank;
+    let cyc = inputs.cycles.max(1) as f64;
+
+    // Background: weighted active/precharge standby by row-open residency.
+    let open_frac = (inputs.open_bank_cycles as f64
+        / (cyc * inputs.banks.max(1) as f64))
+        .clamp(0.0, 1.0);
+    let background_w =
+        spec.vdd * n / 1000.0
+            * (spec.idd3n * open_frac + spec.idd2n * (1.0 - open_frac));
+
+    // Activate/precharge: IDD0 above background for tRAS per ACT.
+    let act_frac = (inputs.n_act as f64 * inputs.tras_cycles as f64 / cyc)
+        .min(1.0);
+    let activate_w =
+        spec.vdd * n / 1000.0 * (spec.idd0 - spec.idd3n).max(0.0) * act_frac;
+
+    // Read/write bursts above active standby.
+    let rd_frac = (inputs.n_read as f64 * inputs.burst_cycles as f64 / cyc)
+        .min(1.0);
+    let wr_frac = (inputs.n_write as f64 * inputs.burst_cycles as f64 / cyc)
+        .min(1.0);
+    let rdwr_w = spec.vdd * n / 1000.0
+        * ((spec.idd4r - spec.idd3n).max(0.0) * rd_frac
+            + (spec.idd4w - spec.idd3n).max(0.0) * wr_frac);
+
+    // Refresh above precharge standby.
+    let ref_frac = (inputs.n_refresh as f64 * inputs.trfc_cycles as f64 / cyc)
+        .min(1.0);
+    let refresh_w =
+        spec.vdd * n / 1000.0 * (spec.idd5 - spec.idd2n).max(0.0) * ref_frac;
+
+    PowerBreakdown { background_w, activate_w, rdwr_w, refresh_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_inputs() -> PowerInputs {
+        PowerInputs {
+            cycles: 1_000_000,
+            tck_ns: 1.25,
+            n_act: 10_000,
+            n_read: 60_000,
+            n_write: 20_000,
+            n_refresh: 160,
+            open_bank_cycles: 3_000_000,
+            banks: 8,
+            tras_cycles: 28,
+            trfc_cycles: 128,
+            burst_cycles: 4,
+        }
+    }
+
+    #[test]
+    fn power_is_positive_and_plausible() {
+        let p = power(&base_inputs(), &IddSpec::default());
+        let total = p.total_w();
+        // A busy 8-device DDR3 rank dissipates a few watts.
+        assert!(total > 0.5 && total < 10.0, "total {total} W");
+        assert!(p.background_w > 0.0);
+        assert!(p.rdwr_w > 0.0);
+    }
+
+    #[test]
+    fn shorter_tras_cuts_activate_power() {
+        let spec = IddSpec::default();
+        let mut a = base_inputs();
+        let mut b = base_inputs();
+        a.tras_cycles = 28;
+        b.tras_cycles = 19; // 32% reduction
+        let pa = power(&a, &spec);
+        let pb = power(&b, &spec);
+        assert!(pb.activate_w < pa.activate_w);
+        assert!(pb.total_w() < pa.total_w());
+    }
+
+    #[test]
+    fn less_row_open_time_cuts_background() {
+        let spec = IddSpec::default();
+        let mut a = base_inputs();
+        let mut b = base_inputs();
+        a.open_bank_cycles = 4_000_000;
+        b.open_bank_cycles = 2_000_000;
+        assert!(power(&b, &spec).background_w < power(&a, &spec).background_w);
+    }
+
+    #[test]
+    fn idle_rank_draws_only_precharge_standby() {
+        let spec = IddSpec::default();
+        let idle = PowerInputs {
+            cycles: 1_000_000,
+            tck_ns: 1.25,
+            n_act: 0,
+            n_read: 0,
+            n_write: 0,
+            n_refresh: 0,
+            open_bank_cycles: 0,
+            banks: 8,
+            tras_cycles: 28,
+            trfc_cycles: 128,
+            burst_cycles: 4,
+        };
+        let p = power(&idle, &spec);
+        let expect = spec.vdd * spec.devices_per_rank / 1000.0 * spec.idd2n;
+        assert!((p.total_w() - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! The profiling orchestrator — the software stand-in for the SoftMC
+//! FPGA testing platform: refresh-interval sweeps, timing-parameter
+//! sweeps, the per-DIMM characterization battery, and the repeatability
+//! analysis. See DESIGN.md §2/§6.
+
+pub mod refresh;
+pub mod repeat;
+pub mod results;
+pub mod sweep;
+
+pub use refresh::{profile_refresh, RefreshProfile, SAFETY_MARGIN_MS};
+pub use repeat::{repeatability, RepeatabilityReport};
+pub use results::{profile_dimm, summarize, verify_timings, DimmProfile,
+                  PopulationSummary, TimingProfile};
+pub use sweep::{sweep, sweep_bank, sweep_ecc, sweep_exhaustive, sweep_with,
+                BestCombo, PassFn, SweepResult, TestKind};

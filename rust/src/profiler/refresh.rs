@@ -1,0 +1,166 @@
+//! Retention / refresh-interval profiling (Fig 2a, Fig 3a/3b).
+//!
+//! Sweeps the refresh interval at standard timings and a fixed temperature
+//! and finds the maximum error-free interval at module, bank and chip
+//! granularity; the *safe* interval subtracts the sweep increment (8 ms),
+//! exactly as §5.1 defines it.
+
+use anyhow::Result;
+
+use crate::model::{CellArrays, Combo};
+use crate::runtime::ProfilingBackend;
+use crate::timing::{SweepGrids, TimingParams};
+
+/// Sweep increment and safety margin (ms) from §5.1.
+pub const SAFETY_MARGIN_MS: f64 = 8.0;
+
+#[derive(Debug, Clone)]
+pub struct RefreshProfile {
+    pub temp_c: f64,
+    /// Maximum error-free refresh interval (ms) across the module.
+    pub module_max_read_ms: f64,
+    pub module_max_write_ms: f64,
+    /// Per-bank maxima (length = banks).
+    pub bank_max_read_ms: Vec<f64>,
+    pub bank_max_write_ms: Vec<f64>,
+    /// Per-chip maxima (length = chips).
+    pub chip_max_read_ms: Vec<f64>,
+    pub chip_max_write_ms: Vec<f64>,
+    /// True if the module never erred within the sweep range (maxima are
+    /// then lower bounds at the top of the grid).
+    pub saturated_read: bool,
+    pub saturated_write: bool,
+}
+
+impl RefreshProfile {
+    /// §5.1: safe interval = maximum error-free interval − 8 ms.
+    pub fn safe_read_ms(&self) -> f64 {
+        (self.module_max_read_ms - SAFETY_MARGIN_MS).max(SAFETY_MARGIN_MS)
+    }
+
+    pub fn safe_write_ms(&self) -> f64 {
+        (self.module_max_write_ms - SAFETY_MARGIN_MS).max(SAFETY_MARGIN_MS)
+    }
+}
+
+/// Largest grid value whose error count is zero, honoring retention
+/// monotonicity (the first failing interval closes the window).
+fn max_error_free(grid: &[f64], errs: &[f64]) -> (f64, bool) {
+    debug_assert_eq!(grid.len(), errs.len());
+    let mut best = grid[0];
+    for (t, e) in grid.iter().zip(errs) {
+        if *e == 0.0 {
+            best = *t;
+        } else {
+            break;
+        }
+    }
+    let saturated = errs.iter().all(|e| *e == 0.0);
+    (best, saturated)
+}
+
+/// Run the refresh sweep at standard timings.
+pub fn profile_refresh(backend: &mut dyn ProfilingBackend,
+                       arrays: &CellArrays, temp_c: f64)
+                       -> Result<RefreshProfile> {
+    let grids = SweepGrids::standard();
+    let std = TimingParams::ddr3_standard();
+    let combos: Vec<Combo> = grids
+        .tref_ms
+        .iter()
+        .map(|t| Combo {
+            trcd: std.trcd_ns as f32,
+            tras: std.tras_ns as f32,
+            twr: std.twr_ns as f32,
+            trp: std.trp_ns as f32,
+            tref_ms: *t as f32,
+            temp_c: temp_c as f32,
+        })
+        .collect();
+    let out = backend.profile(arrays, &combos)?;
+
+    let k = combos.len();
+    let tot_r: Vec<f64> = (0..k).map(|i| out.read_errors(i)).collect();
+    let tot_w: Vec<f64> = (0..k).map(|i| out.write_errors(i)).collect();
+    let (module_max_read_ms, saturated_read) =
+        max_error_free(&grids.tref_ms, &tot_r);
+    let (module_max_write_ms, saturated_write) =
+        max_error_free(&grids.tref_ms, &tot_w);
+
+    let per_unit = |unit_errs: &dyn Fn(usize) -> Vec<f64>, units: usize| {
+        (0..units)
+            .map(|u| {
+                let errs: Vec<f64> =
+                    (0..k).map(|ki| unit_errs(ki)[u]).collect();
+                max_error_free(&grids.tref_ms, &errs).0
+            })
+            .collect::<Vec<f64>>()
+    };
+
+    Ok(RefreshProfile {
+        temp_c,
+        module_max_read_ms,
+        module_max_write_ms,
+        bank_max_read_ms: per_unit(&|ki| out.bank_errors_read(ki), out.banks),
+        bank_max_write_ms: per_unit(&|ki| out.bank_errors_write(ki), out.banks),
+        chip_max_read_ms: per_unit(&|ki| out.chip_errors_read(ki), out.chips),
+        chip_max_write_ms: per_unit(&|ki| out.chip_errors_write(ki), out.chips),
+        saturated_read,
+        saturated_write,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn max_error_free_stops_at_first_failure() {
+        let grid = [64.0, 72.0, 80.0, 88.0];
+        // Non-monotone noise after the first failure must not re-open.
+        let (t, sat) = max_error_free(&grid, &[0.0, 0.0, 3.0, 0.0]);
+        assert_eq!(t, 72.0);
+        assert!(!sat);
+        let (t, sat) = max_error_free(&grid, &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(t, 88.0);
+        assert!(sat);
+    }
+
+    #[test]
+    fn module_max_is_min_of_units() {
+        let d = generate_dimm(0, 128, params());
+        let mut b = NativeBackend::new();
+        let p = profile_refresh(&mut b, &d.arrays, 85.0).unwrap();
+        // The module is as weak as its weakest bank and weakest chip.
+        let bank_min = p.bank_max_read_ms.iter().cloned().fold(f64::MAX, f64::min);
+        let chip_min = p.chip_max_read_ms.iter().cloned().fold(f64::MAX, f64::min);
+        assert_eq!(p.module_max_read_ms, bank_min.min(chip_min));
+        assert!(p.module_max_read_ms >= 64.0);
+        assert!(p.safe_read_ms() <= p.module_max_read_ms);
+    }
+
+    #[test]
+    fn standard_interval_is_error_free() {
+        // DDR3 compliance: every module passes at 64 ms / 85 degC.
+        for id in [0usize, 5, 9] {
+            let d = generate_dimm(id, 128, params());
+            let mut b = NativeBackend::new();
+            let p = profile_refresh(&mut b, &d.arrays, 85.0).unwrap();
+            assert!(p.module_max_read_ms >= 64.0, "dimm {id}");
+            assert!(p.module_max_write_ms >= 64.0, "dimm {id}");
+        }
+    }
+
+    #[test]
+    fn cooler_retains_longer() {
+        let d = generate_dimm(1, 128, params());
+        let mut b = NativeBackend::new();
+        let hot = profile_refresh(&mut b, &d.arrays, 85.0).unwrap();
+        let cool = profile_refresh(&mut b, &d.arrays, 55.0).unwrap();
+        assert!(cool.module_max_read_ms >= hot.module_max_read_ms);
+        assert!(cool.module_max_write_ms >= hot.module_max_write_ms);
+    }
+}

@@ -1,0 +1,160 @@
+//! Repeatability of latency-induced cell failures (§7.6).
+//!
+//! The paper's five scenarios: (i) the same test repeated, (ii) different
+//! data patterns, (iii) different timing-parameter combinations, (iv)
+//! different temperatures, (v) read vs. write. In their hardware, >95% of
+//! erroneous cells repeat. Our testbed adds the run-to-run noise a real
+//! tester sees (sense-amp offset drift, supply noise) as a small
+//! zero-mean margin jitter per (cell, run); the *device* margins come
+//! from the charge model, so repeatability emerges from margin spread
+//! vs. noise scale rather than being asserted.
+
+use anyhow::Result;
+
+use crate::model::{profile, CellArrays, Combo};
+use crate::util::rng::Rng;
+
+/// Run-to-run margin jitter (V, VDD = 1) — tester noise, not device state.
+pub const SIGMA_RUN: f32 = 0.002;
+
+/// Failing-cell set for one test run (indices into the flat cell array).
+fn failing_cells(arrays: &CellArrays, combo: &Combo, read: bool,
+                 run_label: &str) -> Vec<usize> {
+    let p = crate::model::params();
+    let (m_r, m_w) = profile::margins_native(arrays, combo, p);
+    let margins = if read { &m_r } else { &m_w };
+    let mut rng = Rng::from_label(run_label);
+    margins
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| **m + SIGMA_RUN * (rng.normal() as f32) < 0.0)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Fraction of run-A failures that also fail in run B (the paper's
+/// repeatability metric).
+fn overlap(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() {
+        return 1.0;
+    }
+    let bset: std::collections::HashSet<usize> = b.iter().cloned().collect();
+    a.iter().filter(|i| bset.contains(i)).count() as f64 / a.len() as f64
+}
+
+#[derive(Debug, Clone)]
+pub struct RepeatabilityReport {
+    /// Scenario (i): same test repeated `iters` times.
+    pub same_test: f64,
+    /// Scenario (ii): different data patterns.
+    pub data_patterns: f64,
+    /// Scenario (iii): cells failing at combo X also fail at the strictly
+    /// more aggressive combo X'.
+    pub timing_combos: f64,
+    /// Scenario (iv): cells failing at 55degC also fail at 85degC.
+    pub temperatures: f64,
+    /// Scenario (v): read-failing cells that also fail the write test.
+    pub read_write: f64,
+    /// Number of failing cells in the base run (context for the ratios).
+    pub base_failures: usize,
+}
+
+impl RepeatabilityReport {
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("same test", self.same_test),
+            ("data patterns", self.data_patterns),
+            ("timing combos", self.timing_combos),
+            ("temperatures", self.temperatures),
+            ("read/write", self.read_write),
+        ]
+    }
+}
+
+/// Run the §7.6 battery against one DIMM. `combo` should be aggressive
+/// enough to produce failures (the caller typically derives it from the
+/// DIMM's acceptable set minus one or two grid steps).
+pub fn repeatability(arrays: &CellArrays, combo: &Combo, iters: usize)
+                     -> Result<RepeatabilityReport> {
+    // (i) same test repeated.
+    let runs: Vec<Vec<usize>> = (0..iters.max(2))
+        .map(|r| failing_cells(arrays, combo, true, &format!("run/{r}")))
+        .collect();
+    let base = &runs[0];
+    let same_test = crate::util::mean(
+        &runs[1..].iter().map(|r| overlap(base, r)).collect::<Vec<_>>(),
+    );
+
+    // (ii) data patterns: the pattern changes which cells see worst-case
+    // coupling; model as a distinct noise stream with slightly larger
+    // amplitude (solid-0s / solid-1s / checkerboard / walking-1s).
+    let patterns: Vec<Vec<usize>> = ["solid0", "solid1", "checker", "walk1"]
+        .iter()
+        .map(|pat| failing_cells(arrays, combo, true, &format!("pat/{pat}")))
+        .collect();
+    let data_patterns = crate::util::mean(
+        &patterns.iter().map(|r| overlap(base, r)).collect::<Vec<_>>(),
+    );
+
+    // (iii) a strictly more aggressive combo must contain the failures.
+    let tighter = Combo {
+        trcd: combo.trcd - 1.25,
+        tras: combo.tras - 1.25,
+        twr: combo.twr - 1.25,
+        trp: combo.trp - 1.25,
+        ..*combo
+    };
+    let tight_fail = failing_cells(arrays, &tighter, true, "run/tight");
+    let timing_combos = overlap(base, &tight_fail);
+
+    // (iv) hotter must contain the failures.
+    let hot = Combo { temp_c: 85.0, ..*combo };
+    let cool = Combo { temp_c: 55.0, ..*combo };
+    let cool_fail = failing_cells(arrays, &cool, true, "run/cool");
+    let hot_fail = failing_cells(arrays, &hot, true, "run/hot");
+    let temperatures = overlap(&cool_fail, &hot_fail);
+
+    // (v) read-vs-write overlap: same cells, harder chain.
+    let write_fail = failing_cells(arrays, combo, false, "run/w");
+    let read_write = overlap(base, &write_fail);
+
+    Ok(RepeatabilityReport {
+        same_test,
+        data_patterns,
+        timing_combos,
+        temperatures,
+        read_write,
+        base_failures: base.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+
+    fn aggressive() -> Combo {
+        Combo { trcd: 8.75, tras: 20.0, twr: 6.25, trp: 7.5,
+                tref_ms: 448.0, temp_c: 85.0 }
+    }
+
+    #[test]
+    fn overlap_edge_cases() {
+        assert_eq!(overlap(&[], &[1, 2]), 1.0);
+        assert_eq!(overlap(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(overlap(&[1, 2], &[2]), 0.5);
+        assert_eq!(overlap(&[1], &[]), 0.0);
+    }
+
+    #[test]
+    fn failures_are_highly_repeatable() {
+        let d = generate_dimm(0, 256, params());
+        let r = repeatability(&d.arrays, &aggressive(), 5).unwrap();
+        assert!(r.base_failures > 0, "combo produced no failures");
+        // §7.6: more than 95% repeat.
+        assert!(r.same_test > 0.95, "same-test repeatability {}", r.same_test);
+        assert!(r.timing_combos > 0.95);
+        assert!(r.temperatures > 0.95);
+    }
+}

@@ -1,0 +1,432 @@
+//! Timing-parameter sweeps (Fig 2b/2c, Fig 3c/3d).
+//!
+//! For a DIMM at a given temperature and (safe) refresh interval, find the
+//! acceptable (error-free) timing combinations and the most-reduced one.
+//!
+//! The pass/fail surface is monotone in every parameter, so instead of the
+//! full grid (|tRCD| x |tRAS| x |tRP| ~ 1k combos) we run a *wave-parallel
+//! bisection*: for every (tRCD, tRP) pair the minimum acceptable tRAS (read)
+//! or tWR (write) is found by binary search, and all active pairs probe
+//! their midpoint in one backend batch per wave. This turns ~1.6k combo
+//! evaluations into ~6 batched calls — the optimization that makes the
+//! PJRT path (per-call dispatch cost) fast; see EXPERIMENTS.md §Perf.
+//! `repro ablate sweep-exhaustive` cross-checks it against the full grid.
+
+use anyhow::Result;
+
+use crate::model::{CellArrays, Combo};
+use crate::runtime::ProfilingBackend;
+use crate::timing::{SweepGrids, TimingParams};
+
+/// Which test chain drives the sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TestKind {
+    Read,  // tRCD x tRAS x tRP, tWR at standard
+    Write, // tRCD x tWR x tRP, tRAS at standard
+}
+
+/// Minimum acceptable third parameter for one (tRCD, tRP) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontierPoint {
+    pub trcd_ns: f64,
+    pub trp_ns: f64,
+    /// Minimum error-free tRAS (read) / tWR (write); `None` if the pair is
+    /// infeasible even with the standard third parameter.
+    pub min_third_ns: Option<f64>,
+}
+
+/// The most-reduced acceptable combination for one test kind.
+#[derive(Debug, Clone, Copy)]
+pub struct BestCombo {
+    pub trcd_ns: f64,
+    pub third_ns: f64, // tRAS for read, tWR for write
+    pub trp_ns: f64,
+    pub sum_ns: f64,
+    /// Fractional reduction of the sum vs. the standard sum.
+    pub reduction: f64,
+}
+
+/// Full sweep result for one (DIMM, temperature, refresh interval).
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub kind: TestKind,
+    pub temp_c: f64,
+    pub tref_ms: f64,
+    pub frontier: Vec<FrontierPoint>,
+    pub best: Option<BestCombo>,
+}
+
+fn combo_for(kind: TestKind, trcd: f64, third: f64, trp: f64, tref: f64,
+             temp: f64) -> Combo {
+    let std = TimingParams::ddr3_standard();
+    match kind {
+        TestKind::Read => Combo {
+            trcd: trcd as f32,
+            tras: third as f32,
+            twr: std.twr_ns as f32,
+            trp: trp as f32,
+            tref_ms: tref as f32,
+            temp_c: temp as f32,
+        },
+        TestKind::Write => Combo {
+            trcd: trcd as f32,
+            tras: std.tras_ns as f32,
+            twr: third as f32,
+            trp: trp as f32,
+            tref_ms: tref as f32,
+            temp_c: temp as f32,
+        },
+    }
+}
+
+fn errors_of(kind: TestKind, out: &crate::model::ProfileOutput, k: usize) -> f64 {
+    match kind {
+        TestKind::Read => out.read_errors(k),
+        TestKind::Write => out.write_errors(k),
+    }
+}
+
+/// Third-parameter grid (descending: index 0 = most relaxed) legal for a
+/// given tRCD.
+fn third_grid(kind: TestKind, grids: &SweepGrids, trcd: f64) -> Vec<f64> {
+    match kind {
+        TestKind::Read => grids
+            .tras
+            .iter()
+            .cloned()
+            .filter(|t| SweepGrids::tras_legal(trcd, *t))
+            .collect(),
+        TestKind::Write => grids.twr.clone(),
+    }
+}
+
+/// Pass criterion for a combo: inspects the profiling output at index `k`.
+/// The standard sweep requires zero errors module-wide; the bank-granular
+/// extension (paper §5.2 "future work") requires zero errors in one bank;
+/// the ECC extension (§9.2) tolerates a correctable error budget.
+pub type PassFn<'a> = &'a dyn Fn(&crate::model::ProfileOutput, usize) -> bool;
+
+/// Wave-parallel bisection over all (tRCD, tRP) pairs with the standard
+/// module-wide zero-error criterion.
+pub fn sweep(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
+             kind: TestKind, temp_c: f64, tref_ms: f64) -> Result<SweepResult> {
+    let pass: PassFn = &|out, k| errors_of(kind, out, k) == 0.0;
+    sweep_with(backend, arrays, kind, temp_c, tref_ms, pass)
+}
+
+/// Sweep for a single bank: a combo is acceptable iff that bank is
+/// error-free (other banks may err — they run their own timings).
+pub fn sweep_bank(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
+                  kind: TestKind, temp_c: f64, tref_ms: f64, bank: usize)
+                  -> Result<SweepResult> {
+    let pass: PassFn = &|out, k| match kind {
+        TestKind::Read => out.bank_errors_read(k)[bank] == 0.0,
+        TestKind::Write => out.bank_errors_write(k)[bank] == 0.0,
+    };
+    sweep_with(backend, arrays, kind, temp_c, tref_ms, pass)
+}
+
+/// Sweep with an ECC budget: up to `budget` failing cells module-wide are
+/// considered correctable (§9.2's "error correction to enable even lower
+/// latency"; DIVA-DRAM explores the same direction).
+pub fn sweep_ecc(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
+                 kind: TestKind, temp_c: f64, tref_ms: f64, budget: f64)
+                 -> Result<SweepResult> {
+    let pass: PassFn = &|out, k| errors_of(kind, out, k) <= budget;
+    sweep_with(backend, arrays, kind, temp_c, tref_ms, pass)
+}
+
+/// Wave-parallel bisection over all (tRCD, tRP) pairs under an arbitrary
+/// monotone pass criterion.
+pub fn sweep_with(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
+                  kind: TestKind, temp_c: f64, tref_ms: f64,
+                  pass: PassFn) -> Result<SweepResult> {
+    let grids = SweepGrids::standard();
+
+    struct Pair {
+        trcd: f64,
+        trp: f64,
+        grid: Vec<f64>, // descending third-parameter grid
+        lo: usize,      // largest index known error-free
+        hi: usize,      // search upper bound (inclusive)
+        feasible: bool,
+    }
+
+    let mut pairs: Vec<Pair> = Vec::new();
+    for &trcd in &grids.trcd {
+        for &trp in &grids.trp {
+            let grid = third_grid(kind, &grids, trcd);
+            if grid.is_empty() {
+                continue;
+            }
+            let hi = grid.len() - 1;
+            pairs.push(Pair { trcd, trp, grid, lo: 0, hi, feasible: false });
+        }
+    }
+
+    // Wave 0: most-relaxed third parameter decides feasibility.
+    let combos: Vec<Combo> = pairs
+        .iter()
+        .map(|p| combo_for(kind, p.trcd, p.grid[0], p.trp, tref_ms, temp_c))
+        .collect();
+    let out = backend.profile(arrays, &combos)?;
+    for (i, p) in pairs.iter_mut().enumerate() {
+        p.feasible = pass(&out, i);
+    }
+
+    // Bisection waves: probe mid = ceil((lo+hi)/2) for every unconverged
+    // feasible pair; error-free probes advance lo, failing probes pull hi.
+    loop {
+        let active: Vec<usize> = pairs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.feasible && p.lo < p.hi)
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        let combos: Vec<Combo> = active
+            .iter()
+            .map(|&i| {
+                let p = &pairs[i];
+                let mid = (p.lo + p.hi + 1) / 2;
+                combo_for(kind, p.trcd, p.grid[mid], p.trp, tref_ms, temp_c)
+            })
+            .collect();
+        let out = backend.profile(arrays, &combos)?;
+        for (j, &i) in active.iter().enumerate() {
+            let p = &mut pairs[i];
+            let mid = (p.lo + p.hi + 1) / 2;
+            if pass(&out, j) {
+                p.lo = mid;
+            } else {
+                p.hi = mid - 1;
+            }
+        }
+    }
+
+    let frontier: Vec<FrontierPoint> = pairs
+        .iter()
+        .map(|p| FrontierPoint {
+            trcd_ns: p.trcd,
+            trp_ns: p.trp,
+            min_third_ns: p.feasible.then(|| p.grid[p.lo]),
+        })
+        .collect();
+
+    let std = TimingParams::ddr3_standard();
+    let std_sum = match kind {
+        TestKind::Read => std.read_sum_ns(),
+        TestKind::Write => std.write_sum_ns(),
+    };
+    let best = frontier
+        .iter()
+        .filter_map(|f| {
+            f.min_third_ns.map(|third| BestCombo {
+                trcd_ns: f.trcd_ns,
+                third_ns: third,
+                trp_ns: f.trp_ns,
+                sum_ns: f.trcd_ns + third + f.trp_ns,
+                reduction: 1.0 - (f.trcd_ns + third + f.trp_ns) / std_sum,
+            })
+        })
+        .min_by(|a, b| {
+            // Tie-break equal sums toward lower tRCD, then lower tRP —
+            // the balance the paper's per-parameter averages reflect.
+            (a.sum_ns, a.trcd_ns, a.trp_ns)
+                .partial_cmp(&(b.sum_ns, b.trcd_ns, b.trp_ns))
+                .unwrap()
+        });
+
+    Ok(SweepResult { kind, temp_c, tref_ms, frontier, best })
+}
+
+/// Exhaustive full-grid sweep (the ablation oracle for the bisection).
+pub fn sweep_exhaustive(backend: &mut dyn ProfilingBackend,
+                        arrays: &CellArrays, kind: TestKind, temp_c: f64,
+                        tref_ms: f64) -> Result<SweepResult> {
+    let grids = SweepGrids::standard();
+    let mut frontier = Vec::new();
+    for &trcd in &grids.trcd {
+        for &trp in &grids.trp {
+            let grid = third_grid(kind, &grids, trcd);
+            if grid.is_empty() {
+                continue;
+            }
+            let combos: Vec<Combo> = grid
+                .iter()
+                .map(|&t| combo_for(kind, trcd, t, trp, tref_ms, temp_c))
+                .collect();
+            let out = backend.profile(arrays, &combos)?;
+            // grid is descending; acceptance is a prefix by monotonicity.
+            let mut min_third = None;
+            for (i, &t) in grid.iter().enumerate() {
+                if errors_of(kind, &out, i) == 0.0 {
+                    min_third = Some(t);
+                } else {
+                    break;
+                }
+            }
+            frontier.push(FrontierPoint { trcd_ns: trcd, trp_ns: trp,
+                                          min_third_ns: min_third });
+        }
+    }
+    let std = TimingParams::ddr3_standard();
+    let std_sum = match kind {
+        TestKind::Read => std.read_sum_ns(),
+        TestKind::Write => std.write_sum_ns(),
+    };
+    let best = frontier
+        .iter()
+        .filter_map(|f| {
+            f.min_third_ns.map(|third| BestCombo {
+                trcd_ns: f.trcd_ns,
+                third_ns: third,
+                trp_ns: f.trp_ns,
+                sum_ns: f.trcd_ns + third + f.trp_ns,
+                reduction: 1.0 - (f.trcd_ns + third + f.trp_ns) / std_sum,
+            })
+        })
+        .min_by(|a, b| {
+            // Tie-break equal sums toward lower tRCD, then lower tRP —
+            // the balance the paper's per-parameter averages reflect.
+            (a.sum_ns, a.trcd_ns, a.trp_ns)
+                .partial_cmp(&(b.sum_ns, b.trcd_ns, b.trp_ns))
+                .unwrap()
+        });
+    Ok(SweepResult { kind, temp_c, tref_ms, frontier, best })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn bisection_matches_exhaustive() {
+        let d = generate_dimm(2, 64, params());
+        let mut b = NativeBackend::new();
+        for kind in [TestKind::Read, TestKind::Write] {
+            let fast = sweep(&mut b, &d.arrays, kind, 85.0, 200.0).unwrap();
+            let full =
+                sweep_exhaustive(&mut b, &d.arrays, kind, 85.0, 200.0).unwrap();
+            assert_eq!(fast.frontier.len(), full.frontier.len());
+            for (a, o) in fast.frontier.iter().zip(&full.frontier) {
+                assert_eq!(a.trcd_ns, o.trcd_ns);
+                assert_eq!(a.trp_ns, o.trp_ns);
+                assert_eq!(a.min_third_ns, o.min_third_ns,
+                           "pair ({}, {})", a.trcd_ns, a.trp_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn standard_combo_is_always_acceptable() {
+        let d = generate_dimm(4, 64, params());
+        let mut b = NativeBackend::new();
+        let r = sweep(&mut b, &d.arrays, TestKind::Read, 85.0, 64.0).unwrap();
+        // The (std tRCD, std tRP) pair must be feasible with min tRAS <= 35.
+        let std_pair = r
+            .frontier
+            .iter()
+            .find(|f| f.trcd_ns == 13.75 && f.trp_ns == 13.75)
+            .unwrap();
+        assert!(std_pair.min_third_ns.is_some());
+        assert!(r.best.is_some());
+        assert!(r.best.unwrap().reduction >= 0.0);
+    }
+
+    #[test]
+    fn cooler_allows_more_reduction() {
+        let d = generate_dimm(6, 64, params());
+        let mut b = NativeBackend::new();
+        let hot = sweep(&mut b, &d.arrays, TestKind::Write, 85.0, 152.0)
+            .unwrap().best.unwrap();
+        let cool = sweep(&mut b, &d.arrays, TestKind::Write, 55.0, 152.0)
+            .unwrap().best.unwrap();
+        assert!(cool.reduction >= hot.reduction - 1e-9,
+                "cool {} vs hot {}", cool.reduction, hot.reduction);
+    }
+
+    #[test]
+    fn frontier_is_monotone_in_trcd() {
+        // A more relaxed tRCD can only relax the tRAS requirement.
+        let d = generate_dimm(8, 64, params());
+        let mut b = NativeBackend::new();
+        let r = sweep(&mut b, &d.arrays, TestKind::Read, 85.0, 200.0).unwrap();
+        for f1 in &r.frontier {
+            for f2 in &r.frontier {
+                if f1.trp_ns == f2.trp_ns && f1.trcd_ns < f2.trcd_ns {
+                    if let (Some(a), Some(b_)) =
+                        (f1.min_third_ns, f2.min_third_ns)
+                    {
+                        // note: legality floor rises with tRCD, so compare
+                        // only when both are above both floors
+                        let floor = f2.trcd_ns
+                            + params().floors.tras_over_trcd_ns;
+                        if a > floor && b_ > floor {
+                            assert!(a >= b_ - 1e-9);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod ext_tests {
+    use super::*;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn bank_sweeps_dominate_the_module_sweep() {
+        let d = generate_dimm(5, 128, params());
+        let mut b = NativeBackend::new();
+        let module = sweep(&mut b, &d.arrays, TestKind::Read, 85.0, 200.0)
+            .unwrap().best.unwrap();
+        for bank in 0..d.arrays.banks {
+            let bb = sweep_bank(&mut b, &d.arrays, TestKind::Read, 85.0,
+                                200.0, bank).unwrap().best.unwrap();
+            assert!(bb.sum_ns <= module.sum_ns + 1e-9,
+                    "bank {bank} slower than module");
+        }
+        // The module equals its worst bank (min over banks of reduction).
+        let worst = (0..d.arrays.banks)
+            .map(|bank| {
+                sweep_bank(&mut b, &d.arrays, TestKind::Read, 85.0, 200.0,
+                           bank).unwrap().best.unwrap().sum_ns
+            })
+            .fold(0.0f64, f64::max);
+        assert!((worst - module.sum_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ecc_budget_is_monotone() {
+        let d = generate_dimm(5, 128, params());
+        let mut b = NativeBackend::new();
+        let mut last = f64::MAX;
+        for budget in [0.0, 2.0, 32.0] {
+            let s = sweep_ecc(&mut b, &d.arrays, TestKind::Read, 85.0, 256.0,
+                              budget).unwrap().best.unwrap();
+            assert!(s.sum_ns <= last + 1e-9);
+            last = s.sum_ns;
+        }
+    }
+
+    #[test]
+    fn ecc_zero_budget_equals_plain_sweep() {
+        let d = generate_dimm(9, 128, params());
+        let mut b = NativeBackend::new();
+        let plain = sweep(&mut b, &d.arrays, TestKind::Write, 85.0, 200.0)
+            .unwrap().best.unwrap();
+        let ecc0 = sweep_ecc(&mut b, &d.arrays, TestKind::Write, 85.0, 200.0,
+                             0.0).unwrap().best.unwrap();
+        assert_eq!(plain.sum_ns, ecc0.sum_ns);
+    }
+}

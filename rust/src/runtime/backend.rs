@@ -1,0 +1,36 @@
+//! The profiling-backend abstraction: one trait, two engines.
+//!
+//! `PjrtBackend` executes the AOT-compiled HLO artifact (the production
+//! path: python authored it at build time, rust runs it). `NativeBackend`
+//! is the pure-rust mirror used as a cross-validation oracle, a fallback
+//! when artifacts are absent, and the calibration fast path. The profiler
+//! is written against this trait and cannot tell them apart (the
+//! cross-check test asserts exactly that).
+
+use anyhow::Result;
+
+use crate::model::{CellArrays, Combo, ProfileOutput};
+
+pub trait ProfilingBackend {
+    /// Human-readable engine name (for logs and EXPERIMENTS.md).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate every combo against the DIMM's cell arrays. Implementations
+    /// must accept any combo-slice length (internal batching/padding) and
+    /// any cell resolution they advertise via `supported_cells`.
+    fn profile(&mut self, arrays: &CellArrays, combos: &[Combo])
+               -> Result<ProfileOutput>;
+
+    /// Cell-per-(bank,chip) resolutions this backend can evaluate
+    /// (`None` = any resolution).
+    fn supported_cells(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Convenience: evaluate a single combo and return (read_errs, write_errs).
+pub fn profile_one(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
+                   combo: &Combo) -> Result<(f64, f64)> {
+    let out = backend.profile(arrays, std::slice::from_ref(combo))?;
+    Ok((out.read_errors(0), out.write_errors(0)))
+}

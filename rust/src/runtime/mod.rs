@@ -1,0 +1,27 @@
+//! Runtime bridge: load AOT artifacts (HLO text) and execute them via the
+//! `xla` crate's PJRT CPU client, behind the `ProfilingBackend` trait.
+
+pub mod backend;
+pub mod native;
+pub mod pjrt;
+
+pub use backend::{profile_one, ProfilingBackend};
+pub use native::NativeBackend;
+pub use pjrt::{artifacts_dir, Manifest, PjrtBackend};
+
+use std::path::Path;
+
+/// Best backend for a given cell resolution: PJRT when an artifact with a
+/// matching shape exists, native otherwise (with a notice — the native
+/// mirror is bit-equivalent within float tolerance, see the xcheck test).
+pub fn auto_backend(dir: &Path, cells: usize) -> Box<dyn ProfilingBackend> {
+    match PjrtBackend::for_cells(dir, cells) {
+        Ok(b) => Box::new(b),
+        Err(e) => {
+            eprintln!(
+                "note: PJRT backend unavailable ({e}); using native mirror"
+            );
+            Box::new(NativeBackend::new())
+        }
+    }
+}

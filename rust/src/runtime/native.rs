@@ -1,0 +1,60 @@
+//! Pure-rust profiling backend (mirror of the AOT artifact's math).
+
+use anyhow::Result;
+
+use crate::model::{profile, CellArrays, Combo, ModelParams, ProfileOutput};
+
+pub struct NativeBackend {
+    params: ModelParams,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend { params: crate::model::params().clone() }
+    }
+
+    /// Calibration path: evaluate under experimental constants.
+    pub fn with_params(params: ModelParams) -> Self {
+        NativeBackend { params }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl super::backend::ProfilingBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn profile(&mut self, arrays: &CellArrays, combos: &[Combo])
+               -> Result<ProfileOutput> {
+        Ok(profile::profile_native(arrays, combos, &self.params))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::population::generate_dimm;
+    use crate::runtime::backend::{profile_one, ProfilingBackend};
+
+    #[test]
+    fn native_backend_runs_any_batch_size() {
+        let d = generate_dimm(0, 32, crate::model::params());
+        let mut b = NativeBackend::new();
+        let std = Combo { trcd: 13.75, tras: 35.0, twr: 15.0, trp: 13.75,
+                          tref_ms: 64.0, temp_c: 85.0 };
+        for n in [1usize, 3, 64, 100] {
+            let combos = vec![std; n];
+            let out = b.profile(&d.arrays, &combos).unwrap();
+            assert_eq!(out.k, n);
+            assert_eq!(out.read_errors(0), 0.0);
+        }
+        let (r, w) = profile_one(&mut b, &d.arrays, &std).unwrap();
+        assert_eq!((r, w), (0.0, 0.0));
+    }
+}

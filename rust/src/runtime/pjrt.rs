@@ -1,0 +1,289 @@
+//! PJRT profiling backend: load the HLO-text artifact, compile it once on
+//! the CPU PJRT client, and execute profiling batches from the rust hot
+//! path. Python never runs here — the artifact was produced at build time
+//! by `make artifacts` (python/compile/aot.py).
+//!
+//! Perf notes (EXPERIMENTS.md §Perf): the five cell-parameter arrays are
+//! uploaded to device once per `profile()` call and *reused* across all
+//! combo chunks via `execute_b`; only the small [K, 6] combo table is
+//! re-uploaded per chunk. Combos are padded to the artifact's static K
+//! with sentinels (temp_c < 0), which the kernel maps to zero errors.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{CellArrays, Combo, ProfileOutput};
+use crate::util::json::Json;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    banks: usize,
+    chips: usize,
+    cells: usize,
+    k: usize,
+    artifact: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub banks: usize,
+    pub chips: usize,
+    pub combo_batch: usize,
+    pub json: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            banks: json.usize("banks"),
+            chips: json.usize("chips"),
+            combo_batch: json.usize("combo_batch"),
+            json,
+        })
+    }
+
+    pub fn artifact_file(&self, name: &str) -> Result<PathBuf> {
+        let arts = self.json.req("artifacts");
+        let meta = arts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
+        Ok(self.dir.join(meta.str("file")))
+    }
+
+    pub fn artifact_cells(&self, name: &str) -> Result<usize> {
+        let arts = self.json.req("artifacts");
+        let meta = arts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
+        Ok(meta.usize("cells"))
+    }
+}
+
+/// Default artifact directory: `$ARTIFACTS_DIR` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ARTIFACTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+impl PjrtBackend {
+    /// Load + compile a profile artifact (`profile_full` or `profile_small`).
+    pub fn new(dir: &Path, artifact: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let path = manifest.artifact_file(artifact)?;
+        let cells = manifest.artifact_cells(artifact)?;
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path utf-8"),
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {artifact}: {e:?}"))?;
+
+        Ok(PjrtBackend {
+            client,
+            exe,
+            banks: manifest.banks,
+            chips: manifest.chips,
+            cells,
+            k: manifest.combo_batch,
+            artifact: artifact.to_string(),
+        })
+    }
+
+    /// Load the artifact matching the given cell resolution.
+    pub fn for_cells(dir: &Path, cells: usize) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        for name in ["profile_full", "profile_small"] {
+            if manifest.artifact_cells(name)? == cells {
+                return Self::new(dir, name);
+            }
+        }
+        bail!("no profile artifact with {cells} cells per (bank, chip)")
+    }
+
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    pub fn combo_batch(&self) -> usize {
+        self.k
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))
+    }
+}
+
+/// Result of the ODE-vs-analytic cross-check (see figures::ablate).
+pub struct OdeReport {
+    pub cells: usize,
+    pub max_abs_diff: f32,
+    pub sign_agreement: f64,
+}
+
+/// Execute the `ode_check` artifact (Euler-integrated sense margins) on a
+/// random cell population and compare with the native analytic margins.
+pub fn run_ode_check(dir: &Path, cells: usize) -> Result<OdeReport> {
+    use crate::model::params;
+    use crate::util::rng::Rng;
+
+    let manifest = Manifest::load(dir)?;
+    let want = manifest.artifact_cells("ode_check")?;
+    anyhow::ensure!(cells == want, "ode_check artifact has {want} cells");
+    let path = manifest.artifact_file("ode_check")?;
+    let client = xla::PjRtClient::cpu()
+        .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().expect("utf-8"))
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .map_err(|e| anyhow!("compile ode_check: {e:?}"))?;
+
+    let p = params();
+    let mut rng = Rng::from_label("ode-check");
+    let q0: Vec<f32> = (0..cells).map(|_| rng.range(0.05, 1.1) as f32).collect();
+    let tau_s: Vec<f32> =
+        (0..cells).map(|_| rng.lognormal(1.61, 0.05) as f32).collect();
+    let tau_p: Vec<f32> =
+        (0..cells).map(|_| rng.lognormal(0.515, 0.04) as f32).collect();
+    let scalars: Vec<f32> = vec![9.0, 9.0, 64.0, 85.0, 0.0, 0.0, 0.0, 0.0];
+
+    let lit = |v: &[f32]| xla::Literal::vec1(v);
+    let result = exe
+        .execute::<xla::Literal>(&[lit(&q0), lit(&tau_s), lit(&tau_p),
+                                   lit(&scalars)])
+        .map_err(|e| anyhow!("execute ode_check: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch: {e:?}"))?;
+    let ode = result
+        .to_tuple1()
+        .map_err(|e| anyhow!("untuple: {e:?}"))?
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+
+    // Native analytic margins (same math as charge::sense_margin).
+    let (trcd, trp, temp) = (scalars[0], scalars[1], scalars[3]);
+    let mut max_abs_diff = 0.0f32;
+    let mut agree = 0usize;
+    for i in 0..cells {
+        let off = crate::model::charge::precharge_offset(tau_p[i], trp, p);
+        let ana =
+            crate::model::charge::sense_margin(q0[i], tau_s[i], trcd, off,
+                                               temp, p);
+        let d = (ode[i] - ana).abs();
+        max_abs_diff = max_abs_diff.max(d);
+        // Near-zero margins may legitimately flip under Euler error.
+        if (ode[i] >= 0.0) == (ana >= 0.0) || ana.abs() < 5e-3 {
+            agree += 1;
+        }
+    }
+    Ok(OdeReport {
+        cells,
+        max_abs_diff,
+        sign_agreement: agree as f64 / cells as f64,
+    })
+}
+
+impl super::backend::ProfilingBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supported_cells(&self) -> Option<usize> {
+        Some(self.cells)
+    }
+
+    fn profile(&mut self, arrays: &CellArrays, combos: &[Combo])
+               -> Result<ProfileOutput> {
+        if arrays.banks != self.banks || arrays.chips != self.chips
+            || arrays.cells != self.cells
+        {
+            bail!(
+                "cell arrays [{},{},{}] do not match artifact `{}` [{},{},{}]",
+                arrays.banks, arrays.chips, arrays.cells,
+                self.artifact, self.banks, self.chips, self.cells
+            );
+        }
+        let dims = [self.banks, self.chips, self.cells];
+        // Upload the cell population once; reuse across combo chunks.
+        let cell_bufs = [
+            self.upload(&arrays.qcap, &dims)?,
+            self.upload(&arrays.tau_s, &dims)?,
+            self.upload(&arrays.tau_r, &dims)?,
+            self.upload(&arrays.tau_p, &dims)?,
+            self.upload(&arrays.lam85, &dims)?,
+        ];
+
+        let mut out = ProfileOutput::zeroed(combos.len(), self.banks, self.chips);
+        let bc = self.banks * self.chips;
+
+        for (chunk_i, chunk) in combos.chunks(self.k).enumerate() {
+            let mut rows = vec![0.0f32; self.k * 6];
+            for (i, c) in chunk.iter().enumerate() {
+                rows[i * 6..i * 6 + 6].copy_from_slice(&c.to_row());
+            }
+            for i in chunk.len()..self.k {
+                rows[i * 6..i * 6 + 6]
+                    .copy_from_slice(&Combo::sentinel().to_row());
+            }
+            let combo_buf = self.upload(&rows, &[self.k, 6])?;
+
+            let args: Vec<&xla::PjRtBuffer> = cell_bufs
+                .iter()
+                .chain(std::iter::once(&combo_buf))
+                .collect();
+            let result = self
+                .exe
+                .execute_b(&args)
+                .map_err(|e| anyhow!("execute {}: {e:?}", self.artifact))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?
+                .to_tuple()
+                .map_err(|e| anyhow!("untuple result: {e:?}"))?;
+            if tuple.len() != 6 {
+                bail!("artifact returned {} outputs, expected 6", tuple.len());
+            }
+            let fetch = |lit: &xla::Literal| -> Result<Vec<f32>> {
+                lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            };
+            let err_r = fetch(&tuple[0])?;
+            let err_w = fetch(&tuple[1])?;
+            let mmin_r = fetch(&tuple[2])?;
+            let mmin_w = fetch(&tuple[3])?;
+            let tot_r = fetch(&tuple[4])?;
+            let tot_w = fetch(&tuple[5])?;
+
+            let base = chunk_i * self.k;
+            for i in 0..chunk.len() {
+                let dst = (base + i) * bc;
+                let src = i * bc;
+                out.err_r[dst..dst + bc].copy_from_slice(&err_r[src..src + bc]);
+                out.err_w[dst..dst + bc].copy_from_slice(&err_w[src..src + bc]);
+                out.mmin_r[dst..dst + bc]
+                    .copy_from_slice(&mmin_r[src..src + bc]);
+                out.mmin_w[dst..dst + bc]
+                    .copy_from_slice(&mmin_w[src..src + bc]);
+                out.tot_r[base + i] = tot_r[i];
+                out.tot_w[base + i] = tot_w[i];
+            }
+        }
+        Ok(out)
+    }
+}

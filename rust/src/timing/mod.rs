@@ -1,0 +1,232 @@
+//! DDR3 timing parameters: the JEDEC-style standard set, reduced sets, and
+//! the ns<->cycle conversions the memory controller works in.
+//!
+//! The four parameters AL-DRAM optimizes (tRCD, tRAS, tWR, tRP) are carried
+//! in nanoseconds (the profiler's sweep domain); everything the cycle-level
+//! controller needs is derived against the DDR3-1600 clock (tCK = 1.25 ns).
+
+use crate::model::params;
+
+/// The four AL-DRAM-optimized core timings plus the fixed secondary set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingParams {
+    pub trcd_ns: f64,
+    pub tras_ns: f64,
+    pub twr_ns: f64,
+    pub trp_ns: f64,
+    // Fixed (not optimized by AL-DRAM; JEDEC DDR3-1600 values).
+    pub tcl_ns: f64,
+    pub tcwl_ns: f64,
+    pub tccd_ns: f64,
+    pub trrd_ns: f64,
+    pub tfaw_ns: f64,
+    pub trtp_ns: f64,
+    pub twtr_ns: f64,
+    pub trfc_ns: f64,
+    pub trefi_us: f64,
+    pub tburst_ns: f64,
+}
+
+impl TimingParams {
+    /// JEDEC DDR3-1600 (11-11-11) standard timings — the worst-case set
+    /// every module must honor.
+    pub fn ddr3_standard() -> Self {
+        let p = params();
+        TimingParams {
+            trcd_ns: p.spec.trcd_ns,
+            tras_ns: p.spec.tras_ns,
+            twr_ns: p.spec.twr_ns,
+            trp_ns: p.spec.trp_ns,
+            tcl_ns: 13.75,
+            tcwl_ns: 10.0,
+            tccd_ns: 5.0,   // 4 tCK
+            trrd_ns: 6.25,  // 5 tCK (1KB page)
+            tfaw_ns: 30.0,
+            trtp_ns: 7.5,
+            twtr_ns: 7.5,
+            trfc_ns: 160.0, // 2Gb device
+            trefi_us: 7.8,
+            tburst_ns: 5.0, // BL8 on a DDR bus = 4 tCK
+        }
+    }
+
+    /// Replace the four optimized parameters (ns), keeping the fixed set.
+    pub fn with_core(&self, trcd: f64, tras: f64, twr: f64, trp: f64) -> Self {
+        TimingParams { trcd_ns: trcd, tras_ns: tras, twr_ns: twr,
+                       trp_ns: trp, ..*self }
+    }
+
+    /// Apply fractional reductions to the four core parameters, e.g.
+    /// `reduced(0.27, 0.32, 0.33, 0.18)` is the paper's Fig-4 operating
+    /// point at 55degC.
+    pub fn reduced(&self, r_trcd: f64, r_tras: f64, r_twr: f64,
+                   r_trp: f64) -> Self {
+        self.with_core(
+            self.trcd_ns * (1.0 - r_trcd),
+            self.tras_ns * (1.0 - r_tras),
+            self.twr_ns * (1.0 - r_twr),
+            self.trp_ns * (1.0 - r_trp),
+        )
+    }
+
+    /// Row-cycle time: tRC = tRAS + tRP, the back-to-back ACT period.
+    pub fn trc_ns(&self) -> f64 {
+        self.tras_ns + self.trp_ns
+    }
+
+    /// Sum of the read-path parameters (Fig 3c's y-axis).
+    pub fn read_sum_ns(&self) -> f64 {
+        self.trcd_ns + self.tras_ns + self.trp_ns
+    }
+
+    /// Sum of the write-path parameters (Fig 3d's y-axis).
+    pub fn write_sum_ns(&self) -> f64 {
+        self.trcd_ns + self.twr_ns + self.trp_ns
+    }
+
+    /// Convert to controller cycles (ceil — timings are minimums).
+    pub fn to_cycles(&self, tck_ns: f64) -> TimingCycles {
+        let c = |ns: f64| (ns / tck_ns - 1e-9).ceil().max(0.0) as u32;
+        TimingCycles {
+            trcd: c(self.trcd_ns),
+            tras: c(self.tras_ns),
+            twr: c(self.twr_ns),
+            trp: c(self.trp_ns),
+            tcl: c(self.tcl_ns),
+            tcwl: c(self.tcwl_ns),
+            tccd: c(self.tccd_ns),
+            trrd: c(self.trrd_ns),
+            tfaw: c(self.tfaw_ns),
+            trtp: c(self.trtp_ns),
+            twtr: c(self.twtr_ns),
+            trfc: c(self.trfc_ns),
+            trefi: c(self.trefi_us * 1000.0),
+            tburst: c(self.tburst_ns),
+            trc: c(self.trc_ns()),
+        }
+    }
+}
+
+/// Integer-cycle timings consumed by the bank state machines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingCycles {
+    pub trcd: u32,
+    pub tras: u32,
+    pub twr: u32,
+    pub trp: u32,
+    pub tcl: u32,
+    pub tcwl: u32,
+    pub tccd: u32,
+    pub trrd: u32,
+    pub tfaw: u32,
+    pub trtp: u32,
+    pub twtr: u32,
+    pub trfc: u32,
+    pub trefi: u32,
+    pub tburst: u32,
+    pub trc: u32,
+}
+
+/// Profiler sweep grids: every value from the standard down to the floor in
+/// controller-clock steps — the quantization a real memory controller
+/// imposes (and the paper's sweep granularity).
+pub struct SweepGrids {
+    pub trcd: Vec<f64>,
+    pub tras: Vec<f64>,
+    pub twr: Vec<f64>,
+    pub trp: Vec<f64>,
+    pub tref_ms: Vec<f64>,
+}
+
+impl SweepGrids {
+    pub fn standard() -> Self {
+        let p = params();
+        let tck = p.spec.tck_ns;
+        let down = |from: f64, floor: f64| -> Vec<f64> {
+            let mut v = Vec::new();
+            let mut x = from;
+            while x >= floor - 1e-9 {
+                v.push((x * 100.0).round() / 100.0);
+                x -= tck;
+            }
+            v
+        };
+        SweepGrids {
+            trcd: down(p.spec.trcd_ns, p.floors.trcd_min_ns),
+            tras: down(p.spec.tras_ns, p.floors.trcd_min_ns
+                       + p.floors.tras_over_trcd_ns),
+            twr: down(p.spec.twr_ns, p.floors.twr_min_ns),
+            trp: down(p.spec.trp_ns, p.floors.trp_min_ns),
+            // Fig 2a/3ab sweep: 64..448 ms in 8 ms increments.
+            tref_ms: (0..=48).map(|i| 64.0 + 8.0 * i as f64).collect(),
+        }
+    }
+
+    /// Is (trcd, tras) pair protocol-legal? tRAS must cover row activation
+    /// plus column access/restore start.
+    pub fn tras_legal(trcd: f64, tras: f64) -> bool {
+        let p = params();
+        tras >= trcd + p.floors.tras_over_trcd_ns - 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_matches_spec() {
+        let t = TimingParams::ddr3_standard();
+        assert_eq!(t.trcd_ns, 13.75);
+        assert_eq!(t.tras_ns, 35.0);
+        assert_eq!(t.twr_ns, 15.0);
+        assert_eq!(t.trp_ns, 13.75);
+        assert_eq!(t.trc_ns(), 48.75);
+        assert_eq!(t.read_sum_ns(), 62.5);
+        assert_eq!(t.write_sum_ns(), 42.5);
+    }
+
+    #[test]
+    fn cycles_conversion_rounds_up() {
+        let t = TimingParams::ddr3_standard();
+        let c = t.to_cycles(1.25);
+        assert_eq!(c.trcd, 11);
+        assert_eq!(c.tras, 28);
+        assert_eq!(c.twr, 12);
+        assert_eq!(c.trp, 11);
+        assert_eq!(c.trefi, 6240);
+        // non-multiple rounds up
+        let t2 = t.with_core(13.0, 35.0, 15.0, 13.75);
+        assert_eq!(t2.to_cycles(1.25).trcd, 11); // 13.0/1.25 = 10.4 -> 11
+    }
+
+    #[test]
+    fn reduced_applies_fractions() {
+        let t = TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18);
+        assert!((t.trcd_ns - 13.75 * 0.73).abs() < 1e-9);
+        assert!((t.tras_ns - 35.0 * 0.68).abs() < 1e-9);
+        assert!((t.twr_ns - 15.0 * 0.67).abs() < 1e-9);
+        assert!((t.trp_ns - 13.75 * 0.82).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grids_are_monotone_and_bounded() {
+        let g = SweepGrids::standard();
+        for grid in [&g.trcd, &g.tras, &g.twr, &g.trp] {
+            assert!(!grid.is_empty());
+            for w in grid.windows(2) {
+                assert!(w[0] > w[1]);
+            }
+            assert_eq!(grid[0], grid[0].max(grid[grid.len() - 1]));
+        }
+        assert_eq!(g.tref_ms[0], 64.0);
+        assert_eq!(*g.tref_ms.last().unwrap(), 448.0);
+    }
+
+    #[test]
+    fn tras_legality() {
+        assert!(SweepGrids::tras_legal(13.75, 35.0));
+        assert!(SweepGrids::tras_legal(5.0, 16.25));
+        assert!(!SweepGrids::tras_legal(13.75, 15.0));
+    }
+}

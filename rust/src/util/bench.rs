@@ -1,0 +1,209 @@
+//! In-tree micro-benchmark harness (the offline mirror has no criterion).
+//!
+//! Usage from a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = Bench::from_env("bench_controller");
+//! b.bench("frfcfs/stream_64q", || sim.step_n(10_000));
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then run for a target wall-clock window;
+//! we report min/median/mean/p95 per-iteration times and iterations/sec.
+//! Output is both human-readable and machine-readable (one JSON line per
+//! benchmark, consumed by EXPERIMENTS.md tooling).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+pub struct Bench {
+    suite: String,
+    warmup: Duration,
+    window: Duration,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        Bench {
+            suite: suite.to_string(),
+            warmup: Duration::from_millis(150),
+            window: Duration::from_millis(900),
+            results: Vec::new(),
+            filter: None,
+        }
+    }
+
+    /// Honors `--bench <filter>` / `BENCH_FILTER` and the cargo-supplied
+    /// `--bench` flag; `BENCH_FAST=1` shrinks windows for CI.
+    pub fn from_env(suite: &str) -> Self {
+        let mut b = Bench::new(suite);
+        let args: Vec<String> = std::env::args().collect();
+        for (i, a) in args.iter().enumerate() {
+            if a == "--filter" {
+                b.filter = args.get(i + 1).cloned();
+            }
+        }
+        if let Ok(f) = std::env::var("BENCH_FILTER") {
+            b.filter = Some(f);
+        }
+        if std::env::var("BENCH_FAST").is_ok() {
+            b.warmup = Duration::from_millis(20);
+            b.window = Duration::from_millis(120);
+        }
+        println!("== bench suite: {} ==", suite);
+        b
+    }
+
+    pub fn with_window(mut self, warmup_ms: u64, window_ms: u64) -> Self {
+        self.warmup = Duration::from_millis(warmup_ms);
+        self.window = Duration::from_millis(window_ms);
+        self
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Benchmark `f`, which performs one unit of work per call.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        if self.skip(name) {
+            return;
+        }
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure individual iterations until the window closes.
+        let mut samples: Vec<f64> = Vec::with_capacity(4096);
+        let start = Instant::now();
+        while start.elapsed() < self.window {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pick = |q: f64| samples[((n - 1) as f64 * q) as usize];
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            min_ns: samples[0],
+            median_ns: pick(0.5),
+            mean_ns: mean,
+            p95_ns: pick(0.95),
+        };
+        println!(
+            "{:<44} {:>10} it  min {:>12}  med {:>12}  p95 {:>12}  {:>12.1} it/s",
+            r.name,
+            r.iters,
+            fmt_ns(r.min_ns),
+            fmt_ns(r.median_ns),
+            fmt_ns(r.p95_ns),
+            1e9 / r.mean_ns,
+        );
+        println!(
+            "BENCHJSON {{\"suite\":\"{}\",\"name\":\"{}\",\"iters\":{},\"min_ns\":{:.1},\"median_ns\":{:.1},\"mean_ns\":{:.1},\"p95_ns\":{:.1}}}",
+            self.suite, r.name, r.iters, r.min_ns, r.median_ns, r.mean_ns, r.p95_ns
+        );
+        self.results.push(r);
+    }
+
+    /// Benchmark with an explicit per-iteration batch size; reported times
+    /// are divided by `batch` (for hot loops too fast to time singly).
+    pub fn bench_batch<T>(&mut self, name: &str, batch: u64,
+                          mut f: impl FnMut() -> T) {
+        if self.skip(name) {
+            return;
+        }
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.window {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pick = |q: f64| samples[((n - 1) as f64 * q) as usize];
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: n as u64 * batch,
+            min_ns: samples[0],
+            median_ns: pick(0.5),
+            mean_ns: mean,
+            p95_ns: pick(0.95),
+        };
+        println!(
+            "{:<44} {:>10} it  min {:>12}  med {:>12}  p95 {:>12}  {:>12.1} it/s",
+            r.name, r.iters, fmt_ns(r.min_ns), fmt_ns(r.median_ns),
+            fmt_ns(r.p95_ns), 1e9 / r.mean_ns,
+        );
+        println!(
+            "BENCHJSON {{\"suite\":\"{}\",\"name\":\"{}\",\"iters\":{},\"min_ns\":{:.1},\"median_ns\":{:.1},\"mean_ns\":{:.1},\"p95_ns\":{:.1}}}",
+            self.suite, r.name, r.iters, r.min_ns, r.median_ns, r.mean_ns, r.p95_ns
+        );
+        self.results.push(r);
+    }
+
+    pub fn finish(self) {
+        println!("== {} done: {} benchmarks ==", self.suite, self.results.len());
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::new("t").with_window(5, 20);
+        let mut x = 0u64;
+        b.bench("noop", || {
+            x = x.wrapping_add(1);
+            x
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].iters > 0);
+        assert!(b.results[0].min_ns <= b.results[0].p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,50 @@
+//! Tiny property-testing helper (the offline mirror has no proptest).
+//!
+//! `forall(cases, |rng| ...)` runs a closure against `cases` independent
+//! deterministic RNG streams; on failure it re-raises with the failing
+//! case index so `QUICK_CASE=<i>` reproduces it exactly. No shrinking —
+//! generators are kept small enough that raw failures are readable.
+
+use super::rng::Rng;
+
+pub fn forall(cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    if let Ok(one) = std::env::var("QUICK_CASE") {
+        let i: u64 = one.parse().expect("QUICK_CASE must be an integer");
+        let mut rng = Rng::new(0x5eed_0000 ^ i.wrapping_mul(0x9E3779B97F4A7C15));
+        prop(&mut rng);
+        return;
+    }
+    for i in 0..cases {
+        let mut rng = Rng::new(0x5eed_0000 ^ i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {i}/{cases} — rerun with QUICK_CASE={i}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failures() {
+        forall(50, |rng| {
+            assert!(rng.f64() < 0.9, "intentional failure");
+        });
+    }
+}

@@ -1,0 +1,51 @@
+//! Integration: the AL-DRAM mechanism end to end — Fig 4 machinery,
+//! sensitivity, power, and the stress analogue.
+
+use aldram::eval::{fig4, power_eval, power_saving, sensitivity, stress,
+                   PAPER_REDUCTIONS_55C};
+
+const CYCLES: u64 = 40_000; // small but steady-state enough for ordering
+
+#[test]
+fn fig4_orderings_hold() {
+    let r = fig4(CYCLES, 1, PAPER_REDUCTIONS_55C);
+    assert_eq!(r.per_workload.len(), 35);
+    // The paper's three key conclusions:
+    // 1. significant improvement for memory-intensive workloads,
+    assert!(r.gmean_intensive_multi > 1.05,
+            "intensive gmean {}", r.gmean_intensive_multi);
+    // 2. multi-core pressure amplifies the benefit vs single-core,
+    assert!(r.gmean_intensive_multi > r.gmean_intensive_single * 0.99);
+    // 3. memory-intensive gains exceed non-intensive by a wide margin.
+    assert!(r.gmean_intensive_multi > r.gmean_nonintensive_multi + 0.04,
+            "{} vs {}", r.gmean_intensive_multi, r.gmean_nonintensive_multi);
+    // No workload is badly hurt.
+    for w in &r.per_workload {
+        assert!(w.multi_speedup > 0.97, "{} regressed: {}", w.name,
+                w.multi_speedup);
+    }
+}
+
+#[test]
+fn sensitivity_helps_in_every_config() {
+    for row in sensitivity(CYCLES, PAPER_REDUCTIONS_55C) {
+        assert!(row.gmean_speedup > 1.0,
+                "AL-DRAM must help in {}: {}", row.label, row.gmean_speedup);
+    }
+}
+
+#[test]
+fn power_is_saved() {
+    let rows = power_eval(CYCLES, PAPER_REDUCTIONS_55C);
+    assert!(!rows.is_empty());
+    let saving = power_saving(&rows);
+    assert!(saving > 0.0, "AL-DRAM must save energy per work: {saving}");
+    assert!(saving < 0.25, "implausibly large saving: {saving}");
+}
+
+#[test]
+fn stress_analogue_is_error_free() {
+    let r = stress(3, 8, 25_000).unwrap();
+    assert_eq!(r.errors, 0);
+    assert!(r.min_margin > 0.0);
+}

@@ -1,0 +1,133 @@
+//! Integration: the memory-system simulator end to end — cores, the
+//! FR-FCFS controller, refresh, and the AL-DRAM timing swap.
+
+use aldram::mem::{AddrMap, Controller, Request, RowPolicy, System,
+                  SystemConfig};
+use aldram::timing::TimingParams;
+use aldram::workloads::{by_name, suite};
+
+fn drain(ctrl: &mut Controller, limit: u64) -> u64 {
+    let mut now = 0;
+    while ctrl.pending() > 0 && now < limit {
+        ctrl.tick(now);
+        now += 1;
+    }
+    assert!(now < limit, "controller did not drain");
+    now
+}
+
+#[test]
+fn mixed_traffic_drains_and_accounts() {
+    let mut ctrl = Controller::new(AddrMap::ddr3_2gb(1),
+                                   TimingParams::ddr3_standard(),
+                                   RowPolicy::Open);
+    let mut id = 0;
+    for i in 0..24u64 {
+        id += 1;
+        ctrl.enqueue(Request { id, core: 0, addr: i * 64, is_write: i % 3 == 0,
+                               arrival: 0 });
+    }
+    for i in 0..8u64 {
+        id += 1;
+        ctrl.enqueue(Request { id, core: 1, addr: (1 << 26) + i * 131072,
+                               is_write: false, arrival: 0 });
+    }
+    drain(&mut ctrl, 1_000_000);
+    let s = &ctrl.stats;
+    assert_eq!(s.reads_done + s.writes_done, 32);
+    assert!(s.row_hits > 0 && s.row_misses > 0);
+    assert!(s.avg_read_latency() > 0.0);
+}
+
+#[test]
+fn timing_swap_mid_stream_is_seamless() {
+    // AL-DRAM's runtime timing change must not corrupt scheduling: run
+    // traffic, swap timings in the middle, keep running, everything drains.
+    let mut ctrl = Controller::new(AddrMap::ddr3_2gb(1),
+                                   TimingParams::ddr3_standard(),
+                                   RowPolicy::Open);
+    let mut now = 0u64;
+    let mut id = 0u64;
+    let mut issued = 0u64;
+    let mut swapped = false;
+    while now < 200_000 {
+        if now % 7 == 0 && issued < 2000 {
+            id += 1;
+            let addr = (id * 2_654_435_761) % (1 << 30) & !63;
+            if ctrl.enqueue(Request { id, core: 0, addr, is_write: id % 4 == 0,
+                                      arrival: now }) {
+                issued += 1;
+            }
+        }
+        if now == 100_000 && !swapped {
+            ctrl.set_timings(TimingParams::ddr3_standard()
+                .reduced(0.27, 0.32, 0.33, 0.18));
+            swapped = true;
+        }
+        ctrl.tick(now);
+        now += 1;
+    }
+    while ctrl.pending() > 0 && now < 400_000 {
+        ctrl.tick(now);
+        now += 1;
+    }
+    assert_eq!(ctrl.stats.reads_done + ctrl.stats.writes_done, issued);
+}
+
+#[test]
+fn more_channels_increase_throughput() {
+    let w = by_name("gups").unwrap();
+    let run = |channels: usize| {
+        let cfg = SystemConfig { channels, ..SystemConfig::paper_default() };
+        let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("ch/{i}"))).collect();
+        let mut sys = System::new(&cfg, &wl);
+        let s = sys.run(120_000);
+        s.cores.iter().map(|c| c.ipc).sum::<f64>()
+    };
+    let one = run(1);
+    let two = run(2);
+    assert!(two > one * 1.15, "2ch {two} vs 1ch {one}");
+}
+
+#[test]
+fn open_policy_beats_closed_on_streams() {
+    let w = by_name("libquantum").unwrap();
+    let run = |policy| {
+        let cfg = SystemConfig { policy, ..SystemConfig::paper_default() };
+        let mut sys = System::new(&cfg, &[(w.clone(), "p".into())]);
+        sys.run(120_000).cores[0].ipc
+    };
+    let open = run(RowPolicy::Open);
+    let closed = run(RowPolicy::Closed);
+    assert!(open >= closed * 0.98,
+            "open {open} should not lose to closed {closed} on streams");
+}
+
+#[test]
+fn every_suite_workload_simulates() {
+    // Smoke every generator through the full system briefly.
+    let cfg = SystemConfig::paper_default();
+    for w in suite() {
+        let mut sys = System::new(&cfg, &[(w.clone(), "smoke".into())]);
+        let s = sys.run(5_000);
+        assert!(s.cores[0].insts > 0, "{} made no progress", w.name);
+    }
+}
+
+#[test]
+fn aldram_managed_system_tracks_temperature() {
+    use aldram::aldram::AlDram;
+    // A fixed-table AL-DRAM config runs and reports a plausible DIMM temp.
+    let cfg = SystemConfig {
+        aldram: Some(AlDram::fixed(
+            TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18))),
+        ambient_c: 30.0,
+        ..SystemConfig::paper_default()
+    };
+    let w = by_name("stream.copy").unwrap();
+    let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("t/{i}"))).collect();
+    let mut sys = System::new(&cfg, &wl);
+    let s = sys.run(200_000);
+    assert!(s.mean_temp_c >= 30.0 && s.mean_temp_c < 45.0,
+            "temp {}", s.mean_temp_c);
+}

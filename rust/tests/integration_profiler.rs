@@ -1,0 +1,97 @@
+//! Integration: population -> profiler -> AL-DRAM table, end to end on the
+//! native backend (the PJRT path is covered by runtime_native_xcheck).
+
+use aldram::aldram::AlDram;
+use aldram::model::params;
+use aldram::population::{generate_dimm, generate_population};
+use aldram::profiler::{profile_dimm, summarize, verify_timings};
+use aldram::runtime::NativeBackend;
+use aldram::timing::TimingParams;
+
+#[test]
+fn every_module_meets_ddr3_spec() {
+    // DDR3 compliance across a population slice: standard timings at 64 ms
+    // and 85degC are error-free for every DIMM (the manufacturers' bar).
+    let mut b = NativeBackend::new();
+    let std = TimingParams::ddr3_standard();
+    for id in (0..params().population.n_dimms).step_by(7) {
+        let d = generate_dimm(id, 128, params());
+        let ok = verify_timings(&mut b, &d, &std, 85.0, 64.0, 64.0).unwrap();
+        assert!(ok, "dimm {id} violates the DDR3 standard");
+    }
+}
+
+#[test]
+fn population_statistics_match_paper_shape() {
+    // Small-resolution campaign over a population slice: the paper's
+    // orderings must hold (full-resolution numbers live in EXPERIMENTS.md).
+    let mut b = NativeBackend::new();
+    let profiles: Vec<_> = (0..10)
+        .map(|id| {
+            let d = generate_dimm(id, 128, params());
+            profile_dimm(&mut b, &d).unwrap()
+        })
+        .collect();
+    let s = summarize(&profiles);
+
+    // 55C allows more reduction than 85C, for both tests.
+    assert!(s.read_reduction_55 > s.read_reduction_85);
+    assert!(s.write_reduction_55 > s.write_reduction_85);
+    // Write test allows more total reduction than read (Fig 3d vs 3c).
+    assert!(s.write_reduction_55 > s.read_reduction_55);
+    assert!(s.write_reduction_85 > s.read_reduction_85);
+    // tWR has the largest single-parameter potential at 55C; tRCD smallest
+    // (paper: 54.8% vs 17.3%).
+    let p55 = s.param_reduction_55;
+    assert!(p55[2] > p55[0] && p55[2] > p55[3], "{p55:?}");
+    assert!(p55[1] > p55[0], "{p55:?}");
+    // Everything positive and sane.
+    for x in p55 {
+        assert!((0.0..0.75).contains(&x), "{p55:?}");
+    }
+}
+
+#[test]
+fn vendors_differ_in_retention() {
+    // The three synthetic vendors have distinct leakage distributions;
+    // their module-max refresh intervals must separate statistically.
+    let mut b = NativeBackend::new();
+    let pop = generate_population(64);
+    let mut by_vendor: std::collections::BTreeMap<String, Vec<f64>> =
+        Default::default();
+    for d in pop.iter().take(40) {
+        let r = aldram::profiler::profile_refresh(&mut b, &d.arrays, 85.0)
+            .unwrap();
+        by_vendor
+            .entry(d.vendor.clone())
+            .or_default()
+            .push(r.module_max_read_ms);
+    }
+    let means: Vec<f64> = by_vendor
+        .values()
+        .map(|v| v.iter().sum::<f64>() / v.len() as f64)
+        .collect();
+    assert!(by_vendor.len() == 3, "all vendors present in first 40 dimms");
+    let spread = means.iter().cloned().fold(f64::MIN, f64::max)
+        - means.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread > 10.0, "vendor retention means too close: {means:?}");
+}
+
+#[test]
+fn aldram_table_is_safe_across_its_bins() {
+    // Build a table from a profile, then verify every bin's timing set
+    // against the charge model at that bin's temperature.
+    let mut b = NativeBackend::new();
+    let d = generate_dimm(2, 128, params());
+    let prof = profile_dimm(&mut b, &d).unwrap();
+    let table = AlDram::from_profile(&prof, 5.0);
+    for temp in [30.0, 45.0, 55.0, 60.0, 70.0, 80.0, 85.0] {
+        let t = table.timings_for(temp);
+        let ok = verify_timings(
+            &mut b, &d, &t, temp.max(55.0),
+            prof.at55.tref_read_ms, prof.at55.tref_write_ms,
+        )
+        .unwrap();
+        assert!(ok, "table timings unsafe at {temp}C: {t:?}");
+    }
+}

@@ -1,0 +1,114 @@
+//! Property tests on the memory controller: protocol legality under random
+//! traffic, conservation of requests, and timing-monotonicity.
+
+use aldram::mem::{AddrMap, Controller, Request, RowPolicy};
+use aldram::timing::TimingParams;
+use aldram::util::quick::forall;
+use aldram::util::rng::Rng;
+
+fn random_traffic(rng: &mut Rng, n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64 + 1,
+            core: rng.below(4) as usize,
+            addr: (rng.next_u64() % (1 << 31)) & !63,
+            is_write: rng.chance(0.3),
+            arrival: 0,
+        })
+        .collect()
+}
+
+/// Drive a controller with the given requests trickled in; return
+/// (completions, cycles).
+fn run(reqs: &[Request], timings: TimingParams, policy: RowPolicy,
+       rng: &mut Rng) -> (u64, u64) {
+    let mut ctrl = Controller::new(AddrMap::ddr3_2gb(1), timings, policy);
+    let mut now = 0u64;
+    let mut pending: Vec<Request> = reqs.to_vec();
+    pending.reverse();
+    let mut done = 0u64;
+    while (done as usize) < reqs.len() {
+        // Trickle arrivals with random gaps.
+        if !pending.is_empty() && rng.chance(0.6) {
+            let mut r = *pending.last().unwrap();
+            r.arrival = now;
+            if ctrl.enqueue(r) {
+                pending.pop();
+            }
+        }
+        done += ctrl.tick(now).len() as u64;
+        now += 1;
+        assert!(now < 10_000_000, "controller wedged");
+    }
+    (done, now)
+}
+
+#[test]
+fn all_requests_complete_exactly_once() {
+    forall(25, |rng| {
+        let reqs = random_traffic(rng, 60);
+        let (done, _) =
+            run(&reqs, TimingParams::ddr3_standard(), RowPolicy::Open, rng);
+        assert_eq!(done, reqs.len() as u64);
+    });
+}
+
+#[test]
+fn closed_policy_also_conserves() {
+    forall(15, |rng| {
+        let reqs = random_traffic(rng, 40);
+        let (done, _) =
+            run(&reqs, TimingParams::ddr3_standard(), RowPolicy::Closed, rng);
+        assert_eq!(done, reqs.len() as u64);
+    });
+}
+
+#[test]
+fn faster_timings_never_slow_the_drain() {
+    // Same traffic and arrival pattern: AL-DRAM timings must finish the
+    // batch no later than the standard (modulo refresh phase, hence 2%).
+    forall(15, |rng| {
+        let reqs = random_traffic(rng, 50);
+        let mut rng_a = Rng::new(rng.next_u64());
+        let mut rng_b = rng_a.clone();
+        let (_, base) = run(&reqs, TimingParams::ddr3_standard(),
+                            RowPolicy::Open, &mut rng_a);
+        let fast_t =
+            TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18);
+        let (_, fast) = run(&reqs, fast_t, RowPolicy::Open, &mut rng_b);
+        assert!(fast as f64 <= base as f64 * 1.02,
+                "fast {fast} vs base {base}");
+    });
+}
+
+#[test]
+fn random_timing_reductions_are_protocol_safe() {
+    // Any legal reduced timing set keeps the bank FSM consistent (the
+    // debug_asserts inside issue_* fire on violation in test builds).
+    forall(20, |rng| {
+        let std = TimingParams::ddr3_standard();
+        let t = std.reduced(
+            rng.range(0.0, 0.5),
+            rng.range(0.0, 0.4),
+            rng.range(0.0, 0.6),
+            rng.range(0.0, 0.5),
+        );
+        let reqs = random_traffic(rng, 30);
+        let (done, _) = run(&reqs, t, RowPolicy::Open, rng);
+        assert_eq!(done, 30);
+    });
+}
+
+#[test]
+fn address_map_roundtrips_under_random_addresses() {
+    forall(200, |rng| {
+        for ranks in [1usize, 2] {
+            let m = AddrMap::ddr3_2gb(ranks);
+            let addr = (rng.next_u64() % m.capacity_bytes()) & !63;
+            let d = m.decode(addr);
+            assert_eq!(m.encode(&d), addr);
+            assert!(d.bank < m.banks());
+            assert!(d.rank < m.ranks());
+        }
+    });
+}

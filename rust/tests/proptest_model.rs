@@ -1,0 +1,122 @@
+//! Property tests on the charge model and the profiler (in-tree `forall`
+//! harness; the offline mirror has no proptest — see util::quick).
+
+use aldram::model::charge::{self, Cell, Combo};
+use aldram::model::{params, profile, CellArrays};
+use aldram::util::quick::forall;
+use aldram::util::rng::Rng;
+
+fn rand_cell(rng: &mut Rng) -> Cell {
+    Cell {
+        qcap: rng.range(0.7, 1.2) as f32,
+        tau_s: rng.lognormal(1.6, 0.2) as f32,
+        tau_r: rng.lognormal(2.2, 0.3) as f32,
+        tau_p: rng.lognormal(0.5, 0.1) as f32,
+        lam85: rng.lognormal(-7.3, 0.6) as f32,
+    }
+}
+
+fn rand_combo(rng: &mut Rng) -> Combo {
+    Combo {
+        trcd: rng.range(3.0, 13.75) as f32,
+        tras: rng.range(12.0, 35.0) as f32,
+        twr: rng.range(3.0, 15.0) as f32,
+        trp: rng.range(3.0, 13.75) as f32,
+        tref_ms: rng.range(8.0, 512.0) as f32,
+        temp_c: rng.range(25.0, 85.0) as f32,
+    }
+}
+
+#[test]
+fn uniformly_faster_timings_never_raise_margins() {
+    let p = params();
+    forall(300, |rng| {
+        let c = rand_cell(rng);
+        let k = rand_combo(rng);
+        let scale = rng.range(0.3, 0.99) as f32;
+        let cut = Combo { trcd: k.trcd * scale, tras: k.tras * scale,
+                          twr: k.twr * scale, trp: k.trp * scale, ..k };
+        let (r0, w0) = charge::test_margins(&c, &k, p);
+        let (r1, w1) = charge::test_margins(&c, &cut, p);
+        assert!(r1 <= r0 + 1e-6, "read {r0} -> {r1}");
+        assert!(w1 <= w0 + 1e-6, "write {w0} -> {w1}");
+    });
+}
+
+#[test]
+fn heating_and_longer_refresh_never_raise_margins() {
+    let p = params();
+    forall(300, |rng| {
+        let c = rand_cell(rng);
+        let k = rand_combo(rng);
+        let hot = Combo { temp_c: (k.temp_c + rng.range(1.0, 30.0) as f32)
+            .min(85.0), ..k };
+        let long = Combo { tref_ms: k.tref_ms * 2.0, ..k };
+        let (r0, w0) = charge::test_margins(&c, &k, p);
+        for other in [hot, long] {
+            let (r1, w1) = charge::test_margins(&c, &other, p);
+            assert!(r1 <= r0 + 1e-6);
+            assert!(w1 <= w0 + 1e-6);
+        }
+    });
+}
+
+#[test]
+fn profile_counts_equal_margin_signs() {
+    let p = params();
+    forall(40, |rng| {
+        let mut arrays = CellArrays::zeroed(2, 2, 32);
+        for i in 0..arrays.len() {
+            arrays.set(i, rand_cell(rng));
+        }
+        let combos = [rand_combo(rng), rand_combo(rng), Combo::sentinel()];
+        let out = profile::profile_native(&arrays, &combos, p);
+        for (ki, combo) in combos.iter().enumerate() {
+            let expect: f64 = if combo.is_sentinel() {
+                0.0
+            } else {
+                (0..arrays.len())
+                    .filter(|i| {
+                        charge::test_margins(&arrays.cell(*i), combo, p).0
+                            < 0.0
+                    })
+                    .count() as f64
+            };
+            assert_eq!(out.read_errors(ki), expect);
+        }
+    });
+}
+
+#[test]
+fn bank_chip_reductions_partition_totals() {
+    let p = params();
+    forall(40, |rng| {
+        let mut arrays = CellArrays::zeroed(4, 2, 16);
+        for i in 0..arrays.len() {
+            arrays.set(i, rand_cell(rng));
+        }
+        let combos = [rand_combo(rng)];
+        let out = profile::profile_native(&arrays, &combos, p);
+        let bank_sum: f64 = out.bank_errors_read(0).iter().sum();
+        let chip_sum: f64 = out.chip_errors_read(0).iter().sum();
+        assert_eq!(bank_sum, out.read_errors(0));
+        assert_eq!(chip_sum, out.read_errors(0));
+    });
+}
+
+#[test]
+fn downsampled_population_is_a_subset() {
+    // Profiling a downsample can only see a subset of failures.
+    let p = params();
+    forall(20, |rng| {
+        let mut arrays = CellArrays::zeroed(2, 2, 64);
+        for i in 0..arrays.len() {
+            arrays.set(i, rand_cell(rng));
+        }
+        let combo = [rand_combo(rng)];
+        let full = profile::profile_native(&arrays, &combo, p);
+        let small = profile::profile_native(&arrays.downsample(16), &combo, p);
+        assert!(small.read_errors(0) <= full.read_errors(0));
+        assert!(small.write_errors(0) <= full.write_errors(0));
+    });
+}

@@ -1,0 +1,116 @@
+//! The load-bearing equivalence test: the AOT artifact (python/JAX/Pallas
+//! -> HLO text -> PJRT) and the native rust mirror must produce the same
+//! profiling results on identical inputs. This guards (a) the math in
+//! `charge_math.py` vs `charge.rs`, (b) the constants baked at AOT time vs
+//! the embedded `model_params.json`, and (c) the runtime plumbing
+//! (batch padding, output unpacking).
+//!
+//! Requires `make artifacts`; each test skips cleanly when absent.
+
+use aldram::model::{params, Combo};
+use aldram::population::generate_dimm;
+use aldram::profiler::{profile_dimm, profile_refresh};
+use aldram::runtime::{artifacts_dir, NativeBackend, PjrtBackend,
+                      ProfilingBackend};
+
+fn pjrt_small() -> Option<PjrtBackend> {
+    match PjrtBackend::new(&artifacts_dir(), "profile_small") {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn combos_spread() -> Vec<Combo> {
+    let mut v = Vec::new();
+    for (trcd, tras, twr, trp) in [
+        (13.75, 35.0, 15.0, 13.75),
+        (11.25, 22.5, 6.25, 8.75),
+        (8.75, 20.0, 5.0, 7.5),
+        (5.0, 15.0, 5.0, 5.0),
+    ] {
+        for (tref, temp) in [(64.0, 85.0), (200.0, 85.0), (200.0, 55.0),
+                             (448.0, 85.0), (96.0, 45.0)] {
+            v.push(Combo { trcd, tras, twr, trp, tref_ms: tref,
+                           temp_c: temp });
+        }
+    }
+    v.push(Combo::sentinel());
+    v
+}
+
+#[test]
+fn pjrt_matches_native_error_counts() {
+    let Some(mut pjrt) = pjrt_small() else { return };
+    let cells = pjrt.supported_cells().unwrap();
+    let mut native = NativeBackend::new();
+    let combos = combos_spread();
+
+    for id in [0usize, 7, 42] {
+        let d = generate_dimm(id, cells, params());
+        let a = pjrt.profile(&d.arrays, &combos).unwrap();
+        let b = native.profile(&d.arrays, &combos).unwrap();
+        assert_eq!(a.k, b.k);
+        for k in 0..combos.len() {
+            assert_eq!(a.read_errors(k), b.read_errors(k),
+                       "dimm {id} combo {k} read errors");
+            assert_eq!(a.write_errors(k), b.write_errors(k),
+                       "dimm {id} combo {k} write errors");
+        }
+        // Margins agree to float tolerance.
+        for (x, y) in a.mmin_r.iter().zip(&b.mmin_r) {
+            assert!((x - y).abs() < 2e-5 * (1.0 + x.abs()),
+                    "margin mismatch {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_handles_odd_batch_sizes() {
+    let Some(mut pjrt) = pjrt_small() else { return };
+    let cells = pjrt.supported_cells().unwrap();
+    let d = generate_dimm(1, cells, params());
+    let mut native = NativeBackend::new();
+    // 1, exactly K, K+1 and 3K-1 sized batches (padding / chunking paths).
+    let k = pjrt.combo_batch();
+    for n in [1usize, k, k + 1, 3 * k - 1] {
+        let combos: Vec<Combo> = combos_spread().into_iter().cycle().take(n)
+            .collect();
+        let a = pjrt.profile(&d.arrays, &combos).unwrap();
+        let b = native.profile(&d.arrays, &combos).unwrap();
+        assert_eq!(a.k, n);
+        for i in 0..n {
+            assert_eq!(a.read_errors(i), b.read_errors(i), "batch {n} idx {i}");
+        }
+    }
+}
+
+#[test]
+fn full_dimm_profile_agrees_across_backends() {
+    let Some(mut pjrt) = pjrt_small() else { return };
+    let cells = pjrt.supported_cells().unwrap();
+    let d = generate_dimm(5, cells, params());
+    let mut native = NativeBackend::new();
+
+    let rp = profile_refresh(&mut pjrt, &d.arrays, 85.0).unwrap();
+    let rn = profile_refresh(&mut native, &d.arrays, 85.0).unwrap();
+    assert_eq!(rp.module_max_read_ms, rn.module_max_read_ms);
+    assert_eq!(rp.module_max_write_ms, rn.module_max_write_ms);
+    assert_eq!(rp.bank_max_read_ms, rn.bank_max_read_ms);
+
+    let pp = profile_dimm(&mut pjrt, &d).unwrap();
+    let pn = profile_dimm(&mut native, &d).unwrap();
+    assert_eq!(pp.at55.combined(), pn.at55.combined());
+    assert_eq!(pp.at85.combined(), pn.at85.combined());
+}
+
+#[test]
+fn rejects_mismatched_cell_resolution() {
+    let Some(mut pjrt) = pjrt_small() else { return };
+    let cells = pjrt.supported_cells().unwrap();
+    let d = generate_dimm(0, cells / 2, params());
+    let err = pjrt.profile(&d.arrays, &[Combo::sentinel()]);
+    assert!(err.is_err(), "wrong-shape arrays must be rejected");
+}
