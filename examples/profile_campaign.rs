@@ -1,35 +1,45 @@
 //! The characterization campaign: Fig 2 (representative module) and
 //! Fig 3 (population study) in one run, writing CSVs under `results/`.
 //!
-//! Run: `cargo run --release --example profile_campaign -- [n_dimms] [cells]`
+//! Run: `cargo run --release --example profile_campaign -- \
+//!           [n_dimms] [cells] [--jobs N]`
 //! Defaults profile a 30-module slice at half resolution; the full paper
 //! campaign (115 modules x 131k sampled cells) is
 //! `cargo run --release --example profile_campaign -- 115 2048`.
+//!
+//! The population study is one independent profile per DIMM, so it fans
+//! out over the `exec::Pool` job pool — each worker owns its backend
+//! (PJRT artifact if built and available, native mirror otherwise).
 
 use std::path::PathBuf;
 
+use aldram::cli::Args;
+use aldram::exec;
 use aldram::figures::{fig2, fig3};
 use aldram::model::params;
 use aldram::population::generate_dimm;
 use aldram::runtime::{artifacts_dir, auto_backend};
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let n_dimms: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(30);
-    let cells: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
-    let out = PathBuf::from("results");
+    let args = Args::from_env();
+    let n_dimms: usize = args.sub(0).and_then(|s| s.parse().ok()).unwrap_or(30);
+    let cells: usize = args.sub(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let jobs = args.get("jobs", exec::default_jobs());
+    let out = PathBuf::from(args.str("out", "results"));
 
     let mut backend = auto_backend(&artifacts_dir(), cells);
-    println!("backend: {} | {} modules at {} cells/(bank,chip)\n",
-             backend.name(), n_dimms, cells);
+    println!("backend: {} | {} modules at {} cells/(bank,chip) | {} jobs\n",
+             backend.name(), n_dimms, cells, jobs);
 
-    // Fig 2: the representative module.
+    // Fig 2: the representative module (one DIMM — stays on one backend).
     let rep = generate_dimm(fig2::REPRESENTATIVE_DIMM, cells, params());
     let refresh = fig2::fig2a(backend.as_mut(), &rep.arrays, &out)?;
     fig2::fig2bc(backend.as_mut(), &rep.arrays, &refresh, &out)?;
     println!();
 
-    // Fig 3: the population.
-    fig3::fig3(backend.as_mut(), n_dimms, cells, &out)?;
+    // Fig 3: the population, one pool job per DIMM with a worker-owned
+    // backend (profile() takes &mut self).
+    fig3::fig3_par(|| auto_backend(&artifacts_dir(), cells), n_dimms, cells,
+                   jobs, &out)?;
     Ok(())
 }

@@ -6,27 +6,31 @@
 //! analyses and the §6 stress analogue. Headline metric: the multi-core
 //! speedup split by memory intensity.
 //!
-//! Run: `cargo run --release --example system_eval -- [cycles] [reps]`
+//! Run: `cargo run --release --example system_eval -- \
+//!           [cycles] [reps] [--jobs N]`
 
 use std::path::PathBuf;
 
-use aldram::eval::{power_eval, power_saving, sensitivity, stress,
+use aldram::cli::Args;
+use aldram::eval::{power_eval, power_saving, sensitivity_jobs, stress,
                    PAPER_REDUCTIONS_55C};
+use aldram::exec;
 use aldram::figures::fig4;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let cycles: u64 = args.first().and_then(|s| s.parse().ok())
+    let args = Args::from_env();
+    let cycles: u64 = args.sub(0).and_then(|s| s.parse().ok())
         .unwrap_or(300_000);
-    let reps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3);
-    let out = PathBuf::from("results");
+    let reps: usize = args.sub(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let jobs = args.get("jobs", exec::default_jobs());
+    let out = PathBuf::from(args.str("out", "results"));
 
-    // Fig 4: the headline result.
-    let r = fig4::fig4(cycles, reps, &out)?;
+    // Fig 4: the headline result, fanned out over the job pool.
+    let r = fig4::fig4(cycles, reps, jobs, &out)?;
 
     // §8.4 sensitivity.
     println!("\n== §8.4: sensitivity (memory-intensive gmean) ==");
-    for row in sensitivity(cycles / 2, PAPER_REDUCTIONS_55C) {
+    for row in sensitivity_jobs(cycles / 2, PAPER_REDUCTIONS_55C, jobs) {
         println!("{:<18} {:>6.1}%", row.label,
                  100.0 * (row.gmean_speedup - 1.0));
     }

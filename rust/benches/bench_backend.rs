@@ -5,8 +5,7 @@
 
 use aldram::model::{params, Combo};
 use aldram::population::generate_dimm;
-use aldram::runtime::{artifacts_dir, NativeBackend, PjrtBackend,
-                      ProfilingBackend};
+use aldram::runtime::{NativeBackend, ProfilingBackend};
 use aldram::util::bench::Bench;
 
 fn combos(n: usize) -> Vec<Combo> {
@@ -34,7 +33,9 @@ fn main() {
             native.profile(&d.arrays, &batch).unwrap().tot_r[0]
         });
 
-        match PjrtBackend::for_cells(&artifacts_dir(), cells) {
+        #[cfg(feature = "pjrt")]
+        match aldram::runtime::PjrtBackend::for_cells(
+            &aldram::runtime::artifacts_dir(), cells) {
             Ok(mut pjrt) => {
                 b.bench(&format!("pjrt/cells{cells}/combos64"), || {
                     pjrt.profile(&d.arrays, &batch).unwrap().tot_r[0]
@@ -50,6 +51,9 @@ fn main() {
             }
             Err(e) => eprintln!("skipping pjrt at {cells} cells: {e}"),
         }
+        #[cfg(not(feature = "pjrt"))]
+        eprintln!("skipping pjrt benches at {cells} cells (built without \
+                   the `pjrt` feature)");
     }
 
     // Population generation (the other substrate on the campaign path).

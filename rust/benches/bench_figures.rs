@@ -1,21 +1,26 @@
 //! One benchmark per paper table/figure: times the full regeneration
 //! pipeline at reduced scale (the full-scale runs are the `repro figure`
 //! commands recorded in EXPERIMENTS.md). Keeps the figure pipelines
-//! regression-tested for performance.
-
-use std::path::PathBuf;
+//! regression-tested for performance, and — since the evaluation and
+//! profiling fan-outs run through `exec::Pool` — reports the
+//! sequential-vs-parallel wall-clock speedup of the two big pipelines
+//! (fig4 and the population campaign) at `--jobs 4`.
 
 use aldram::eval::PAPER_REDUCTIONS_55C;
 use aldram::figures::{calibrate, fig2};
 use aldram::model::params;
 use aldram::population::generate_dimm;
 use aldram::profiler::{profile_dimm, profile_refresh, sweep, TestKind};
-use aldram::runtime::NativeBackend;
+use aldram::runtime::{NativeBackend, ProfilingBackend};
 use aldram::util::bench::Bench;
+
+/// Job width for the parallel legs (the acceptance configuration; the
+/// machine may have fewer cores, in which case the SPEEDUP line simply
+/// reports what the hardware delivers).
+const PAR_JOBS: usize = 4;
 
 fn main() {
     let mut b = Bench::from_env("figures").with_window(200, 1500);
-    let out = PathBuf::from(std::env::temp_dir().join("aldram_bench_fig"));
 
     // Fig 2a: refresh sweep on the representative module.
     let rep = generate_dimm(fig2::REPRESENTATIVE_DIMM, 256, params());
@@ -40,17 +45,36 @@ fn main() {
         profile_dimm(&mut nb, &d).unwrap().at55.read.sum_ns
     });
 
-    // Fig 3 population slice end to end (campaign kernel).
-    b.bench("fig3/campaign_4dimms/64c", || {
-        calibrate::run(&mut nb, 4, 64).unwrap().summary.read_reduction_55
+    // Fig 3 population slice end to end (campaign kernel), sequential vs
+    // the job pool: one worker-owned backend per DIMM.
+    let factory = || -> Box<dyn ProfilingBackend> {
+        Box::new(NativeBackend::new())
+    };
+    b.bench("fig3/campaign_8dimms/64c/jobs1", || {
+        calibrate::run_par(factory, 8, 64, 1)
+            .unwrap().summary.read_reduction_55
     });
+    b.bench(&format!("fig3/campaign_8dimms/64c/jobs{PAR_JOBS}"), || {
+        calibrate::run_par(factory, 8, 64, PAR_JOBS)
+            .unwrap().summary.read_reduction_55
+    });
+    b.report_speedup("fig3/campaign_8dimms/64c/jobs1",
+                     &format!("fig3/campaign_8dimms/64c/jobs{PAR_JOBS}"));
 
-    // Fig 4: one workload speedup measurement at reduced cycles.
-    b.bench("fig4/one_workload_speedup/20kcyc", || {
-        let r = aldram::eval::fig4(20_000, 1, PAPER_REDUCTIONS_55C);
-        let _ = &out;
-        r.per_workload.len()
+    // Fig 4 at reduced cycles, sequential vs the job pool: one job per
+    // (workload, cores, rep, timing-set) simulation. The pool guarantees
+    // identical results for any job count (asserted in eval's tests), so
+    // this pair isolates pure wall-clock.
+    b.bench("fig4/35workloads/6kcyc/jobs1", || {
+        aldram::eval::fig4_jobs(6_000, 1, PAPER_REDUCTIONS_55C, 1)
+            .per_workload.len()
     });
+    b.bench(&format!("fig4/35workloads/6kcyc/jobs{PAR_JOBS}"), || {
+        aldram::eval::fig4_jobs(6_000, 1, PAPER_REDUCTIONS_55C, PAR_JOBS)
+            .per_workload.len()
+    });
+    b.report_speedup("fig4/35workloads/6kcyc/jobs1",
+                     &format!("fig4/35workloads/6kcyc/jobs{PAR_JOBS}"));
 
     // §7.6 repeatability battery.
     b.bench("s7.6/repeatability/256c", || {

@@ -87,4 +87,14 @@ mod tests {
         assert_eq!(a.get::<usize>("dimms", 30), 30);
         assert_eq!(a.str("out", "results"), "results");
     }
+
+    #[test]
+    fn jobs_flag_threads_through() {
+        let a = parse("figure fig4 --jobs 8");
+        assert_eq!(a.get::<usize>("jobs", 1), 8);
+        // Absent: callers default to available parallelism (>= 1).
+        let b = parse("figure fig4");
+        let jobs = b.get::<usize>("jobs", crate::exec::default_jobs());
+        assert!(jobs >= 1);
+    }
 }

@@ -2,6 +2,7 @@
 //! §8.4 sensitivity and power analyses, and the §6 long-run stress test.
 
 use crate::aldram::AlDram;
+use crate::exec::Pool;
 use crate::mem::{RowPolicy, System, SystemConfig, SystemStats};
 use crate::power::{power, IddSpec};
 use crate::timing::TimingParams;
@@ -54,9 +55,9 @@ fn run_config(w: &WorkloadSpec, cores: usize, timings: TimingParams,
 
 /// Speedup of `fast` timings over `base` timings, averaged over reps;
 /// returns (mean, stddev).
-fn speedup(w: &WorkloadSpec, cores: usize, base: TimingParams,
-           fast: TimingParams, cycles: u64, reps: usize,
-           cfg: &SystemConfig) -> (f64, f64) {
+pub fn speedup(w: &WorkloadSpec, cores: usize, base: TimingParams,
+               fast: TimingParams, cycles: u64, reps: usize,
+               cfg: &SystemConfig) -> (f64, f64) {
     let ratios: Vec<f64> = (0..reps)
         .map(|rep| {
             let b = run_config(w, cores, base, cycles, rep, cfg);
@@ -67,18 +68,55 @@ fn speedup(w: &WorkloadSpec, cores: usize, base: TimingParams,
     (util::mean(&ratios), util::stddev(&ratios))
 }
 
+/// Reproduce Fig 4 sequentially (`fig4_jobs` with one worker).
+pub fn fig4(cycles: u64, reps: usize, reductions: [f64; 4]) -> Fig4Result {
+    fig4_jobs(cycles, reps, reductions, 1)
+}
+
 /// Reproduce Fig 4: per-workload single-core and multi-core speedups of
 /// AL-DRAM's 55degC timings over the DDR3 standard.
-pub fn fig4(cycles: u64, reps: usize, reductions: [f64; 4]) -> Fig4Result {
+///
+/// The grid is embarrassingly parallel: one pool job per (workload,
+/// core-count, rep, timing-set) tuple — 35 × 2 × reps × 2 independent
+/// cycle-level simulations. Each job writes its throughput into an
+/// input-indexed slot and the speedup reduction below consumes them in
+/// the exact order the sequential loop would, so the result is
+/// bit-identical for every `jobs` value (asserted by
+/// `parallel_fig4_matches_sequential`).
+pub fn fig4_jobs(cycles: u64, reps: usize, reductions: [f64; 4],
+                 jobs: usize) -> Fig4Result {
     let base = TimingParams::ddr3_standard();
     let fast = base.reduced(reductions[0], reductions[1], reductions[2],
                             reductions[3]);
     let cfg = SystemConfig::paper_default();
+    let workloads = suite();
+
+    // Job index layout: (((workload * 2 + core_cfg) * reps + rep) * 2
+    //                     + timing_set).
+    let core_cfgs = [1usize, MULTI_CORES];
+    let n_jobs = workloads.len() * core_cfgs.len() * reps * 2;
+    let throughputs = Pool::new(jobs).run(n_jobs, |i| {
+        let set = i % 2;
+        let rep = (i / 2) % reps;
+        let cc = (i / (2 * reps)) % core_cfgs.len();
+        let wi = i / (2 * reps * core_cfgs.len());
+        let t = if set == 0 { base } else { fast };
+        run_config(&workloads[wi], core_cfgs[cc], t, cycles, rep, &cfg)
+    });
+    let speedup_of = |wi: usize, cc: usize| -> (f64, f64) {
+        let ratios: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let at = ((wi * 2 + cc) * reps + rep) * 2;
+                throughputs[at + 1] / throughputs[at]
+            })
+            .collect();
+        (util::mean(&ratios), util::stddev(&ratios))
+    };
 
     let mut per_workload = Vec::new();
-    for w in suite() {
-        let (s1, e1) = speedup(&w, 1, base, fast, cycles, reps, &cfg);
-        let (sm, em) = speedup(&w, MULTI_CORES, base, fast, cycles, reps, &cfg);
+    for (wi, w) in workloads.iter().enumerate() {
+        let (s1, e1) = speedup_of(wi, 0);
+        let (sm, em) = speedup_of(wi, 1);
         per_workload.push(WorkloadResult {
             name: w.name.to_string(),
             mpki: w.mpki,
@@ -128,9 +166,17 @@ pub struct SensitivityRow {
     pub gmean_speedup: f64,
 }
 
+/// Sequential §8.4 sensitivity (`sensitivity_jobs` with one worker).
+pub fn sensitivity(cycles: u64, reductions: [f64; 4]) -> Vec<SensitivityRow> {
+    sensitivity_jobs(cycles, reductions, 1)
+}
+
 /// AL-DRAM speedup (memory-intensive gmean, multi-core) across system
 /// configurations — the paper's claim is that it helps in *all* of them.
-pub fn sensitivity(cycles: u64, reductions: [f64; 4]) -> Vec<SensitivityRow> {
+/// One pool job per (configuration, workload, timing-set) simulation, with
+/// the same order-independent reduction as `fig4_jobs`.
+pub fn sensitivity_jobs(cycles: u64, reductions: [f64; 4],
+                        jobs: usize) -> Vec<SensitivityRow> {
     let base = TimingParams::ddr3_standard();
     let fast = base.reduced(reductions[0], reductions[1], reductions[2],
                             reductions[3]);
@@ -140,37 +186,51 @@ pub fn sensitivity(cycles: u64, reductions: [f64; 4]) -> Vec<SensitivityRow> {
         .take(6)
         .collect();
 
-    let mut rows = Vec::new();
-    for (channels, ranks, policy, label) in [
-        (1, 1, RowPolicy::Open, "1ch/1rank/open"),
+    let grid = [
+        (1usize, 1usize, RowPolicy::Open, "1ch/1rank/open"),
         (2, 1, RowPolicy::Open, "2ch/1rank/open"),
         (1, 2, RowPolicy::Open, "1ch/2rank/open"),
         (2, 2, RowPolicy::Open, "2ch/2rank/open"),
         (1, 1, RowPolicy::Closed, "1ch/1rank/closed"),
-    ] {
-        let cfg = SystemConfig {
+    ];
+    let cfg_of = |gi: usize| -> SystemConfig {
+        let (channels, ranks, policy, _) = grid[gi];
+        SystemConfig {
             channels,
             ranks_per_channel: ranks,
             policy,
             ..SystemConfig::paper_default()
-        };
-        let speedups: Vec<f64> = picks
-            .iter()
-            .map(|w| {
-                let (s, _) = speedup(w, MULTI_CORES, base, fast, cycles, 1,
-                                     &cfg);
-                s
-            })
-            .collect();
-        rows.push(SensitivityRow {
-            label: label.to_string(),
-            channels,
-            ranks,
-            policy,
-            gmean_speedup: util::geomean(&speedups),
-        });
-    }
-    rows
+        }
+    };
+
+    // Job index layout: ((config * picks + workload) * 2 + timing_set).
+    let n_jobs = grid.len() * picks.len() * 2;
+    let throughputs = Pool::new(jobs).run(n_jobs, |i| {
+        let set = i % 2;
+        let wi = (i / 2) % picks.len();
+        let gi = i / (2 * picks.len());
+        let t = if set == 0 { base } else { fast };
+        run_config(&picks[wi], MULTI_CORES, t, cycles, 0, &cfg_of(gi))
+    });
+
+    grid.iter()
+        .enumerate()
+        .map(|(gi, (channels, ranks, policy, label))| {
+            let speedups: Vec<f64> = (0..picks.len())
+                .map(|wi| {
+                    let at = (gi * picks.len() + wi) * 2;
+                    throughputs[at + 1] / throughputs[at]
+                })
+                .collect();
+            SensitivityRow {
+                label: label.to_string(),
+                channels: *channels,
+                ranks: *ranks,
+                policy: *policy,
+                gmean_speedup: util::geomean(&speedups),
+            }
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -395,6 +455,38 @@ mod tests {
             assert_eq!(m.mix.len(), 4);
             assert!(m.weighted_speedup > 0.99,
                     "mix {:?} regressed: {}", m.mix, m.weighted_speedup);
+        }
+    }
+
+    #[test]
+    fn parallel_fig4_matches_sequential() {
+        // The determinism contract of the execution engine: the job-pool
+        // fan-out must be bit-identical to the sequential path at fixed
+        // seeds, for every statistic.
+        let seq = fig4_jobs(3_000, 2, PAPER_REDUCTIONS_55C, 1);
+        let par = fig4_jobs(3_000, 2, PAPER_REDUCTIONS_55C, 4);
+        assert_eq!(seq.per_workload.len(), par.per_workload.len());
+        for (a, b) in seq.per_workload.iter().zip(&par.per_workload) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.single_speedup, b.single_speedup, "{}", a.name);
+            assert_eq!(a.single_stddev, b.single_stddev, "{}", a.name);
+            assert_eq!(a.multi_speedup, b.multi_speedup, "{}", a.name);
+            assert_eq!(a.multi_stddev, b.multi_stddev, "{}", a.name);
+        }
+        assert_eq!(seq.gmean_intensive_multi, par.gmean_intensive_multi);
+        assert_eq!(seq.gmean_nonintensive_multi, par.gmean_nonintensive_multi);
+        assert_eq!(seq.mean_all_multi, par.mean_all_multi);
+        assert_eq!(seq.max_multi, par.max_multi);
+    }
+
+    #[test]
+    fn parallel_sensitivity_matches_sequential() {
+        let seq = sensitivity_jobs(5_000, PAPER_REDUCTIONS_55C, 1);
+        let par = sensitivity_jobs(5_000, PAPER_REDUCTIONS_55C, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.gmean_speedup, b.gmean_speedup, "{}", a.label);
         }
     }
 

@@ -1,0 +1,228 @@
+//! Parallel execution engine for embarrassingly parallel fan-outs.
+//!
+//! Every independent-simulation fan-out in the crate — the Fig-4 workload
+//! grid, the §8.4 sensitivity matrix, the population profiling campaign,
+//! the ablation grids — runs through [`Pool`]. The pool is built on
+//! `std::thread::scope` (the offline crate mirror has no rayon, matching
+//! the no-proptest convention in `util::quick`) and makes one guarantee
+//! the evaluation harnesses rely on: the reduction is **deterministic and
+//! order-independent**. Workers pull job indices from a shared atomic
+//! counter and write each result into its input-indexed slot, so the
+//! output vector is identical for any job count — `Pool::new(1)` *is* the
+//! sequential path, and `figures::fig4` asserts bit-identical results
+//! across job counts.
+//!
+//! Workers never share mutable state with each other; jobs that need a
+//! stateful resource (e.g. a `ProfilingBackend`, whose `profile()` takes
+//! `&mut self`) construct their own instance inside the worker via a
+//! `Sync` factory — see `figures::calibrate::run_par`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default worker count: the machine's available parallelism (the
+/// `--jobs N` CLI flag overrides it).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// A scoped worker pool of fixed width.
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    jobs: usize,
+}
+
+impl Pool {
+    /// A pool with `jobs` workers (0 is clamped to 1).
+    pub fn new(jobs: usize) -> Self {
+        Pool { jobs: jobs.max(1) }
+    }
+
+    /// A pool as wide as the machine.
+    pub fn auto() -> Self {
+        Pool::new(default_jobs())
+    }
+
+    /// The strictly sequential pool (runs jobs in order on the caller's
+    /// thread — the reference path for determinism tests).
+    pub fn sequential() -> Self {
+        Pool::new(1)
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Evaluate `f(0..n)` across the pool and return the results in input
+    /// order. With one worker (or one job) this degenerates to a plain
+    /// in-order loop on the caller's thread; with more workers the jobs
+    /// are claimed dynamically but each result still lands in its own
+    /// slot, so the returned vector does not depend on scheduling.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.run_init(n, || (), |_, i| f(i))
+    }
+
+    /// Like [`Pool::run`], but each worker lazily constructs one private
+    /// state value via `init` and threads it mutably through every job it
+    /// claims. This is how stateful resources fan out: a worker-owned
+    /// `ProfilingBackend` (whose `profile()` takes `&mut self`) is built
+    /// once per worker — not once per job — and never crosses threads, so
+    /// the state type needs neither `Send` nor `Sync`.
+    pub fn run_init<S, T, FI, F>(&self, n: usize, init: FI, f: F) -> Vec<T>
+    where
+        T: Send,
+        FI: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        if self.jobs == 1 || n <= 1 {
+            let mut state = init();
+            return (0..n).map(|i| f(&mut state, i)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<T>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..self.jobs.min(n) {
+                s.spawn(|| {
+                    // Lazy: a worker that never claims a job never pays
+                    // for (potentially expensive) state construction.
+                    let mut state: Option<S> = None;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let st = state.get_or_insert_with(&init);
+                        let r = f(st, i);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("worker panicked would have propagated")
+                    .expect("every slot filled exactly once")
+            })
+            .collect()
+    }
+
+    /// Fallible variant of [`Pool::run`]: runs everything, then surfaces
+    /// the first error in input order (later results are dropped). Errors
+    /// do not cancel in-flight jobs — fan-outs here are short and
+    /// side-effect free.
+    pub fn try_run<T, F>(&self, n: usize, f: F) -> anyhow::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> anyhow::Result<T> + Sync,
+    {
+        self.run(n, f).into_iter().collect()
+    }
+
+    /// Fallible variant of [`Pool::run_init`].
+    pub fn try_run_init<S, T, FI, F>(&self, n: usize, init: FI, f: F)
+                                     -> anyhow::Result<Vec<T>>
+    where
+        T: Send,
+        FI: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> anyhow::Result<T> + Sync,
+    {
+        self.run_init(n, init, f).into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_input_order() {
+        let pool = Pool::new(4);
+        let out = pool.run(100, |i| {
+            // Stagger so late indices often finish first.
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            i * i
+        });
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let f = |i: usize| (i as f64 + 1.0).sqrt().ln();
+        let seq = Pool::sequential().run(64, f);
+        let par = Pool::new(8).run(64, f);
+        assert_eq!(seq, par, "identical results for any job count");
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        let out = Pool::new(16).run(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_jobs_clamps_to_one() {
+        assert_eq!(Pool::new(0).jobs(), 1);
+        assert_eq!(Pool::new(0).run(4, |i| i), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn try_run_surfaces_first_error_in_input_order() {
+        let pool = Pool::new(4);
+        let r = pool.try_run(10, |i| {
+            if i == 3 || i == 7 {
+                anyhow::bail!("job {i} failed")
+            }
+            Ok(i)
+        });
+        let msg = format!("{}", r.unwrap_err());
+        assert_eq!(msg, "job 3 failed");
+        let ok = pool.try_run(5, |i| Ok::<_, anyhow::Error>(i)).unwrap();
+        assert_eq!(ok, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn run_init_builds_at_most_one_state_per_worker() {
+        let built = AtomicUsize::new(0);
+        let jobs = 3;
+        let out = Pool::new(jobs).run_init(
+            32,
+            || {
+                built.fetch_add(1, Ordering::Relaxed);
+                0u64 // per-worker job counter
+            },
+            |state, i| {
+                *state += 1;
+                i
+            },
+        );
+        assert_eq!(out, (0..32).collect::<Vec<_>>());
+        let n = built.load(Ordering::Relaxed);
+        assert!(n >= 1 && n <= jobs, "built {n} states for {jobs} workers");
+    }
+
+    #[test]
+    fn pool_parallelizes_wall_clock() {
+        // Smoke (not an assertion on speedup — CI machines vary): jobs
+        // run concurrently without deadlock at width > core count.
+        let pool = Pool::new(default_jobs().max(2));
+        let out = pool.run(32, |i| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            i
+        });
+        assert_eq!(out.len(), 32);
+    }
+}

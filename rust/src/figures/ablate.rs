@@ -16,31 +16,149 @@ use crate::model::{params, Combo};
 use crate::population::generate_dimm;
 use crate::profiler::{repeatability, sweep, sweep_exhaustive, TestKind};
 use crate::runtime::ProfilingBackend;
-use crate::timing::TimingParams;
 
 use super::csv::Csv;
 
-/// §7.1: acceptable read-latency sum as a function of refresh interval.
-pub fn refresh_latency(backend: &mut dyn ProfilingBackend, dimm_id: usize,
-                       cells: usize, out: &Path) -> Result<()> {
+/// §7.1 grid: one pool job per refresh-interval point (`jobs = 1` is the
+/// sequential ablation). Each worker owns one backend built lazily from
+/// the `Sync` factory (`profile()` takes `&mut self`); the monotonicity
+/// validation and CSV run afterwards in grid order, so output does not
+/// depend on the job count.
+pub fn refresh_latency_par<F>(make_backend: F, dimm_id: usize, cells: usize,
+                              jobs: usize, out: &Path) -> Result<()>
+where
+    F: Fn() -> Box<dyn ProfilingBackend> + Sync,
+{
     let d = generate_dimm(dimm_id, cells, params());
-    let _std_sum = TimingParams::ddr3_standard().read_sum_ns();
-    println!("== §7.1: refresh interval vs latency reduction (dimm {dimm_id}, 85C) ==");
+    const TREFS: [f64; 5] = [16.0, 32.0, 64.0, 128.0, 200.0];
+    let bests = crate::exec::Pool::new(jobs).try_run_init(
+        TREFS.len(),
+        &make_backend,
+        |b, i| {
+            let s = sweep(b.as_mut(), &d.arrays, TestKind::Read, 85.0,
+                          TREFS[i])?;
+            Ok(s.best.expect("std timings are always acceptable"))
+        },
+    )?;
+    println!("== §7.1: refresh interval vs latency reduction \
+              (dimm {dimm_id}, 85C, {jobs} jobs) ==");
     let mut csv = Csv::new(&["tref_ms", "best_read_sum_ns", "reduction"]);
     let mut last = 0.0f64;
-    for tref in [16.0, 32.0, 64.0, 128.0, 200.0] {
-        let s = sweep(backend, &d.arrays, TestKind::Read, 85.0, tref)?;
-        let best = s.best.expect("std timings are always acceptable");
-        println!("tref {tref:>5.0} ms -> best read sum {:>6.2} ns ({:>5.1}% reduction)",
+    for (tref, best) in TREFS.iter().zip(&bests) {
+        println!("tref {tref:>5.0} ms -> best read sum {:>6.2} ns \
+                  ({:>5.1}% reduction)",
                  best.sum_ns, 100.0 * best.reduction);
-        csv.rowf(&[tref, best.sum_ns, best.reduction]);
-        // §7.1: a longer refresh interval can only shrink the potential,
-        // i.e. the best acceptable sum is non-decreasing in tref.
+        csv.rowf(&[*tref, best.sum_ns, best.reduction]);
         anyhow::ensure!(best.sum_ns >= last - 1e-9,
                         "§7.1 violated: longer refresh raised the potential");
         last = best.sum_ns;
     }
     csv.write(out, "ablate_refresh_latency.csv")?;
+    Ok(())
+}
+
+/// Parallel §9.2 grid: one pool job per ECC budget point.
+pub fn ecc_par<F>(make_backend: F, dimm_id: usize, cells: usize, jobs: usize,
+                  out: &Path) -> Result<()>
+where
+    F: Fn() -> Box<dyn ProfilingBackend> + Sync,
+{
+    use crate::profiler::sweep::sweep_ecc;
+    let d = generate_dimm(dimm_id, cells, params());
+    // Prelude backend for the refresh profile. It cannot be handed to the
+    // pool afterwards (`ProfilingBackend` is not `Send`, and worker state
+    // must be constructible on the worker's own thread), so the grid below
+    // builds one fresh backend per worker — a bounded one-extra-build cost.
+    let tref = {
+        let mut b = make_backend();
+        crate::profiler::profile_refresh(b.as_mut(), &d.arrays, 85.0)?
+            .safe_read_ms()
+    };
+    const BUDGETS: [f64; 6] = [0.0, 1.0, 4.0, 16.0, 64.0, 256.0];
+    let bests = crate::exec::Pool::new(jobs).try_run_init(
+        BUDGETS.len(),
+        &make_backend,
+        |b, i| {
+            Ok(sweep_ecc(b.as_mut(), &d.arrays, TestKind::Read, 85.0, tref,
+                         BUDGETS[i])?
+                .best
+                .expect("ecc sweep feasible"))
+        },
+    )?;
+    println!("== §9.2 future work: ECC-assisted latency reduction \
+              (dimm {dimm_id}, 85C, tref {tref} ms, {jobs} jobs) ==");
+    let mut csv = Csv::new(&["ecc_budget_cells", "read_sum_ns", "reduction"]);
+    let mut last = f64::MAX;
+    for (budget, s) in BUDGETS.iter().zip(&bests) {
+        println!("budget {budget:>5.0} cells -> read sum {:.2} ns \
+                  ({:.1}% reduction)", s.sum_ns, 100.0 * s.reduction);
+        csv.rowf(&[*budget, s.sum_ns, s.reduction]);
+        anyhow::ensure!(s.sum_ns <= last + 1e-9,
+                        "more ECC budget must not reduce the potential");
+        last = s.sum_ns;
+    }
+    csv.write(out, "ablate_ecc.csv")?;
+    Ok(())
+}
+
+/// Parallel §5.2 grid: the module-granularity sweep on the caller's
+/// backend, then one pool job per bank.
+pub fn bank_granularity_par<F>(make_backend: F, dimm_id: usize, cells: usize,
+                               jobs: usize, out: &Path) -> Result<()>
+where
+    F: Fn() -> Box<dyn ProfilingBackend> + Sync,
+{
+    use crate::profiler::sweep::sweep_bank;
+    let d = generate_dimm(dimm_id, cells, params());
+    let (tref, module) = {
+        let mut b = make_backend();
+        let refresh =
+            crate::profiler::profile_refresh(b.as_mut(), &d.arrays, 85.0)?;
+        let tref = refresh.safe_read_ms();
+        let module = sweep(b.as_mut(), &d.arrays, TestKind::Read, 85.0,
+                           tref)?
+            .best
+            .expect("module sweep feasible");
+        (tref, module)
+    };
+    println!("== §5.2 future work: bank-granularity AL-DRAM \
+              (dimm {dimm_id}, 85C, {jobs} jobs) ==");
+    println!("module-granularity read sum: {:.2} ns ({:.1}% reduction)",
+             module.sum_ns, 100.0 * module.reduction);
+
+    let banks = d.arrays.banks;
+    let bank_bests = crate::exec::Pool::new(jobs).try_run_init(
+        banks,
+        &make_backend,
+        |b, bank| {
+            Ok(sweep_bank(b.as_mut(), &d.arrays, TestKind::Read, 85.0, tref,
+                          bank)?
+                .best
+                .expect("bank sweep feasible"))
+        },
+    )?;
+
+    let mut csv = Csv::new(&["bank", "read_sum_ns", "reduction",
+                             "extra_vs_module_ns"]);
+    let mut extra_total = 0.0;
+    for (bank, b) in bank_bests.iter().enumerate() {
+        let extra = module.sum_ns - b.sum_ns;
+        extra_total += extra;
+        println!(
+            "bank {bank}: {:.2} ns ({:.1}% reduction, {:+.2} ns vs module)",
+            b.sum_ns, 100.0 * b.reduction, -extra
+        );
+        csv.rowf(&[bank as f64, b.sum_ns, b.reduction, extra]);
+        anyhow::ensure!(b.sum_ns <= module.sum_ns + 1e-9);
+    }
+    println!(
+        "average additional reduction at bank granularity: {:.2} ns \
+         ({:.1}% of the standard read sum)",
+        extra_total / banks as f64,
+        100.0 * extra_total / banks as f64
+            / crate::timing::TimingParams::ddr3_standard().read_sum_ns()
+    );
+    csv.write(out, "ablate_bank_granularity.csv")?;
     Ok(())
 }
 
@@ -134,88 +252,10 @@ pub fn sweep_check(backend: &mut dyn ProfilingBackend, dimm_id: usize,
     Ok(())
 }
 
-/// §5.2 future work: bank-granularity AL-DRAM. Profiles each bank
-/// independently and compares the per-bank acceptable latency sums with
-/// the module-granularity set (the module is as slow as its worst bank;
-/// individual banks can run faster).
-pub fn bank_granularity(backend: &mut dyn ProfilingBackend, dimm_id: usize,
-                        cells: usize, out: &Path) -> Result<()> {
-    use crate::profiler::sweep::sweep_bank;
-    let d = generate_dimm(dimm_id, cells, params());
-    let refresh = crate::profiler::profile_refresh(backend, &d.arrays, 85.0)?;
-    let tref = refresh.safe_read_ms();
-
-    // 85 degC: the binding constraint there is the per-bank retention
-    // tail (Fig 3's red dots), which is where bank granularity pays.
-    let module = sweep(backend, &d.arrays, TestKind::Read, 85.0, tref)?
-        .best
-        .expect("module sweep feasible");
-    println!("== §5.2 future work: bank-granularity AL-DRAM (dimm {dimm_id}, 85C) ==");
-    println!("module-granularity read sum: {:.2} ns ({:.1}% reduction)",
-             module.sum_ns, 100.0 * module.reduction);
-
-    let mut csv = Csv::new(&["bank", "read_sum_ns", "reduction",
-                             "extra_vs_module_ns"]);
-    let mut extra_total = 0.0;
-    let banks = d.arrays.banks;
-    for bank in 0..banks {
-        let b = sweep_bank(backend, &d.arrays, TestKind::Read, 85.0, tref,
-                           bank)?
-            .best
-            .expect("bank sweep feasible");
-        let extra = module.sum_ns - b.sum_ns;
-        extra_total += extra;
-        println!(
-            "bank {bank}: {:.2} ns ({:.1}% reduction, {:+.2} ns vs module)",
-            b.sum_ns, 100.0 * b.reduction, -extra
-        );
-        csv.rowf(&[bank as f64, b.sum_ns, b.reduction, extra]);
-        // A single bank can never be slower than the whole module.
-        anyhow::ensure!(b.sum_ns <= module.sum_ns + 1e-9);
-    }
-    println!(
-        "average additional reduction at bank granularity: {:.2} ns \
-         ({:.1}% of the standard read sum) — the intra-DIMM process \
-         variation headroom Fig 3's red dots show",
-        extra_total / banks as f64,
-        100.0 * extra_total / banks as f64
-            / crate::timing::TimingParams::ddr3_standard().read_sum_ns()
-    );
-    csv.write(out, "ablate_bank_granularity.csv")?;
-    Ok(())
-}
-
-/// §9.2 future work: ECC-assisted latency reduction. Sweeps with a
-/// correctable-error budget: tolerating a handful of failing cells
-/// (covered by SECDED/chipkill) unlocks further timing reduction.
-pub fn ecc(backend: &mut dyn ProfilingBackend, dimm_id: usize, cells: usize,
-           out: &Path) -> Result<()> {
-    use crate::profiler::sweep::sweep_ecc;
-    let d = generate_dimm(dimm_id, cells, params());
-    let refresh = crate::profiler::profile_refresh(backend, &d.arrays, 85.0)?;
-    let tref = refresh.safe_read_ms();
-
-    println!("== §9.2 future work: ECC-assisted latency reduction \
-              (dimm {dimm_id}, 85C, tref {tref} ms) ==");
-    let mut csv = Csv::new(&["ecc_budget_cells", "read_sum_ns", "reduction"]);
-    let mut last = f64::MAX;
-    for budget in [0.0, 1.0, 4.0, 16.0, 64.0, 256.0] {
-        let s = sweep_ecc(backend, &d.arrays, TestKind::Read, 85.0, tref,
-                          budget)?
-            .best
-            .expect("ecc sweep feasible");
-        println!("budget {budget:>5.0} cells -> read sum {:.2} ns \
-                  ({:.1}% reduction)", s.sum_ns, 100.0 * s.reduction);
-        csv.rowf(&[budget, s.sum_ns, s.reduction]);
-        anyhow::ensure!(s.sum_ns <= last + 1e-9,
-                        "more ECC budget must not reduce the potential");
-        last = s.sum_ns;
-    }
-    csv.write(out, "ablate_ecc.csv")?;
-    Ok(())
-}
-
 /// ODE-vs-analytic sensing check through the AOT artifact (PJRT path).
+/// Without the `pjrt` feature there is nothing to cross-check against, so
+/// the ablation reports itself as skipped instead of failing `ablate all`.
+#[cfg(feature = "pjrt")]
 pub fn ode_check(dir: &Path) -> Result<()> {
     let report = crate::runtime::pjrt::run_ode_check(dir, 16384)?;
     println!("== ODE vs analytic sensing (artifact: ode_check) ==");
@@ -227,21 +267,40 @@ pub fn ode_check(dir: &Path) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+pub fn ode_check(_dir: &Path) -> Result<()> {
+    println!("== ODE vs analytic sensing: skipped (built without the \
+              `pjrt` feature) ==");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::NativeBackend;
 
+    fn native_factory() -> Box<dyn ProfilingBackend> {
+        Box::new(NativeBackend::new())
+    }
+
     #[test]
-    fn refresh_latency_monotone() {
-        let mut b = NativeBackend::new();
+    fn refresh_latency_monotone_sequential() {
+        // jobs = 1 is the sequential ablation (the §7.1 monotonicity
+        // check runs inside the function either way).
         let dir = std::env::temp_dir().join("aldram_ablate_test");
-        refresh_latency(&mut b, 0, 64, &dir).unwrap();
+        refresh_latency_par(native_factory, 0, 64, 1, &dir).unwrap();
     }
 
     #[test]
     fn repeat_battery_runs() {
         let dir = std::env::temp_dir().join("aldram_ablate_test");
         repeat(0, 128, &dir).unwrap();
+    }
+
+    #[test]
+    fn refresh_latency_par_runs_through_the_pool() {
+        let dir = std::env::temp_dir().join("aldram_ablate_par_test");
+        refresh_latency_par(native_factory, 0, 64, 2, &dir).unwrap();
+        assert!(dir.join("ablate_refresh_latency.csv").exists());
     }
 }

@@ -45,12 +45,76 @@ pub fn run(backend: &mut dyn ProfilingBackend, n_dimms: usize, cells: usize)
             eprintln!("  profiled {}/{} modules", id + 1, n_dimms);
         }
     }
+    report_from(profiles)
+}
+
+/// Parallel population campaign: one pool job per DIMM. `profile()` takes
+/// `&mut self`, so each worker builds its own backend from the `Sync`
+/// factory; per-DIMM profiles land in DIMM-id order regardless of which
+/// worker ran them, so the report is identical to the sequential `run`
+/// (every DIMM's cell arrays derive from its stable label, not from
+/// sampling order).
+pub fn run_par<F>(make_backend: F, n_dimms: usize, cells: usize,
+                  jobs: usize) -> Result<CalibrationReport>
+where
+    F: Fn() -> Box<dyn ProfilingBackend> + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let p = params();
+    let finished = AtomicUsize::new(0);
+    let profiles = crate::exec::Pool::new(jobs).try_run_init(
+        n_dimms,
+        make_backend,
+        |backend, id| {
+            let d = generate_dimm(id, cells, p);
+            let profile = profile_dimm(backend.as_mut(), &d);
+            let n = finished.fetch_add(1, Ordering::Relaxed) + 1;
+            if n % 10 == 0 {
+                eprintln!("  profiled {n}/{n_dimms} modules");
+            }
+            profile
+        },
+    )?;
+    report_from(profiles)
+}
+
+fn report_from(profiles: Vec<DimmProfile>) -> Result<CalibrationReport> {
     let summary = summarize(&profiles);
     let max_read_ms =
         profiles.iter().map(|p| p.refresh85.module_max_read_ms).collect();
     let max_write_ms =
         profiles.iter().map(|p| p.refresh85.module_max_write_ms).collect();
     Ok(CalibrationReport { summary, profiles, max_read_ms, max_write_ms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn parallel_campaign_matches_sequential() {
+        let mut b = NativeBackend::new();
+        let seq = run(&mut b, 4, 64).unwrap();
+        let factory = || -> Box<dyn ProfilingBackend> {
+            Box::new(NativeBackend::new())
+        };
+        let par = run_par(factory, 4, 64, 3).unwrap();
+        assert_eq!(seq.profiles.len(), par.profiles.len());
+        for (a, o) in seq.profiles.iter().zip(&par.profiles) {
+            assert_eq!(a.id, o.id);
+            assert_eq!(a.refresh85.module_max_read_ms,
+                       o.refresh85.module_max_read_ms);
+            assert_eq!(a.refresh85.module_max_write_ms,
+                       o.refresh85.module_max_write_ms);
+            assert_eq!(a.at55.combined(), o.at55.combined());
+            assert_eq!(a.at85.combined(), o.at85.combined());
+        }
+        assert_eq!(seq.summary.read_reduction_55,
+                   par.summary.read_reduction_55);
+        assert_eq!(seq.summary.param_reduction_55,
+                   par.summary.param_reduction_55);
+    }
 }
 
 pub fn print_report(r: &CalibrationReport) {

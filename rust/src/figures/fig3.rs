@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::figures::calibrate::{run as campaign, CalibrationReport};
+use crate::figures::calibrate::{self, run as campaign, CalibrationReport};
 use crate::runtime::ProfilingBackend;
 use crate::timing::TimingParams;
 
@@ -18,7 +18,21 @@ use super::csv::Csv;
 pub fn fig3(backend: &mut dyn ProfilingBackend, n_dimms: usize, cells: usize,
             out: &Path) -> Result<CalibrationReport> {
     let report = campaign(backend, n_dimms, cells)?;
+    render(report, out)
+}
 
+/// Fig 3 with the population campaign fanned out over the job pool (one
+/// job per DIMM; see `calibrate::run_par`).
+pub fn fig3_par<F>(make_backend: F, n_dimms: usize, cells: usize,
+                   jobs: usize, out: &Path) -> Result<CalibrationReport>
+where
+    F: Fn() -> Box<dyn ProfilingBackend> + Sync,
+{
+    let report = calibrate::run_par(make_backend, n_dimms, cells, jobs)?;
+    render(report, out)
+}
+
+fn render(report: CalibrationReport, out: &Path) -> Result<CalibrationReport> {
     // --- 3a / 3b ---------------------------------------------------------
     let mut csv = Csv::new(&["dimm", "vendor", "kind", "module_max_ms",
                              "bank_min_ms", "bank_max_ms"]);

@@ -4,14 +4,19 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::eval::{fig4 as run_fig4, Fig4Result, PAPER_REDUCTIONS_55C};
+use crate::eval::{fig4_jobs, Fig4Result, PAPER_REDUCTIONS_55C};
 
 use super::csv::Csv;
 
-pub fn fig4(cycles: u64, reps: usize, out: &Path) -> Result<Fig4Result> {
-    let r = run_fig4(cycles, reps, PAPER_REDUCTIONS_55C);
+/// Regenerate Fig 4, fanning the (workload, cores, rep, timing-set) grid
+/// out over `jobs` pool workers. Results are identical for every job
+/// count (`eval::fig4_jobs` reduces order-independently).
+pub fn fig4(cycles: u64, reps: usize, jobs: usize, out: &Path)
+            -> Result<Fig4Result> {
+    let r = fig4_jobs(cycles, reps, PAPER_REDUCTIONS_55C, jobs);
 
-    println!("== Fig 4: AL-DRAM speedup over DDR3 standard (55C point) ==");
+    println!("== Fig 4: AL-DRAM speedup over DDR3 standard (55C point, \
+              {jobs} jobs) ==");
     println!("{:<14} {:>6} {:>10} {:>10} {:>10} {:>10}",
              "workload", "mpki", "1core", "+/-", "4core", "+/-");
     let mut csv = Csv::new(&["workload", "mpki", "intensive",
@@ -51,9 +56,10 @@ mod tests {
 
     #[test]
     fn fig4_smoke() {
-        // Tiny cycle budget: just proves the plumbing + CSV.
+        // Tiny cycle budget: just proves the plumbing + CSV, through a
+        // 2-worker pool.
         let dir = std::env::temp_dir().join("aldram_fig4_test");
-        let r = fig4(4_000, 1, &dir).unwrap();
+        let r = fig4(4_000, 1, 2, &dir).unwrap();
         assert_eq!(r.per_workload.len(), 35);
         assert!(dir.join("fig4.csv").exists());
     }

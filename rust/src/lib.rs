@@ -17,6 +17,7 @@
 pub mod aldram;
 pub mod cli;
 pub mod eval;
+pub mod exec;
 pub mod figures;
 pub mod mem;
 pub mod model;

@@ -2,46 +2,67 @@
 //!
 //! Commands (see DESIGN.md §6 for the experiment index):
 //!   repro calibrate  [--dimms N] [--cells N] [--backend native|pjrt|auto]
+//!                    [--jobs N]
 //!   repro profile    --dimm N [--cells N] [--backend ...]
-//!   repro figure     fig2a|fig2bc|fig3|fig4|all [--out DIR] [...]
+//!   repro figure     fig2a|fig2bc|fig3|fig4|all [--out DIR] [--jobs N] [...]
 //!   repro ablate     refresh-latency|interdependence|repeatability|
-//!                    bank-granularity|ecc|sweep|ode
-//!   repro eval       sensitivity|hetero|power|stress [--cycles N]
+//!                    bank-granularity|ecc|sweep|ode [--jobs N]
+//!   repro eval       sensitivity|hetero|power|stress [--cycles N] [--jobs N]
 //!   repro bench-sim  [--cycles N]          (quick end-to-end smoke)
+//!
+//! `--jobs N` sets the worker count of the parallel execution engine
+//! (`exec::Pool`) for every independent-simulation fan-out; it defaults to
+//! the machine's available parallelism. `--jobs 1` is the exact sequential
+//! path (results are identical either way — the pool's reduction is
+//! order-independent).
 
 use std::path::PathBuf;
 
 use aldram::cli::Args;
+use aldram::exec;
 use aldram::figures::{ablate, calibrate, fig2, fig3, fig4};
 use aldram::model::params;
 use aldram::population::generate_dimm;
 use aldram::profiler::profile_dimm;
 use aldram::runtime::{artifacts_dir, auto_backend, NativeBackend,
-                      PjrtBackend, ProfilingBackend};
+                      ProfilingBackend};
 
-fn backend_for(args: &Args, cells: usize) -> Box<dyn ProfilingBackend> {
-    match args.str("backend", "auto").as_str() {
+fn make_backend(kind: &str, cells: usize) -> Box<dyn ProfilingBackend> {
+    match kind {
         "native" => Box::new(NativeBackend::new()),
+        #[cfg(feature = "pjrt")]
         "pjrt" => Box::new(
-            PjrtBackend::for_cells(&artifacts_dir(), cells)
+            aldram::runtime::PjrtBackend::for_cells(&artifacts_dir(), cells)
                 .expect("PJRT backend requested but unavailable — run `make artifacts`"),
+        ),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => panic!(
+            "PJRT backend requested but this binary was built without the \
+             `pjrt` feature — rebuild with `--features pjrt` (requires the \
+             vendored xla bindings, see Cargo.toml)"
         ),
         "auto" => auto_backend(&artifacts_dir(), cells),
         other => panic!("unknown backend `{other}`"),
     }
 }
 
+fn backend_for(args: &Args, cells: usize) -> Box<dyn ProfilingBackend> {
+    make_backend(&args.str("backend", "auto"), cells)
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let out = PathBuf::from(args.str("out", "results"));
     let g = &params().geometry;
+    let jobs = args.get("jobs", exec::default_jobs());
 
     match args.cmd() {
         Some("calibrate") => {
             let dimms = args.get("dimms", 30usize);
             let cells = args.get("cells", g.cells_per_chip_bank);
-            let mut b = backend_for(&args, cells);
-            let r = calibrate::run(b.as_mut(), dimms, cells)?;
+            let kind = args.str("backend", "auto");
+            let r = calibrate::run_par(|| make_backend(&kind, cells), dimms,
+                                       cells, jobs)?;
             calibrate::print_report(&r);
         }
 
@@ -82,13 +103,14 @@ fn main() -> anyhow::Result<()> {
             if which == "fig3" || which == "all" {
                 let dimms =
                     args.get("dimms", params().population.n_dimms);
-                let mut b = backend_for(&args, cells);
-                fig3::fig3(b.as_mut(), dimms, cells, &out)?;
+                let kind = args.str("backend", "auto");
+                fig3::fig3_par(|| make_backend(&kind, cells), dimms, cells,
+                               jobs, &out)?;
             }
             if which == "fig4" || which == "all" {
                 let cycles = args.get("cycles", 300_000u64);
                 let reps = args.get("reps", 3usize);
-                fig4::fig4(cycles, reps, &out)?;
+                fig4::fig4(cycles, reps, jobs, &out)?;
             }
             if !["fig2a", "fig2bc", "fig3", "fig4", "all"].contains(&which) {
                 anyhow::bail!("unknown figure `{which}`");
@@ -99,28 +121,44 @@ fn main() -> anyhow::Result<()> {
             let which = args.sub(1).unwrap_or("all");
             let cells = args.get("cells", g.cells_per_chip_bank_small);
             let dimm = args.get("dimm", 0usize);
-            let mut b = backend_for(&args, cells);
+            let kind = args.str("backend", "auto");
+            let factory = || make_backend(&kind, cells);
             match which {
                 "refresh-latency" => {
-                    ablate::refresh_latency(b.as_mut(), dimm, cells, &out)?
+                    ablate::refresh_latency_par(factory, dimm, cells, jobs,
+                                                &out)?
                 }
                 "interdependence" => {
+                    let mut b = backend_for(&args, cells);
                     ablate::interdependence(b.as_mut(), dimm, cells, &out)?
                 }
                 "repeatability" => ablate::repeat(dimm, cells, &out)?,
                 "bank-granularity" => {
-                    ablate::bank_granularity(b.as_mut(), dimm, cells, &out)?
+                    ablate::bank_granularity_par(factory, dimm, cells, jobs,
+                                                 &out)?
                 }
-                "ecc" => ablate::ecc(b.as_mut(), dimm, cells, &out)?,
-                "sweep" => ablate::sweep_check(b.as_mut(), dimm, cells)?,
+                "ecc" => ablate::ecc_par(factory, dimm, cells, jobs, &out)?,
+                "sweep" => {
+                    let mut b = backend_for(&args, cells);
+                    ablate::sweep_check(b.as_mut(), dimm, cells)?
+                }
                 "ode" => ablate::ode_check(&artifacts_dir())?,
                 "all" => {
-                    ablate::refresh_latency(b.as_mut(), dimm, cells, &out)?;
-                    ablate::interdependence(b.as_mut(), dimm, cells, &out)?;
+                    ablate::refresh_latency_par(factory, dimm, cells, jobs,
+                                                &out)?;
+                    {
+                        let mut b = backend_for(&args, cells);
+                        ablate::interdependence(b.as_mut(), dimm, cells,
+                                                &out)?;
+                    }
                     ablate::repeat(dimm, cells, &out)?;
-                    ablate::bank_granularity(b.as_mut(), dimm, cells, &out)?;
-                    ablate::ecc(b.as_mut(), dimm, cells, &out)?;
-                    ablate::sweep_check(b.as_mut(), dimm, cells)?;
+                    ablate::bank_granularity_par(factory, dimm, cells, jobs,
+                                                 &out)?;
+                    ablate::ecc_par(factory, dimm, cells, jobs, &out)?;
+                    {
+                        let mut b = backend_for(&args, cells);
+                        ablate::sweep_check(b.as_mut(), dimm, cells)?;
+                    }
                     ablate::ode_check(&artifacts_dir())?;
                 }
                 other => anyhow::bail!("unknown ablation `{other}`"),
@@ -132,9 +170,10 @@ fn main() -> anyhow::Result<()> {
             let cycles = args.get("cycles", 200_000u64);
             match which {
                 "sensitivity" => {
-                    println!("== §8.4: sensitivity (memory-intensive gmean) ==");
-                    for row in aldram::eval::sensitivity(
-                        cycles, aldram::eval::PAPER_REDUCTIONS_55C) {
+                    println!("== §8.4: sensitivity (memory-intensive gmean, \
+                              {jobs} jobs) ==");
+                    for row in aldram::eval::sensitivity_jobs(
+                        cycles, aldram::eval::PAPER_REDUCTIONS_55C, jobs) {
                         println!("{:<18} {:>6.1}%", row.label,
                                  100.0 * (row.gmean_speedup - 1.0));
                     }
@@ -213,6 +252,8 @@ fn main() -> anyhow::Result<()> {
         _ => {
             println!("repro — AL-DRAM reproduction (see DESIGN.md)");
             println!("commands: calibrate | profile | figure | ablate | eval | bench-sim");
+            println!("global flags: --jobs N (parallel fan-out width, \
+                      default {})", exec::default_jobs());
         }
     }
     Ok(())

@@ -160,6 +160,19 @@ impl Controller {
         self.refresh_scale = scale;
     }
 
+    /// Whether the write queue is currently in drain mode (crossed `wq_hi`
+    /// and has not yet fallen back below `wq_lo`).
+    pub fn draining_writes(&self) -> bool {
+        self.draining_writes
+    }
+
+    /// Whether rank `rank` has a refresh pending (its tREFI deadline has
+    /// passed and the REF command has not issued yet). While pending, the
+    /// scheduler fences the rank off from new commands.
+    pub fn refresh_pending(&self, rank: usize) -> bool {
+        self.refresh_due[rank]
+    }
+
     fn trefi(&self) -> u64 {
         let tc: TimingCycles = self.timings_ns.to_cycles(self.tck_ns);
         ((tc.trefi as f64) * self.refresh_scale).max(1.0) as u64
@@ -227,6 +240,11 @@ impl Controller {
 
         // 2. Refresh management: when tREFI elapses, drain the rank and
         //    issue REF (highest priority — postponement is bounded).
+        //    Scheduling below refuses new commands to a rank with a
+        //    pending refresh (see `schedule_queue`); without that, a
+        //    row-hit-heavy stream keeps `can_pre` closed forever (every
+        //    column command pushes the bank's earliest-PRE out by tRTP /
+        //    tWR) and REF is postponed unboundedly.
         for r in 0..self.ranks.len() {
             if now >= self.next_refresh[r] {
                 self.refresh_due[r] = true;
@@ -300,6 +318,12 @@ impl Controller {
 
     /// FR-FCFS: (1) oldest row-hit column command, (2) oldest request's
     /// ACT/PRE as needed. Returns true if a command issued.
+    ///
+    /// Ranks with a pending refresh are fenced off: issuing a column
+    /// command there would push the bank's earliest-PRE deadline out
+    /// (tRTP / tWR) and an ACT would reopen a row the refresh drain just
+    /// closed, so either starves REF under a steady stream. Their
+    /// requests stay queued until the refresh retires.
     fn schedule_queue(&mut self, writes: bool, now: Cycle) -> bool {
         let q = if writes { &self.write_q } else { &self.read_q };
         if q.is_empty() {
@@ -309,6 +333,9 @@ impl Controller {
         // First-ready: oldest request whose column command can go now.
         let mut hit_idx = None;
         for (i, p) in q.iter().enumerate() {
+            if self.refresh_due[p.rank] {
+                continue;
+            }
             let rk = &self.ranks[p.rank];
             let ok = if writes {
                 rk.can_write(p.bank, p.row, now)
@@ -346,9 +373,9 @@ impl Controller {
             return true;
         }
 
-        // Otherwise service the oldest request: open its row (ACT) or close
-        // a conflicting row (PRE).
-        let head = *match q.front() {
+        // Otherwise service the oldest request on a refresh-free rank:
+        // open its row (ACT) or close a conflicting row (PRE).
+        let head = *match q.iter().find(|p| !self.refresh_due[p.rank]) {
             Some(p) => p,
             None => return false,
         };
@@ -479,6 +506,89 @@ mod tests {
             c.tick(now);
         }
         assert!(c.ranks()[0].all_banks_idle());
+    }
+
+    #[test]
+    fn row_hit_stream_cannot_starve_refresh() {
+        // Regression for the refresh-starvation bug: a saturating
+        // row-hit read stream keeps the bank's earliest-PRE deadline
+        // perpetually in the future (every READ pushes it out by tRTP),
+        // so a scheduler that keeps issuing to a refresh-pending rank
+        // never finds a precharge-able bank and REF is postponed forever.
+        // The fix fences refresh-pending ranks off from new commands.
+        let mut c = ctrl(RowPolicy::Open);
+        let trefi = TimingParams::ddr3_standard().to_cycles(1.25).trefi as u64;
+        let horizon = trefi * 4 + 2000;
+        let mut id = 0u64;
+        let mut fence_cycles = 0u64;
+        for now in 0..horizon {
+            while c.can_accept(false) {
+                id += 1;
+                // Same 8 KiB row over and over: pure row hits.
+                c.enqueue(Request { id, core: 0, addr: (id * 64) % 8192,
+                                    is_write: false, arrival: now });
+            }
+            c.tick(now);
+            if c.refresh_pending(0) {
+                fence_cycles += 1;
+            }
+        }
+        assert_eq!(c.stats.refreshes, 4,
+                   "stream must not starve refresh: {} REFs in 4 tREFI",
+                   c.stats.refreshes);
+        assert!(c.stats.reads_done > 1000, "stream still makes progress");
+        // The fence engages briefly around each tREFI deadline (drain +
+        // REF), never for a significant fraction of the run.
+        assert!(fence_cycles > 0, "fence never engaged");
+        assert!(fence_cycles < horizon / 10,
+                "fence held too long: {fence_cycles} of {horizon} cycles");
+    }
+
+    #[test]
+    fn write_drain_hysteresis_flips_at_watermarks() {
+        let mut c = ctrl(RowPolicy::Open);
+        assert!(!c.draining_writes());
+        // Fill to wq_hi (24): drain mode engages on the next tick.
+        for i in 0..24u64 {
+            assert!(c.enqueue(Request { id: i, core: 0, addr: i * 64,
+                                        is_write: true, arrival: 0 }));
+        }
+        c.tick(0);
+        assert!(c.draining_writes(), "crossing wq_hi engages drain");
+        // Drain until the queue falls to wq_lo (8): mode must disengage,
+        // and must have stayed engaged at every level in between
+        // (hysteresis, not a single threshold).
+        let mut now = 1u64;
+        while c.write_queue_len() > 8 {
+            assert!(c.draining_writes(),
+                    "drain persists between wq_lo and wq_hi (len {})",
+                    c.write_queue_len());
+            c.tick(now);
+            now += 1;
+            assert!(now < 100_000, "drain stalled");
+        }
+        c.tick(now);
+        assert!(!c.draining_writes(), "reaching wq_lo disengages drain");
+    }
+
+    #[test]
+    fn refresh_scale_stretches_observed_period() {
+        // §7.1: doubling the refresh interval halves the observed REF
+        // rate on an idle controller.
+        let trefi = TimingParams::ddr3_standard().to_cycles(1.25).trefi as u64;
+        let horizon = trefi * 8;
+        let mut base = ctrl(RowPolicy::Open);
+        let mut scaled = ctrl(RowPolicy::Open);
+        scaled.set_refresh_scale(2.0);
+        for now in 0..horizon {
+            base.tick(now);
+            scaled.tick(now);
+        }
+        assert!(base.stats.refreshes >= 7,
+                "base {} REFs in 8 tREFI", base.stats.refreshes);
+        assert!(scaled.stats.refreshes >= 3 && scaled.stats.refreshes <= 5,
+                "2x-scaled {} REFs in 8 tREFI (expect ~4)",
+                scaled.stats.refreshes);
     }
 
     #[test]

@@ -1,27 +1,74 @@
-//! Runtime bridge: load AOT artifacts (HLO text) and execute them via the
-//! `xla` crate's PJRT CPU client, behind the `ProfilingBackend` trait.
+//! Runtime bridge: the `ProfilingBackend` trait and its two engines.
+//!
+//! `NativeBackend` (always available) is the pure-rust mirror of the AOT
+//! artifact's math. `PjrtBackend` executes the HLO-text artifact on the
+//! `xla` crate's PJRT CPU client; it is gated behind the off-by-default
+//! `pjrt` cargo feature so the offline build needs no XLA toolchain (see
+//! Cargo.toml for how to enable it).
 
 pub mod backend;
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use backend::{profile_one, ProfilingBackend};
 pub use native::NativeBackend;
-pub use pjrt::{artifacts_dir, Manifest, PjrtBackend};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Manifest, PjrtBackend};
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Once;
 
-/// Best backend for a given cell resolution: PJRT when an artifact with a
-/// matching shape exists, native otherwise (with a notice — the native
-/// mirror is bit-equivalent within float tolerance, see the xcheck test).
+/// Default artifact directory: `$ARTIFACTS_DIR` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ARTIFACTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// One-shot fallback notice: a parallel profiling campaign calls
+/// `auto_backend` once per worker per DIMM, and N_workers x N_dimms
+/// copies of the same line are noise.
+fn fallback_notice(msg: &str) {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| eprintln!("{msg}"));
+}
+
+/// Best backend for a given cell resolution: PJRT when the feature is
+/// enabled and an artifact with a matching shape exists, native otherwise
+/// (with a once-per-process notice — the native mirror is bit-equivalent
+/// within float tolerance, see the xcheck test).
 pub fn auto_backend(dir: &Path, cells: usize) -> Box<dyn ProfilingBackend> {
+    #[cfg(feature = "pjrt")]
     match PjrtBackend::for_cells(dir, cells) {
-        Ok(b) => Box::new(b),
-        Err(e) => {
-            eprintln!(
-                "note: PJRT backend unavailable ({e}); using native mirror"
-            );
-            Box::new(NativeBackend::new())
+        Ok(b) => return Box::new(b),
+        Err(e) => fallback_notice(&format!(
+            "note: PJRT backend unavailable ({e}); using native mirror"
+        )),
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = (dir, cells);
+        fallback_notice(
+            "note: PJRT backend disabled (built without the `pjrt` \
+             feature); using native mirror",
+        );
+    }
+    Box::new(NativeBackend::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_backend_falls_back_to_native_without_artifacts() {
+        // Point at a directory with no manifest: must not error, and the
+        // notice must fire at most once for any number of calls.
+        let dir = std::env::temp_dir().join("aldram_no_artifacts");
+        for _ in 0..3 {
+            let b = auto_backend(&dir, 64);
+            assert_eq!(b.name(), "native");
         }
     }
 }

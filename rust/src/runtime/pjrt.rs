@@ -3,6 +3,14 @@
 //! path. Python never runs here — the artifact was produced at build time
 //! by `make artifacts` (python/compile/aot.py).
 //!
+//! Compiled only with the `pjrt` cargo feature. The feature alone is not
+//! enough: this module needs the vendored `xla` bindings crate, which the
+//! offline registry mirror does not carry, so it is deliberately NOT
+//! declared in Cargo.toml (even an inactive optional dependency must
+//! resolve). If you hit "unresolved crate `xla`" here, add
+//! `xla = { path = "<vendored checkout>" }` under `[dependencies]` next
+//! to enabling the feature — see the note at the top of rust/Cargo.toml.
+//!
 //! Perf notes (EXPERIMENTS.md §Perf): the five cell-parameter arrays are
 //! uploaded to device once per `profile()` call and *reused* across all
 //! combo chunks via `execute_b`; only the small [K, 6] combo table is
@@ -65,13 +73,6 @@ impl Manifest {
             .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
         Ok(meta.usize("cells"))
     }
-}
-
-/// Default artifact directory: `$ARTIFACTS_DIR` or `./artifacts`.
-pub fn artifacts_dir() -> PathBuf {
-    std::env::var("ARTIFACTS_DIR")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
 impl PjrtBackend {

@@ -165,6 +165,27 @@ impl Bench {
         self.results.push(r);
     }
 
+    /// Report the wall-clock speedup of benchmark `b` over benchmark `a`
+    /// (ratio of median per-iteration times). Prints a human line plus a
+    /// machine-readable SPEEDUPJSON line (consumed by the EXPERIMENTS.md
+    /// tooling, like BENCHJSON); returns the ratio, or `None` when either
+    /// benchmark was skipped by the filter.
+    pub fn report_speedup(&self, a: &str, b: &str) -> Option<f64> {
+        let ra = self.results.iter().find(|r| r.name == a)?;
+        let rb = self.results.iter().find(|r| r.name == b)?;
+        let ratio = ra.median_ns / rb.median_ns;
+        println!(
+            "SPEEDUP {:<30} -> {:<30} {:>6.2}x  ({} -> {})",
+            ra.name, rb.name, ratio,
+            fmt_ns(ra.median_ns), fmt_ns(rb.median_ns),
+        );
+        println!(
+            "SPEEDUPJSON {{\"suite\":\"{}\",\"base\":\"{}\",\"test\":\"{}\",\"speedup\":{:.3},\"base_median_ns\":{:.1},\"test_median_ns\":{:.1}}}",
+            self.suite, ra.name, rb.name, ratio, ra.median_ns, rb.median_ns
+        );
+        Some(ratio)
+    }
+
     pub fn finish(self) {
         println!("== {} done: {} benchmarks ==", self.suite, self.results.len());
     }
@@ -197,6 +218,17 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].iters > 0);
         assert!(b.results[0].min_ns <= b.results[0].p95_ns);
+    }
+
+    #[test]
+    fn speedup_reporting() {
+        let mut b = Bench::new("t").with_window(5, 20);
+        b.bench("slow", || std::thread::sleep(
+            std::time::Duration::from_micros(300)));
+        b.bench("fastr", || std::hint::black_box(1 + 1));
+        let r = b.report_speedup("slow", "fastr").unwrap();
+        assert!(r > 1.0, "slow/fastr ratio {r}");
+        assert!(b.report_speedup("slow", "missing").is_none());
     }
 
     #[test]

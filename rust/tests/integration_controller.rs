@@ -115,6 +115,25 @@ fn every_suite_workload_simulates() {
 }
 
 #[test]
+fn stream_workload_cannot_postpone_refresh() {
+    // Regression for the refresh-starvation bug: a row-hit-heavy Stream
+    // workload used to let the scheduler keep issuing to a refresh-pending
+    // rank, postponing REF unboundedly. The rank fence in the controller
+    // guarantees the refresh rate tracks tREFI regardless of traffic.
+    let cycles = 100_000u64;
+    let trefi =
+        TimingParams::ddr3_standard().to_cycles(1.25).trefi as u64;
+    let w = by_name("stream.copy").unwrap();
+    let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("refr/{i}"))).collect();
+    let mut sys = System::new(&SystemConfig::paper_default(), &wl);
+    let s = sys.run(cycles);
+    let expect = cycles as f64 / trefi as f64;
+    let got = s.refreshes as f64;
+    assert!((got - expect).abs() <= expect * 0.25,
+            "stream refreshes {got} drifted from cycles/tREFI = {expect:.1}");
+}
+
+#[test]
 fn aldram_managed_system_tracks_temperature() {
     use aldram::aldram::AlDram;
     // A fixed-table AL-DRAM config runs and reports a plausible DIMM temp.
