@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = SystemConfig { timings, ..SystemConfig::paper_default() };
         let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("qs/{i}"))).collect();
         let mut sys = System::new(&cfg, &wl);
-        let s = sys.run(cycles);
+        let s = sys.run_fast(cycles);
         s.cores.iter().map(|c| c.ipc).sum::<f64>()
     };
     let base = run(TimingParams::ddr3_standard());

@@ -1,4 +1,4 @@
-//! End-to-end system evaluation — the repo's E2E driver (DESIGN.md §6).
+//! End-to-end system evaluation — the repo's E2E driver (DESIGN.md §7).
 //!
 //! Reproduces the paper's full evaluation pipeline on a real (simulated)
 //! workload suite: all 35 workloads, single- and multi-core, baseline DDR3

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         };
         let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("ta/{i}"))).collect();
         let mut sys = System::new(&cfg, &wl);
-        let s = sys.run(150_000);
+        let s = sys.run_fast(150_000);
         let t = table.timings_for(s.mean_temp_c);
         let ipc: f64 = s.cores.iter().map(|c| c.ipc).sum();
         println!("{ambient:>9.1} {:>9.1} {:>8.2} {:>8.2} {:>8.2} {ipc:>10.3}",

@@ -48,7 +48,9 @@ fn main() {
         controller_run(CYC, 65536, fast)
     });
 
-    // Full system step rate (4 cores, 1 channel) per workload family.
+    // Full system step rate (4 cores, 1 channel) per workload family,
+    // cycle-stepped oracle vs the event-driven time-skip driver
+    // (bit-identical stats; the TIMESKIP lines isolate wall-clock).
     for name in ["stream.copy", "gups", "mcf", "povray"] {
         let w = by_name(name).unwrap();
         let cfg = SystemConfig::paper_default();
@@ -57,6 +59,12 @@ fn main() {
         b.bench_batch(&format!("system/4core/{name}"), 2_000, || {
             sys.run(2_000).cycles
         });
+        let mut sys_fast = System::new(&cfg, &wl);
+        b.bench_batch(&format!("system/4core/{name}/timeskip"), 2_000, || {
+            sys_fast.run_fast(2_000).cycles
+        });
+        b.report_speedup_tagged("TIMESKIP", &format!("system/4core/{name}"),
+                                &format!("system/4core/{name}/timeskip"));
     }
 
     b.finish();

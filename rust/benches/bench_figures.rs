@@ -64,7 +64,8 @@ fn main() {
     // Fig 4 at reduced cycles, sequential vs the job pool: one job per
     // (workload, cores, rep, timing-set) simulation. The pool guarantees
     // identical results for any job count (asserted in eval's tests), so
-    // this pair isolates pure wall-clock.
+    // this pair isolates pure wall-clock. `fig4_jobs` runs the
+    // event-driven time-skip driver.
     b.bench("fig4/35workloads/6kcyc/jobs1", || {
         aldram::eval::fig4_jobs(6_000, 1, PAPER_REDUCTIONS_55C, 1)
             .per_workload.len()
@@ -75,6 +76,18 @@ fn main() {
     });
     b.report_speedup("fig4/35workloads/6kcyc/jobs1",
                      &format!("fig4/35workloads/6kcyc/jobs{PAR_JOBS}"));
+
+    // TIMESKIP: the same grid on the cycle-stepped oracle vs the
+    // event-driven driver (bit-identical results, pure wall-clock — the
+    // equivalence matrix lives in tests/integration_timeskip.rs).
+    b.bench("fig4/35workloads/6kcyc/jobs1/cyclestep", || {
+        aldram::eval::fig4_jobs_with(6_000, 1, PAPER_REDUCTIONS_55C, 1,
+                                     aldram::eval::Driver::CycleStepped)
+            .per_workload.len()
+    });
+    b.report_speedup_tagged("TIMESKIP",
+                            "fig4/35workloads/6kcyc/jobs1/cyclestep",
+                            "fig4/35workloads/6kcyc/jobs1");
 
     // §7.6 repeatability battery.
     b.bench("s7.6/repeatability/256c", || {

@@ -39,18 +39,40 @@ pub struct Fig4Result {
     pub max_multi: f64,
 }
 
+/// Which simulation driver an evaluation harness runs. `TimeSkip`
+/// (`System::run_fast`) is bit-identical to `CycleStepped` (`System::run`,
+/// the oracle — equivalence asserted in `tests/integration_timeskip.rs`)
+/// and is the default everywhere; the cycle-stepped oracle remains
+/// selectable for the TIMESKIP speedup benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Driver {
+    CycleStepped,
+    TimeSkip,
+}
+
 fn throughput(stats: &SystemStats) -> f64 {
     stats.cores.iter().map(|c| c.ipc).sum::<f64>()
 }
 
-fn run_config(w: &WorkloadSpec, cores: usize, timings: TimingParams,
-              cycles: u64, rep: usize, cfg_base: &SystemConfig) -> f64 {
+fn run_config_with(w: &WorkloadSpec, cores: usize, timings: TimingParams,
+                   cycles: u64, rep: usize, cfg_base: &SystemConfig,
+                   driver: Driver) -> f64 {
     let cfg = SystemConfig { timings, ..cfg_base.clone() };
     let wl: Vec<(WorkloadSpec, String)> = (0..cores)
         .map(|c| (w.clone(), format!("rep{rep}/core{c}")))
         .collect();
     let mut sys = System::new(&cfg, &wl);
-    throughput(&sys.run(cycles))
+    let stats = match driver {
+        Driver::CycleStepped => sys.run(cycles),
+        Driver::TimeSkip => sys.run_fast(cycles),
+    };
+    throughput(&stats)
+}
+
+fn run_config(w: &WorkloadSpec, cores: usize, timings: TimingParams,
+              cycles: u64, rep: usize, cfg_base: &SystemConfig) -> f64 {
+    run_config_with(w, cores, timings, cycles, rep, cfg_base,
+                    Driver::TimeSkip)
 }
 
 /// Speedup of `fast` timings over `base` timings, averaged over reps;
@@ -85,6 +107,13 @@ pub fn fig4(cycles: u64, reps: usize, reductions: [f64; 4]) -> Fig4Result {
 /// `parallel_fig4_matches_sequential`).
 pub fn fig4_jobs(cycles: u64, reps: usize, reductions: [f64; 4],
                  jobs: usize) -> Fig4Result {
+    fig4_jobs_with(cycles, reps, reductions, jobs, Driver::TimeSkip)
+}
+
+/// `fig4_jobs` with an explicit simulation driver (the TIMESKIP speedup
+/// benchmark runs the grid once per driver; results are identical).
+pub fn fig4_jobs_with(cycles: u64, reps: usize, reductions: [f64; 4],
+                      jobs: usize, driver: Driver) -> Fig4Result {
     let base = TimingParams::ddr3_standard();
     let fast = base.reduced(reductions[0], reductions[1], reductions[2],
                             reductions[3]);
@@ -101,7 +130,8 @@ pub fn fig4_jobs(cycles: u64, reps: usize, reductions: [f64; 4],
         let cc = (i / (2 * reps)) % core_cfgs.len();
         let wi = i / (2 * reps * core_cfgs.len());
         let t = if set == 0 { base } else { fast };
-        run_config(&workloads[wi], core_cfgs[cc], t, cycles, rep, &cfg)
+        run_config_with(&workloads[wi], core_cfgs[cc], t, cycles, rep, &cfg,
+                        driver)
     });
     let speedup_of = |wi: usize, cc: usize| -> (f64, f64) {
         let ratios: Vec<f64> = (0..reps)
@@ -278,7 +308,7 @@ pub fn hetero_eval(cycles: u64, n_mixes: usize, reductions: [f64; 4])
                     .map(|(i, w)| (w.clone(), format!("hx{mi}/{i}")))
                     .collect();
                 let mut sys = System::new(&c, &wl);
-                sys.run(cycles).cores.iter().map(|c| c.ipc).collect()
+                sys.run_fast(cycles).cores.iter().map(|c| c.ipc).collect()
             };
             let base = run(base_t);
             let fast = run(fast_t);
@@ -328,7 +358,7 @@ pub fn power_eval(cycles: u64, reductions: [f64; 4]) -> Vec<PowerResult> {
                 .map(|i| (w.clone(), format!("pw/{i}")))
                 .collect();
             let mut sys = System::new(&c, &wl);
-            let stats = sys.run(cycles);
+            let stats = sys.run_fast(cycles);
             let watts: f64 = stats
                 .power_inputs
                 .iter()
@@ -406,7 +436,7 @@ pub fn stress(dimm_id: usize, epochs: u64, cycles_per_epoch: u64)
     let mut tmin = f64::MAX;
     let mut tmax = f64::MIN;
     for _ in 0..epochs {
-        let stats = sys.run(cycles_per_epoch);
+        let stats = sys.run_fast(cycles_per_epoch);
         let temp = stats.mean_temp_c;
         tmin = tmin.min(temp);
         tmax = tmax.max(temp);
@@ -456,6 +486,23 @@ mod tests {
             assert!(m.weighted_speedup > 0.99,
                     "mix {:?} regressed: {}", m.mix, m.weighted_speedup);
         }
+    }
+
+    #[test]
+    fn timeskip_driver_matches_cycle_stepped_on_fig4() {
+        // Eval-level equivalence on top of the system-level matrix in
+        // tests/integration_timeskip.rs: the whole Fig-4 reduction is
+        // bit-identical across drivers.
+        let seq = fig4_jobs_with(3_000, 1, PAPER_REDUCTIONS_55C, 1,
+                                 Driver::CycleStepped);
+        let fast = fig4_jobs_with(3_000, 1, PAPER_REDUCTIONS_55C, 1,
+                                  Driver::TimeSkip);
+        for (a, b) in seq.per_workload.iter().zip(&fast.per_workload) {
+            assert_eq!(a.single_speedup, b.single_speedup, "{}", a.name);
+            assert_eq!(a.multi_speedup, b.multi_speedup, "{}", a.name);
+        }
+        assert_eq!(seq.gmean_intensive_multi, fast.gmean_intensive_multi);
+        assert_eq!(seq.mean_all_multi, fast.mean_all_multi);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! `repro` — the AL-DRAM reproduction CLI (Layer-3 leader binary).
 //!
-//! Commands (see DESIGN.md §6 for the experiment index):
+//! Commands (see DESIGN.md §7 for the experiment index):
 //!   repro calibrate  [--dimms N] [--cells N] [--backend native|pjrt|auto]
 //!                    [--jobs N]
 //!   repro profile    --dimm N [--cells N] [--backend ...]
@@ -8,7 +8,12 @@
 //!   repro ablate     refresh-latency|interdependence|repeatability|
 //!                    bank-granularity|ecc|sweep|ode [--jobs N]
 //!   repro eval       sensitivity|hetero|power|stress [--cycles N] [--jobs N]
-//!   repro bench-sim  [--cycles N]          (quick end-to-end smoke)
+//!   repro bench-sim  [--cycles N]          (quick end-to-end smoke; prints
+//!                    the TIMESKIP line: event-driven vs cycle-stepped)
+//!
+//! Every system-level evaluation runs on the event-driven time-skip
+//! driver (`System::run_fast`), which is bit-identical to the
+//! cycle-stepped oracle (see DESIGN.md §6 and tests/integration_timeskip).
 //!
 //! `--jobs N` sets the worker count of the parallel execution engine
 //! (`exec::Pool`) for every independent-simulation fan-out; it defaults to
@@ -224,10 +229,13 @@ fn main() -> anyhow::Result<()> {
         }
 
         Some("bench-sim") => {
-            // quick end-to-end smoke: one workload, base vs AL-DRAM.
+            // quick end-to-end smoke: one workload, base vs AL-DRAM, the
+            // time-skip driver vs the cycle-stepped oracle (identical
+            // numbers, TIMESKIP wall-clock line per timing set).
             use aldram::mem::{System, SystemConfig};
             use aldram::timing::TimingParams;
             use aldram::workloads::by_name;
+            use std::time::Instant;
             let cycles = args.get("cycles", 100_000u64);
             let w = by_name(&args.str("workload", "stream.copy"))
                 .expect("unknown workload");
@@ -238,13 +246,27 @@ fn main() -> anyhow::Result<()> {
             ] {
                 let cfg = SystemConfig { timings: t,
                                          ..SystemConfig::paper_default() };
-                let mut sys = System::new(
+                let mut seq = System::new(
                     &cfg, &[(w.clone(), "bench".into())]);
-                let s = sys.run(cycles);
+                let t0 = Instant::now();
+                let s = seq.run(cycles);
+                let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let mut fast = System::new(
+                    &cfg, &[(w.clone(), "bench".into())]);
+                let t0 = Instant::now();
+                let f = fast.run_fast(cycles);
+                let fast_ms = t0.elapsed().as_secs_f64() * 1e3;
+                anyhow::ensure!(s.reads_done == f.reads_done
+                                && s.cores[0].ipc == f.cores[0].ipc,
+                                "drivers diverged on {label}");
                 println!(
                     "{label:<14} ipc {:.3}  read-lat {:.1} cyc  bw {:.1}%  hits {:.1}%",
                     s.cores[0].ipc, s.avg_read_latency_cycles,
                     100.0 * s.bus_utilization, 100.0 * s.row_hit_rate
+                );
+                println!(
+                    "  TIMESKIP {:.1} ms -> {:.1} ms ({:.2}x, identical stats)",
+                    seq_ms, fast_ms, seq_ms / fast_ms.max(1e-9)
                 );
             }
         }

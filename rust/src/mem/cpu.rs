@@ -36,6 +36,10 @@ pub struct Core {
     pub stall_cycles: u64,
     pub reads_issued: u64,
     pub writes_issued: u64,
+    /// The last enqueue attempt was refused (queue full). Cleared on a
+    /// successful send, a completion, or by the time-skip driver when any
+    /// controller dequeues (queue space can only open up then).
+    queue_blocked: bool,
 }
 
 impl Core {
@@ -51,6 +55,7 @@ impl Core {
             stall_cycles: 0,
             reads_issued: 0,
             writes_issued: 0,
+            queue_blocked: false,
         }
     }
 
@@ -64,10 +69,71 @@ impl Core {
 
     pub fn on_completion(&mut self, req_id: u64) {
         self.outstanding.retain(|o| o.id != req_id);
+        self.queue_blocked = false;
     }
 
     pub fn outstanding(&self) -> usize {
         self.outstanding.len()
+    }
+
+    /// Time-skip driver: a controller dequeued, so a refused enqueue may
+    /// now succeed — re-arm `next_event`.
+    pub fn clear_queue_block(&mut self) {
+        self.queue_blocked = false;
+    }
+
+    fn rob_limit(&self) -> u64 {
+        self.outstanding
+            .iter()
+            .map(|o| o.inst_pos + ROB_INSTS)
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    /// Earliest cycle >= `now` at which this core will next attempt to
+    /// enqueue a memory request, or `u64::MAX` when it cannot act until an
+    /// external event (a completion frees an MSHR / ROB or dependence
+    /// slot, or a controller dequeue frees queue space). Until then the
+    /// core only retires instructions and stalls deterministically, which
+    /// `skip` replays in O(1) — the time-skip driver contract.
+    pub fn next_event(&mut self, now: u64) -> u64 {
+        self.refill();
+        if self.queue_blocked {
+            return u64::MAX;
+        }
+        let headroom = self.rob_limit().saturating_sub(self.insts);
+        if self.gap_left > headroom {
+            return u64::MAX; // the ROB fills before the gap is consumed
+        }
+        let r = self.next_ref.expect("refill invariant");
+        if !r.is_write
+            && (self.outstanding.len() >= MAX_MLP
+                || (r.dependent && !self.outstanding.is_empty()))
+        {
+            return u64::MAX; // issue attempt is MLP/dependence-blocked
+        }
+        now + self.gap_left / (CPU_PER_DRAM * IPC_MAX) as u64
+    }
+
+    /// Replay `span` cycles in O(1) during which the driver has proven
+    /// (via `next_event`) that this core makes no enqueue attempt: retire
+    /// up to the ROB limit at full width, then stall.
+    pub fn skip(&mut self, span: u64) {
+        if span == 0 {
+            return;
+        }
+        self.refill();
+        let width = (CPU_PER_DRAM * IPC_MAX) as u64;
+        let headroom = self.rob_limit().saturating_sub(self.insts);
+        let retirable = self.gap_left.min(headroom);
+        let retired = retirable.min(width * span);
+        self.insts += retired;
+        self.gap_left -= retired;
+        // Cycles that retire at least one instruction count as progress;
+        // the rest are stalls — exactly what per-cycle stepping records.
+        let progressing = retirable.div_euclid(width)
+            + u64::from(retirable % width != 0);
+        self.stall_cycles += span.saturating_sub(progressing);
     }
 
     /// Advance one DRAM-controller cycle. `try_send` submits a request to
@@ -114,6 +180,7 @@ impl Core {
                 };
                 if try_send(req) {
                     // Writes retire via the store buffer: non-blocking.
+                    self.queue_blocked = false;
                     self.next_req_id += 1;
                     self.writes_issued += 1;
                     self.insts += 1;
@@ -121,6 +188,7 @@ impl Core {
                     self.next_ref = None;
                     progressed = true;
                 } else {
+                    self.queue_blocked = true;
                     break; // write queue full
                 }
             } else {
@@ -136,6 +204,7 @@ impl Core {
                     arrival: now,
                 };
                 if try_send(req) {
+                    self.queue_blocked = false;
                     self.outstanding.push(Outstanding {
                         id: self.next_req_id,
                         inst_pos: self.insts,
@@ -147,6 +216,7 @@ impl Core {
                     self.next_ref = None;
                     progressed = true;
                 } else {
+                    self.queue_blocked = true;
                     break; // read queue full
                 }
             }
@@ -241,6 +311,47 @@ mod tests {
         let mut send2 = |_req: Request| true;
         core.step(11, &mut send2);
         assert!(core.reads_issued > before);
+    }
+
+    #[test]
+    fn skip_replays_per_cycle_stepping_exactly() {
+        // Time-skip contract: next_event + skip must reproduce the exact
+        // per-cycle trajectory (insts, stalls, issue cycles) of step().
+        let mk = || Core::new(0, Box::new(FixedTrace {
+            gap: 37, addr: 0, dependent: false }));
+        let horizon = 1000u64;
+        let mut a = mk();
+        let mut issues_a = Vec::new();
+        {
+            let mut send = |req: Request| {
+                issues_a.push(req.arrival);
+                true
+            };
+            for now in 0..horizon {
+                a.step(now, &mut send);
+            }
+        }
+        let mut b = mk();
+        let mut issues_b = Vec::new();
+        let mut now = 0u64;
+        while now < horizon {
+            let e = b.next_event(now).min(horizon);
+            if e > now {
+                b.skip(e - now);
+                now = e;
+                continue;
+            }
+            let mut send = |req: Request| {
+                issues_b.push(req.arrival);
+                true
+            };
+            b.step(now, &mut send);
+            now += 1;
+        }
+        assert_eq!(a.insts, b.insts);
+        assert_eq!(a.stall_cycles, b.stall_cycles);
+        assert_eq!(a.reads_issued, b.reads_issued);
+        assert_eq!(issues_a, issues_b, "issue cycles must match");
     }
 
     #[test]

@@ -42,6 +42,23 @@ impl Bank {
             BankState::Idle => None,
         }
     }
+
+    /// Earliest future cycle (strictly after `now`) at which one of this
+    /// bank's gates (ACT / column / PRE) opens, or `Cycle::MAX` when every
+    /// gate is already open. Device-level aggregate of the per-gate
+    /// queries: between `now` and this cycle the bank's legality answers
+    /// cannot change on their own. (The controller's `next_event_hint`
+    /// uses the request-targeted `Rank::earliest_*` queries instead —
+    /// this aggregate serves diagnostics and device-level tooling.)
+    pub fn next_event(&self, now: Cycle) -> Cycle {
+        let mut e = Cycle::MAX;
+        for gate in [self.next_act, self.next_col, self.next_pre] {
+            if gate > now && gate < e {
+                e = gate;
+            }
+        }
+        e
+    }
 }
 
 /// One rank of DDR3 devices (8 banks).
@@ -250,6 +267,80 @@ impl Rank {
         }
         self.n_refresh += 1;
     }
+
+    // ---- time-skip gate queries ----------------------------------------
+    //
+    // Exact earliest-legal-cycle counterparts of the `can_*` predicates on
+    // *frozen* rank state: for any t, `can_x(.., t)` holds iff the bank is
+    // in the right state and `t >= earliest_x(..)`. The controller's
+    // `next_event_hint` uses these to find the next cycle a command could
+    // issue without polling every intermediate cycle.
+
+    /// Earliest cycle an ACT to `bank` becomes legal (assumes the bank is
+    /// idle; tRC/tRP via `next_act`, tRRD, tFAW window, refresh busy).
+    pub fn earliest_act(&self, bank: usize) -> Cycle {
+        let mut e = self.banks[bank]
+            .next_act
+            .max(self.next_act_any)
+            .max(self.busy_until);
+        if self.act_window.len() >= 4 {
+            e = e.max(self.act_window[0] + self.t.tfaw as u64);
+        }
+        e
+    }
+
+    /// Earliest cycle a column command to `bank` becomes legal (assumes
+    /// the right row is open; tRCD via `next_col`, tCCD/turnaround, busy).
+    pub fn earliest_col(&self, bank: usize, is_write: bool) -> Cycle {
+        let turn = if is_write { self.next_write } else { self.next_read };
+        self.banks[bank].next_col.max(turn).max(self.busy_until)
+    }
+
+    /// Earliest cycle a PRE to `bank` becomes legal (assumes a row is
+    /// open; tRAS/tRTP/tWR via `next_pre`, refresh busy).
+    pub fn earliest_pre(&self, bank: usize) -> Cycle {
+        self.banks[bank].next_pre.max(self.busy_until)
+    }
+
+    /// Earliest cycle REF becomes legal (assumes all banks idle).
+    pub fn earliest_refresh(&self) -> Cycle {
+        self.banks
+            .iter()
+            .map(|b| b.next_act)
+            .fold(self.busy_until, Cycle::max)
+    }
+
+    /// Earliest future cycle at which any rank- or bank-level gate changes
+    /// state (tRRD, tFAW expiry, data bus, read/write turnaround, refresh
+    /// busy, or any per-bank gate), or `Cycle::MAX` if none will. Like
+    /// `Bank::next_event`, this is the device-level aggregate view; the
+    /// scheduler's hint path queries the targeted `earliest_*` gates.
+    pub fn next_event(&self, now: Cycle) -> Cycle {
+        let mut e = Cycle::MAX;
+        let mut gates = [
+            self.next_act_any,
+            self.data_free,
+            self.next_read,
+            self.next_write,
+            self.busy_until,
+            Cycle::MAX,
+        ];
+        if self.act_window.len() >= 4 {
+            gates[5] = self.act_window[0] + self.t.tfaw as u64;
+        }
+        for gate in gates {
+            if gate > now && gate < e {
+                e = gate;
+            }
+        }
+        for b in &self.banks {
+            let be = b.next_event(now);
+            if be < e {
+                e = be;
+            }
+        }
+        e
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +432,44 @@ mod tests {
         assert!(tf.trp < ts.trp);
         // A full row-miss cycle (ACT..PRE..ACT) is shorter.
         assert!(tf.trc < ts.trc);
+    }
+
+    #[test]
+    fn earliest_gates_match_can_predicates() {
+        // Time-skip contract: for frozen rank state, `can_x(t)` flips from
+        // false to true exactly at `earliest_x()`.
+        let mut r = rank();
+        r.issue_act(0, 1, 0);
+        let col = r.earliest_col(0, false);
+        assert!(!r.can_read(0, 1, col - 1));
+        assert!(r.can_read(0, 1, col));
+        let colw = r.earliest_col(0, true);
+        assert!(!r.can_write(0, 1, colw - 1));
+        assert!(r.can_write(0, 1, colw));
+        let pre = r.earliest_pre(0);
+        assert!(!r.can_pre(0, pre - 1));
+        assert!(r.can_pre(0, pre));
+        let act = r.earliest_act(1);
+        assert!(!r.can_act(1, act - 1));
+        assert!(r.can_act(1, act));
+        // next_event reports the first future gate change.
+        let e = r.next_event(0);
+        assert!(e > 0 && e <= act, "first gate {e} vs trrd gate {act}");
+    }
+
+    #[test]
+    fn earliest_refresh_matches_can_refresh() {
+        let mut r = rank();
+        r.issue_act(0, 1, 0);
+        let tras = r.timings().tras as u64;
+        r.issue_pre(0, tras);
+        let gate = r.earliest_refresh();
+        assert!(!r.can_refresh(gate - 1));
+        assert!(r.can_refresh(gate));
+        r.issue_refresh(gate);
+        let gate2 = r.earliest_refresh();
+        assert_eq!(gate2, gate + r.timings().trfc as u64);
+        assert!(r.can_refresh(gate2));
     }
 
     #[test]

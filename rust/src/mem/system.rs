@@ -62,7 +62,13 @@ pub struct SystemStats {
     pub power_inputs: Vec<crate::power::PowerInputs>,
     /// Mean DIMM temperature over the run (thermal model).
     pub mean_temp_c: f64,
+    /// DIMM temperature at the end of the run.
+    pub final_temp_c: f64,
 }
+
+/// Thermal + AL-DRAM management interval in controller cycles (~1.28 us —
+/// far finer than the <= 0.1 degC/s drift the paper measures).
+pub const THERMAL_EPOCH: u64 = 1024;
 
 pub struct System {
     controllers: Vec<Controller>,
@@ -71,15 +77,30 @@ pub struct System {
     thermal: ThermalModel,
     aldram: Option<AlDram>,
     chan_bits_mask: u64,
+    /// Channel interleave shift: one row per channel stripe, derived from
+    /// the address map's row size.
+    chan_shift: u32,
     now: u64,
     temp_acc: f64,
     temp_samples: u64,
+    /// Column completions observed up to the previous thermal epoch, so
+    /// the thermal model sees the *windowed* utilization of the last
+    /// epoch, not a run-cumulative average.
+    last_epoch_done: u64,
 }
 
 impl System {
     pub fn new(cfg: &SystemConfig, workloads: &[(WorkloadSpec, String)]) -> Self {
+        Self::new_with_map(cfg, AddrMap::ddr3_2gb(cfg.ranks_per_channel),
+                           workloads)
+    }
+
+    /// Build with an explicit address map (the default is the paper's
+    /// 2 GB single-channel map). Channel striping follows the map's row
+    /// size, so a different row geometry keeps row-granular interleave.
+    pub fn new_with_map(cfg: &SystemConfig, map: AddrMap,
+                        workloads: &[(WorkloadSpec, String)]) -> Self {
         assert!(cfg.channels.is_power_of_two());
-        let map = AddrMap::ddr3_2gb(cfg.ranks_per_channel);
         let controllers = (0..cfg.channels)
             .map(|_| Controller::new(map, cfg.timings, cfg.policy))
             .collect();
@@ -97,16 +118,25 @@ impl System {
             thermal: ThermalModel::new(cfg.ambient_c),
             aldram: cfg.aldram.clone(),
             chan_bits_mask: cfg.channels as u64 - 1,
+            chan_shift: map.row_bytes().trailing_zeros(),
             now: 0,
             temp_acc: 0.0,
             temp_samples: 0,
+            last_epoch_done: 0,
         }
     }
 
     /// Channel selection: interleave by row-sized blocks so streams spread
     /// across channels without breaking row locality.
     pub fn channel_of(&self, addr: u64) -> usize {
-        ((addr >> 13) & self.chan_bits_mask) as usize
+        ((addr >> self.chan_shift) & self.chan_bits_mask) as usize
+    }
+
+    /// §7.1 experiments: scale every channel's refresh interval.
+    pub fn set_refresh_scale(&mut self, scale: f64) {
+        for ctrl in &mut self.controllers {
+            ctrl.set_refresh_scale(scale);
+        }
     }
 
     pub fn step(&mut self) {
@@ -117,8 +147,9 @@ impl System {
         for core in &mut self.cores {
             let controllers = &mut self.controllers;
             let mask = self.chan_bits_mask;
+            let shift = self.chan_shift;
             let mut try_send = |req: Request| {
-                let ch = ((req.addr >> 13) & mask) as usize;
+                let ch = ((req.addr >> shift) & mask) as usize;
                 controllers[ch].enqueue(req)
             };
             core.step(now, &mut try_send);
@@ -133,11 +164,10 @@ impl System {
             }
         }
 
-        // Thermal + AL-DRAM management at a coarse epoch (every 1024
-        // cycles ~ 1.28 us) — far finer than the <= 0.1 degC/s drift.
-        if now % 1024 == 0 {
-            let util = self.bus_utilization_instant();
-            let temp = self.thermal.step(1024.0 * 1.25e-9, util);
+        // Thermal + AL-DRAM management at the epoch granularity.
+        if now % THERMAL_EPOCH == 0 {
+            let util = self.bus_utilization_window();
+            let temp = self.thermal.step(THERMAL_EPOCH as f64 * 1.25e-9, util);
             self.temp_acc += temp;
             self.temp_samples += 1;
             if let Some(al) = &self.aldram {
@@ -151,21 +181,91 @@ impl System {
         self.now += 1;
     }
 
-    fn bus_utilization_instant(&self) -> f64 {
-        // Approximate utilization from issued column commands so far.
-        let data: u64 = self
+    /// Bus utilization over the last thermal epoch: data-bus cycles of the
+    /// column commands completed since the previous epoch, per channel.
+    /// (Run-cumulative counts would hide phase changes from the thermal
+    /// model — a bursty workload would read as its long-run average and
+    /// the temperature→timing feedback the paper evaluates would never
+    /// see the burst.)
+    fn bus_utilization_window(&mut self) -> f64 {
+        let done: u64 = self
             .controllers
             .iter()
-            .map(|c| (c.stats.reads_done + c.stats.writes_done) * 4)
+            .map(|c| c.stats.reads_done + c.stats.writes_done)
             .sum();
-        let total = (self.now.max(1)) * self.controllers.len() as u64;
-        (data as f64 / total as f64).min(1.0)
+        let delta = done - self.last_epoch_done;
+        self.last_epoch_done = done;
+        let window = THERMAL_EPOCH * self.controllers.len() as u64;
+        ((delta * 4) as f64 / window as f64).min(1.0)
     }
 
     pub fn run(&mut self, cycles: u64) -> SystemStats {
         let start = self.now;
         while self.now - start < cycles {
             self.step();
+        }
+        self.stats()
+    }
+
+    /// Event-driven time-skip driver: identical semantics — bit-identical
+    /// `SystemStats` — to `run`, but instead of polling every cycle it
+    /// jumps `now` to the earliest cycle at which anything can happen:
+    /// a core's next enqueue attempt (`Core::next_event`), a controller
+    /// action (`Controller::next_event_hint`), or the next thermal/AL-DRAM
+    /// epoch boundary. The skipped span is replayed in O(1) per component
+    /// (`Core::skip`, `Controller::advance_idle`). `run` stays as the
+    /// oracle; `tests/integration_timeskip.rs` asserts the equivalence.
+    pub fn run_fast(&mut self, cycles: u64) -> SystemStats {
+        let end = self.now + cycles;
+        while self.now < end {
+            let deq_before: u64 =
+                self.controllers.iter().map(|c| c.dequeues()).sum();
+            self.step();
+            let deq_after: u64 =
+                self.controllers.iter().map(|c| c.dequeues()).sum();
+            if deq_after > deq_before {
+                // Queue space opened up: cores whose enqueue was refused
+                // may succeed again from the next cycle on.
+                for core in &mut self.cores {
+                    core.clear_queue_block();
+                }
+            }
+            if self.now >= end {
+                break;
+            }
+            let now = self.now;
+            let epoch = if now % THERMAL_EPOCH == 0 {
+                now
+            } else {
+                (now / THERMAL_EPOCH + 1) * THERMAL_EPOCH
+            };
+            let mut target = end.min(epoch);
+            // Controllers first, lazily: on saturated phases the first
+            // hint early-exits at `now` and the cores are never queried.
+            for ctrl in &self.controllers {
+                target = target.min(ctrl.next_event_hint(now));
+                if target <= now {
+                    break;
+                }
+            }
+            if target > now {
+                for core in &mut self.cores {
+                    target = target.min(core.next_event(now));
+                    if target <= now {
+                        break;
+                    }
+                }
+            }
+            if target > now {
+                let span = target - now;
+                for core in &mut self.cores {
+                    core.skip(span);
+                }
+                for ctrl in &mut self.controllers {
+                    ctrl.advance_idle(span);
+                }
+                self.now = target;
+            }
         }
         self.stats()
     }
@@ -224,7 +324,14 @@ impl System {
             } else {
                 self.thermal.temperature()
             },
+            final_temp_c: self.thermal.temperature(),
         }
+    }
+
+    /// Per-channel controllers (read-only; equivalence tests compare
+    /// their `CtrlStats` across simulation drivers).
+    pub fn controllers(&self) -> &[Controller] {
+        &self.controllers
     }
 }
 
@@ -313,5 +420,72 @@ mod channel_tests {
         assert_eq!(sys.channel_of(16384), 0);
         // same 8 KiB block -> same channel (row locality preserved)
         assert_eq!(sys.channel_of(64), sys.channel_of(4096));
+    }
+
+    #[test]
+    fn channel_interleave_follows_the_address_map() {
+        // Regression: the shift was hardcoded to `>> 13`, so a map with a
+        // different row size lost row-granular striping. 16 KiB rows
+        // (col_bits 8) must stripe at 16 KiB granularity.
+        let cfg = SystemConfig { channels: 2,
+                                 ..SystemConfig::paper_default() };
+        let map = AddrMap { col_bits: 8, ..AddrMap::ddr3_2gb(1) };
+        assert_eq!(map.row_bytes(), 16 * 1024);
+        let w = by_name("gups").unwrap();
+        let sys = System::new_with_map(&cfg, map, &[(w, "c".into())]);
+        assert_eq!(sys.channel_of(0), 0);
+        assert_eq!(sys.channel_of(8192), 0, "same 16 KiB row, same channel");
+        assert_eq!(sys.channel_of(16384), 1);
+        assert_eq!(sys.channel_of(32768), 0);
+        // The simulation itself stays consistent on the wider map.
+        let w2 = by_name("stream.copy").unwrap();
+        let map2 = AddrMap { col_bits: 8, ..AddrMap::ddr3_2gb(1) };
+        let mut sys2 = System::new_with_map(&cfg, map2, &[(w2, "m".into())]);
+        let s = sys2.run(10_000);
+        assert!(s.reads_done + s.writes_done > 0);
+    }
+}
+
+#[cfg(test)]
+mod thermal_window_tests {
+    use super::*;
+    use crate::workloads::{Pattern, WorkloadSpec};
+
+    const MB: u64 = 1024 * 1024;
+
+    fn phased(name: &'static str, active_refs: u64, idle_gap: u32,
+              repeat: bool) -> WorkloadSpec {
+        WorkloadSpec {
+            name,
+            pattern: Pattern::Phased { active_refs, idle_gap, repeat },
+            mpki: 40.0,
+            write_ratio: 0.3,
+            footprint: 256 * MB,
+        }
+    }
+
+    #[test]
+    fn temperature_tracks_workload_phases() {
+        // Regression for the run-cumulative bus-utilization bug: the
+        // thermal model must see *windowed* utilization, so a bursty and
+        // a front-loaded schedule of comparable work heat differently.
+        let cfg = SystemConfig { ambient_c: 40.0,
+                                 ..SystemConfig::paper_default() };
+        let front = phased("frontload", 3000, 2_000_000, false);
+        let burst = phased("bursty", 400, 250_000, true);
+        let sf = System::new(&cfg, &[(front, "ph".into())]).run(400_000);
+        let sb = System::new(&cfg, &[(burst, "ph".into())]).run(400_000);
+        assert!((sf.mean_temp_c - sb.mean_temp_c).abs() > 1e-9,
+                "phase schedules indistinguishable: front {} bursty {}",
+                sf.mean_temp_c, sb.mean_temp_c);
+        // With windowed utilization the front-loaded run stops heating
+        // once its burst ends (final ~ mean). The cumulative bug kept
+        // target > temp all run, so final kept climbing past the mean.
+        let rise_final = sf.final_temp_c - 40.0;
+        let rise_mean = sf.mean_temp_c - 40.0;
+        assert!(rise_mean > 0.0, "front-loaded burst never heated");
+        assert!(rise_final <= 1.3 * rise_mean,
+                "heating continued after the burst: final rise {rise_final:e} \
+                 vs mean rise {rise_mean:e}");
     }
 }

@@ -1,7 +1,7 @@
 //! The profiling orchestrator — the software stand-in for the SoftMC
 //! FPGA testing platform: refresh-interval sweeps, timing-parameter
 //! sweeps, the per-DIMM characterization battery, and the repeatability
-//! analysis. See DESIGN.md §2/§6.
+//! analysis. See DESIGN.md §2/§7.
 
 pub mod refresh;
 pub mod repeat;

@@ -171,17 +171,31 @@ impl Bench {
     /// tooling, like BENCHJSON); returns the ratio, or `None` when either
     /// benchmark was skipped by the filter.
     pub fn report_speedup(&self, a: &str, b: &str) -> Option<f64> {
+        self.report_speedup_tagged("", a, b)
+    }
+
+    /// `report_speedup` with a tag in both output lines (e.g. `TIMESKIP`
+    /// for the event-driven-vs-cycle-stepped driver comparison), so the
+    /// EXPERIMENTS.md tooling can tell speedup families apart.
+    pub fn report_speedup_tagged(&self, tag: &str, a: &str, b: &str)
+                                 -> Option<f64> {
         let ra = self.results.iter().find(|r| r.name == a)?;
         let rb = self.results.iter().find(|r| r.name == b)?;
         let ratio = ra.median_ns / rb.median_ns;
+        let label = if tag.is_empty() {
+            "SPEEDUP".to_string()
+        } else {
+            format!("SPEEDUP[{tag}]")
+        };
         println!(
-            "SPEEDUP {:<30} -> {:<30} {:>6.2}x  ({} -> {})",
-            ra.name, rb.name, ratio,
+            "{} {:<30} -> {:<30} {:>6.2}x  ({} -> {})",
+            label, ra.name, rb.name, ratio,
             fmt_ns(ra.median_ns), fmt_ns(rb.median_ns),
         );
         println!(
-            "SPEEDUPJSON {{\"suite\":\"{}\",\"base\":\"{}\",\"test\":\"{}\",\"speedup\":{:.3},\"base_median_ns\":{:.1},\"test_median_ns\":{:.1}}}",
-            self.suite, ra.name, rb.name, ratio, ra.median_ns, rb.median_ns
+            "SPEEDUPJSON {{\"suite\":\"{}\",\"tag\":\"{}\",\"base\":\"{}\",\"test\":\"{}\",\"speedup\":{:.3},\"base_median_ns\":{:.1},\"test_median_ns\":{:.1}}}",
+            self.suite, tag, ra.name, rb.name, ratio, ra.median_ns,
+            rb.median_ns
         );
         Some(ratio)
     }
@@ -229,6 +243,16 @@ mod tests {
         let r = b.report_speedup("slow", "fastr").unwrap();
         assert!(r > 1.0, "slow/fastr ratio {r}");
         assert!(b.report_speedup("slow", "missing").is_none());
+    }
+
+    #[test]
+    fn tagged_speedup_reporting() {
+        let mut b = Bench::new("t").with_window(5, 20);
+        b.bench("slow2", || std::thread::sleep(
+            std::time::Duration::from_micros(300)));
+        b.bench("fast2", || std::hint::black_box(1 + 1));
+        let r = b.report_speedup_tagged("TIMESKIP", "slow2", "fast2").unwrap();
+        assert!(r > 1.0, "slow2/fast2 ratio {r}");
     }
 
     #[test]

@@ -36,6 +36,13 @@ pub enum Pattern {
     MultiStream(u32),
     /// Mixture of stream and random (xalancbmk/omnetpp-like).
     Mixed,
+    /// Sequential stream whose intensity is phased in time: references in
+    /// the active window keep the MPKI-derived gap, idle references carry
+    /// one `idle_gap`-instruction pause. `repeat: false` is a front-loaded
+    /// burst-then-idle profile; `repeat: true` re-bursts every
+    /// `active_refs` references. Exercises the thermal model's response to
+    /// workload phases (windowed bus-utilization regression tests).
+    Phased { active_refs: u64, idle_gap: u32, repeat: bool },
 }
 
 /// Static description of one workload.
@@ -74,6 +81,8 @@ struct Generator {
     streams: Vec<StreamState>,
     next_stream: usize,
     chase_ptr: u64,
+    /// References emitted so far (drives `Pattern::Phased` scheduling).
+    phase_count: u64,
 }
 
 impl Generator {
@@ -102,7 +111,8 @@ impl Generator {
             })
             .collect();
         let chase_ptr = rng.below(spec.footprint / 64) * 64;
-        Generator { spec, rng, streams, next_stream: 0, chase_ptr }
+        Generator { spec, rng, streams, next_stream: 0, chase_ptr,
+                    phase_count: 0 }
     }
 
     fn gap(&mut self) -> u32 {
@@ -119,7 +129,7 @@ impl Generator {
 
 impl Trace for Generator {
     fn next(&mut self) -> MemRef {
-        let gap = self.gap();
+        let mut gap = self.gap();
         let is_write = self.rng.chance(self.spec.write_ratio);
         let (addr, dependent) = match self.spec.pattern {
             Pattern::Stream | Pattern::MultiStream(_) => {
@@ -134,6 +144,24 @@ impl Trace for Generator {
                 ((s.base + s.pos) % self.spec.footprint, false)
             }
             Pattern::Random => (self.rand_line(), false),
+            Pattern::Phased { active_refs, idle_gap, repeat } => {
+                let idx = self.phase_count;
+                self.phase_count += 1;
+                let active = if repeat {
+                    idx % (active_refs + 1) < active_refs
+                } else {
+                    idx < active_refs
+                };
+                if !active {
+                    gap = idle_gap;
+                }
+                let s = &mut self.streams[0];
+                s.pos += 64;
+                if s.pos >= self.spec.footprint {
+                    s.pos = 0;
+                }
+                ((s.base + s.pos) % self.spec.footprint, false)
+            }
             Pattern::PointerChase => {
                 // Next pointer derived deterministically from the current
                 // one (a fixed random permutation walk).
@@ -266,6 +294,33 @@ mod tests {
             for _ in 0..1000 {
                 let r = t.next();
                 assert!(r.addr < w.footprint, "{} addr {}", w.name, r.addr);
+            }
+        }
+    }
+
+    #[test]
+    fn phased_pattern_schedules_bursts() {
+        let mk = |repeat| WorkloadSpec {
+            name: "ph",
+            pattern: Pattern::Phased { active_refs: 10,
+                                       idle_gap: 1_000_000, repeat },
+            mpki: 40.0,
+            write_ratio: 0.0,
+            footprint: 64 * MB,
+        };
+        // repeat: one idle reference closes each 11-reference period.
+        let mut t = mk(true).trace("x");
+        let idle = (0..110).filter(|_| t.next().gap_insts == 1_000_000)
+            .count();
+        assert_eq!(idle, 10);
+        // front-loaded: everything after the burst is idle.
+        let mut t = mk(false).trace("x");
+        for i in 0..40 {
+            let g = t.next().gap_insts;
+            if i < 10 {
+                assert!(g < 1_000_000, "ref {i} in the burst got gap {g}");
+            } else {
+                assert_eq!(g, 1_000_000, "ref {i} past the burst");
             }
         }
     }

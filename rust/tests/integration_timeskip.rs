@@ -1,0 +1,165 @@
+//! Time-skip equivalence matrix: the event-driven `System::run_fast`
+//! driver must produce *bit-identical* statistics to the cycle-stepped
+//! oracle `System::run` — every core counter, every controller counter,
+//! every derived float — across row policies, core counts, channel
+//! counts, AL-DRAM management, scaled refresh, and reduced timing sets.
+//! (The Python mirror harness carries the same matrix in
+//! `.claude/skills/verify/mirror/timeskip_checks.py`.)
+
+use aldram::aldram::AlDram;
+use aldram::mem::{RowPolicy, System, SystemConfig, SystemStats};
+use aldram::timing::TimingParams;
+use aldram::workloads::by_name;
+
+fn fast_timings() -> TimingParams {
+    TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18)
+}
+
+fn workload_list(names: &[(&str, usize)]) -> Vec<(aldram::workloads::WorkloadSpec, String)> {
+    let mut wl = Vec::new();
+    for (name, cores) in names {
+        let w = by_name(name).unwrap();
+        for i in 0..*cores {
+            wl.push((w.clone(), format!("ts/{i}")));
+        }
+    }
+    wl
+}
+
+/// Field-by-field equality, floats compared exactly: the two drivers must
+/// walk the same state trajectory, so even the derived ratios match to
+/// the last bit.
+fn assert_stats_identical(label: &str, a: &SystemStats, b: &SystemStats) {
+    assert_eq!(a.cycles, b.cycles, "{label}: cycles");
+    assert_eq!(a.reads_done, b.reads_done, "{label}: reads_done");
+    assert_eq!(a.writes_done, b.writes_done, "{label}: writes_done");
+    assert_eq!(a.refreshes, b.refreshes, "{label}: refreshes");
+    assert_eq!(a.avg_read_latency_cycles, b.avg_read_latency_cycles,
+               "{label}: avg_read_latency");
+    assert_eq!(a.row_hit_rate, b.row_hit_rate, "{label}: row_hit_rate");
+    assert_eq!(a.bus_utilization, b.bus_utilization,
+               "{label}: bus_utilization");
+    assert_eq!(a.mean_temp_c, b.mean_temp_c, "{label}: mean_temp_c");
+    assert_eq!(a.final_temp_c, b.final_temp_c, "{label}: final_temp_c");
+    assert_eq!(a.cores.len(), b.cores.len(), "{label}: core count");
+    for (ca, cb) in a.cores.iter().zip(&b.cores) {
+        assert_eq!(ca.insts, cb.insts, "{label}/{}: insts", ca.name);
+        assert_eq!(ca.ipc, cb.ipc, "{label}/{}: ipc", ca.name);
+        assert_eq!(ca.reads, cb.reads, "{label}/{}: reads", ca.name);
+        assert_eq!(ca.writes, cb.writes, "{label}/{}: writes", ca.name);
+        assert_eq!(ca.stall_cycles, cb.stall_cycles,
+                   "{label}/{}: stall_cycles", ca.name);
+    }
+    for (i, (pa, pb)) in
+        a.power_inputs.iter().zip(&b.power_inputs).enumerate()
+    {
+        assert_eq!(pa.n_act, pb.n_act, "{label}/ch{i}: n_act");
+        assert_eq!(pa.n_read, pb.n_read, "{label}/ch{i}: n_read");
+        assert_eq!(pa.n_write, pb.n_write, "{label}/ch{i}: n_write");
+        assert_eq!(pa.n_refresh, pb.n_refresh, "{label}/ch{i}: n_refresh");
+        assert_eq!(pa.open_bank_cycles, pb.open_bank_cycles,
+                   "{label}/ch{i}: open_bank_cycles");
+    }
+}
+
+fn check(label: &str, cfg: &SystemConfig, names: &[(&str, usize)],
+         cycles: u64, refresh_scale: Option<f64>) {
+    let wl = workload_list(names);
+    let mut oracle = System::new(cfg, &wl);
+    let mut fast = System::new(cfg, &wl);
+    if let Some(s) = refresh_scale {
+        oracle.set_refresh_scale(s);
+        fast.set_refresh_scale(s);
+    }
+    let sa = oracle.run(cycles);
+    let sb = fast.run_fast(cycles);
+    assert_stats_identical(label, &sa, &sb);
+    // The raw per-channel controller counters too (issued/busy cycles and
+    // the row-stat split are not all visible through SystemStats).
+    for (i, (ca, cb)) in oracle
+        .controllers()
+        .iter()
+        .zip(fast.controllers())
+        .enumerate()
+    {
+        assert_eq!(ca.stats, cb.stats, "{label}/ch{i}: CtrlStats");
+    }
+}
+
+const CYCLES: u64 = 30_000;
+
+#[test]
+fn open_policy_single_core_streams() {
+    let cfg = SystemConfig::paper_default();
+    check("open/1core/stream.copy", &cfg, &[("stream.copy", 1)], CYCLES,
+          None);
+    check("open/1core/mcf", &cfg, &[("mcf", 1)], CYCLES, None);
+    check("open/1core/gups", &cfg, &[("gups", 1)], CYCLES, None);
+    check("open/1core/povray", &cfg, &[("povray", 1)], CYCLES, None);
+}
+
+#[test]
+fn open_policy_multicore() {
+    let cfg = SystemConfig::paper_default();
+    check("open/4core/stream.copy", &cfg, &[("stream.copy", 4)], CYCLES,
+          None);
+    check("open/mix", &cfg, &[("mcf", 1), ("gups", 1), ("hmmer", 2)],
+          CYCLES, None);
+}
+
+#[test]
+fn closed_policy() {
+    let cfg = SystemConfig { policy: RowPolicy::Closed,
+                             ..SystemConfig::paper_default() };
+    check("closed/4core/gups", &cfg, &[("gups", 4)], CYCLES, None);
+    check("closed/1core/libquantum", &cfg, &[("libquantum", 1)], CYCLES,
+          None);
+}
+
+#[test]
+fn multi_channel() {
+    let cfg = SystemConfig { channels: 2,
+                             ..SystemConfig::paper_default() };
+    check("2ch/4core/stream.add", &cfg, &[("stream.add", 4)], CYCLES, None);
+}
+
+#[test]
+fn aldram_managed() {
+    let cfg = SystemConfig {
+        aldram: Some(AlDram::fixed(fast_timings())),
+        ambient_c: 30.0,
+        ..SystemConfig::paper_default()
+    };
+    check("aldram/4core/stream.copy", &cfg, &[("stream.copy", 4)], CYCLES,
+          None);
+}
+
+#[test]
+fn reduced_timing_set() {
+    let cfg = SystemConfig { timings: fast_timings(),
+                             ..SystemConfig::paper_default() };
+    check("fast-timings/2core/milc", &cfg, &[("milc", 2)], CYCLES, None);
+}
+
+#[test]
+fn scaled_refresh() {
+    let cfg = SystemConfig::paper_default();
+    check("refscale2/1core/hmmer", &cfg, &[("hmmer", 1)], CYCLES,
+          Some(2.0));
+    check("refscale05/1core/gups", &cfg, &[("gups", 1)], CYCLES, Some(0.5));
+}
+
+#[test]
+fn epoch_resumed_runs_stay_identical() {
+    // eval::stress drives the same system through many run() epochs; the
+    // fast driver must resume mid-stream without drift.
+    let cfg = SystemConfig::paper_default();
+    let wl = workload_list(&[("stream.copy", 1)]);
+    let mut oracle = System::new(&cfg, &wl);
+    let mut fast = System::new(&cfg, &wl);
+    for epoch in 0..4 {
+        let sa = oracle.run(8_000);
+        let sb = fast.run_fast(8_000);
+        assert_stats_identical(&format!("epoch{epoch}"), &sa, &sb);
+    }
+}
