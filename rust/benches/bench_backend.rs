@@ -1,11 +1,14 @@
 //! Backend benchmarks: profiling throughput of the PJRT artifact vs the
-//! native mirror (the L1/L2 hot path), at both artifact resolutions and
-//! several combo-batch sizes. These are the numbers behind EXPERIMENTS.md
-//! §Perf (L1/L2).
+//! native scalar mirror vs the vectorized simd kernel vs the early-exit
+//! pass probe (the L1/L2 hot path), at both artifact resolutions and
+//! batch sizes {1, 16, 256}. These are the numbers behind EXPERIMENTS.md
+//! §Perf (L1/L2 and the PROFILE/SWEEP speedup tables).
 
 use aldram::model::{params, Combo};
 use aldram::population::generate_dimm;
-use aldram::runtime::{NativeBackend, ProfilingBackend};
+use aldram::profiler::{sweep, sweep_seeded, TestKind};
+use aldram::runtime::{NativeBackend, PassCriterion, ProbeKind,
+                      ProfilingBackend, SimdBackend};
 use aldram::util::bench::Bench;
 
 fn combos(n: usize) -> Vec<Combo> {
@@ -26,28 +29,46 @@ fn main() {
 
     for cells in [256usize, 2048] {
         let d = generate_dimm(0, cells, params());
-        let batch = combos(64);
 
         let mut native = NativeBackend::new();
-        b.bench(&format!("native/cells{cells}/combos64"), || {
-            native.profile(&d.arrays, &batch).unwrap().tot_r[0]
-        });
+        let mut simd = SimdBackend::new();
+        for batch in [1usize, 16, 256] {
+            let kombos = combos(batch);
+            b.bench(&format!("native/cells{cells}/combos{batch}"), || {
+                native.profile(&d.arrays, &kombos).unwrap().tot_r[0]
+            });
+            b.bench(&format!("simd/cells{cells}/combos{batch}"), || {
+                simd.profile(&d.arrays, &kombos).unwrap().tot_r[0]
+            });
+            b.bench(&format!("probe/cells{cells}/combos{batch}"), || {
+                simd.pass_probe(&d.arrays, &kombos, ProbeKind::Read,
+                                PassCriterion::Module { budget: 0.0 })
+                    .unwrap()
+                    .len()
+            });
+        }
+        // The headline vectorization ratio at the sweep-wave batch size.
+        b.report_speedup_tagged(
+            "PROFILE",
+            &format!("native/cells{cells}/combos256"),
+            &format!("simd/cells{cells}/combos256"),
+        );
+        b.report_speedup_tagged(
+            "PROFILE",
+            &format!("native/cells{cells}/combos256"),
+            &format!("probe/cells{cells}/combos256"),
+        );
 
         #[cfg(feature = "pjrt")]
         match aldram::runtime::PjrtBackend::for_cells(
             &aldram::runtime::artifacts_dir(), cells) {
             Ok(mut pjrt) => {
-                b.bench(&format!("pjrt/cells{cells}/combos64"), || {
-                    pjrt.profile(&d.arrays, &batch).unwrap().tot_r[0]
-                });
-                let one = combos(1);
-                b.bench(&format!("pjrt/cells{cells}/combos1"), || {
-                    pjrt.profile(&d.arrays, &one).unwrap().tot_r[0]
-                });
-                let big = combos(256);
-                b.bench(&format!("pjrt/cells{cells}/combos256"), || {
-                    pjrt.profile(&d.arrays, &big).unwrap().tot_r[0]
-                });
+                for batch in [1usize, 64, 256] {
+                    let kombos = combos(batch);
+                    b.bench(&format!("pjrt/cells{cells}/combos{batch}"), || {
+                        pjrt.profile(&d.arrays, &kombos).unwrap().tot_r[0]
+                    });
+                }
             }
             Err(e) => eprintln!("skipping pjrt at {cells} cells: {e}"),
         }
@@ -56,7 +77,37 @@ fn main() {
                    the `pjrt` feature)");
     }
 
-    // Population generation (the other substrate on the campaign path).
+    // The sweep ladder as the fig3 campaign runs it: cold full-profile
+    // sweeps on the scalar backend vs probed + warm-started sweeps on the
+    // simd backend (identical frontiers; runtime_simd_xcheck asserts it).
+    {
+        let d = generate_dimm(0, 2048, params());
+        let mut native = NativeBackend::new();
+        let mut simd = SimdBackend::new();
+        b.bench("sweep/native-cold/cells2048", || {
+            let hot =
+                sweep(&mut native, &d.arrays, TestKind::Read, 85.0, 200.0)
+                    .unwrap();
+            let cool =
+                sweep(&mut native, &d.arrays, TestKind::Read, 55.0, 200.0)
+                    .unwrap();
+            (hot.best.map(|x| x.sum_ns), cool.best.map(|x| x.sum_ns))
+        });
+        b.bench("sweep/simd-probe-warm/cells2048", || {
+            let hot = sweep(&mut simd, &d.arrays, TestKind::Read, 85.0,
+                            200.0)
+                .unwrap();
+            let cool = sweep_seeded(&mut simd, &d.arrays, TestKind::Read,
+                                    55.0, 200.0, Some(&hot))
+                .unwrap();
+            (hot.best.map(|x| x.sum_ns), cool.best.map(|x| x.sum_ns))
+        });
+        b.report_speedup_tagged("SWEEP", "sweep/native-cold/cells2048",
+                                "sweep/simd-probe-warm/cells2048");
+    }
+
+    // Population generation (the other substrate on the campaign path;
+    // now includes the one-time screening-order sort).
     b.bench("population/generate_dimm_2048", || {
         generate_dimm(9, 2048, params()).arrays.qcap[0]
     });

@@ -14,16 +14,18 @@ use anyhow::Result;
 
 use crate::model::{params, Combo};
 use crate::population::generate_dimm;
-use crate::profiler::{repeatability, sweep, sweep_exhaustive, TestKind};
+use crate::profiler::{repeatability, sweep, sweep_exhaustive, sweep_par,
+                      SweepOpts, SweepResult, TestKind};
 use crate::runtime::ProfilingBackend;
 
 use super::csv::Csv;
 
-/// §7.1 grid: one pool job per refresh-interval point (`jobs = 1` is the
-/// sequential ablation). Each worker owns one backend built lazily from
-/// the `Sync` factory (`profile()` takes `&mut self`); the monotonicity
-/// validation and CSV run afterwards in grid order, so output does not
-/// depend on the job count.
+/// §7.1 ladder: the refresh-interval points run in ascending order so
+/// each sweep warm-starts from the previous point's frontier (the pass
+/// surface is monotone in tREF; seeds are re-proven, so results match the
+/// cold sweeps exactly), while the independent (tRCD, tRP) pairs *within*
+/// each sweep fan out over the job pool (`sweep_par`). `jobs = 1` is the
+/// sequential ablation; output is identical for any job count.
 pub fn refresh_latency_par<F>(make_backend: F, dimm_id: usize, cells: usize,
                               jobs: usize, out: &Path) -> Result<()>
 where
@@ -31,15 +33,17 @@ where
 {
     let d = generate_dimm(dimm_id, cells, params());
     const TREFS: [f64; 5] = [16.0, 32.0, 64.0, 128.0, 200.0];
-    let bests = crate::exec::Pool::new(jobs).try_run_init(
-        TREFS.len(),
-        &make_backend,
-        |b, i| {
-            let s = sweep(b.as_mut(), &d.arrays, TestKind::Read, 85.0,
-                          TREFS[i])?;
-            Ok(s.best.expect("std timings are always acceptable"))
-        },
-    )?;
+    let mut bests = Vec::with_capacity(TREFS.len());
+    let mut prev: Option<SweepResult> = None;
+    for &tref in &TREFS {
+        let s = sweep_par(&make_backend, &d.arrays, TestKind::Read, 85.0,
+                          tref,
+                          SweepOpts { seed: prev.as_ref(),
+                                      ..SweepOpts::default() },
+                          jobs)?;
+        bests.push(s.best.expect("std timings are always acceptable"));
+        prev = Some(s);
+    }
     println!("== §7.1: refresh interval vs latency reduction \
               (dimm {dimm_id}, 85C, {jobs} jobs) ==");
     let mut csv = Csv::new(&["tref_ms", "best_read_sum_ns", "reduction"]);
@@ -163,15 +167,23 @@ where
 }
 
 /// §7.2: the acceptable-tRAS frontier as tRCD is reduced (and vice versa):
-/// cutting one parameter consumes the slack of the other.
-pub fn interdependence(backend: &mut dyn ProfilingBackend, dimm_id: usize,
-                       cells: usize, out: &Path) -> Result<()> {
+/// cutting one parameter consumes the slack of the other. The frontier's
+/// independent (tRCD, tRP) pairs probe through the job pool.
+pub fn interdependence_par<F>(make_backend: F, dimm_id: usize, cells: usize,
+                              jobs: usize, out: &Path) -> Result<()>
+where
+    F: Fn() -> Box<dyn ProfilingBackend> + Sync,
+{
     let d = generate_dimm(dimm_id, cells, params());
     // Stress just inside the module's retention envelope: charge slack is
     // scarce there, so the parameter coupling is visible.
-    let refresh = crate::profiler::profile_refresh(backend, &d.arrays, 85.0)?;
-    let tref = refresh.safe_read_ms();
-    let s = sweep(backend, &d.arrays, TestKind::Read, 85.0, tref)?;
+    let tref = {
+        let mut b = make_backend();
+        crate::profiler::profile_refresh(b.as_mut(), &d.arrays, 85.0)?
+            .safe_read_ms()
+    };
+    let s = sweep_par(&make_backend, &d.arrays, TestKind::Read, 85.0, tref,
+                      SweepOpts::default(), jobs)?;
     println!("== §7.2: min acceptable tRAS vs (tRCD, tRP) @85C, tref {tref} ms ==");
     let mut csv = Csv::new(&["trcd_ns", "trp_ns", "min_tras_ns"]);
     for f in &s.frontier {
@@ -302,5 +314,12 @@ mod tests {
         let dir = std::env::temp_dir().join("aldram_ablate_par_test");
         refresh_latency_par(native_factory, 0, 64, 2, &dir).unwrap();
         assert!(dir.join("ablate_refresh_latency.csv").exists());
+    }
+
+    #[test]
+    fn interdependence_par_runs_through_the_pool() {
+        let dir = std::env::temp_dir().join("aldram_ablate_inter_test");
+        interdependence_par(native_factory, 0, 64, 2, &dir).unwrap();
+        assert!(dir.join("ablate_interdependence.csv").exists());
     }
 }

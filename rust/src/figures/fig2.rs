@@ -11,8 +11,8 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::model::CellArrays;
-use crate::profiler::{profile_refresh, sweep, RefreshProfile, SweepResult,
-                      TestKind};
+use crate::profiler::{profile_refresh, sweep_seeded, RefreshProfile,
+                      SweepResult, TestKind};
 use crate::runtime::ProfilingBackend;
 use crate::timing::TimingParams;
 
@@ -88,8 +88,12 @@ pub fn fig2bc(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
         (TestKind::Write, "Fig 2c: write test (tRCD/tWR/tRP)",
          refresh.safe_write_ms(), std.write_sum_ns()),
     ] {
+        // The 85C sweep is warm-started from the 55C frontier (monotone
+        // across temperature; the seed is re-proven, not trusted).
+        let mut prev: Option<SweepResult> = None;
         for temp in [55.0, 85.0] {
-            let s = sweep(backend, arrays, kind, temp, tref)?;
+            let s = sweep_seeded(backend, arrays, kind, temp, tref,
+                                 prev.as_ref())?;
             print_sweep(label, &s, std_sum);
             for f in &s.frontier {
                 csv.row(&[
@@ -102,6 +106,7 @@ pub fn fig2bc(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
                     format!("{}", f.min_third_ns.is_some()),
                 ]);
             }
+            prev = Some(s);
         }
     }
     csv.write(out, "fig2bc.csv")?;

@@ -1,6 +1,6 @@
 //! Per-figure reproduction drivers: each paper table/figure has a function
 //! that prints the paper's rows/series and writes CSV under `results/`.
-//! See DESIGN.md §7 for the experiment index.
+//! See DESIGN.md §8 for the experiment index.
 
 pub mod ablate;
 pub mod calibrate;

@@ -1,8 +1,8 @@
 //! `repro` — the AL-DRAM reproduction CLI (Layer-3 leader binary).
 //!
-//! Commands (see DESIGN.md §7 for the experiment index):
-//!   repro calibrate  [--dimms N] [--cells N] [--backend native|pjrt|auto]
-//!                    [--jobs N]
+//! Commands (see DESIGN.md §8 for the experiment index):
+//!   repro calibrate  [--dimms N] [--cells N]
+//!                    [--backend native|simd|pjrt|auto] [--jobs N]
 //!   repro profile    --dimm N [--cells N] [--backend ...]
 //!   repro figure     fig2a|fig2bc|fig3|fig4|all [--out DIR] [--jobs N] [...]
 //!   repro ablate     refresh-latency|interdependence|repeatability|
@@ -10,10 +10,16 @@
 //!   repro eval       sensitivity|hetero|power|stress [--cycles N] [--jobs N]
 //!   repro bench-sim  [--cycles N]          (quick end-to-end smoke; prints
 //!                    the TIMESKIP line: event-driven vs cycle-stepped)
+//!   repro bench-profile [--cells N]        (profiling-engine smoke; prints
+//!                    the SPEEDUP[PROFILE] and SPEEDUP[SWEEP] lines:
+//!                    scalar native vs vectorized simd / probed+warm sweep)
 //!
 //! Every system-level evaluation runs on the event-driven time-skip
 //! driver (`System::run_fast`), which is bit-identical to the
-//! cycle-stepped oracle (see DESIGN.md §6 and tests/integration_timeskip).
+//! cycle-stepped oracle (see DESIGN.md §6 and tests/integration_timeskip);
+//! every profiling campaign defaults to the vectorized simd engine
+//! (DESIGN.md §7), which produces error counts identical to the scalar
+//! `native` oracle.
 //!
 //! `--jobs N` sets the worker count of the parallel execution engine
 //! (`exec::Pool`) for every independent-simulation fan-out; it defaults to
@@ -30,11 +36,12 @@ use aldram::model::params;
 use aldram::population::generate_dimm;
 use aldram::profiler::profile_dimm;
 use aldram::runtime::{artifacts_dir, auto_backend, NativeBackend,
-                      ProfilingBackend};
+                      ProfilingBackend, SimdBackend};
 
 fn make_backend(kind: &str, cells: usize) -> Box<dyn ProfilingBackend> {
     match kind {
         "native" => Box::new(NativeBackend::new()),
+        "simd" => Box::new(SimdBackend::new()),
         #[cfg(feature = "pjrt")]
         "pjrt" => Box::new(
             aldram::runtime::PjrtBackend::for_cells(&artifacts_dir(), cells)
@@ -134,8 +141,8 @@ fn main() -> anyhow::Result<()> {
                                                 &out)?
                 }
                 "interdependence" => {
-                    let mut b = backend_for(&args, cells);
-                    ablate::interdependence(b.as_mut(), dimm, cells, &out)?
+                    ablate::interdependence_par(factory, dimm, cells, jobs,
+                                                &out)?
                 }
                 "repeatability" => ablate::repeat(dimm, cells, &out)?,
                 "bank-granularity" => {
@@ -151,11 +158,8 @@ fn main() -> anyhow::Result<()> {
                 "all" => {
                     ablate::refresh_latency_par(factory, dimm, cells, jobs,
                                                 &out)?;
-                    {
-                        let mut b = backend_for(&args, cells);
-                        ablate::interdependence(b.as_mut(), dimm, cells,
+                    ablate::interdependence_par(factory, dimm, cells, jobs,
                                                 &out)?;
-                    }
                     ablate::repeat(dimm, cells, &out)?;
                     ablate::bank_granularity_par(factory, dimm, cells, jobs,
                                                  &out)?;
@@ -271,9 +275,74 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
+        Some("bench-profile") => {
+            // Profiling-engine smoke: scalar native vs the vectorized simd
+            // kernel on one combo batch, and the cold full-profile sweep
+            // ladder vs the probed + warm-started one. Identical results
+            // (asserted here), SPEEDUP[PROFILE] / SPEEDUP[SWEEP] lines for
+            // EXPERIMENTS.md and the CI grep.
+            use aldram::profiler::{sweep_seeded, TestKind};
+            use aldram::util::bench::Bench;
+            let cells = args.get("cells", 512usize);
+            let combos_n = args.get("combos", 64usize);
+            let d = generate_dimm(args.get("dimm", 0usize), cells, params());
+            let combos: Vec<aldram::model::Combo> = (0..combos_n)
+                .map(|i| aldram::model::Combo {
+                    trcd: 13.75 - (i % 7) as f32 * 1.25,
+                    tras: 35.0 - (i % 11) as f32 * 1.25,
+                    twr: 15.0 - (i % 8) as f32 * 1.25,
+                    trp: 13.75 - (i % 7) as f32 * 1.25,
+                    tref_ms: 64.0 + (i % 48) as f32 * 8.0,
+                    temp_c: if i % 2 == 0 { 85.0 } else { 55.0 },
+                })
+                .collect();
+            let mut native = NativeBackend::new();
+            let mut simd = SimdBackend::new();
+            let a = native.profile(&d.arrays, &combos)?;
+            let b = simd.profile(&d.arrays, &combos)?;
+            anyhow::ensure!(a.tot_r == b.tot_r && a.tot_w == b.tot_w,
+                            "simd/native error counts diverged");
+
+            let mut bench = Bench::new("bench-profile").with_window(80, 400);
+            bench.bench(&format!("profile/native/cells{cells}"), || {
+                native.profile(&d.arrays, &combos).unwrap().tot_r[0]
+            });
+            bench.bench(&format!("profile/simd/cells{cells}"), || {
+                simd.profile(&d.arrays, &combos).unwrap().tot_r[0]
+            });
+            bench.report_speedup_tagged(
+                "PROFILE",
+                &format!("profile/native/cells{cells}"),
+                &format!("profile/simd/cells{cells}"),
+            );
+
+            // Two-point temperature ladder, as the fig3 campaign runs it.
+            bench.bench("sweep/native-cold", || {
+                let hot = aldram::profiler::sweep(
+                    &mut native, &d.arrays, TestKind::Read, 85.0, 200.0)
+                    .unwrap();
+                let cool = aldram::profiler::sweep(
+                    &mut native, &d.arrays, TestKind::Read, 55.0, 200.0)
+                    .unwrap();
+                (hot.best.map(|b| b.sum_ns), cool.best.map(|b| b.sum_ns))
+            });
+            bench.bench("sweep/simd-probe-warm", || {
+                let hot = aldram::profiler::sweep(
+                    &mut simd, &d.arrays, TestKind::Read, 85.0, 200.0)
+                    .unwrap();
+                let cool = sweep_seeded(&mut simd, &d.arrays, TestKind::Read,
+                                        55.0, 200.0, Some(&hot))
+                    .unwrap();
+                (hot.best.map(|b| b.sum_ns), cool.best.map(|b| b.sum_ns))
+            });
+            bench.report_speedup_tagged("SWEEP", "sweep/native-cold",
+                                        "sweep/simd-probe-warm");
+            bench.finish();
+        }
+
         _ => {
             println!("repro — AL-DRAM reproduction (see DESIGN.md)");
-            println!("commands: calibrate | profile | figure | ablate | eval | bench-sim");
+            println!("commands: calibrate | profile | figure | ablate | eval | bench-sim | bench-profile");
             println!("global flags: --jobs N (parallel fan-out width, \
                       default {})", exec::default_jobs());
         }

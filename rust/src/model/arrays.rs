@@ -2,7 +2,19 @@
 //! the population generator, the native backend, and the PJRT runtime
 //! (which uploads them as [banks, chips, cells] f32 literals).
 
-use super::charge::Cell;
+use super::charge::{Cell, Combo};
+
+/// Reference stress point for the screening order: timings near the grid
+/// floors at the hottest/longest-retention corner, so the cells that fail
+/// first under *any* reduced combo sort to the front (see `screening`).
+const SCREEN_COMBO: Combo = Combo {
+    trcd: 7.5,
+    tras: 17.5,
+    twr: 7.5,
+    trp: 7.5,
+    tref_ms: 448.0,
+    temp_c: 85.0,
+};
 
 /// Sampled cell population of one DIMM: five parallel [B, C, N] arrays in
 /// row-major (bank, chip, cell) order.
@@ -16,6 +28,11 @@ pub struct CellArrays {
     pub tau_r: Vec<f32>,
     pub tau_p: Vec<f32>,
     pub lam85: Vec<f32>,
+    /// Weakest-first visiting order for `pass_probe` (flat indices sorted
+    /// by the conservative dominance key of `compute_screening`). Empty
+    /// when not yet computed — probing then falls back to array order;
+    /// the order affects only speed, never results.
+    pub screen: Vec<u32>,
 }
 
 impl CellArrays {
@@ -30,6 +47,7 @@ impl CellArrays {
             tau_r: vec![0.0; n],
             tau_p: vec![0.0; n],
             lam85: vec![0.0; n],
+            screen: Vec::new(),
         }
     }
 
@@ -69,22 +87,56 @@ impl CellArrays {
     }
 
     /// Downsample to `cells_out` cells per (bank, chip) — used to feed the
-    /// `profile_small` artifact and fast test paths. Takes every k-th cell
-    /// so the weak-tail cells stay representative rather than clustered.
+    /// `profile_small` artifact and fast test paths. Indices are spread
+    /// evenly across the full range (`src = j * cells / cells_out`), so the
+    /// weak-tail cells stay representative rather than clustered. A plain
+    /// integer stride would leave the trailing `cells % cells_out * stride`
+    /// region unsampled whenever `cells_out` does not divide `cells`,
+    /// systematically excluding weak cells that land there.
     pub fn downsample(&self, cells_out: usize) -> CellArrays {
         assert!(cells_out <= self.cells && cells_out > 0);
-        let stride = self.cells / cells_out;
         let mut out = CellArrays::zeroed(self.banks, self.chips, cells_out);
         for b in 0..self.banks {
             for c in 0..self.chips {
                 for j in 0..cells_out {
-                    let src = self.idx(b, c, j * stride);
+                    let src = self.idx(b, c, j * self.cells / cells_out);
                     let dst = out.idx(b, c, j);
                     out.set(dst, self.cell(src));
                 }
             }
         }
+        if !self.screen.is_empty() {
+            out.compute_screening();
+        }
         out
+    }
+
+    /// Precompute the weakest-first screening order consumed by
+    /// `pass_probe`. The key is the worse of the two test margins at the
+    /// fixed stress point `SCREEN_COMBO` — a conservative scalar dominance
+    /// proxy (every margin term is monotone in the same cell parameters,
+    /// so a cell ranked weak here is weak under any nearby combo). Called
+    /// once per generated population; `probe` correctness never depends on
+    /// the order, only its early-exit cost does.
+    pub fn compute_screening(&mut self) {
+        let p = super::params::params();
+        let mut keyed: Vec<(f32, u32)> = (0..self.len())
+            .map(|i| {
+                let (m_r, m_w) = super::charge::test_margins(
+                    &self.cell(i), &SCREEN_COMBO, p);
+                (m_r.min(m_w), i as u32)
+            })
+            .collect();
+        keyed.sort_unstable_by(|a, b| {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+        });
+        self.screen = keyed.into_iter().map(|(_, i)| i).collect();
+    }
+
+    /// The screening order, if computed and consistent with the current
+    /// geometry.
+    pub fn screening(&self) -> Option<&[u32]> {
+        (self.screen.len() == self.len()).then_some(self.screen.as_slice())
     }
 }
 
@@ -202,6 +254,53 @@ mod tests {
         let d = a.downsample(4);
         assert_eq!(d.cells, 4);
         assert_eq!(d.qcap, vec![0.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn downsample_non_divisible_reaches_the_tail() {
+        // 100 -> 64 used to collapse to stride 1 (cells 0..63), never
+        // sampling the trailing 36 cells; the even spread must cover the
+        // whole range.
+        let mut a = CellArrays::zeroed(1, 1, 100);
+        for j in 0..100 {
+            a.qcap[j] = j as f32;
+        }
+        let d = a.downsample(64);
+        assert_eq!(d.cells, 64);
+        let expected: Vec<f32> =
+            (0..64).map(|j| (j * 100 / 64) as f32).collect();
+        assert_eq!(d.qcap, expected);
+        // The last sampled index must land in the old dead zone.
+        assert!(*d.qcap.last().unwrap() >= 64.0,
+                "tail still unsampled: max src {}", d.qcap.last().unwrap());
+        // 10 -> 4: indices 0,2,5,7 (old stride-2 gave 0,2,4,6).
+        let mut a = CellArrays::zeroed(1, 1, 10);
+        for j in 0..10 {
+            a.qcap[j] = j as f32;
+        }
+        assert_eq!(a.downsample(4).qcap, vec![0.0, 2.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn screening_orders_weakest_first() {
+        use crate::model::charge::Cell;
+        let mut a = CellArrays::zeroed(1, 1, 16);
+        for j in 0..16 {
+            // Identical healthy cells except for a progressively leakier
+            // tail; higher lam85 = weaker.
+            a.set(j, Cell { qcap: 1.0, tau_s: 5.0, tau_r: 3.1, tau_p: 1.85,
+                            lam85: 1e-4 * (1.0 + j as f32) });
+        }
+        assert!(a.screening().is_none());
+        a.compute_screening();
+        let s = a.screening().expect("computed");
+        assert_eq!(s.len(), 16);
+        // Weakest (leakiest) cell first, strongest last.
+        assert_eq!(s[0], 15);
+        assert_eq!(s[15], 0);
+        let mut sorted = s.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16u32).collect::<Vec<_>>(), "permutation");
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod arrays;
 pub mod charge;
 pub mod params;
 pub mod profile;
+pub mod profile_simd;
 
 pub use arrays::{CellArrays, ProfileOutput};
 pub use charge::{Cell, Combo};

@@ -4,11 +4,98 @@
 //! calibration fast path.
 
 use super::arrays::{CellArrays, ProfileOutput};
-use super::charge::{self, Combo};
+use super::charge::{self, Cell, Combo};
 use super::params::ModelParams;
 
 /// Matches `ref.SENTINEL_MARGIN` on the python side.
 pub const SENTINEL_MARGIN: f32 = 1.0e9;
+
+/// Per-profile hoisted constants plus the exact per-cell margin math —
+/// the single scalar source of truth shared by `profile_native` (its
+/// inner loop) and `profile_simd` (its guard-band fallback and remainder
+/// lanes). Expressions preserve the floating-point evaluation *order* of
+/// `charge_math.py`, so error counts stay bit-identical to the AOT
+/// artifact (runtime_native_xcheck).
+pub(crate) struct ScalarPre<'p> {
+    p: &'p ModelParams,
+    pub(crate) w_rcd_std: f32,
+    pub(crate) w_rp_std: f32,
+    pub(crate) q_deficit: f32,
+    pub(crate) v_read: f32,
+    knee_int: Option<i32>,
+}
+
+impl<'p> ScalarPre<'p> {
+    pub(crate) fn new(p: &'p ModelParams) -> Self {
+        ScalarPre {
+            p,
+            w_rcd_std: (p.spec.trcd_ns as f32 - p.t_soff_ns).max(0.0),
+            w_rp_std: (p.spec.trp_ns as f32 - p.t_pre0_ns).max(0.0),
+            q_deficit: 1.0 - p.q_share,
+            v_read: p.v_read(),
+            // knee_pow is integral (6.0): x.powi is ~8x faster than powf.
+            // Guarded by runtime_native_xcheck — if the rounding ever
+            // diverges from the artifact's pow lowering, fall back to powf
+            // by making knee_pow non-integral in model_params.json.
+            knee_int: if p.knee_pow.fract() == 0.0 {
+                Some(p.knee_pow as i32)
+            } else {
+                None
+            },
+        }
+    }
+
+    #[inline]
+    pub(crate) fn knee(&self, x: f32) -> f32 {
+        match self.knee_int {
+            Some(n) => x.powi(n),
+            None => x.powf(self.p.knee_pow),
+        }
+    }
+
+    /// Combo-independent per-cell standard-timing precharge offset.
+    #[inline]
+    pub(crate) fn off_std(&self, tau_p: f32) -> f32 {
+        self.p.v_bl * (-self.w_rp_std / tau_p).exp()
+    }
+
+    /// Exact (read, write) margins for one cell under one hoisted combo.
+    /// `off_std` must be `self.off_std(cell.tau_p)` (hoisted per cell by
+    /// `profile_native`; recomputed on demand by the SIMD fallback).
+    #[inline]
+    pub(crate) fn margins(&self, kp: &ComboPre, cell: &Cell, off_std: f32)
+                          -> (f32, f32) {
+        let p = self.p;
+        let k = &kp.combo;
+
+        // leak (temperature scaling hoisted; same op order as
+        // charge_math.leak_factor: lam = lam85 * pow2).
+        let lam = cell.lam85 * kp.pow2;
+        let decay = (-lam * k.tref_ms).exp();
+
+        // read chain
+        let off = p.v_bl * (-kp.w_rp / cell.tau_p).exp();
+        let q_r = cell.qcap
+            * (1.0 - self.q_deficit * (-kp.w_ras / cell.tau_r).exp())
+            * decay;
+        let tau_t = cell.tau_s * kp.tau_fac;
+        let amp_r = p.a_max * self.knee((q_r / p.q_knee).max(0.0)).min(1.0);
+        let v_r = amp_r * (1.0 - (-kp.w_rcd / tau_t).exp());
+        let m_r = v_r - p.g_off * off - self.v_read;
+
+        // write chain (readback at standard timings)
+        let q_w = cell.qcap * p.kw_pattern
+            * (1.0 - (-kp.w_wr / (p.wr_tau_ratio * cell.tau_r)).exp())
+            * decay;
+        let amp_w = p.a_max * self.knee((q_w / p.q_knee).max(0.0)).min(1.0);
+        let v_w = amp_w * (1.0 - (-self.w_rcd_std / tau_t).exp());
+        let m_w_rb = v_w - p.g_off * off_std - self.v_read;
+        let m_w_rcd = p.k_lin * (k.trcd - (p.t_soff_ns + p.c_rcd_w * tau_t));
+        let m_w_rp = p.k_lin * (k.trp - (p.t_pre0_ns + p.c_rp_w * cell.tau_p));
+        let m_w = m_w_rb.min(m_w_rcd).min(m_w_rp);
+        (m_r, m_w)
+    }
+}
 
 /// Evaluate `combos` against every sampled cell; reduce per (bank, chip).
 ///
@@ -25,21 +112,7 @@ pub fn profile_native(arrays: &CellArrays, combos: &[Combo],
     let mut out = ProfileOutput::zeroed(combos.len(), arrays.banks, arrays.chips);
 
     let pre: Vec<ComboPre> = combos.iter().map(|k| ComboPre::new(k, p)).collect();
-    let w_rcd_std = (p.spec.trcd_ns as f32 - p.t_soff_ns).max(0.0);
-    let w_rp_std = (p.spec.trp_ns as f32 - p.t_pre0_ns).max(0.0);
-    let q_deficit = 1.0 - p.q_share;
-    let v_read = p.v_read();
-    // knee_pow is integral (6.0): x.powi is ~8x faster than powf. Guarded
-    // by runtime_native_xcheck — if the rounding ever diverges from the
-    // artifact's pow lowering, fall back to powf by making knee_pow
-    // non-integral in model_params.json.
-    let knee_int = if p.knee_pow.fract() == 0.0 { Some(p.knee_pow as i32) } else { None };
-    let knee = |x: f32| -> f32 {
-        match knee_int {
-            Some(n) => x.powi(n),
-            None => x.powf(p.knee_pow),
-        }
-    };
+    let spre = ScalarPre::new(p);
 
     for b in 0..arrays.banks {
         for c in 0..arrays.chips {
@@ -48,7 +121,7 @@ pub fn profile_native(arrays: &CellArrays, combos: &[Combo],
                 let i = base + j;
                 let cell = arrays.cell(i);
                 // Combo-independent per-cell terms.
-                let off_std = p.v_bl * (-w_rp_std / cell.tau_p).exp();
+                let off_std = spre.off_std(cell.tau_p);
 
                 for (ki, kp) in pre.iter().enumerate() {
                     let oi = out.idx(ki, b, c);
@@ -59,37 +132,7 @@ pub fn profile_native(arrays: &CellArrays, combos: &[Combo],
                         }
                         continue;
                     }
-                    let k = &kp.combo;
-
-                    // leak (temperature scaling hoisted; same op order as
-                    // charge_math.leak_factor: lam = lam85 * pow2).
-                    let lam = cell.lam85 * kp.pow2;
-                    let decay = (-lam * k.tref_ms).exp();
-
-                    // read chain
-                    let off = p.v_bl * (-kp.w_rp / cell.tau_p).exp();
-                    let q_r = cell.qcap
-                        * (1.0 - q_deficit * (-kp.w_ras / cell.tau_r).exp())
-                        * decay;
-                    let tau_t = cell.tau_s * kp.tau_fac;
-                    let amp_r =
-                        p.a_max * knee((q_r / p.q_knee).max(0.0)).min(1.0);
-                    let v_r = amp_r * (1.0 - (-kp.w_rcd / tau_t).exp());
-                    let m_r = v_r - p.g_off * off - v_read;
-
-                    // write chain (readback at standard timings)
-                    let q_w = cell.qcap * p.kw_pattern
-                        * (1.0 - (-kp.w_wr / (p.wr_tau_ratio * cell.tau_r)).exp())
-                        * decay;
-                    let amp_w =
-                        p.a_max * knee((q_w / p.q_knee).max(0.0)).min(1.0);
-                    let v_w = amp_w * (1.0 - (-w_rcd_std / tau_t).exp());
-                    let m_w_rb = v_w - p.g_off * off_std - v_read;
-                    let m_w_rcd =
-                        p.k_lin * (k.trcd - (p.t_soff_ns + p.c_rcd_w * tau_t));
-                    let m_w_rp =
-                        p.k_lin * (k.trp - (p.t_pre0_ns + p.c_rp_w * cell.tau_p));
-                    let m_w = m_w_rb.min(m_w_rcd).min(m_w_rp);
+                    let (m_r, m_w) = spre.margins(kp, &cell, off_std);
 
                     if m_r < 0.0 {
                         out.err_r[oi] += 1.0;
@@ -108,18 +151,24 @@ pub fn profile_native(arrays: &CellArrays, combos: &[Combo],
         }
     }
 
-    // Sentinel combos report the sentinel margin (mirrors the kernel);
-    // also fix up any (combo, bank, chip) that saw no cells.
+    finalize_output(&mut out, combos.len());
+    out
+}
+
+/// Shared epilogue: sentinel combos report the sentinel margin (mirrors
+/// the kernel), any (combo, bank, chip) that saw no cells is fixed up,
+/// and the per-combo totals are reduced.
+pub(crate) fn finalize_output(out: &mut ProfileOutput, k: usize) {
     for v in out.mmin_r.iter_mut().chain(out.mmin_w.iter_mut()) {
         if !v.is_finite() || *v > SENTINEL_MARGIN {
             *v = SENTINEL_MARGIN;
         }
     }
 
-    for ki in 0..combos.len() {
+    for ki in 0..k {
         let (mut tr, mut tw) = (0.0f32, 0.0f32);
-        for b in 0..arrays.banks {
-            for c in 0..arrays.chips {
+        for b in 0..out.banks {
+            for c in 0..out.chips {
                 let oi = out.idx(ki, b, c);
                 tr += out.err_r[oi];
                 tw += out.err_w[oi];
@@ -128,25 +177,24 @@ pub fn profile_native(arrays: &CellArrays, combos: &[Combo],
         out.tot_r[ki] = tr;
         out.tot_w[ki] = tw;
     }
-    out
 }
 
 /// Hoisted per-combo constants (see `profile_native`).
-struct ComboPre {
-    combo: Combo,
-    sentinel: bool,
+pub(crate) struct ComboPre {
+    pub(crate) combo: Combo,
+    pub(crate) sentinel: bool,
     /// 2^((T - 85) / 10) — the leak temperature scaling.
-    pow2: f32,
+    pub(crate) pow2: f32,
     /// 1 + alpha_t * max(T - 55, 0) — the tau_s thermal factor.
-    tau_fac: f32,
-    w_rcd: f32,
-    w_ras: f32,
-    w_wr: f32,
-    w_rp: f32,
+    pub(crate) tau_fac: f32,
+    pub(crate) w_rcd: f32,
+    pub(crate) w_ras: f32,
+    pub(crate) w_wr: f32,
+    pub(crate) w_rp: f32,
 }
 
 impl ComboPre {
-    fn new(k: &Combo, p: &ModelParams) -> Self {
+    pub(crate) fn new(k: &Combo, p: &ModelParams) -> Self {
         ComboPre {
             combo: *k,
             sentinel: k.is_sentinel(),

@@ -1,0 +1,525 @@
+//! Lane-chunked SoA profiling kernel — the vectorized counterpart of
+//! `profile_native`.
+//!
+//! Cells are processed in fixed-width chunks of [`LANES`] f32 lanes laid
+//! out for auto-vectorization: per-combo constants are hoisted once
+//! (`ComboPre`), the transcendental hot spots go through a lane-wise
+//! polynomial `exp` ([`exp_lanes`]), and the per-lane combine is straight
+//! arithmetic with no calls. This breaks the bit-identical contract the
+//! scalar mirror keeps with the AOT artifact, so exactness is recovered
+//! with a guard band: any lane whose |margin| falls below [`GUARD`] is
+//! recomputed through the exact scalar path (`ScalarPre::margins`, the
+//! same code `profile_native` runs). Error counts are therefore
+//! *identical* to `profile_native` as long as the approximation error
+//! stays below `GUARD` — measured at < 3e-7 against a 1e-4 band (~350x
+//! slack; see DESIGN.md §7), and continuously asserted by
+//! `tests/runtime_simd_xcheck.rs`. Reported margins are approximate
+//! within `GUARD`.
+//!
+//! [`probe_one`] is the early-exit companion used by
+//! `ProfilingBackend::pass_probe`: it visits cells weakest-first via the
+//! precomputed screening order (`CellArrays::screening`) and stops at the
+//! first budget-exceeding failure, so failing combos cost O(weak prefix)
+//! instead of O(N).
+
+use super::arrays::{CellArrays, ProfileOutput};
+use super::charge::Combo;
+use super::params::ModelParams;
+use super::profile::{finalize_output, ComboPre, ScalarPre, SENTINEL_MARGIN};
+
+/// Chunk width. Eight f32 lanes = one AVX2 register / two NEON registers;
+/// the compiler keeps the lane loops branch-free and vectorizes them.
+pub const LANES: usize = 8;
+
+/// Guard band (absolute, on margins): lanes with |margin| below this are
+/// re-evaluated exactly. Sized ~350x above the measured worst-case
+/// |approx - exact| margin deviation (< 3e-7 over the physical parameter
+/// ranges); at this width ~0.02% of cell evaluations take the fallback.
+pub const GUARD: f32 = 1e-4;
+
+const LOG2E: f32 = std::f32::consts::LOG2_E;
+const LN2: f32 = std::f32::consts::LN_2;
+/// 1.5 * 2^23: adding and subtracting rounds an f32 in [-2^22, 2^22] to
+/// the nearest integer (the usual round-to-nearest trick).
+const MAGIC: f32 = 12_582_912.0;
+
+/// Lane-wise polynomial exp for non-positive arguments.
+///
+/// exp(x) = 2^n * e^r with n = round(x * log2 e) and r = (x*log2 e - n) * ln 2,
+/// |r| <= ln2/2; e^r by a degree-6 Taylor polynomial (max relative error
+/// ~4e-6 including the f32 argument rounding at large |x|), 2^n by exponent
+/// bit assembly. Arguments are clamped to [-87, 0] — every call site feeds
+/// a decay term `-w/tau` with w >= 0, tau > 0, so the upper clamp is inert
+/// and the lower clamp flushes to ~1e-38 where exact exp underflows anyway.
+#[inline]
+fn exp_lanes(x: [f32; LANES]) -> [f32; LANES] {
+    let mut out = [0.0f32; LANES];
+    for l in 0..LANES {
+        let xc = x[l].clamp(-87.0, 0.0);
+        let y = xc * LOG2E;
+        let n_f = (y + MAGIC) - MAGIC;
+        let r = (y - n_f) * LN2;
+        let mut p = 1.0 / 720.0;
+        p = p * r + 1.0 / 120.0;
+        p = p * r + 1.0 / 24.0;
+        p = p * r + 1.0 / 6.0;
+        p = p * r + 0.5;
+        p = p * r + 1.0;
+        p = p * r + 1.0;
+        let scale = f32::from_bits(((n_f as i32 + 127) << 23) as u32);
+        out[l] = p * scale;
+    }
+    out
+}
+
+/// f32 copies of the per-profile constants the lane loops consume.
+struct KernelConsts {
+    a_max: f32,
+    q_knee: f32,
+    g_off: f32,
+    v_read: f32,
+    v_bl: f32,
+    q_deficit: f32,
+    kw_pattern: f32,
+    wr_tau_ratio: f32,
+    k_lin: f32,
+    t_soff: f32,
+    c_rcd_w: f32,
+    t_pre0: f32,
+    c_rp_w: f32,
+    w_rcd_std: f32,
+    w_rp_std: f32,
+    knee6: bool,
+    knee_pow: f32,
+}
+
+impl KernelConsts {
+    fn new(p: &ModelParams) -> Self {
+        KernelConsts {
+            a_max: p.a_max,
+            q_knee: p.q_knee,
+            g_off: p.g_off,
+            v_read: p.v_read(),
+            v_bl: p.v_bl,
+            q_deficit: 1.0 - p.q_share,
+            kw_pattern: p.kw_pattern,
+            wr_tau_ratio: p.wr_tau_ratio,
+            k_lin: p.k_lin,
+            t_soff: p.t_soff_ns,
+            c_rcd_w: p.c_rcd_w,
+            t_pre0: p.t_pre0_ns,
+            c_rp_w: p.c_rp_w,
+            w_rcd_std: (p.spec.trcd_ns as f32 - p.t_soff_ns).max(0.0),
+            w_rp_std: (p.spec.trp_ns as f32 - p.t_pre0_ns).max(0.0),
+            knee6: p.knee_pow == 6.0,
+            knee_pow: p.knee_pow,
+        }
+    }
+}
+
+/// Knee-shaped sense amplitude, in place: x -> min(max(x, 0)^knee_pow, 1).
+/// The shipped knee_pow = 6 specializes to three lane-parallel multiplies.
+#[inline]
+fn knee_lanes(kc: &KernelConsts, x: &mut [f32; LANES]) {
+    if kc.knee6 {
+        for v in x.iter_mut() {
+            let c = v.max(0.0);
+            let c2 = c * c;
+            *v = (c2 * c2 * c2).min(1.0);
+        }
+    } else {
+        for v in x.iter_mut() {
+            *v = v.max(0.0).powf(kc.knee_pow).min(1.0);
+        }
+    }
+}
+
+/// One chunk of cell-parameter lanes (plus the hoisted standard-tRP
+/// precharge offsets); each slice must hold at least LANES values.
+#[derive(Clone, Copy)]
+struct LaneRefs<'a> {
+    qcap: &'a [f32],
+    tau_s: &'a [f32],
+    tau_r: &'a [f32],
+    tau_p: &'a [f32],
+    lam85: &'a [f32],
+    off_std: &'a [f32],
+}
+
+/// Approximate (read, write) margins for one chunk of LANES cells under
+/// one hoisted combo.
+#[inline]
+fn lane_margins(kp: &ComboPre, kc: &KernelConsts, ln: &LaneRefs)
+                -> ([f32; LANES], [f32; LANES]) {
+    let LaneRefs { qcap, tau_s, tau_r, tau_p, lam85, off_std } = *ln;
+    let tref = kp.combo.tref_ms;
+    let trcd = kp.combo.trcd;
+    let trp = kp.combo.trp;
+
+    let mut a_decay = [0.0f32; LANES];
+    let mut a_off = [0.0f32; LANES];
+    let mut a_ras = [0.0f32; LANES];
+    let mut a_rcd = [0.0f32; LANES];
+    let mut a_wr = [0.0f32; LANES];
+    let mut a_rcd_std = [0.0f32; LANES];
+    for l in 0..LANES {
+        let tau_t = tau_s[l] * kp.tau_fac;
+        a_decay[l] = -(lam85[l] * kp.pow2) * tref;
+        a_off[l] = -kp.w_rp / tau_p[l];
+        a_ras[l] = -kp.w_ras / tau_r[l];
+        a_rcd[l] = -kp.w_rcd / tau_t;
+        a_wr[l] = -kp.w_wr / (kc.wr_tau_ratio * tau_r[l]);
+        a_rcd_std[l] = -kc.w_rcd_std / tau_t;
+    }
+    let e_decay = exp_lanes(a_decay);
+    let e_off = exp_lanes(a_off);
+    let e_ras = exp_lanes(a_ras);
+    let e_rcd = exp_lanes(a_rcd);
+    let e_wr = exp_lanes(a_wr);
+    let e_rcd_std = exp_lanes(a_rcd_std);
+
+    let mut amp_r = [0.0f32; LANES];
+    let mut amp_w = [0.0f32; LANES];
+    for l in 0..LANES {
+        let decay = e_decay[l];
+        amp_r[l] = qcap[l] * (1.0 - kc.q_deficit * e_ras[l]) * decay
+            / kc.q_knee;
+        amp_w[l] = qcap[l] * kc.kw_pattern * (1.0 - e_wr[l]) * decay
+            / kc.q_knee;
+    }
+    knee_lanes(kc, &mut amp_r);
+    knee_lanes(kc, &mut amp_w);
+
+    let mut m_r = [0.0f32; LANES];
+    let mut m_w = [0.0f32; LANES];
+    for l in 0..LANES {
+        let tau_t = tau_s[l] * kp.tau_fac;
+        let v_r = kc.a_max * amp_r[l] * (1.0 - e_rcd[l]);
+        m_r[l] = v_r - kc.g_off * (kc.v_bl * e_off[l]) - kc.v_read;
+
+        let v_w = kc.a_max * amp_w[l] * (1.0 - e_rcd_std[l]);
+        let m_w_rb = v_w - kc.g_off * off_std[l] - kc.v_read;
+        let m_w_rcd = kc.k_lin * (trcd - (kc.t_soff + kc.c_rcd_w * tau_t));
+        let m_w_rp = kc.k_lin * (trp - (kc.t_pre0 + kc.c_rp_w * tau_p[l]));
+        m_w[l] = m_w_rb.min(m_w_rcd).min(m_w_rp);
+    }
+    (m_r, m_w)
+}
+
+/// Vectorized evaluation of `combos` against every sampled cell — the
+/// drop-in counterpart of `profile_native` (identical error counts;
+/// margins within [`GUARD`]).
+pub fn profile_simd(arrays: &CellArrays, combos: &[Combo],
+                    p: &ModelParams) -> ProfileOutput {
+    let mut out =
+        ProfileOutput::zeroed(combos.len(), arrays.banks, arrays.chips);
+    let pre: Vec<ComboPre> =
+        combos.iter().map(|k| ComboPre::new(k, p)).collect();
+    let spre = ScalarPre::new(p);
+    let kc = KernelConsts::new(p);
+
+    let n = arrays.cells;
+    let chunks = n / LANES;
+    let mut off_std = vec![0.0f32; chunks * LANES];
+
+    for b in 0..arrays.banks {
+        for c in 0..arrays.chips {
+            let base = (b * arrays.chips + c) * n;
+            let qcap = &arrays.qcap[base..base + n];
+            let tau_s = &arrays.tau_s[base..base + n];
+            let tau_r = &arrays.tau_r[base..base + n];
+            let tau_p = &arrays.tau_p[base..base + n];
+            let lam85 = &arrays.lam85[base..base + n];
+
+            // Combo-independent per-cell precharge offsets (approx).
+            for ch in 0..chunks {
+                let o = ch * LANES;
+                let mut a = [0.0f32; LANES];
+                for l in 0..LANES {
+                    a[l] = -kc.w_rp_std / tau_p[o + l];
+                }
+                let e = exp_lanes(a);
+                for l in 0..LANES {
+                    off_std[o + l] = kc.v_bl * e[l];
+                }
+            }
+
+            for (ki, kp) in pre.iter().enumerate() {
+                let oi = out.idx(ki, b, c);
+                if kp.sentinel {
+                    if out.mmin_r[oi] > SENTINEL_MARGIN {
+                        out.mmin_r[oi] = SENTINEL_MARGIN;
+                        out.mmin_w[oi] = SENTINEL_MARGIN;
+                    }
+                    continue;
+                }
+                let mut nr = 0u32;
+                let mut nw = 0u32;
+                let mut min_r = f32::INFINITY;
+                let mut min_w = f32::INFINITY;
+
+                for ch in 0..chunks {
+                    let o = ch * LANES;
+                    let (m_r, m_w) = lane_margins(kp, &kc, &LaneRefs {
+                        qcap: &qcap[o..],
+                        tau_s: &tau_s[o..],
+                        tau_r: &tau_r[o..],
+                        tau_p: &tau_p[o..],
+                        lam85: &lam85[o..],
+                        off_std: &off_std[o..],
+                    });
+                    for l in 0..LANES {
+                        let (mut r, mut w) = (m_r[l], m_w[l]);
+                        if r.abs() < GUARD || w.abs() < GUARD {
+                            let cell = arrays.cell(base + o + l);
+                            let ex = spre.margins(
+                                kp, &cell, spre.off_std(cell.tau_p));
+                            r = ex.0;
+                            w = ex.1;
+                        }
+                        nr += (r < 0.0) as u32;
+                        nw += (w < 0.0) as u32;
+                        min_r = min_r.min(r);
+                        min_w = min_w.min(w);
+                    }
+                }
+                // Remainder cells (< LANES): exact scalar path.
+                for j in chunks * LANES..n {
+                    let cell = arrays.cell(base + j);
+                    let (r, w) =
+                        spre.margins(kp, &cell, spre.off_std(cell.tau_p));
+                    nr += (r < 0.0) as u32;
+                    nw += (w < 0.0) as u32;
+                    min_r = min_r.min(r);
+                    min_w = min_w.min(w);
+                }
+
+                out.err_r[oi] = nr as f32;
+                out.err_w[oi] = nw as f32;
+                out.mmin_r[oi] = min_r;
+                out.mmin_w[oi] = min_w;
+            }
+        }
+    }
+
+    finalize_output(&mut out, combos.len());
+    out
+}
+
+/// Early-exit pass probe for one combo: does the failing-cell count of the
+/// selected test chain stay within `budget` (over the whole module, or
+/// over one bank when `bank` is given)?
+///
+/// Cells are visited weakest-first via the precomputed screening order
+/// (falling back to array order when absent), in LANES-wide gathered
+/// chunks of the approximate kernel with the same [`GUARD`]-band exact
+/// fallback — so the decision always equals the one derived from a full
+/// `profile_native` pass, while failing combos exit after the weak prefix.
+pub fn probe_one(arrays: &CellArrays, combo: &Combo, p: &ModelParams,
+                 read_chain: bool, bank: Option<usize>, budget: f64) -> bool {
+    if combo.is_sentinel() {
+        // Sentinels contribute zero failures; compare like everything else
+        // so degenerate (negative) budgets agree with the full profile.
+        return 0.0 <= budget;
+    }
+    let kp = ComboPre::new(combo, p);
+    let spre = ScalarPre::new(p);
+    let kc = KernelConsts::new(p);
+    let order = arrays.screening();
+    let per_bank = arrays.chips * arrays.cells;
+
+    let mut fails = 0.0f64;
+    let mut gathered = [0usize; LANES];
+    let mut g = 0usize;
+    for pos in 0..arrays.len() {
+        let i = match order {
+            Some(s) => s[pos] as usize,
+            None => pos,
+        };
+        if let Some(bk) = bank {
+            if i / per_bank != bk {
+                continue;
+            }
+        }
+        gathered[g] = i;
+        g += 1;
+        if g == LANES {
+            g = 0;
+            fails +=
+                chunk_fails(arrays, &gathered, &kp, &spre, &kc, read_chain)
+                    as f64;
+            if fails > budget {
+                return false;
+            }
+        }
+    }
+    for &i in gathered.iter().take(g) {
+        let cell = arrays.cell(i);
+        let (m_r, m_w) = spre.margins(&kp, &cell, spre.off_std(cell.tau_p));
+        let m = if read_chain { m_r } else { m_w };
+        if m < 0.0 {
+            fails += 1.0;
+            if fails > budget {
+                return false;
+            }
+        }
+    }
+    // Final comparison (not a constant `true`) so degenerate budgets —
+    // e.g. a negative one that fails even error-free combos — agree with
+    // `PassCriterion::evaluate` exactly, as the trait contract requires.
+    fails <= budget
+}
+
+/// Failure count of one gathered chunk for the selected chain, with the
+/// guard-band exact fallback.
+fn chunk_fails(arrays: &CellArrays, idxs: &[usize; LANES], kp: &ComboPre,
+               spre: &ScalarPre, kc: &KernelConsts, read_chain: bool) -> u32 {
+    let mut qcap = [0.0f32; LANES];
+    let mut tau_s = [0.0f32; LANES];
+    let mut tau_r = [0.0f32; LANES];
+    let mut tau_p = [0.0f32; LANES];
+    let mut lam85 = [0.0f32; LANES];
+    for l in 0..LANES {
+        let i = idxs[l];
+        qcap[l] = arrays.qcap[i];
+        tau_s[l] = arrays.tau_s[i];
+        tau_r[l] = arrays.tau_r[i];
+        tau_p[l] = arrays.tau_p[i];
+        lam85[l] = arrays.lam85[i];
+    }
+    let mut a = [0.0f32; LANES];
+    for l in 0..LANES {
+        a[l] = -kc.w_rp_std / tau_p[l];
+    }
+    let e = exp_lanes(a);
+    let mut off_std = [0.0f32; LANES];
+    for l in 0..LANES {
+        off_std[l] = kc.v_bl * e[l];
+    }
+    let (m_r, m_w) = lane_margins(kp, kc, &LaneRefs {
+        qcap: &qcap,
+        tau_s: &tau_s,
+        tau_r: &tau_r,
+        tau_p: &tau_p,
+        lam85: &lam85,
+        off_std: &off_std,
+    });
+    let mut fails = 0u32;
+    for l in 0..LANES {
+        let m = if read_chain { m_r[l] } else { m_w[l] };
+        let m = if m.abs() < GUARD {
+            let cell = arrays.cell(idxs[l]);
+            let ex = spre.margins(kp, &cell, spre.off_std(cell.tau_p));
+            if read_chain {
+                ex.0
+            } else {
+                ex.1
+            }
+        } else {
+            m
+        };
+        fails += (m < 0.0) as u32;
+    }
+    fails
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::params;
+    use crate::model::profile::profile_native;
+    use crate::population::generate_dimm;
+
+    #[test]
+    fn poly_exp_is_accurate_over_the_domain() {
+        // Dense log-spaced sweep of the magnitude range the kernel feeds.
+        let mut worst = 0.0f64;
+        let mut mag = 1e-6f64;
+        while mag < 87.0 {
+            let mut lanes = [0.0f32; LANES];
+            for (l, v) in lanes.iter_mut().enumerate() {
+                // Spread the lanes below the magnitude, capped inside the
+                // [-87, 0] domain the kernel guarantees its callers stay in.
+                let m = (mag * (1.0 + l as f64 / LANES as f64)).min(86.5);
+                *v = -m as f32;
+            }
+            let approx = exp_lanes(lanes);
+            for l in 0..LANES {
+                let exact = lanes[l].exp();
+                if exact > 0.0 {
+                    let rel = ((approx[l] as f64 - exact as f64)
+                        / exact as f64)
+                        .abs();
+                    worst = worst.max(rel);
+                }
+            }
+            mag *= 1.01;
+        }
+        assert!(worst < 1e-5, "poly exp rel err {worst:.3e}");
+        // Exact endpoints.
+        assert_eq!(exp_lanes([0.0; LANES])[0], 1.0);
+    }
+
+    #[test]
+    fn simd_matches_native_on_a_generated_dimm() {
+        let p = params();
+        // 67 cells: exercises both the lane chunks and the remainder path.
+        let d = generate_dimm(4, 67, p);
+        let combos = [
+            Combo { trcd: 13.75, tras: 35.0, twr: 15.0, trp: 13.75,
+                    tref_ms: 64.0, temp_c: 85.0 },
+            Combo { trcd: 5.0, tras: 16.25, twr: 5.0, trp: 5.0,
+                    tref_ms: 448.0, temp_c: 85.0 },
+            Combo::sentinel(),
+            Combo { trcd: 8.75, tras: 20.0, twr: 6.25, trp: 7.5,
+                    tref_ms: 200.0, temp_c: 55.0 },
+        ];
+        let a = profile_simd(&d.arrays, &combos, p);
+        let b = profile_native(&d.arrays, &combos, p);
+        assert_eq!(a.err_r, b.err_r);
+        assert_eq!(a.err_w, b.err_w);
+        assert_eq!(a.tot_r, b.tot_r);
+        assert_eq!(a.tot_w, b.tot_w);
+        for (x, y) in a.mmin_r.iter().zip(&b.mmin_r) {
+            assert!((x - y).abs() <= GUARD, "mmin_r {x} vs {y}");
+        }
+        for (x, y) in a.mmin_w.iter().zip(&b.mmin_w) {
+            assert!((x - y).abs() <= GUARD, "mmin_w {x} vs {y}");
+        }
+        // Sentinel slot reports the sentinel margin.
+        assert_eq!(a.mmin_r[a.idx(2, 0, 0)], SENTINEL_MARGIN);
+    }
+
+    #[test]
+    fn probe_matches_full_profile_decision() {
+        let p = params();
+        let d = generate_dimm(2, 96, p);
+        for combo in [
+            Combo { trcd: 13.75, tras: 35.0, twr: 15.0, trp: 13.75,
+                    tref_ms: 64.0, temp_c: 85.0 },
+            Combo { trcd: 6.25, tras: 17.5, twr: 5.0, trp: 6.25,
+                    tref_ms: 384.0, temp_c: 85.0 },
+        ] {
+            let out = profile_native(&d.arrays, &[combo], p);
+            for (read, errs) in
+                [(true, out.read_errors(0)), (false, out.write_errors(0))]
+            {
+                for budget in [0.0, 2.0, 64.0] {
+                    assert_eq!(
+                        probe_one(&d.arrays, &combo, p, read, None, budget),
+                        errs <= budget,
+                        "read={read} budget={budget} errs={errs}"
+                    );
+                }
+            }
+            for bank in 0..d.arrays.banks {
+                let be = out.bank_errors_read(0)[bank];
+                assert_eq!(
+                    probe_one(&d.arrays, &combo, p, true, Some(bank), 0.0),
+                    be == 0.0,
+                    "bank {bank}"
+                );
+            }
+        }
+    }
+}

@@ -87,6 +87,10 @@ pub fn generate_dimm(id: usize, cells_per_chip_bank: usize,
             }
         }
     }
+    // One-time weakest-first screening order for the pass-probe fast path
+    // (runtime::ProfilingBackend::pass_probe); heuristic only — results
+    // never depend on it.
+    arrays.compute_screening();
     Dimm { id, vendor: vendor.name.clone(), vendor_idx: vi, arrays }
 }
 

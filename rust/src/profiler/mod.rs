@@ -1,7 +1,8 @@
 //! The profiling orchestrator — the software stand-in for the SoftMC
 //! FPGA testing platform: refresh-interval sweeps, timing-parameter
 //! sweeps, the per-DIMM characterization battery, and the repeatability
-//! analysis. See DESIGN.md §2/§7.
+//! analysis. See DESIGN.md §2/§8 (and §7 for the vectorized engine the
+//! sweeps probe through).
 
 pub mod refresh;
 pub mod repeat;
@@ -12,5 +13,6 @@ pub use refresh::{profile_refresh, RefreshProfile, SAFETY_MARGIN_MS};
 pub use repeat::{repeatability, RepeatabilityReport};
 pub use results::{profile_dimm, summarize, verify_timings, DimmProfile,
                   PopulationSummary, TimingProfile};
-pub use sweep::{sweep, sweep_bank, sweep_ecc, sweep_exhaustive, sweep_with,
-                BestCombo, PassFn, SweepResult, TestKind};
+pub use sweep::{sweep, sweep_bank, sweep_ecc, sweep_exhaustive, sweep_par,
+                sweep_seeded, sweep_with, sweep_with_seed, BestCombo,
+                FrontierPoint, SweepOpts, SweepResult, TestKind};

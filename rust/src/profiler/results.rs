@@ -5,7 +5,7 @@ use anyhow::Result;
 use crate::model::Combo;
 use crate::population::Dimm;
 use crate::profiler::refresh::{profile_refresh, RefreshProfile};
-use crate::profiler::sweep::{sweep, BestCombo, TestKind};
+use crate::profiler::sweep::{sweep_seeded, BestCombo, SweepResult, TestKind};
 use crate::runtime::ProfilingBackend;
 use crate::timing::TimingParams;
 use crate::util;
@@ -63,32 +63,48 @@ pub struct DimmProfile {
 
 /// Profile one DIMM end to end: refresh sweep at 85degC to establish the
 /// safe intervals, then timing sweeps at 85degC and 55degC (§5.1's
-/// procedure, applied per-DIMM as in §5.2).
+/// procedure, applied per-DIMM as in §5.2). The 55degC sweeps are
+/// warm-started from the 85degC frontiers — the pass surface is monotone
+/// across temperature, so each pair's search opens at (and re-proves) the
+/// hot boundary instead of bisecting from scratch; results are identical
+/// to cold sweeps (see `sweep::sweep_seeded`).
 pub fn profile_dimm(backend: &mut dyn ProfilingBackend, dimm: &Dimm)
                     -> Result<DimmProfile> {
     let refresh85 = profile_refresh(backend, &dimm.arrays, 85.0)?;
     let tref_r = refresh85.safe_read_ms();
     let tref_w = refresh85.safe_write_ms();
 
-    let mut at = |temp: f64| -> Result<TimingProfile> {
-        let read = sweep(backend, &dimm.arrays, TestKind::Read, temp, tref_r)?
-            .best
-            .ok_or_else(|| anyhow::anyhow!(
-                "dimm {} infeasible read sweep at {temp}C", dimm.id))?;
-        let write = sweep(backend, &dimm.arrays, TestKind::Write, temp, tref_w)?
-            .best
-            .ok_or_else(|| anyhow::anyhow!(
-                "dimm {} infeasible write sweep at {temp}C", dimm.id))?;
-        Ok(TimingProfile { temp_c: temp, tref_read_ms: tref_r,
-                           tref_write_ms: tref_w, read, write })
+    let a = &dimm.arrays;
+    let read85 =
+        sweep_seeded(backend, a, TestKind::Read, 85.0, tref_r, None)?;
+    let write85 =
+        sweep_seeded(backend, a, TestKind::Write, 85.0, tref_w, None)?;
+    let read55 =
+        sweep_seeded(backend, a, TestKind::Read, 55.0, tref_r, Some(&read85))?;
+    let write55 = sweep_seeded(backend, a, TestKind::Write, 55.0, tref_w,
+                               Some(&write85))?;
+
+    let at = |temp: f64, read: SweepResult, write: SweepResult|
+     -> Result<TimingProfile> {
+        let best = |s: SweepResult, what: &str| {
+            s.best.ok_or_else(|| anyhow::anyhow!(
+                "dimm {} infeasible {what} sweep at {temp}C", dimm.id))
+        };
+        Ok(TimingProfile {
+            temp_c: temp,
+            tref_read_ms: tref_r,
+            tref_write_ms: tref_w,
+            read: best(read, "read")?,
+            write: best(write, "write")?,
+        })
     };
 
     Ok(DimmProfile {
         id: dimm.id,
         vendor: dimm.vendor.clone(),
         refresh85: refresh85.clone(),
-        at85: at(85.0)?,
-        at55: at(55.0)?,
+        at85: at(85.0, read85, write85)?,
+        at55: at(55.0, read55, write55)?,
     })
 }
 

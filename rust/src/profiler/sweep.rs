@@ -5,17 +5,27 @@
 //!
 //! The pass/fail surface is monotone in every parameter, so instead of the
 //! full grid (|tRCD| x |tRAS| x |tRP| ~ 1k combos) we run a *wave-parallel
-//! bisection*: for every (tRCD, tRP) pair the minimum acceptable tRAS (read)
-//! or tWR (write) is found by binary search, and all active pairs probe
-//! their midpoint in one backend batch per wave. This turns ~1.6k combo
-//! evaluations into ~6 batched calls — the optimization that makes the
-//! PJRT path (per-call dispatch cost) fast; see EXPERIMENTS.md §Perf.
-//! `repro ablate sweep-exhaustive` cross-checks it against the full grid.
+//! search*: for every (tRCD, tRP) pair the minimum acceptable tRAS (read)
+//! or tWR (write) is found by a galloping binary search, and all active
+//! pairs probe their next index in one backend batch per wave. Probes go
+//! through `ProfilingBackend::pass_probe`, so an engine with an early-exit
+//! probe (the SIMD backend's weakest-first screen) decides failing combos
+//! in O(weak prefix) instead of O(cells).
+//!
+//! Sweeps can be *warm-started* from a neighboring (temperature, tREF)
+//! point's frontier (`sweep_seeded` / `sweep_with_seed`): each pair's
+//! search then opens at the seed index and gallops outward, converging in
+//! ~2 waves when the frontier barely moves (the surface is monotone across
+//! the temperature and refresh axes too). Seeding is an *initial guess*,
+//! not an assumption — every boundary is re-proven by probes, so a seed
+//! from either direction (or a wrong one) changes only the wave count,
+//! never the result. `repro ablate sweep-exhaustive` and
+//! `tests/runtime_simd_xcheck.rs` cross-check against the full grid.
 
 use anyhow::Result;
 
 use crate::model::{CellArrays, Combo};
-use crate::runtime::ProfilingBackend;
+use crate::runtime::{PassCriterion, ProbeKind, ProfilingBackend};
 use crate::timing::{SweepGrids, TimingParams};
 
 /// Which test chain drives the sweep.
@@ -23,6 +33,13 @@ use crate::timing::{SweepGrids, TimingParams};
 pub enum TestKind {
     Read,  // tRCD x tRAS x tRP, tWR at standard
     Write, // tRCD x tWR x tRP, tRAS at standard
+}
+
+fn probe_kind(kind: TestKind) -> ProbeKind {
+    match kind {
+        TestKind::Read => ProbeKind::Read,
+        TestKind::Write => ProbeKind::Write,
+    }
 }
 
 /// Minimum acceptable third parameter for one (tRCD, tRP) pair.
@@ -100,18 +117,189 @@ fn third_grid(kind: TestKind, grids: &SweepGrids, trcd: f64) -> Vec<f64> {
     }
 }
 
-/// Pass criterion for a combo: inspects the profiling output at index `k`.
-/// The standard sweep requires zero errors module-wide; the bank-granular
-/// extension (paper §5.2 "future work") requires zero errors in one bank;
-/// the ECC extension (§9.2) tolerates a correctable error budget.
-pub type PassFn<'a> = &'a dyn Fn(&crate::model::ProfileOutput, usize) -> bool;
+/// Search state of one (tRCD, tRP) pair over its descending third-
+/// parameter grid. Invariant: the acceptance boundary (largest passing
+/// index; passes form a prefix by monotonicity) lies strictly between
+/// `lo` (largest index *proven* to pass) and `hi` (smallest index
+/// *proven* to fail). Every probe lands in the open unknown interval, so
+/// each wave strictly shrinks it and the search terminates with the same
+/// boundary the exhaustive scan finds — regardless of the seed.
+#[derive(Debug, Clone)]
+struct PairState {
+    trcd: f64,
+    trp: f64,
+    grid: Vec<f64>, // descending third-parameter grid
+    seed: Option<usize>,
+    lo: Option<usize>, // largest index confirmed passing
+    hi: Option<usize>, // smallest index confirmed failing
+    step: usize,       // galloping stride
+}
 
-/// Wave-parallel bisection over all (tRCD, tRP) pairs with the standard
+impl PairState {
+    fn new(trcd: f64, trp: f64, grid: Vec<f64>, seed: Option<usize>) -> Self {
+        // Seeded pairs expect the boundary nearby: gallop from stride 1.
+        // Cold pairs start at the feasibility probe (index 0) and then
+        // jump straight to the far end, degenerating to plain bisection.
+        let step = if seed.is_some() { 1 } else { grid.len().max(1) };
+        PairState { trcd, trp, grid, seed, lo: None, hi: None, step }
+    }
+
+    fn done(&self) -> bool {
+        match (self.lo, self.hi) {
+            (_, Some(0)) => true, // infeasible: most relaxed value fails
+            (Some(p), _) if p + 1 == self.grid.len() => true,
+            (Some(p), Some(f)) => p + 1 == f,
+            _ => false,
+        }
+    }
+
+    fn next_probe(&self) -> usize {
+        match (self.lo, self.hi) {
+            (None, None) => self.seed.unwrap_or(0),
+            (Some(p), None) => (p + self.step).min(self.grid.len() - 1),
+            (None, Some(f)) => f - self.step.min(f),
+            (Some(p), Some(f)) => (p + f) / 2,
+        }
+    }
+
+    fn update(&mut self, probe: usize, pass: bool) {
+        // The stride doubles only once galloping has started (i.e. not on
+        // the opening seed/feasibility probe), so a seeded pair whose
+        // boundary did not move converges in exactly two waves: probe the
+        // seed, then its immediate neighbor.
+        let galloping = self.lo.is_some() || self.hi.is_some();
+        if pass {
+            self.lo = Some(self.lo.map_or(probe, |p| p.max(probe)));
+        } else {
+            self.hi = Some(self.hi.map_or(probe, |f| f.min(probe)));
+        }
+        if galloping {
+            self.step *= 2;
+        }
+    }
+
+    fn min_third(&self) -> Option<f64> {
+        if self.hi == Some(0) {
+            return None;
+        }
+        self.lo.map(|p| self.grid[p])
+    }
+}
+
+/// Build the (tRCD, tRP) pair lattice, seeding each pair's search from a
+/// previous frontier when one is given (pairs the seed found infeasible,
+/// or whose seed value is not on this pair's grid, start cold).
+fn build_pairs(kind: TestKind, seed: Option<&SweepResult>) -> Vec<PairState> {
+    let grids = SweepGrids::standard();
+    let mut pairs = Vec::new();
+    for &trcd in &grids.trcd {
+        for &trp in &grids.trp {
+            let grid = third_grid(kind, &grids, trcd);
+            if grid.is_empty() {
+                continue;
+            }
+            let seed_idx = seed.and_then(|s| {
+                s.frontier
+                    .iter()
+                    .find(|f| f.trcd_ns == trcd && f.trp_ns == trp)
+                    .and_then(|f| f.min_third_ns)
+                    .and_then(|third| grid.iter().position(|t| *t == third))
+            });
+            pairs.push(PairState::new(trcd, trp, grid, seed_idx));
+        }
+    }
+    pairs
+}
+
+/// Run the batched wave loop until every pair's boundary is proven.
+fn solve_pairs(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
+               kind: TestKind, temp_c: f64, tref_ms: f64,
+               criterion: PassCriterion, pairs: &mut [PairState])
+               -> Result<()> {
+    let pk = probe_kind(kind);
+    loop {
+        let active: Vec<usize> = pairs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !p.done())
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let probes: Vec<usize> =
+            active.iter().map(|&i| pairs[i].next_probe()).collect();
+        let combos: Vec<Combo> = active
+            .iter()
+            .zip(&probes)
+            .map(|(&i, &pr)| {
+                let p = &pairs[i];
+                combo_for(kind, p.trcd, p.grid[pr], p.trp, tref_ms, temp_c)
+            })
+            .collect();
+        let pass = backend.pass_probe(arrays, &combos, pk, criterion)?;
+        for ((&i, &pr), ok) in active.iter().zip(&probes).zip(pass) {
+            pairs[i].update(pr, ok);
+        }
+    }
+}
+
+/// Pick the most-reduced acceptable combination off a frontier.
+fn best_of(kind: TestKind, frontier: &[FrontierPoint]) -> Option<BestCombo> {
+    let std = TimingParams::ddr3_standard();
+    let std_sum = match kind {
+        TestKind::Read => std.read_sum_ns(),
+        TestKind::Write => std.write_sum_ns(),
+    };
+    frontier
+        .iter()
+        .filter_map(|f| {
+            f.min_third_ns.map(|third| BestCombo {
+                trcd_ns: f.trcd_ns,
+                third_ns: third,
+                trp_ns: f.trp_ns,
+                sum_ns: f.trcd_ns + third + f.trp_ns,
+                reduction: 1.0 - (f.trcd_ns + third + f.trp_ns) / std_sum,
+            })
+        })
+        .min_by(|a, b| {
+            // Tie-break equal sums toward lower tRCD, then lower tRP —
+            // the balance the paper's per-parameter averages reflect.
+            (a.sum_ns, a.trcd_ns, a.trp_ns)
+                .partial_cmp(&(b.sum_ns, b.trcd_ns, b.trp_ns))
+                .unwrap()
+        })
+}
+
+fn finalize(kind: TestKind, temp_c: f64, tref_ms: f64,
+            pairs: &[PairState]) -> SweepResult {
+    let frontier: Vec<FrontierPoint> = pairs
+        .iter()
+        .map(|p| FrontierPoint {
+            trcd_ns: p.trcd,
+            trp_ns: p.trp,
+            min_third_ns: p.min_third(),
+        })
+        .collect();
+    let best = best_of(kind, &frontier);
+    SweepResult { kind, temp_c, tref_ms, frontier, best }
+}
+
+/// Wave-parallel search over all (tRCD, tRP) pairs with the standard
 /// module-wide zero-error criterion.
 pub fn sweep(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
              kind: TestKind, temp_c: f64, tref_ms: f64) -> Result<SweepResult> {
-    let pass: PassFn = &|out, k| errors_of(kind, out, k) == 0.0;
-    sweep_with(backend, arrays, kind, temp_c, tref_ms, pass)
+    sweep_with_seed(backend, arrays, kind, temp_c, tref_ms,
+                    PassCriterion::Module { budget: 0.0 }, None)
+}
+
+/// [`sweep`] warm-started from a neighboring (temperature, tREF) point's
+/// frontier — the campaign fast path (the result is seed-independent).
+pub fn sweep_seeded(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
+                    kind: TestKind, temp_c: f64, tref_ms: f64,
+                    seed: Option<&SweepResult>) -> Result<SweepResult> {
+    sweep_with_seed(backend, arrays, kind, temp_c, tref_ms,
+                    PassCriterion::Module { budget: 0.0 }, seed)
 }
 
 /// Sweep for a single bank: a combo is acceptable iff that bank is
@@ -119,11 +307,8 @@ pub fn sweep(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
 pub fn sweep_bank(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
                   kind: TestKind, temp_c: f64, tref_ms: f64, bank: usize)
                   -> Result<SweepResult> {
-    let pass: PassFn = &|out, k| match kind {
-        TestKind::Read => out.bank_errors_read(k)[bank] == 0.0,
-        TestKind::Write => out.bank_errors_write(k)[bank] == 0.0,
-    };
-    sweep_with(backend, arrays, kind, temp_c, tref_ms, pass)
+    sweep_with_seed(backend, arrays, kind, temp_c, tref_ms,
+                    PassCriterion::Bank { bank }, None)
 }
 
 /// Sweep with an ECC budget: up to `budget` failing cells module-wide are
@@ -132,120 +317,80 @@ pub fn sweep_bank(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
 pub fn sweep_ecc(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
                  kind: TestKind, temp_c: f64, tref_ms: f64, budget: f64)
                  -> Result<SweepResult> {
-    let pass: PassFn = &|out, k| errors_of(kind, out, k) <= budget;
-    sweep_with(backend, arrays, kind, temp_c, tref_ms, pass)
+    sweep_with_seed(backend, arrays, kind, temp_c, tref_ms,
+                    PassCriterion::Module { budget }, None)
 }
 
-/// Wave-parallel bisection over all (tRCD, tRP) pairs under an arbitrary
+/// Wave-parallel search over all (tRCD, tRP) pairs under an arbitrary
 /// monotone pass criterion.
 pub fn sweep_with(backend: &mut dyn ProfilingBackend, arrays: &CellArrays,
                   kind: TestKind, temp_c: f64, tref_ms: f64,
-                  pass: PassFn) -> Result<SweepResult> {
-    let grids = SweepGrids::standard();
-
-    struct Pair {
-        trcd: f64,
-        trp: f64,
-        grid: Vec<f64>, // descending third-parameter grid
-        lo: usize,      // largest index known error-free
-        hi: usize,      // search upper bound (inclusive)
-        feasible: bool,
-    }
-
-    let mut pairs: Vec<Pair> = Vec::new();
-    for &trcd in &grids.trcd {
-        for &trp in &grids.trp {
-            let grid = third_grid(kind, &grids, trcd);
-            if grid.is_empty() {
-                continue;
-            }
-            let hi = grid.len() - 1;
-            pairs.push(Pair { trcd, trp, grid, lo: 0, hi, feasible: false });
-        }
-    }
-
-    // Wave 0: most-relaxed third parameter decides feasibility.
-    let combos: Vec<Combo> = pairs
-        .iter()
-        .map(|p| combo_for(kind, p.trcd, p.grid[0], p.trp, tref_ms, temp_c))
-        .collect();
-    let out = backend.profile(arrays, &combos)?;
-    for (i, p) in pairs.iter_mut().enumerate() {
-        p.feasible = pass(&out, i);
-    }
-
-    // Bisection waves: probe mid = ceil((lo+hi)/2) for every unconverged
-    // feasible pair; error-free probes advance lo, failing probes pull hi.
-    loop {
-        let active: Vec<usize> = pairs
-            .iter()
-            .enumerate()
-            .filter(|(_, p)| p.feasible && p.lo < p.hi)
-            .map(|(i, _)| i)
-            .collect();
-        if active.is_empty() {
-            break;
-        }
-        let combos: Vec<Combo> = active
-            .iter()
-            .map(|&i| {
-                let p = &pairs[i];
-                let mid = (p.lo + p.hi + 1) / 2;
-                combo_for(kind, p.trcd, p.grid[mid], p.trp, tref_ms, temp_c)
-            })
-            .collect();
-        let out = backend.profile(arrays, &combos)?;
-        for (j, &i) in active.iter().enumerate() {
-            let p = &mut pairs[i];
-            let mid = (p.lo + p.hi + 1) / 2;
-            if pass(&out, j) {
-                p.lo = mid;
-            } else {
-                p.hi = mid - 1;
-            }
-        }
-    }
-
-    let frontier: Vec<FrontierPoint> = pairs
-        .iter()
-        .map(|p| FrontierPoint {
-            trcd_ns: p.trcd,
-            trp_ns: p.trp,
-            min_third_ns: p.feasible.then(|| p.grid[p.lo]),
-        })
-        .collect();
-
-    let std = TimingParams::ddr3_standard();
-    let std_sum = match kind {
-        TestKind::Read => std.read_sum_ns(),
-        TestKind::Write => std.write_sum_ns(),
-    };
-    let best = frontier
-        .iter()
-        .filter_map(|f| {
-            f.min_third_ns.map(|third| BestCombo {
-                trcd_ns: f.trcd_ns,
-                third_ns: third,
-                trp_ns: f.trp_ns,
-                sum_ns: f.trcd_ns + third + f.trp_ns,
-                reduction: 1.0 - (f.trcd_ns + third + f.trp_ns) / std_sum,
-            })
-        })
-        .min_by(|a, b| {
-            // Tie-break equal sums toward lower tRCD, then lower tRP —
-            // the balance the paper's per-parameter averages reflect.
-            (a.sum_ns, a.trcd_ns, a.trp_ns)
-                .partial_cmp(&(b.sum_ns, b.trcd_ns, b.trp_ns))
-                .unwrap()
-        });
-
-    Ok(SweepResult { kind, temp_c, tref_ms, frontier, best })
+                  criterion: PassCriterion) -> Result<SweepResult> {
+    sweep_with_seed(backend, arrays, kind, temp_c, tref_ms, criterion, None)
 }
 
-/// Exhaustive full-grid sweep (the ablation oracle for the bisection).
+/// [`sweep_with`] plus an optional warm-start seed.
+pub fn sweep_with_seed(backend: &mut dyn ProfilingBackend,
+                       arrays: &CellArrays, kind: TestKind, temp_c: f64,
+                       tref_ms: f64, criterion: PassCriterion,
+                       seed: Option<&SweepResult>) -> Result<SweepResult> {
+    let mut pairs = build_pairs(kind, seed);
+    solve_pairs(backend, arrays, kind, temp_c, tref_ms, criterion,
+                &mut pairs)?;
+    Ok(finalize(kind, temp_c, tref_ms, &pairs))
+}
+
+/// Pass criterion + optional warm-start seed for [`sweep_par`].
+#[derive(Clone, Copy, Default)]
+pub struct SweepOpts<'a> {
+    pub criterion: PassCriterion,
+    pub seed: Option<&'a SweepResult>,
+}
+
+/// Parallel sweep: independent (tRCD, tRP) pairs are partitioned into
+/// contiguous chunks and their probe waves driven through `exec::Pool`,
+/// one worker-owned backend per chunk. The frontier is identical for any
+/// job count (pairs never interact; chunks are reassembled in order).
+pub fn sweep_par<F>(make_backend: F, arrays: &CellArrays, kind: TestKind,
+                    temp_c: f64, tref_ms: f64, opts: SweepOpts,
+                    jobs: usize) -> Result<SweepResult>
+where
+    F: Fn() -> Box<dyn ProfilingBackend> + Sync,
+{
+    let SweepOpts { criterion, seed } = opts;
+    let pairs = build_pairs(kind, seed);
+    if pairs.is_empty() {
+        // Degenerate grids (every pair's third grid empty): match the
+        // sequential path's empty frontier instead of panicking in
+        // `chunks(0)`.
+        return Ok(finalize(kind, temp_c, tref_ms, &pairs));
+    }
+    let jobs = jobs.max(1).min(pairs.len());
+    let chunk = pairs.len().div_ceil(jobs);
+    let chunks: Vec<&[PairState]> = pairs.chunks(chunk).collect();
+    let solved = crate::exec::Pool::new(jobs).try_run_init(
+        chunks.len(),
+        &make_backend,
+        |b, i| {
+            let mut ch = chunks[i].to_vec();
+            solve_pairs(b.as_mut(), arrays, kind, temp_c, tref_ms, criterion,
+                        &mut ch)?;
+            Ok(ch)
+        },
+    )?;
+    let pairs: Vec<PairState> = solved.into_iter().flatten().collect();
+    Ok(finalize(kind, temp_c, tref_ms, &pairs))
+}
+
+/// Exhaustive full-grid sweep (the ablation oracle for the wave search).
+/// Each pair's third-parameter grid is evaluated in small chunks and the
+/// scan stops at the chunk containing the first failure — combos past it
+/// are never evaluated (acceptance is a prefix by monotonicity, so the
+/// oracle answer is unchanged).
 pub fn sweep_exhaustive(backend: &mut dyn ProfilingBackend,
                         arrays: &CellArrays, kind: TestKind, temp_c: f64,
                         tref_ms: f64) -> Result<SweepResult> {
+    const CHUNK: usize = 8;
     let grids = SweepGrids::standard();
     let mut frontier = Vec::new();
     for &trcd in &grids.trcd {
@@ -254,47 +399,27 @@ pub fn sweep_exhaustive(backend: &mut dyn ProfilingBackend,
             if grid.is_empty() {
                 continue;
             }
-            let combos: Vec<Combo> = grid
-                .iter()
-                .map(|&t| combo_for(kind, trcd, t, trp, tref_ms, temp_c))
-                .collect();
-            let out = backend.profile(arrays, &combos)?;
-            // grid is descending; acceptance is a prefix by monotonicity.
             let mut min_third = None;
-            for (i, &t) in grid.iter().enumerate() {
-                if errors_of(kind, &out, i) == 0.0 {
-                    min_third = Some(t);
-                } else {
-                    break;
+            'chunks: for chunk in grid.chunks(CHUNK) {
+                let combos: Vec<Combo> = chunk
+                    .iter()
+                    .map(|&t| combo_for(kind, trcd, t, trp, tref_ms, temp_c))
+                    .collect();
+                let out = backend.profile(arrays, &combos)?;
+                // grid is descending; acceptance is a prefix.
+                for (i, &t) in chunk.iter().enumerate() {
+                    if errors_of(kind, &out, i) == 0.0 {
+                        min_third = Some(t);
+                    } else {
+                        break 'chunks;
+                    }
                 }
             }
             frontier.push(FrontierPoint { trcd_ns: trcd, trp_ns: trp,
                                           min_third_ns: min_third });
         }
     }
-    let std = TimingParams::ddr3_standard();
-    let std_sum = match kind {
-        TestKind::Read => std.read_sum_ns(),
-        TestKind::Write => std.write_sum_ns(),
-    };
-    let best = frontier
-        .iter()
-        .filter_map(|f| {
-            f.min_third_ns.map(|third| BestCombo {
-                trcd_ns: f.trcd_ns,
-                third_ns: third,
-                trp_ns: f.trp_ns,
-                sum_ns: f.trcd_ns + third + f.trp_ns,
-                reduction: 1.0 - (f.trcd_ns + third + f.trp_ns) / std_sum,
-            })
-        })
-        .min_by(|a, b| {
-            // Tie-break equal sums toward lower tRCD, then lower tRP —
-            // the balance the paper's per-parameter averages reflect.
-            (a.sum_ns, a.trcd_ns, a.trp_ns)
-                .partial_cmp(&(b.sum_ns, b.trcd_ns, b.trp_ns))
-                .unwrap()
-        });
+    let best = best_of(kind, &frontier);
     Ok(SweepResult { kind, temp_c, tref_ms, frontier, best })
 }
 
@@ -303,7 +428,7 @@ mod tests {
     use super::*;
     use crate::model::params;
     use crate::population::generate_dimm;
-    use crate::runtime::NativeBackend;
+    use crate::runtime::{NativeBackend, SimdBackend};
 
     #[test]
     fn bisection_matches_exhaustive() {
@@ -320,6 +445,70 @@ mod tests {
                 assert_eq!(a.min_third_ns, o.min_third_ns,
                            "pair ({}, {})", a.trcd_ns, a.trp_ns);
             }
+        }
+    }
+
+    #[test]
+    fn seeded_sweep_matches_cold_in_both_directions() {
+        // Warm starts are a wave-count optimization only: seeding from the
+        // easier point, the harder point, or the wrong chain must all
+        // reproduce the cold frontier exactly.
+        let d = generate_dimm(3, 64, params());
+        let mut b = SimdBackend::new();
+        let hot = sweep(&mut b, &d.arrays, TestKind::Read, 85.0, 200.0)
+            .unwrap();
+        let cool = sweep(&mut b, &d.arrays, TestKind::Read, 55.0, 200.0)
+            .unwrap();
+        let check = |got: &SweepResult, want: &SweepResult| {
+            for (a, o) in got.frontier.iter().zip(&want.frontier) {
+                assert_eq!(a.min_third_ns, o.min_third_ns,
+                           "pair ({}, {})", a.trcd_ns, a.trp_ns);
+            }
+        };
+        let warm_cool = sweep_seeded(&mut b, &d.arrays, TestKind::Read, 55.0,
+                                     200.0, Some(&hot)).unwrap();
+        check(&warm_cool, &cool);
+        let warm_hot = sweep_seeded(&mut b, &d.arrays, TestKind::Read, 85.0,
+                                    200.0, Some(&cool)).unwrap();
+        check(&warm_hot, &hot);
+        // Cross-kind seed degrades to a cold start, never a wrong result.
+        let wseed = sweep(&mut b, &d.arrays, TestKind::Write, 85.0, 200.0)
+            .unwrap();
+        let cross = sweep_seeded(&mut b, &d.arrays, TestKind::Read, 85.0,
+                                 200.0, Some(&wseed)).unwrap();
+        check(&cross, &hot);
+    }
+
+    #[test]
+    fn sweep_par_matches_sequential_for_any_job_count() {
+        let d = generate_dimm(4, 64, params());
+        let mut b = SimdBackend::new();
+        let seq = sweep(&mut b, &d.arrays, TestKind::Read, 85.0, 200.0)
+            .unwrap();
+        let factory = || -> Box<dyn ProfilingBackend> {
+            Box::new(SimdBackend::new())
+        };
+        for jobs in [1usize, 3, 16] {
+            let par = sweep_par(&factory, &d.arrays, TestKind::Read, 85.0,
+                                200.0, SweepOpts::default(), jobs).unwrap();
+            assert_eq!(par.frontier.len(), seq.frontier.len());
+            for (a, o) in par.frontier.iter().zip(&seq.frontier) {
+                assert_eq!(a.min_third_ns, o.min_third_ns);
+            }
+            assert_eq!(par.best.unwrap().sum_ns, seq.best.unwrap().sum_ns);
+        }
+        // Seeded + parallel (the §7.1 ladder configuration).
+        let cold55 = sweep(&mut b, &d.arrays, TestKind::Read, 55.0, 200.0)
+            .unwrap();
+        let warm_par = sweep_par(
+            &factory, &d.arrays, TestKind::Read, 55.0, 200.0,
+            SweepOpts { criterion: PassCriterion::default(),
+                        seed: Some(&seq) },
+            3,
+        )
+        .unwrap();
+        for (a, o) in warm_par.frontier.iter().zip(&cold55.frontier) {
+            assert_eq!(a.min_third_ns, o.min_third_ns);
         }
     }
 

@@ -1,15 +1,63 @@
-//! The profiling-backend abstraction: one trait, two engines.
+//! The profiling-backend abstraction: one trait, three engines.
 //!
 //! `PjrtBackend` executes the AOT-compiled HLO artifact (the production
 //! path: python authored it at build time, rust runs it). `NativeBackend`
-//! is the pure-rust mirror used as a cross-validation oracle, a fallback
-//! when artifacts are absent, and the calibration fast path. The profiler
-//! is written against this trait and cannot tell them apart (the
-//! cross-check test asserts exactly that).
+//! is the pure-rust scalar mirror used as a cross-validation oracle and
+//! the bit-exactness reference. `SimdBackend` is the lane-chunked
+//! vectorized engine (identical error counts, margins within a guard
+//! band) the characterization pipeline rides on. The profiler is written
+//! against this trait and cannot tell them apart (the cross-check tests
+//! assert exactly that).
 
 use anyhow::Result;
 
 use crate::model::{CellArrays, Combo, ProfileOutput};
+
+/// Which test chain a pass probe inspects (mirrors `profiler::TestKind`
+/// without the dependency inversion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeKind {
+    Read,
+    Write,
+}
+
+/// Pass criterion for `pass_probe` — the three acceptance rules the
+/// timing sweeps use (module-wide zero-error / ECC budget, and the §5.2
+/// bank-granular zero-error extension).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PassCriterion {
+    /// Module-wide failing-cell budget; `budget: 0.0` is the standard
+    /// zero-error rule, positive budgets model §9.2 ECC correction.
+    Module { budget: f64 },
+    /// Zero errors within one bank (other banks may err — they run their
+    /// own timings).
+    Bank { bank: usize },
+}
+
+impl Default for PassCriterion {
+    /// The standard module-wide zero-error rule.
+    fn default() -> Self {
+        PassCriterion::Module { budget: 0.0 }
+    }
+}
+
+impl PassCriterion {
+    /// Evaluate the criterion against a full profiling output — the
+    /// reference semantics every `pass_probe` implementation must match.
+    pub fn evaluate(&self, out: &ProfileOutput, k: usize, kind: ProbeKind)
+                    -> bool {
+        match *self {
+            PassCriterion::Module { budget } => match kind {
+                ProbeKind::Read => out.read_errors(k) <= budget,
+                ProbeKind::Write => out.write_errors(k) <= budget,
+            },
+            PassCriterion::Bank { bank } => match kind {
+                ProbeKind::Read => out.bank_errors_read(k)[bank] == 0.0,
+                ProbeKind::Write => out.bank_errors_write(k)[bank] == 0.0,
+            },
+        }
+    }
+}
 
 pub trait ProfilingBackend {
     /// Human-readable engine name (for logs and EXPERIMENTS.md).
@@ -20,6 +68,21 @@ pub trait ProfilingBackend {
     /// any cell resolution they advertise via `supported_cells`.
     fn profile(&mut self, arrays: &CellArrays, combos: &[Combo])
                -> Result<ProfileOutput>;
+
+    /// Pass/fail decision per combo under `criterion` — the sweep fast
+    /// path. The default implementation derives the decisions from a full
+    /// `profile` call; engines that can do better (early exit over a
+    /// weakest-first screening order — see `SimdBackend`) override it.
+    /// Every implementation must agree with
+    /// `PassCriterion::evaluate(profile(...))` exactly.
+    fn pass_probe(&mut self, arrays: &CellArrays, combos: &[Combo],
+                  kind: ProbeKind, criterion: PassCriterion)
+                  -> Result<Vec<bool>> {
+        let out = self.profile(arrays, combos)?;
+        Ok((0..combos.len())
+            .map(|k| criterion.evaluate(&out, k, kind))
+            .collect())
+    }
 
     /// Cell-per-(bank,chip) resolutions this backend can evaluate
     /// (`None` = any resolution).

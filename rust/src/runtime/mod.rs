@@ -1,20 +1,25 @@
-//! Runtime bridge: the `ProfilingBackend` trait and its two engines.
+//! Runtime bridge: the `ProfilingBackend` trait and its engines.
 //!
-//! `NativeBackend` (always available) is the pure-rust mirror of the AOT
-//! artifact's math. `PjrtBackend` executes the HLO-text artifact on the
-//! `xla` crate's PJRT CPU client; it is gated behind the off-by-default
-//! `pjrt` cargo feature so the offline build needs no XLA toolchain (see
+//! `NativeBackend` (always available) is the pure-rust scalar mirror of
+//! the AOT artifact's math — the bit-exactness oracle. `SimdBackend` is
+//! the lane-chunked vectorized engine (identical error counts, margins
+//! within a guard band; DESIGN.md §7) that the characterization pipeline
+//! rides on. `PjrtBackend` executes the HLO-text artifact on the `xla`
+//! crate's PJRT CPU client; it is gated behind the off-by-default `pjrt`
+//! cargo feature so the offline build needs no XLA toolchain (see
 //! Cargo.toml for how to enable it).
 
 pub mod backend;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod simd;
 
-pub use backend::{profile_one, ProfilingBackend};
+pub use backend::{profile_one, PassCriterion, ProbeKind, ProfilingBackend};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Manifest, PjrtBackend};
+pub use simd::SimdBackend;
 
 use std::path::{Path, PathBuf};
 use std::sync::Once;
@@ -35,15 +40,17 @@ fn fallback_notice(msg: &str) {
 }
 
 /// Best backend for a given cell resolution: PJRT when the feature is
-/// enabled and an artifact with a matching shape exists, native otherwise
-/// (with a once-per-process notice — the native mirror is bit-equivalent
-/// within float tolerance, see the xcheck test).
+/// enabled and an artifact with a matching shape exists, the vectorized
+/// SIMD engine otherwise (with a once-per-process notice — it produces
+/// error counts identical to the scalar oracle, see the xcheck tests).
+/// `--backend native` still selects the scalar mirror explicitly.
 pub fn auto_backend(dir: &Path, cells: usize) -> Box<dyn ProfilingBackend> {
     #[cfg(feature = "pjrt")]
     match PjrtBackend::for_cells(dir, cells) {
         Ok(b) => return Box::new(b),
         Err(e) => fallback_notice(&format!(
-            "note: PJRT backend unavailable ({e}); using native mirror"
+            "note: PJRT backend unavailable ({e}); using the vectorized \
+             simd engine"
         )),
     }
     #[cfg(not(feature = "pjrt"))]
@@ -51,10 +58,10 @@ pub fn auto_backend(dir: &Path, cells: usize) -> Box<dyn ProfilingBackend> {
         let _ = (dir, cells);
         fallback_notice(
             "note: PJRT backend disabled (built without the `pjrt` \
-             feature); using native mirror",
+             feature); using the vectorized simd engine",
         );
     }
-    Box::new(NativeBackend::new())
+    Box::new(SimdBackend::new())
 }
 
 #[cfg(test)]
@@ -62,13 +69,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn auto_backend_falls_back_to_native_without_artifacts() {
+    fn auto_backend_falls_back_to_simd_without_artifacts() {
         // Point at a directory with no manifest: must not error, and the
         // notice must fire at most once for any number of calls.
         let dir = std::env::temp_dir().join("aldram_no_artifacts");
         for _ in 0..3 {
             let b = auto_backend(&dir, 64);
-            assert_eq!(b.name(), "native");
+            assert_eq!(b.name(), "simd");
         }
     }
 }

@@ -1,0 +1,124 @@
+//! Vectorized profiling backend (the lane-chunked SoA kernel).
+//!
+//! `profile` runs `model::profile_simd` — error counts identical to the
+//! scalar mirror, margins within the documented guard band. `pass_probe`
+//! overrides the trait default with the weakest-first early-exit probe
+//! (`model::profile_simd::probe_one`), which is what makes the timing
+//! sweeps cheap: failing combos touch only the weak-cell prefix of the
+//! screening order instead of the whole array. Both paths are
+//! cross-checked against `NativeBackend` by `tests/runtime_simd_xcheck.rs`.
+
+use anyhow::Result;
+
+use crate::model::{profile_simd, CellArrays, Combo, ModelParams,
+                   ProfileOutput};
+
+use super::backend::{PassCriterion, ProbeKind, ProfilingBackend};
+
+pub struct SimdBackend {
+    params: ModelParams,
+}
+
+impl SimdBackend {
+    pub fn new() -> Self {
+        SimdBackend { params: crate::model::params().clone() }
+    }
+
+    /// Calibration path: evaluate under experimental constants.
+    pub fn with_params(params: ModelParams) -> Self {
+        SimdBackend { params }
+    }
+}
+
+impl Default for SimdBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProfilingBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn profile(&mut self, arrays: &CellArrays, combos: &[Combo])
+               -> Result<ProfileOutput> {
+        Ok(profile_simd::profile_simd(arrays, combos, &self.params))
+    }
+
+    fn pass_probe(&mut self, arrays: &CellArrays, combos: &[Combo],
+                  kind: ProbeKind, criterion: PassCriterion)
+                  -> Result<Vec<bool>> {
+        let read_chain = kind == ProbeKind::Read;
+        let (bank, budget) = match criterion {
+            PassCriterion::Module { budget } => (None, budget),
+            PassCriterion::Bank { bank } => (Some(bank), 0.0),
+        };
+        Ok(combos
+            .iter()
+            .map(|k| {
+                profile_simd::probe_one(arrays, k, &self.params, read_chain,
+                                        bank, budget)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::population::generate_dimm;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn simd_backend_counts_match_native() {
+        let d = generate_dimm(6, 48, crate::model::params());
+        let mut simd = SimdBackend::new();
+        let mut native = NativeBackend::new();
+        let combos = [
+            Combo { trcd: 13.75, tras: 35.0, twr: 15.0, trp: 13.75,
+                    tref_ms: 64.0, temp_c: 85.0 },
+            Combo { trcd: 6.25, tras: 17.5, twr: 5.0, trp: 6.25,
+                    tref_ms: 400.0, temp_c: 85.0 },
+            Combo::sentinel(),
+        ];
+        let a = simd.profile(&d.arrays, &combos).unwrap();
+        let b = native.profile(&d.arrays, &combos).unwrap();
+        assert_eq!(a.err_r, b.err_r);
+        assert_eq!(a.err_w, b.err_w);
+        assert_eq!(a.tot_r, b.tot_r);
+        assert_eq!(a.tot_w, b.tot_w);
+    }
+
+    #[test]
+    fn probe_override_agrees_with_trait_default() {
+        let d = generate_dimm(6, 48, crate::model::params());
+        let mut simd = SimdBackend::new();
+        let mut native = NativeBackend::new();
+        let combos: Vec<Combo> = (0..6)
+            .map(|i| Combo {
+                trcd: 13.75 - i as f32 * 1.25,
+                tras: 35.0 - i as f32 * 2.5,
+                twr: 15.0 - i as f32 * 1.25,
+                trp: 13.75 - i as f32 * 1.25,
+                tref_ms: 64.0 + i as f32 * 64.0,
+                temp_c: 85.0,
+            })
+            .collect();
+        for kind in [ProbeKind::Read, ProbeKind::Write] {
+            for criterion in [
+                PassCriterion::Module { budget: 0.0 },
+                PassCriterion::Module { budget: 8.0 },
+                PassCriterion::Bank { bank: 3 },
+            ] {
+                let fast = simd
+                    .pass_probe(&d.arrays, &combos, kind, criterion)
+                    .unwrap();
+                let slow = native
+                    .pass_probe(&d.arrays, &combos, kind, criterion)
+                    .unwrap();
+                assert_eq!(fast, slow, "{kind:?} {criterion:?}");
+            }
+        }
+    }
+}

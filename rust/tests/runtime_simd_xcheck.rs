@@ -1,0 +1,191 @@
+//! The vectorized-engine equivalence matrix: `SimdBackend` (lane-chunked
+//! kernel + guard-band exact fallback) vs `NativeBackend` (the scalar
+//! oracle, itself bit-identical to the AOT artifact). Mirrors the
+//! PR-2 run/run_fast methodology: the fast engine must reproduce the
+//! oracle's *decisions* exactly — error counts bit-equal, margins within
+//! the documented guard band, sweep frontiers pair-for-pair identical —
+//! across random populations, random combos (sentinels included), all
+//! three pass criteria, and warm-started sweeps from both directions.
+
+use aldram::model::charge::Cell;
+use aldram::model::profile_simd::GUARD;
+use aldram::model::{params, CellArrays, Combo};
+use aldram::population::generate_dimm;
+use aldram::profiler::{profile_dimm, sweep, sweep_exhaustive, sweep_seeded,
+                       TestKind};
+use aldram::runtime::{NativeBackend, PassCriterion, ProbeKind,
+                      ProfilingBackend, SimdBackend};
+use aldram::util::quick::forall;
+use aldram::util::rng::Rng;
+
+fn rand_cell(rng: &mut Rng) -> Cell {
+    Cell {
+        qcap: rng.range(0.7, 1.2) as f32,
+        tau_s: rng.lognormal(1.6, 0.2) as f32,
+        tau_r: rng.lognormal(2.2, 0.3) as f32,
+        tau_p: rng.lognormal(0.5, 0.1) as f32,
+        lam85: rng.lognormal(-7.3, 0.6) as f32,
+    }
+}
+
+fn rand_combo(rng: &mut Rng) -> Combo {
+    Combo {
+        trcd: rng.range(3.0, 13.75) as f32,
+        tras: rng.range(12.0, 35.0) as f32,
+        twr: rng.range(3.0, 15.0) as f32,
+        trp: rng.range(3.0, 13.75) as f32,
+        tref_ms: rng.range(8.0, 512.0) as f32,
+        temp_c: rng.range(25.0, 85.0) as f32,
+    }
+}
+
+/// Random population with a *manually filled* CellArrays: exercises the
+/// no-screening fallback and non-multiple-of-LANES cell counts.
+fn rand_arrays(rng: &mut Rng, banks: usize, chips: usize, cells: usize)
+               -> CellArrays {
+    let mut a = CellArrays::zeroed(banks, chips, cells);
+    for i in 0..a.len() {
+        a.set(i, rand_cell(rng));
+    }
+    a
+}
+
+fn rand_batch(rng: &mut Rng, n: usize) -> Vec<Combo> {
+    let mut v: Vec<Combo> = (0..n).map(|_| rand_combo(rng)).collect();
+    // A sentinel somewhere in the batch, as the PJRT padding produces.
+    let slot = rng.below(n as u64) as usize;
+    v[slot] = Combo::sentinel();
+    v
+}
+
+#[test]
+fn simd_error_counts_exactly_match_native() {
+    forall(25, |rng| {
+        // Cell counts straddle the LANES=8 chunking (remainder paths).
+        let cells = 17 + rng.below(40) as usize;
+        let arrays = rand_arrays(rng, 2, 2, cells);
+        let combos = rand_batch(rng, 8);
+        let a = SimdBackend::new().profile(&arrays, &combos).unwrap();
+        let b = NativeBackend::new().profile(&arrays, &combos).unwrap();
+        assert_eq!(a.err_r, b.err_r, "per-(combo,bank,chip) read counts");
+        assert_eq!(a.err_w, b.err_w, "per-(combo,bank,chip) write counts");
+        assert_eq!(a.tot_r, b.tot_r);
+        assert_eq!(a.tot_w, b.tot_w);
+        for (x, y) in a.mmin_r.iter().zip(&b.mmin_r) {
+            assert!((x - y).abs() <= GUARD, "mmin_r {x} vs {y}");
+        }
+        for (x, y) in a.mmin_w.iter().zip(&b.mmin_w) {
+            assert!((x - y).abs() <= GUARD, "mmin_w {x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn simd_matches_native_on_generated_dimms() {
+    // The realistic path: vendor-shifted lognormal populations with the
+    // weak-cell mixture tail and the precomputed screening order.
+    let mut simd = SimdBackend::new();
+    let mut native = NativeBackend::new();
+    forall(6, |rng| {
+        let id = rng.below(115) as usize;
+        let d = generate_dimm(id, 64, params());
+        let combos = rand_batch(rng, 12);
+        let a = simd.profile(&d.arrays, &combos).unwrap();
+        let b = native.profile(&d.arrays, &combos).unwrap();
+        assert_eq!(a.err_r, b.err_r, "dimm {id}");
+        assert_eq!(a.err_w, b.err_w, "dimm {id}");
+        for (x, y) in a.mmin_r.iter().zip(&b.mmin_r) {
+            assert!((x - y).abs() <= GUARD);
+        }
+    });
+}
+
+#[test]
+fn pass_probe_matches_profile_for_all_three_criteria() {
+    let mut simd = SimdBackend::new();
+    let mut native = NativeBackend::new();
+    let mut case = 0usize;
+    forall(8, |rng| {
+        // Alternate between generated populations (screening order
+        // present) and manual ones (empty screen -> array-order fallback).
+        case += 1;
+        let arrays = if case % 2 == 0 {
+            generate_dimm(rng.below(50) as usize, 48, params()).arrays
+        } else {
+            rand_arrays(rng, 8, 2, 48)
+        };
+        let combos = rand_batch(rng, 10);
+        let criteria = [
+            PassCriterion::Module { budget: 0.0 },
+            PassCriterion::Module { budget: rng.below(64) as f64 },
+            PassCriterion::Bank { bank: rng.below(8) as usize },
+        ];
+        for kind in [ProbeKind::Read, ProbeKind::Write] {
+            for criterion in criteria {
+                let fast = simd
+                    .pass_probe(&arrays, &combos, kind, criterion)
+                    .unwrap();
+                let oracle = native
+                    .pass_probe(&arrays, &combos, kind, criterion)
+                    .unwrap();
+                assert_eq!(fast, oracle, "{kind:?} {criterion:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn probed_warm_sweep_matches_exhaustive_oracle() {
+    // The acceptance contract: sweeps with pass_probe + warm start enabled
+    // (the SimdBackend path) stay pair-for-pair identical to the
+    // exhaustive full-grid oracle on the scalar backend.
+    let mut simd = SimdBackend::new();
+    let mut native = NativeBackend::new();
+    for id in [1usize, 11] {
+        let d = generate_dimm(id, 96, params());
+        for kind in [TestKind::Read, TestKind::Write] {
+            let hot = sweep(&mut simd, &d.arrays, kind, 85.0, 200.0).unwrap();
+            let warm = sweep_seeded(&mut simd, &d.arrays, kind, 55.0, 200.0,
+                                    Some(&hot))
+                .unwrap();
+            for (s, temp) in [(&hot, 85.0), (&warm, 55.0)] {
+                let full =
+                    sweep_exhaustive(&mut native, &d.arrays, kind, temp,
+                                     200.0)
+                        .unwrap();
+                assert_eq!(s.frontier.len(), full.frontier.len());
+                for (a, o) in s.frontier.iter().zip(&full.frontier) {
+                    assert_eq!(a.trcd_ns, o.trcd_ns);
+                    assert_eq!(a.trp_ns, o.trp_ns);
+                    assert_eq!(
+                        a.min_third_ns, o.min_third_ns,
+                        "dimm {id} {kind:?} @{temp}C pair ({}, {})",
+                        a.trcd_ns, a.trp_ns
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn full_dimm_profile_agrees_across_engines() {
+    // End-to-end: the whole characterization battery (refresh sweep +
+    // warm-started timing sweeps) lands on identical operational timings
+    // whichever engine runs it.
+    let mut simd = SimdBackend::new();
+    let mut native = NativeBackend::new();
+    for id in [5usize, 23] {
+        let d = generate_dimm(id, 64, params());
+        let a = profile_dimm(&mut simd, &d).unwrap();
+        let b = profile_dimm(&mut native, &d).unwrap();
+        assert_eq!(a.refresh85.module_max_read_ms,
+                   b.refresh85.module_max_read_ms);
+        assert_eq!(a.refresh85.module_max_write_ms,
+                   b.refresh85.module_max_write_ms);
+        assert_eq!(a.refresh85.bank_max_read_ms,
+                   b.refresh85.bank_max_read_ms);
+        assert_eq!(a.at85.combined(), b.at85.combined());
+        assert_eq!(a.at55.combined(), b.at55.combined());
+    }
+}
