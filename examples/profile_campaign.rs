@@ -14,7 +14,6 @@
 use std::path::PathBuf;
 
 use aldram::cli::Args;
-use aldram::exec;
 use aldram::figures::{fig2, fig3};
 use aldram::model::params;
 use aldram::population::generate_dimm;
@@ -24,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let n_dimms: usize = args.sub(0).and_then(|s| s.parse().ok()).unwrap_or(30);
     let cells: usize = args.sub(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
-    let jobs = args.get("jobs", exec::default_jobs());
+    let jobs = args.jobs();
     let out = PathBuf::from(args.str("out", "results"));
 
     let mut backend = auto_backend(&artifacts_dir(), cells);

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     let w = by_name("mcf").expect("workload");
     let cycles = 200_000;
     let mut run = |timings: TimingParams| {
-        let cfg = SystemConfig { timings, ..SystemConfig::paper_default() };
+        let cfg = SystemConfig::paper_default().with_timings(timings);
         let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("qs/{i}"))).collect();
         let mut sys = System::new(&cfg, &wl);
         let s = sys.run_fast(cycles);

@@ -14,7 +14,6 @@ use std::path::PathBuf;
 use aldram::cli::Args;
 use aldram::eval::{power_eval, power_saving, sensitivity_jobs, stress,
                    PAPER_REDUCTIONS_55C};
-use aldram::exec;
 use aldram::figures::fig4;
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let cycles: u64 = args.sub(0).and_then(|s| s.parse().ok())
         .unwrap_or(300_000);
     let reps: usize = args.sub(1).and_then(|s| s.parse().ok()).unwrap_or(3);
-    let jobs = args.get("jobs", exec::default_jobs());
+    let jobs = args.jobs();
     let out = PathBuf::from(args.str("out", "results"));
 
     // Fig 4: the headline result, fanned out over the job pool.

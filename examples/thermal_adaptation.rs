@@ -29,11 +29,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n{:>9} {:>9} {:>8} {:>8} {:>8} {:>10}",
              "ambient C", "settled C", "tRCD", "tRAS", "tRP", "throughput");
     for ambient in [25.0, 35.0, 45.0, 55.0, 65.0, 80.0] {
-        let cfg = SystemConfig {
-            aldram: Some(table.clone()),
-            ambient_c: ambient,
-            ..SystemConfig::paper_default()
-        };
+        let cfg = SystemConfig::paper_default()
+            .with_aldram(Some(table.clone()))
+            .with_ambient(ambient);
         let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("ta/{i}"))).collect();
         let mut sys = System::new(&cfg, &wl);
         let s = sys.run_fast(150_000);

@@ -11,15 +11,20 @@ pub use thermal::ThermalModel;
 use crate::profiler::DimmProfile;
 use crate::timing::TimingParams;
 
+/// Default interpolation bin width (degC) for tables built from profiles
+/// — the single knob shared by the eval harnesses and the registry's
+/// load-time validation.
+pub const DEFAULT_BIN_C: f64 = 10.0;
+
 /// One table row: use `timings` when the DIMM temperature is <= `max_c`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TableEntry {
     pub max_c: f64,
     pub timings: TimingParams,
 }
 
 /// Temperature-indexed timing table for one DIMM.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AlDram {
     /// Ascending by `max_c`; the last entry is the standard worst-case set
     /// (the fallback above the highest profiled temperature).
@@ -34,9 +39,37 @@ impl AlDram {
     /// and 85degC), with linear interpolation bins every `bin_c` degrees
     /// in between (interpolating *toward the conservative side*: each
     /// bin uses the timings valid at its upper edge).
+    ///
+    /// Panics on a profile that fails [`TimingParams::validate`] — use
+    /// [`AlDram::try_from_profile`] when the profile comes from an
+    /// untrusted source (a hand-edited registry file).
     pub fn from_profile(p: &DimmProfile, bin_c: f64) -> Self {
+        Self::try_from_profile(p, bin_c)
+            .expect("profile produced an invalid timing table")
+    }
+
+    /// Fallible [`AlDram::from_profile`]: every entry is validated, so a
+    /// corrupt registry file surfaces as an error at load time.
+    ///
+    /// The table is monotone by construction: the 85degC anchor takes the
+    /// per-parameter max of the two profiled sets. The pass surface is
+    /// monotone in each parameter, so raising a parameter of a passing
+    /// combo keeps it passing — whereas the sweep's sum-minimizing best
+    /// at 55degC is not guaranteed to dominate the 85degC best
+    /// parameter-wise, and a non-monotone table would let a *hotter* bin
+    /// install a *shorter* timing.
+    pub fn try_from_profile(p: &DimmProfile, bin_c: f64)
+                            -> anyhow::Result<Self> {
+        anyhow::ensure!(bin_c > 0.0 && bin_c.is_finite(),
+                        "bin width must be positive, got {bin_c}");
         let t55 = p.at55.combined();
-        let t85 = p.at85.combined();
+        let t85_raw = p.at85.combined();
+        let t85 = t85_raw.with_core(
+            t85_raw.trcd_ns.max(t55.trcd_ns),
+            t85_raw.tras_ns.max(t55.tras_ns),
+            t85_raw.twr_ns.max(t55.twr_ns),
+            t85_raw.trp_ns.max(t55.trp_ns),
+        );
         let mut entries = Vec::new();
         entries.push(TableEntry { max_c: 55.0, timings: t55 });
         let mut temp = 55.0 + bin_c;
@@ -60,7 +93,39 @@ impl AlDram {
             max_c: f64::INFINITY,
             timings: TimingParams::ddr3_standard(),
         });
-        AlDram { entries, guard_c: 2.0 }
+        Self::from_entries(entries, 2.0)
+    }
+
+    /// Assemble a table from explicit entries (the registry load path),
+    /// enforcing the invariants every other constructor guarantees:
+    /// non-empty, strictly ascending `max_c`, each timing set valid, and
+    /// per-parameter monotone (a cooler bin is never slower).
+    pub fn from_entries(entries: Vec<TableEntry>, guard_c: f64)
+                        -> anyhow::Result<Self> {
+        anyhow::ensure!(!entries.is_empty(), "empty AL-DRAM table");
+        anyhow::ensure!(guard_c >= 0.0 && guard_c.is_finite(),
+                        "guardband must be non-negative, got {guard_c}");
+        for (i, e) in entries.iter().enumerate() {
+            e.timings.validate().map_err(|err| {
+                anyhow::anyhow!("table entry {i} (<= {} C): {err}", e.max_c)
+            })?;
+        }
+        for w in entries.windows(2) {
+            anyhow::ensure!(w[0].max_c < w[1].max_c,
+                            "table entries must ascend by max_c: {} then {}",
+                            w[0].max_c, w[1].max_c);
+            let (a, b) = (&w[0].timings, &w[1].timings);
+            anyhow::ensure!(
+                a.trcd_ns <= b.trcd_ns + 1e-9
+                    && a.tras_ns <= b.tras_ns + 1e-9
+                    && a.twr_ns <= b.twr_ns + 1e-9
+                    && a.trp_ns <= b.trp_ns + 1e-9,
+                "non-monotone table: the bin at {} C is slower than the \
+                 hotter bin at {} C",
+                w[0].max_c, w[1].max_c
+            );
+        }
+        Ok(AlDram { entries, guard_c })
     }
 
     /// A fixed-operating-point table (the paper's Fig-4 evaluation: one
@@ -142,5 +207,77 @@ mod tests {
             assert!(e.timings.twr_ns <= std.twr_ns + 1e-9);
             assert!(e.timings.trp_ns <= std.trp_ns + 1e-9);
         }
+    }
+
+    #[test]
+    fn from_profile_tables_are_monotone_for_arbitrary_bins() {
+        // Property: for any bin width — including bin_c >= 30, where no
+        // interpolation bin fits between the two profiled anchors — the
+        // table ascends by max_c and a cooler bin is never slower in any
+        // of the four core parameters.
+        let mut b = NativeBackend::new();
+        let profiles: Vec<_> = (0..3)
+            .map(|id| {
+                let d = generate_dimm(id, 64, params());
+                profile_dimm(&mut b, &d).unwrap()
+            })
+            .collect();
+        crate::util::quick::forall(24, |rng| {
+            let p = rng.choose(&profiles);
+            let bin_c = rng.range(0.5, 45.0);
+            let t = AlDram::from_profile(p, bin_c);
+            let e = t.entries();
+            assert!(e.len() >= 3, "bin_c {bin_c}: entries {}", e.len());
+            for w in e.windows(2) {
+                assert!(w[0].max_c < w[1].max_c, "bin_c {bin_c}");
+                let (a, b) = (&w[0].timings, &w[1].timings);
+                assert!(a.trcd_ns <= b.trcd_ns + 1e-9, "bin_c {bin_c}: tRCD");
+                assert!(a.tras_ns <= b.tras_ns + 1e-9, "bin_c {bin_c}: tRAS");
+                assert!(a.twr_ns <= b.twr_ns + 1e-9, "bin_c {bin_c}: tWR");
+                assert!(a.trp_ns <= b.trp_ns + 1e-9, "bin_c {bin_c}: tRP");
+            }
+        });
+    }
+
+    #[test]
+    fn from_entries_rejects_corrupt_tables() {
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        // Empty.
+        assert!(AlDram::from_entries(Vec::new(), 2.0).is_err());
+        // Invalid timings inside an entry.
+        let bad = std.with_core(-1.0, 35.0, 15.0, 13.75);
+        assert!(AlDram::from_entries(
+            vec![TableEntry { max_c: f64::INFINITY, timings: bad }], 2.0)
+            .is_err());
+        // Non-ascending temperatures.
+        assert!(AlDram::from_entries(
+            vec![TableEntry { max_c: 85.0, timings: std },
+                 TableEntry { max_c: 55.0, timings: fast }], 2.0)
+            .is_err());
+        // Non-monotone: cooler bin slower than the hotter one.
+        assert!(AlDram::from_entries(
+            vec![TableEntry { max_c: 55.0, timings: std },
+                 TableEntry { max_c: 85.0, timings: fast }], 2.0)
+            .is_err());
+        // Negative guardband.
+        assert!(AlDram::from_entries(
+            vec![TableEntry { max_c: f64::INFINITY, timings: std }], -1.0)
+            .is_err());
+        // A well-formed table is accepted.
+        AlDram::from_entries(
+            vec![TableEntry { max_c: 55.0, timings: fast },
+                 TableEntry { max_c: f64::INFINITY, timings: std }], 2.0)
+            .unwrap();
+    }
+
+    #[test]
+    fn try_from_profile_rejects_degenerate_bins() {
+        let d = generate_dimm(1, 64, params());
+        let mut b = NativeBackend::new();
+        let p = profile_dimm(&mut b, &d).unwrap();
+        assert!(AlDram::try_from_profile(&p, 0.0).is_err());
+        assert!(AlDram::try_from_profile(&p, -5.0).is_err());
+        assert!(AlDram::try_from_profile(&p, f64::NAN).is_err());
     }
 }

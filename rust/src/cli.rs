@@ -60,6 +60,14 @@ impl Args {
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
+
+    /// The crate-wide `--jobs` resolution: every entry point (binary and
+    /// examples) goes through here, so the absent-flag default is always
+    /// `exec::default_jobs()` — no call site can quietly fall back to a
+    /// different width.
+    pub fn jobs(&self) -> usize {
+        self.get("jobs", crate::exec::default_jobs())
+    }
 }
 
 #[cfg(test)]
@@ -91,10 +99,11 @@ mod tests {
     #[test]
     fn jobs_flag_threads_through() {
         let a = parse("figure fig4 --jobs 8");
-        assert_eq!(a.get::<usize>("jobs", 1), 8);
-        // Absent: callers default to available parallelism (>= 1).
+        assert_eq!(a.jobs(), 8);
+        // Absent: the single crate-wide default is the machine's
+        // available parallelism — never a hard-coded 1.
         let b = parse("figure fig4");
-        let jobs = b.get::<usize>("jobs", crate::exec::default_jobs());
-        assert!(jobs >= 1);
+        assert_eq!(b.jobs(), crate::exec::default_jobs());
+        assert!(b.jobs() >= 1);
     }
 }

@@ -1,10 +1,20 @@
 //! System-level evaluation harnesses: Fig 4 (real-system speedups), the
 //! §8.4 sensitivity and power analyses, and the §6 long-run stress test.
+//!
+//! Every harness comes in two flavors. The classic one drives the
+//! AL-DRAM side with one global set of fractional reductions
+//! (`PAPER_REDUCTIONS_55C` — the population-minimum operating point of
+//! §6). The `*_profiled` flavor is the per-module mechanism the paper
+//! actually proposes: each evaluated channel installs *its own DIMM's*
+//! `AlDram` table (built by the profiler, or reloaded from the registry)
+//! and lets the per-channel thermal model drive the bin selection.
 
-use crate::aldram::AlDram;
+use crate::aldram::{AlDram, DEFAULT_BIN_C};
 use crate::exec::Pool;
-use crate::mem::{RowPolicy, System, SystemConfig, SystemStats};
+use crate::mem::{ChannelConfig, RowPolicy, System, SystemConfig,
+                 SystemStats};
 use crate::power::{power, IddSpec};
+use crate::profiler::DimmProfile;
 use crate::timing::TimingParams;
 use crate::util;
 use crate::workloads::{suite, WorkloadSpec};
@@ -54,14 +64,16 @@ fn throughput(stats: &SystemStats) -> f64 {
     stats.cores.iter().map(|c| c.ipc).sum::<f64>()
 }
 
-fn run_config_with(w: &WorkloadSpec, cores: usize, timings: TimingParams,
-                   cycles: u64, rep: usize, cfg_base: &SystemConfig,
-                   driver: Driver) -> f64 {
-    let cfg = SystemConfig { timings, ..cfg_base.clone() };
+/// Run one (workload, core-count, config) simulation and return its
+/// throughput. This is the single entry point every harness fans out
+/// through — the timing side of an experiment lives entirely in `cfg`
+/// (fixed per-channel timing sets, or AL-DRAM tables managing them).
+fn run_config(w: &WorkloadSpec, cores: usize, cfg: &SystemConfig,
+              cycles: u64, rep: usize, driver: Driver) -> f64 {
     let wl: Vec<(WorkloadSpec, String)> = (0..cores)
         .map(|c| (w.clone(), format!("rep{rep}/core{c}")))
         .collect();
-    let mut sys = System::new(&cfg, &wl);
+    let mut sys = System::new(cfg, &wl);
     let stats = match driver {
         Driver::CycleStepped => sys.run(cycles),
         Driver::TimeSkip => sys.run_fast(cycles),
@@ -69,21 +81,19 @@ fn run_config_with(w: &WorkloadSpec, cores: usize, timings: TimingParams,
     throughput(&stats)
 }
 
-fn run_config(w: &WorkloadSpec, cores: usize, timings: TimingParams,
-              cycles: u64, rep: usize, cfg_base: &SystemConfig) -> f64 {
-    run_config_with(w, cores, timings, cycles, rep, cfg_base,
-                    Driver::TimeSkip)
-}
-
 /// Speedup of `fast` timings over `base` timings, averaged over reps;
 /// returns (mean, stddev).
 pub fn speedup(w: &WorkloadSpec, cores: usize, base: TimingParams,
                fast: TimingParams, cycles: u64, reps: usize,
                cfg: &SystemConfig) -> (f64, f64) {
+    let base_cfg = cfg.clone().with_timings(base);
+    let fast_cfg = cfg.clone().with_timings(fast);
     let ratios: Vec<f64> = (0..reps)
         .map(|rep| {
-            let b = run_config(w, cores, base, cycles, rep, cfg);
-            let f = run_config(w, cores, fast, cycles, rep, cfg);
+            let b = run_config(w, cores, &base_cfg, cycles, rep,
+                               Driver::TimeSkip);
+            let f = run_config(w, cores, &fast_cfg, cycles, rep,
+                               Driver::TimeSkip);
             f / b
         })
         .collect();
@@ -97,14 +107,6 @@ pub fn fig4(cycles: u64, reps: usize, reductions: [f64; 4]) -> Fig4Result {
 
 /// Reproduce Fig 4: per-workload single-core and multi-core speedups of
 /// AL-DRAM's 55degC timings over the DDR3 standard.
-///
-/// The grid is embarrassingly parallel: one pool job per (workload,
-/// core-count, rep, timing-set) tuple — 35 × 2 × reps × 2 independent
-/// cycle-level simulations. Each job writes its throughput into an
-/// input-indexed slot and the speedup reduction below consumes them in
-/// the exact order the sequential loop would, so the result is
-/// bit-identical for every `jobs` value (asserted by
-/// `parallel_fig4_matches_sequential`).
 pub fn fig4_jobs(cycles: u64, reps: usize, reductions: [f64; 4],
                  jobs: usize) -> Fig4Result {
     fig4_jobs_with(cycles, reps, reductions, jobs, Driver::TimeSkip)
@@ -114,14 +116,43 @@ pub fn fig4_jobs(cycles: u64, reps: usize, reductions: [f64; 4],
 /// benchmark runs the grid once per driver; results are identical).
 pub fn fig4_jobs_with(cycles: u64, reps: usize, reductions: [f64; 4],
                       jobs: usize, driver: Driver) -> Fig4Result {
-    let base = TimingParams::ddr3_standard();
-    let fast = base.reduced(reductions[0], reductions[1], reductions[2],
-                            reductions[3]);
-    let cfg = SystemConfig::paper_default();
+    let base_cfg = SystemConfig::paper_default();
+    let fast_cfg = SystemConfig::paper_default().with_timings(
+        TimingParams::ddr3_standard().reduced(
+            reductions[0], reductions[1], reductions[2], reductions[3]));
+    fig4_pair(cycles, reps, jobs, driver, &base_cfg, &fast_cfg)
+}
+
+/// Fig 4 for *one profiled module*: the AL-DRAM side installs the DIMM's
+/// own temperature-indexed table (thermal-model-managed at refresh-epoch
+/// granularity) instead of the population-minimum fixed reductions. The
+/// result depends only on the table, so a registry reload reproduces a
+/// profile-fresh run bit for bit (`tests/integration_registry.rs`).
+pub fn fig4_profiled(cycles: u64, reps: usize, table: &AlDram,
+                     jobs: usize) -> Fig4Result {
+    let base_cfg = SystemConfig::paper_default();
+    let fast_cfg =
+        SystemConfig::paper_default().with_aldram(Some(table.clone()));
+    fig4_pair(cycles, reps, jobs, Driver::TimeSkip, &base_cfg, &fast_cfg)
+}
+
+/// The Fig-4 grid over an explicit (baseline, AL-DRAM) config pair.
+///
+/// The grid is embarrassingly parallel: one pool job per (workload,
+/// core-count, rep, config) tuple — 35 × 2 × reps × 2 independent
+/// cycle-level simulations. Each job writes its throughput into an
+/// input-indexed slot and the speedup reduction below consumes them in
+/// the exact order the sequential loop would, so the result is
+/// bit-identical for every `jobs` value (asserted by
+/// `parallel_fig4_matches_sequential`).
+fn fig4_pair(cycles: u64, reps: usize, jobs: usize, driver: Driver,
+             base_cfg: &SystemConfig, fast_cfg: &SystemConfig)
+             -> Fig4Result {
     let workloads = suite();
+    let cfgs = [base_cfg, fast_cfg];
 
     // Job index layout: (((workload * 2 + core_cfg) * reps + rep) * 2
-    //                     + timing_set).
+    //                     + config).
     let core_cfgs = [1usize, MULTI_CORES];
     let n_jobs = workloads.len() * core_cfgs.len() * reps * 2;
     let throughputs = Pool::new(jobs).run(n_jobs, |i| {
@@ -129,9 +160,8 @@ pub fn fig4_jobs_with(cycles: u64, reps: usize, reductions: [f64; 4],
         let rep = (i / 2) % reps;
         let cc = (i / (2 * reps)) % core_cfgs.len();
         let wi = i / (2 * reps * core_cfgs.len());
-        let t = if set == 0 { base } else { fast };
-        run_config_with(&workloads[wi], core_cfgs[cc], t, cycles, rep, &cfg,
-                        driver)
+        run_config(&workloads[wi], core_cfgs[cc], cfgs[set], cycles, rep,
+                   driver)
     });
     let speedup_of = |wi: usize, cc: usize| -> (f64, f64) {
         let ratios: Vec<f64> = (0..reps)
@@ -196,6 +226,23 @@ pub struct SensitivityRow {
     pub gmean_speedup: f64,
 }
 
+const SENSITIVITY_GRID: [(usize, usize, RowPolicy, &str); 5] = [
+    (1, 1, RowPolicy::Open, "1ch/1rank/open"),
+    (2, 1, RowPolicy::Open, "2ch/1rank/open"),
+    (1, 2, RowPolicy::Open, "1ch/2rank/open"),
+    (2, 2, RowPolicy::Open, "2ch/2rank/open"),
+    (1, 1, RowPolicy::Closed, "1ch/1rank/closed"),
+];
+
+fn sensitivity_base_cfg(gi: usize) -> SystemConfig {
+    let (channels, ranks, policy, _) = SENSITIVITY_GRID[gi];
+    SystemConfig {
+        ranks_per_channel: ranks,
+        policy,
+        ..SystemConfig::paper_default().with_channels(channels)
+    }
+}
+
 /// Sequential §8.4 sensitivity (`sensitivity_jobs` with one worker).
 pub fn sensitivity(cycles: u64, reductions: [f64; 4]) -> Vec<SensitivityRow> {
     sensitivity_jobs(cycles, reductions, 1)
@@ -203,47 +250,70 @@ pub fn sensitivity(cycles: u64, reductions: [f64; 4]) -> Vec<SensitivityRow> {
 
 /// AL-DRAM speedup (memory-intensive gmean, multi-core) across system
 /// configurations — the paper's claim is that it helps in *all* of them.
-/// One pool job per (configuration, workload, timing-set) simulation, with
-/// the same order-independent reduction as `fig4_jobs`.
 pub fn sensitivity_jobs(cycles: u64, reductions: [f64; 4],
                         jobs: usize) -> Vec<SensitivityRow> {
-    let base = TimingParams::ddr3_standard();
-    let fast = base.reduced(reductions[0], reductions[1], reductions[2],
-                            reductions[3]);
+    let fast = TimingParams::ddr3_standard().reduced(
+        reductions[0], reductions[1], reductions[2], reductions[3]);
+    let cfgs: Vec<(SystemConfig, SystemConfig)> = (0..SENSITIVITY_GRID.len())
+        .map(|gi| {
+            let base = sensitivity_base_cfg(gi);
+            let fast_cfg = base.clone().with_timings(fast);
+            (base, fast_cfg)
+        })
+        .collect();
+    sensitivity_pairs(cycles, jobs, &cfgs)
+}
+
+/// §8.4 sensitivity on profiled modules: in every grid configuration each
+/// channel installs its own DIMM's table (drawn round-robin from the
+/// registry population), so the multi-channel rows genuinely mix module
+/// identities.
+pub fn sensitivity_profiled(cycles: u64, profiles: &[DimmProfile],
+                            jobs: usize) -> Vec<SensitivityRow> {
+    assert!(!profiles.is_empty());
+    let tables: Vec<AlDram> = profiles
+        .iter()
+        .map(|p| AlDram::from_profile(p, DEFAULT_BIN_C))
+        .collect();
+    let cfgs: Vec<(SystemConfig, SystemConfig)> = (0..SENSITIVITY_GRID.len())
+        .map(|gi| {
+            let base = sensitivity_base_cfg(gi);
+            let fast = SystemConfig {
+                channels: (0..base.channel_count())
+                    .map(|ch| ChannelConfig::profiled(
+                        tables[ch % tables.len()].clone(), 55.0))
+                    .collect(),
+                ..base.clone()
+            };
+            (base, fast)
+        })
+        .collect();
+    sensitivity_pairs(cycles, jobs, &cfgs)
+}
+
+/// One pool job per (configuration, workload, side) simulation, with the
+/// same order-independent reduction as the Fig-4 grid.
+fn sensitivity_pairs(cycles: u64, jobs: usize,
+                     cfgs: &[(SystemConfig, SystemConfig)])
+                     -> Vec<SensitivityRow> {
     let picks: Vec<WorkloadSpec> = suite()
         .into_iter()
         .filter(|w| w.memory_intensive())
         .take(6)
         .collect();
 
-    let grid = [
-        (1usize, 1usize, RowPolicy::Open, "1ch/1rank/open"),
-        (2, 1, RowPolicy::Open, "2ch/1rank/open"),
-        (1, 2, RowPolicy::Open, "1ch/2rank/open"),
-        (2, 2, RowPolicy::Open, "2ch/2rank/open"),
-        (1, 1, RowPolicy::Closed, "1ch/1rank/closed"),
-    ];
-    let cfg_of = |gi: usize| -> SystemConfig {
-        let (channels, ranks, policy, _) = grid[gi];
-        SystemConfig {
-            channels,
-            ranks_per_channel: ranks,
-            policy,
-            ..SystemConfig::paper_default()
-        }
-    };
-
-    // Job index layout: ((config * picks + workload) * 2 + timing_set).
-    let n_jobs = grid.len() * picks.len() * 2;
+    // Job index layout: ((config * picks + workload) * 2 + side).
+    let n_jobs = cfgs.len() * picks.len() * 2;
     let throughputs = Pool::new(jobs).run(n_jobs, |i| {
         let set = i % 2;
         let wi = (i / 2) % picks.len();
         let gi = i / (2 * picks.len());
-        let t = if set == 0 { base } else { fast };
-        run_config(&picks[wi], MULTI_CORES, t, cycles, 0, &cfg_of(gi))
+        let cfg = if set == 0 { &cfgs[gi].0 } else { &cfgs[gi].1 };
+        run_config(&picks[wi], MULTI_CORES, cfg, cycles, 0, Driver::TimeSkip)
     });
 
-    grid.iter()
+    SENSITIVITY_GRID
+        .iter()
         .enumerate()
         .map(|(gi, (channels, ranks, policy, label))| {
             let speedups: Vec<f64> = (0..picks.len())
@@ -264,64 +334,147 @@ pub fn sensitivity_jobs(cycles: u64, reductions: [f64; 4],
 }
 
 // ---------------------------------------------------------------------
-// §8.4: heterogeneous multi-programmed workloads.
+// §8.4: heterogeneous *module* populations.
 // ---------------------------------------------------------------------
 
 #[derive(Debug, Clone)]
 pub struct HeteroResult {
+    /// Workload names of the 4-application mix.
     pub mix: Vec<String>,
+    /// DIMM id installed on each channel.
+    pub dimm_ids: Vec<usize>,
     /// Weighted speedup: mean over cores of per-core IPC ratios (the
     /// standard multi-programmed metric — insensitive to one core
     /// dominating the throughput sum).
     pub weighted_speedup: f64,
+    /// Per-channel read-latency reduction (1 − profiled/base) — how much
+    /// each individual module's profile bought on its channel.
+    pub channel_latency_reduction: Vec<f64>,
+    /// Timing-set switches AL-DRAM performed on each channel.
+    pub channel_switches: Vec<u64>,
+    /// max − min of the per-channel reductions: the spread module
+    /// heterogeneity introduces (FLY-DRAM's inter-module variation).
+    pub channel_spread: f64,
 }
 
-/// §8.4: random 4-application mixes drawn across intensity classes.
-/// AL-DRAM must help every mix (no workload pays for another's gain).
-pub fn hetero_eval(cycles: u64, n_mixes: usize, reductions: [f64; 4])
-                   -> Vec<HeteroResult> {
+/// §8.4 extended to true *module* heterogeneity: every mix populates the
+/// channels with distinct profiled DIMMs — one drawn from the fastest
+/// quartile of the population and one from the slowest (FLY-DRAM's
+/// observation: outlier-slow modules sit next to fast ones), the rest at
+/// random — each channel running its own AL-DRAM table on its own
+/// thermal model. Reports the per-channel speedup spread, not just the
+/// workload mix.
+pub fn hetero_eval(cycles: u64, n_mixes: usize, channels: usize,
+                   profiles: &[DimmProfile]) -> Vec<HeteroResult> {
     use crate::util::rng::Rng;
-    let base_t = TimingParams::ddr3_standard();
-    let fast_t = base_t.reduced(reductions[0], reductions[1], reductions[2],
-                                reductions[3]);
+    assert!(channels >= 2 && channels.is_power_of_two(),
+            "module heterogeneity needs >= 2 channels (power of two)");
+    assert!(profiles.len() >= channels,
+            "need at least one distinct profile per channel: {} < {}",
+            profiles.len(), channels);
+
+    // Loop-invariant state, hoisted out of the per-mix closure: the
+    // workload pool, its memory-intensive subset, the per-DIMM tables,
+    // and the population's speed ordering.
     let pool = suite();
-    let cfg = SystemConfig::paper_default();
+    let intensive: Vec<WorkloadSpec> = pool
+        .iter()
+        .filter(|w| w.memory_intensive())
+        .cloned()
+        .collect();
+    let tables: Vec<AlDram> = profiles
+        .iter()
+        .map(|p| AlDram::from_profile(p, DEFAULT_BIN_C))
+        .collect();
+    let mut order: Vec<usize> = (0..profiles.len()).collect();
+    order.sort_by(|&a, &b| {
+        let key = |i: usize| profiles[i].at55.combined().read_sum_ns();
+        key(a).partial_cmp(&key(b)).unwrap()
+    });
+    let quart = (profiles.len() / 4).max(1);
     let mut rng = Rng::from_label("hetero-mixes");
 
     (0..n_mixes)
         .map(|mi| {
-            // 2 intensive + 2 drawn from the whole pool: the paper's mixes
-            // keep memory pressure while mixing intensity classes.
-            let mut mix: Vec<WorkloadSpec> = Vec::new();
-            let intensive: Vec<&WorkloadSpec> =
-                pool.iter().filter(|w| w.memory_intensive()).collect();
-            mix.push((*rng.choose(&intensive)).clone());
-            mix.push((*rng.choose(&intensive)).clone());
-            mix.push(rng.choose(&pool).clone());
-            mix.push(rng.choose(&pool).clone());
+            // Channel population: fastest-quartile module on channel 0,
+            // slowest-quartile outlier on channel 1, the rest random but
+            // distinct.
+            let mut picks: Vec<usize> = Vec::with_capacity(channels);
+            picks.push(order[rng.below(quart as u64) as usize]);
+            picks.push(order[profiles.len() - 1
+                             - rng.below(quart as u64) as usize]);
+            while picks.len() < channels {
+                let cand = rng.below(profiles.len() as u64) as usize;
+                if !picks.contains(&cand) {
+                    picks.push(cand);
+                }
+            }
 
-            let run = |t: TimingParams| -> Vec<f64> {
-                let c = SystemConfig { timings: t, ..cfg.clone() };
-                let wl: Vec<_> = mix
+            // 2 intensive + 2 drawn from the whole pool: the paper's
+            // mixes keep memory pressure while mixing intensity classes.
+            let mix = [
+                rng.choose(&intensive).clone(),
+                rng.choose(&intensive).clone(),
+                rng.choose(&pool).clone(),
+                rng.choose(&pool).clone(),
+            ];
+            let wl: Vec<(WorkloadSpec, String)> = mix
+                .iter()
+                .enumerate()
+                .map(|(i, w)| (w.clone(), format!("hx{mi}/{i}")))
+                .collect();
+
+            let base_cfg = SystemConfig::uniform(
+                channels, ChannelConfig::standard(55.0));
+            let prof_cfg = SystemConfig {
+                channels: picks
                     .iter()
-                    .enumerate()
-                    .map(|(i, w)| (w.clone(), format!("hx{mi}/{i}")))
-                    .collect();
-                let mut sys = System::new(&c, &wl);
-                sys.run_fast(cycles).cores.iter().map(|c| c.ipc).collect()
+                    .map(|&di| ChannelConfig::profiled(tables[di].clone(),
+                                                       55.0))
+                    .collect(),
+                ..base_cfg.clone()
             };
-            let base = run(base_t);
-            let fast = run(fast_t);
+            let run = |cfg: &SystemConfig| {
+                let mut sys = System::new(cfg, &wl);
+                sys.run_fast(cycles)
+            };
+            let base = run(&base_cfg);
+            let prof = run(&prof_cfg);
+
             let ws = util::mean(
                 &base
+                    .cores
                     .iter()
-                    .zip(&fast)
-                    .map(|(b, f)| f / b)
+                    .zip(&prof.cores)
+                    .map(|(b, f)| f.ipc / b.ipc)
                     .collect::<Vec<_>>(),
             );
+            let reductions: Vec<f64> = base
+                .channels
+                .iter()
+                .zip(&prof.channels)
+                .map(|(b, f)| {
+                    if b.avg_read_latency_cycles > 0.0 {
+                        1.0 - f.avg_read_latency_cycles
+                            / b.avg_read_latency_cycles
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let hi = reductions.iter().cloned().fold(f64::MIN, f64::max);
+            let lo = reductions.iter().cloned().fold(f64::MAX, f64::min);
             HeteroResult {
                 mix: mix.iter().map(|w| w.name.to_string()).collect(),
+                dimm_ids: picks.iter().map(|&di| profiles[di].id).collect(),
                 weighted_speedup: ws,
+                channel_latency_reduction: reductions,
+                channel_switches: prof
+                    .channels
+                    .iter()
+                    .map(|c| c.timing_switches)
+                    .collect(),
+                channel_spread: hi - lo,
             }
         })
         .collect()
@@ -344,34 +497,45 @@ pub struct PowerResult {
 /// DRAM power comparison on memory-intensive multi-core runs. The paper's
 /// §8.4 reports 5.8% average DRAM power reduction.
 pub fn power_eval(cycles: u64, reductions: [f64; 4]) -> Vec<PowerResult> {
-    let base_t = TimingParams::ddr3_standard();
-    let fast_t = base_t.reduced(reductions[0], reductions[1], reductions[2],
-                                reductions[3]);
+    let fast = TimingParams::ddr3_standard().reduced(
+        reductions[0], reductions[1], reductions[2], reductions[3]);
+    power_pair(cycles, &SystemConfig::paper_default(),
+               &SystemConfig::paper_default().with_timings(fast))
+}
+
+/// DRAM power with the AL-DRAM side running one profiled module's own
+/// table instead of the fixed population-minimum reductions.
+pub fn power_eval_profiled(cycles: u64, table: &AlDram) -> Vec<PowerResult> {
+    power_pair(cycles, &SystemConfig::paper_default(),
+               &SystemConfig::paper_default().with_aldram(
+                   Some(table.clone())))
+}
+
+fn power_pair(cycles: u64, base_cfg: &SystemConfig,
+              fast_cfg: &SystemConfig) -> Vec<PowerResult> {
     let spec = IddSpec::default();
-    let cfg = SystemConfig::paper_default();
+    let run = |cfg: &SystemConfig, w: &WorkloadSpec| -> (f64, f64) {
+        let wl: Vec<_> = (0..MULTI_CORES)
+            .map(|i| (w.clone(), format!("pw/{i}")))
+            .collect();
+        let mut sys = System::new(cfg, &wl);
+        let stats = sys.run_fast(cycles);
+        let watts: f64 = stats
+            .power_inputs
+            .iter()
+            .map(|pi| power(pi, &spec).total_w())
+            .sum();
+        let ginsts: f64 = stats.cores.iter()
+            .map(|c| c.insts as f64)
+            .sum::<f64>() / 1e9;
+        let joules = watts * stats.cycles as f64 * 1.25e-9;
+        (watts, joules / ginsts.max(1e-12))
+    };
 
     let mut out = Vec::new();
     for w in suite().into_iter().filter(|w| w.memory_intensive()).take(8) {
-        let run = |t: TimingParams| -> (f64, f64) {
-            let c = SystemConfig { timings: t, ..cfg.clone() };
-            let wl: Vec<_> = (0..MULTI_CORES)
-                .map(|i| (w.clone(), format!("pw/{i}")))
-                .collect();
-            let mut sys = System::new(&c, &wl);
-            let stats = sys.run_fast(cycles);
-            let watts: f64 = stats
-                .power_inputs
-                .iter()
-                .map(|pi| power(pi, &spec).total_w())
-                .sum();
-            let ginsts: f64 = stats.cores.iter()
-                .map(|c| c.insts as f64)
-                .sum::<f64>() / 1e9;
-            let joules = watts * stats.cycles as f64 * 1.25e-9;
-            (watts, joules / ginsts.max(1e-12))
-        };
-        let (bw, bj) = run(base_t);
-        let (aw, aj) = run(fast_t);
+        let (bw, bj) = run(base_cfg, &w);
+        let (aw, aj) = run(fast_cfg, &w);
         out.push(PowerResult {
             name: w.name.to_string(),
             base_w: bw,
@@ -419,13 +583,11 @@ pub fn stress(dimm_id: usize, epochs: u64, cycles_per_epoch: u64)
     let d = generate_dimm(dimm_id, 128, params());
     let mut backend = NativeBackend::new();
     let prof = profile_dimm(&mut backend, &d)?;
-    let table = AlDram::from_profile(&prof, 10.0);
+    let table = AlDram::from_profile(&prof, DEFAULT_BIN_C);
 
     let w = crate::workloads::by_name("stream.copy").unwrap();
-    let cfg = SystemConfig {
-        aldram: Some(table.clone()),
-        ..SystemConfig::paper_default()
-    };
+    let cfg = SystemConfig::paper_default()
+        .with_aldram(Some(table.clone()));
     let wl: Vec<_> = (0..MULTI_CORES)
         .map(|i| (w.clone(), format!("stress/{i}")))
         .collect();
@@ -468,6 +630,20 @@ pub fn stress(dimm_id: usize, epochs: u64, cycles_per_epoch: u64)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::profiler::profile_dimm;
+    use crate::runtime::NativeBackend;
+
+    fn profiles(n: usize) -> Vec<DimmProfile> {
+        let mut b = NativeBackend::new();
+        (0..n)
+            .map(|id| {
+                let d = generate_dimm(id, 64, params());
+                profile_dimm(&mut b, &d).unwrap()
+            })
+            .collect()
+    }
 
     #[test]
     fn stress_run_is_error_free() {
@@ -478,13 +654,45 @@ mod tests {
     }
 
     #[test]
-    fn hetero_mixes_all_benefit() {
-        let mixes = hetero_eval(30_000, 3, PAPER_REDUCTIONS_55C);
-        assert_eq!(mixes.len(), 3);
+    fn hetero_modules_all_benefit_with_distinct_channels() {
+        let ps = profiles(4);
+        let mixes = hetero_eval(30_000, 2, 2, &ps);
+        assert_eq!(mixes.len(), 2);
         for m in &mixes {
             assert_eq!(m.mix.len(), 4);
+            assert_eq!(m.dimm_ids.len(), 2);
+            assert_ne!(m.dimm_ids[0], m.dimm_ids[1],
+                       "channels must host distinct modules");
+            assert_eq!(m.channel_latency_reduction.len(), 2);
             assert!(m.weighted_speedup > 0.99,
                     "mix {:?} regressed: {}", m.mix, m.weighted_speedup);
+            assert!(m.channel_spread >= 0.0);
+            // Every managed channel actually engaged its table.
+            for (ch, sw) in m.channel_switches.iter().enumerate() {
+                assert!(*sw >= 1, "channel {ch} never switched timings");
+            }
+        }
+    }
+
+    #[test]
+    fn profiled_fig4_beats_baseline_on_intensive_workloads() {
+        let ps = profiles(1);
+        let table = AlDram::from_profile(&ps[0], DEFAULT_BIN_C);
+        let r = fig4_profiled(20_000, 1, &table, 2);
+        assert_eq!(r.per_workload.len(), 35);
+        assert!(r.gmean_intensive_multi > 1.0,
+                "profiled table bought nothing: {}",
+                r.gmean_intensive_multi);
+        assert!(r.gmean_intensive_multi > r.gmean_nonintensive_multi);
+    }
+
+    #[test]
+    fn profiled_sensitivity_helps_in_every_config() {
+        let ps = profiles(2);
+        for row in sensitivity_profiled(30_000, &ps, 2) {
+            assert!(row.gmean_speedup > 1.0,
+                    "profiled AL-DRAM must help in {}: {}", row.label,
+                    row.gmean_speedup);
         }
     }
 

@@ -4,19 +4,12 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::eval::{fig4_jobs, Fig4Result, PAPER_REDUCTIONS_55C};
+use crate::aldram::AlDram;
+use crate::eval::{self, fig4_jobs, Fig4Result, PAPER_REDUCTIONS_55C};
 
 use super::csv::Csv;
 
-/// Regenerate Fig 4, fanning the (workload, cores, rep, timing-set) grid
-/// out over `jobs` pool workers. Results are identical for every job
-/// count (`eval::fig4_jobs` reduces order-independently).
-pub fn fig4(cycles: u64, reps: usize, jobs: usize, out: &Path)
-            -> Result<Fig4Result> {
-    let r = fig4_jobs(cycles, reps, PAPER_REDUCTIONS_55C, jobs);
-
-    println!("== Fig 4: AL-DRAM speedup over DDR3 standard (55C point, \
-              {jobs} jobs) ==");
+fn print_and_csv(r: &Fig4Result, out: &Path, file: &str) -> Result<()> {
     println!("{:<14} {:>6} {:>10} {:>10} {:>10} {:>10}",
              "workload", "mpki", "1core", "+/-", "4core", "+/-");
     let mut csv = Csv::new(&["workload", "mpki", "intensive",
@@ -36,7 +29,7 @@ pub fn fig4(cycles: u64, reps: usize, jobs: usize, out: &Path)
             format!("{}", w.multi_speedup), format!("{}", w.multi_stddev),
         ]);
     }
-    csv.write(out, "fig4.csv")?;
+    csv.write(out, file)?;
 
     println!("---");
     println!("multi-core  memory-intensive gmean: {:>5.1}%  (paper 14.0%)",
@@ -47,6 +40,32 @@ pub fn fig4(cycles: u64, reps: usize, jobs: usize, out: &Path)
              100.0 * (r.mean_all_multi - 1.0));
     println!("best multi-core speedup:            {:>5.1}%  (paper 20.5%, STREAM)",
              100.0 * (r.max_multi - 1.0));
+    Ok(())
+}
+
+/// Regenerate Fig 4, fanning the (workload, cores, rep, timing-set) grid
+/// out over `jobs` pool workers. Results are identical for every job
+/// count (`eval::fig4_jobs` reduces order-independently).
+pub fn fig4(cycles: u64, reps: usize, jobs: usize, out: &Path)
+            -> Result<Fig4Result> {
+    let r = fig4_jobs(cycles, reps, PAPER_REDUCTIONS_55C, jobs);
+    println!("== Fig 4: AL-DRAM speedup over DDR3 standard (55C point, \
+              {jobs} jobs) ==");
+    print_and_csv(&r, out, "fig4.csv")?;
+    Ok(r)
+}
+
+/// Fig 4 driven by one profiled module's own temperature-indexed table
+/// (freshly profiled or reloaded from a `--profiles` registry) instead of
+/// the population-minimum fixed reductions. The result is a function of
+/// the table alone, so a registry reload reproduces a profile-fresh run
+/// exactly.
+pub fn fig4_profiled(cycles: u64, reps: usize, jobs: usize, table: &AlDram,
+                     label: &str, out: &Path) -> Result<Fig4Result> {
+    let r = eval::fig4_profiled(cycles, reps, table, jobs);
+    println!("== Fig 4 (profiled {label}): per-module AL-DRAM table vs \
+              DDR3 standard ({jobs} jobs) ==");
+    print_and_csv(&r, out, "fig4_profiled.csv")?;
     Ok(r)
 }
 
@@ -62,5 +81,21 @@ mod tests {
         let r = fig4(4_000, 1, 2, &dir).unwrap();
         assert_eq!(r.per_workload.len(), 35);
         assert!(dir.join("fig4.csv").exists());
+    }
+
+    #[test]
+    fn fig4_profiled_smoke() {
+        use crate::model::params;
+        use crate::population::generate_dimm;
+        use crate::profiler::profile_dimm;
+        use crate::runtime::NativeBackend;
+        let d = generate_dimm(0, 64, params());
+        let mut b = NativeBackend::new();
+        let p = profile_dimm(&mut b, &d).unwrap();
+        let table = AlDram::from_profile(&p, crate::aldram::DEFAULT_BIN_C);
+        let dir = std::env::temp_dir().join("aldram_fig4_profiled_test");
+        let r = fig4_profiled(3_000, 1, 2, &table, "dimm 000", &dir).unwrap();
+        assert_eq!(r.per_workload.len(), 35);
+        assert!(dir.join("fig4_profiled.csv").exists());
     }
 }

@@ -24,6 +24,7 @@ pub mod model;
 pub mod population;
 pub mod power;
 pub mod profiler;
+pub mod registry;
 pub mod runtime;
 pub mod timing;
 pub mod util;

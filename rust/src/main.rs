@@ -4,10 +4,16 @@
 //!   repro calibrate  [--dimms N] [--cells N]
 //!                    [--backend native|simd|pjrt|auto] [--jobs N]
 //!   repro profile    --dimm N [--cells N] [--backend ...]
-//!   repro figure     fig2a|fig2bc|fig3|fig4|all [--out DIR] [--jobs N] [...]
+//!   repro profile    --dimms N --save DIR   (profile a population once and
+//!                    persist it as a JSON registry, one dimm_NNN.json each)
+//!   repro figure     fig2a|fig2bc|fig3|fig4|all [--out DIR] [--jobs N]
+//!                    [--profiles DIR]       (fig4: drive the AL-DRAM side
+//!                    with a registry module's own table)
 //!   repro ablate     refresh-latency|interdependence|repeatability|
 //!                    bank-granularity|ecc|sweep|ode [--jobs N]
 //!   repro eval       sensitivity|hetero|power|stress [--cycles N] [--jobs N]
+//!                    [--profiles DIR]       (profile-driven variants;
+//!                    hetero profiles a small population when absent)
 //!   repro bench-sim  [--cycles N]          (quick end-to-end smoke; prints
 //!                    the TIMESKIP line: event-driven vs cycle-stepped)
 //!   repro bench-profile [--cells N]        (profiling-engine smoke; prints
@@ -29,12 +35,14 @@
 
 use std::path::PathBuf;
 
+use aldram::aldram::{AlDram, DEFAULT_BIN_C};
 use aldram::cli::Args;
 use aldram::exec;
 use aldram::figures::{ablate, calibrate, fig2, fig3, fig4};
 use aldram::model::params;
 use aldram::population::generate_dimm;
-use aldram::profiler::profile_dimm;
+use aldram::profiler::{profile_dimm, DimmProfile};
+use aldram::registry;
 use aldram::runtime::{artifacts_dir, auto_backend, NativeBackend,
                       ProfilingBackend, SimdBackend};
 
@@ -62,11 +70,30 @@ fn backend_for(args: &Args, cells: usize) -> Box<dyn ProfilingBackend> {
     make_backend(&args.str("backend", "auto"), cells)
 }
 
+/// Resolve the `--profiles DIR` registry into a loaded population.
+fn load_profiles(args: &Args) -> anyhow::Result<Vec<DimmProfile>> {
+    let dir = PathBuf::from(args.str("profiles", "registry"));
+    let profiles = registry::load_registry(&dir)?;
+    eprintln!("loaded {} profiles from {}", profiles.len(), dir.display());
+    Ok(profiles)
+}
+
+/// Pick one module out of a registry population (`--dimm N`, default: the
+/// lowest id present) and build its table.
+fn table_for(args: &Args, profiles: &[DimmProfile])
+             -> anyhow::Result<(usize, AlDram)> {
+    let want = args.get("dimm", profiles[0].id);
+    let p = profiles.iter().find(|p| p.id == want).ok_or_else(|| {
+        anyhow::anyhow!("dimm {want} is not in the registry")
+    })?;
+    Ok((p.id, AlDram::from_profile(p, DEFAULT_BIN_C)))
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let out = PathBuf::from(args.str("out", "results"));
     let g = &params().geometry;
-    let jobs = args.get("jobs", exec::default_jobs());
+    let jobs = args.jobs();
 
     match args.cmd() {
         Some("calibrate") => {
@@ -79,24 +106,56 @@ fn main() -> anyhow::Result<()> {
         }
 
         Some("profile") => {
-            let id = args.get("dimm", 0usize);
             let cells = args.get("cells", g.cells_per_chip_bank);
-            let mut b = backend_for(&args, cells);
-            let d = generate_dimm(id, cells, params());
-            let p = profile_dimm(b.as_mut(), &d)?;
-            println!("dimm {:03} ({})", p.id, p.vendor);
-            println!("  max refresh @85C: read {:.0} ms, write {:.0} ms",
-                     p.refresh85.module_max_read_ms,
-                     p.refresh85.module_max_write_ms);
-            for tp in [&p.at85, &p.at55] {
-                let c = tp.combined();
-                let r = tp.param_reductions();
-                println!(
-                    "  @{:.0}C: tRCD {:.2} tRAS {:.2} tWR {:.2} tRP {:.2} ns \
-                     (reductions {:.1}/{:.1}/{:.1}/{:.1}%)",
-                    tp.temp_c, c.trcd_ns, c.tras_ns, c.twr_ns, c.trp_ns,
-                    100.0 * r[0], 100.0 * r[1], 100.0 * r[2], 100.0 * r[3]
-                );
+            if args.has("dimms") || (args.has("save") && !args.has("dimm")) {
+                // Population mode: profile --dimms modules (default 8) in
+                // parallel and persist the registry (--save DIR, replacing
+                // any previous population there) so every figure/eval
+                // harness can reload it via --profiles. `--dimm N --save`
+                // instead saves that single module (below).
+                let dimms = args.get("dimms", 8usize);
+                let kind = args.str("backend", "auto");
+                let r = calibrate::run_par(|| make_backend(&kind, cells),
+                                           dimms, cells, jobs)?;
+                for p in &r.profiles {
+                    let red = p.at55.param_reductions();
+                    println!("dimm {:03} ({:<10}) @55C reductions \
+                              {:>4.1}/{:>4.1}/{:>4.1}/{:>4.1}%",
+                             p.id, p.vendor, 100.0 * red[0], 100.0 * red[1],
+                             100.0 * red[2], 100.0 * red[3]);
+                }
+                if args.has("save") {
+                    let dir = PathBuf::from(args.str("save", "registry"));
+                    registry::save_registry(&dir, &r.profiles)?;
+                    println!("saved {} profiles to {}", r.profiles.len(),
+                             dir.display());
+                }
+            } else {
+                let id = args.get("dimm", 0usize);
+                let mut b = backend_for(&args, cells);
+                let d = generate_dimm(id, cells, params());
+                let p = profile_dimm(b.as_mut(), &d)?;
+                if args.has("save") {
+                    // Single-module save: add/refresh this one profile in
+                    // the registry without disturbing the rest.
+                    let dir = PathBuf::from(args.str("save", "registry"));
+                    let path = registry::save_profile(&dir, &p)?;
+                    println!("saved dimm {:03} to {}", p.id, path.display());
+                }
+                println!("dimm {:03} ({})", p.id, p.vendor);
+                println!("  max refresh @85C: read {:.0} ms, write {:.0} ms",
+                         p.refresh85.module_max_read_ms,
+                         p.refresh85.module_max_write_ms);
+                for tp in [&p.at85, &p.at55] {
+                    let c = tp.combined();
+                    let r = tp.param_reductions();
+                    println!(
+                        "  @{:.0}C: tRCD {:.2} tRAS {:.2} tWR {:.2} tRP {:.2} ns \
+                         (reductions {:.1}/{:.1}/{:.1}/{:.1}%)",
+                        tp.temp_c, c.trcd_ns, c.tras_ns, c.twr_ns, c.trp_ns,
+                        100.0 * r[0], 100.0 * r[1], 100.0 * r[2], 100.0 * r[3]
+                    );
+                }
             }
         }
 
@@ -122,7 +181,14 @@ fn main() -> anyhow::Result<()> {
             if which == "fig4" || which == "all" {
                 let cycles = args.get("cycles", 300_000u64);
                 let reps = args.get("reps", 3usize);
-                fig4::fig4(cycles, reps, jobs, &out)?;
+                if args.has("profiles") {
+                    let profiles = load_profiles(&args)?;
+                    let (id, table) = table_for(&args, &profiles)?;
+                    fig4::fig4_profiled(cycles, reps, jobs, &table,
+                                        &format!("dimm {id:03}"), &out)?;
+                } else {
+                    fig4::fig4(cycles, reps, jobs, &out)?;
+                }
             }
             if !["fig2a", "fig2bc", "fig3", "fig4", "all"].contains(&which) {
                 anyhow::bail!("unknown figure `{which}`");
@@ -179,32 +245,92 @@ fn main() -> anyhow::Result<()> {
             let cycles = args.get("cycles", 200_000u64);
             match which {
                 "sensitivity" => {
-                    println!("== §8.4: sensitivity (memory-intensive gmean, \
-                              {jobs} jobs) ==");
-                    for row in aldram::eval::sensitivity_jobs(
-                        cycles, aldram::eval::PAPER_REDUCTIONS_55C, jobs) {
+                    let rows = if args.has("profiles") {
+                        let profiles = load_profiles(&args)?;
+                        println!("== §8.4: sensitivity (profiled modules, \
+                                  {jobs} jobs) ==");
+                        aldram::eval::sensitivity_profiled(cycles, &profiles,
+                                                           jobs)
+                    } else {
+                        println!("== §8.4: sensitivity (memory-intensive \
+                                  gmean, {jobs} jobs) ==");
+                        aldram::eval::sensitivity_jobs(
+                            cycles, aldram::eval::PAPER_REDUCTIONS_55C, jobs)
+                    };
+                    for row in rows {
                         println!("{:<18} {:>6.1}%", row.label,
                                  100.0 * (row.gmean_speedup - 1.0));
                     }
                 }
                 "hetero" => {
+                    // True module heterogeneity: channels host distinct
+                    // profiled DIMMs. Use the --profiles registry when
+                    // given, else profile a small population now.
+                    let channels = args.get("channels", 2usize);
+                    anyhow::ensure!(
+                        channels >= 2 && channels.is_power_of_two(),
+                        "--channels must be a power of two >= 2, got \
+                         {channels}"
+                    );
+                    let profiles = if args.has("profiles") {
+                        load_profiles(&args)?
+                    } else {
+                        let cells =
+                            args.get("cells", g.cells_per_chip_bank_small);
+                        let dimms =
+                            args.get("dimms", (2 * channels).max(8));
+                        eprintln!("no --profiles registry; profiling \
+                                   {dimms} modules at {cells} cells \
+                                   (save one with `repro profile --save`)");
+                        let kind = args.str("backend", "auto");
+                        calibrate::run_par(|| make_backend(&kind, cells),
+                                           dimms, cells, jobs)?
+                            .profiles
+                    };
+                    anyhow::ensure!(
+                        profiles.len() >= channels,
+                        "registry has {} profiles but --channels {channels} \
+                         needs one distinct module per channel",
+                        profiles.len()
+                    );
                     let mixes = aldram::eval::hetero_eval(
-                        cycles, args.get("mixes", 8usize),
-                        aldram::eval::PAPER_REDUCTIONS_55C);
-                    println!("== §8.4: heterogeneous 4-app mixes ==");
+                        cycles, args.get("mixes", 8usize), channels,
+                        &profiles);
+                    println!("== §8.4: heterogeneous modules — {channels} \
+                              channels with distinct DIMMs ==");
                     let mut ws = Vec::new();
                     for m in &mixes {
-                        println!("{:<54} {:>6.1}%", m.mix.join("+"),
-                                 100.0 * (m.weighted_speedup - 1.0));
+                        let dimms: Vec<String> = m.dimm_ids.iter()
+                            .map(|d| format!("{d:03}"))
+                            .collect();
+                        let lat: Vec<String> = m.channel_latency_reduction
+                            .iter()
+                            .map(|r| format!("{:+.1}%", 100.0 * r))
+                            .collect();
+                        println!(
+                            "{:<44} dimms[{}] ws {:+5.1}%  ch-lat[{}] \
+                             spread {:.1}pp",
+                            m.mix.join("+"), dimms.join(","),
+                            100.0 * (m.weighted_speedup - 1.0),
+                            lat.join(","), 100.0 * m.channel_spread
+                        );
                         ws.push(m.weighted_speedup);
                     }
                     println!("gmean weighted speedup: {:.1}%",
                              100.0 * (aldram::util::geomean(&ws) - 1.0));
                 }
                 "power" => {
-                    let rows = aldram::eval::power_eval(
-                        cycles, aldram::eval::PAPER_REDUCTIONS_55C);
-                    println!("== §8.4: DRAM power ==");
+                    let rows = if args.has("profiles") {
+                        let profiles = load_profiles(&args)?;
+                        let (id, table) = table_for(&args, &profiles)?;
+                        println!("== §8.4: DRAM power (profiled dimm \
+                                  {id:03}) ==");
+                        aldram::eval::power_eval_profiled(cycles, &table)
+                    } else {
+                        println!("== §8.4: DRAM power ==");
+                        aldram::eval::power_eval(
+                            cycles, aldram::eval::PAPER_REDUCTIONS_55C)
+                    };
                     println!("{:<14} {:>9} {:>9} {:>12} {:>12}", "workload",
                              "base W", "aldram W", "base J/Gi", "aldram J/Gi");
                     for r in &rows {
@@ -248,8 +374,7 @@ fn main() -> anyhow::Result<()> {
                 ("al-dram-55C", TimingParams::ddr3_standard()
                     .reduced(0.27, 0.32, 0.33, 0.18)),
             ] {
-                let cfg = SystemConfig { timings: t,
-                                         ..SystemConfig::paper_default() };
+                let cfg = SystemConfig::paper_default().with_timings(t);
                 let mut seq = System::new(
                     &cfg, &[(w.clone(), "bench".into())]);
                 let t0 = Instant::now();

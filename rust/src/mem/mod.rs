@@ -12,4 +12,5 @@ pub use address::AddrMap;
 pub use controller::{Controller, CtrlStats, Request, RowPolicy};
 pub use cpu::Core;
 pub use dram::{Bank, BankState, Cycle, Rank};
-pub use system::{System, SystemConfig, SystemStats};
+pub use system::{ChannelConfig, ChannelStats, System, SystemConfig,
+                 SystemStats};

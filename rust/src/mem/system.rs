@@ -2,6 +2,15 @@
 //! the "real system" of §6/Fig 4 — baseline DDR3 timings vs. AL-DRAM's
 //! reduced timings, with the AL-DRAM mechanism optionally managing the
 //! timing set from the thermal model at refresh granularity.
+//!
+//! The unit of configuration is the *channel*: each channel carries its
+//! own DIMM identity — a timing set, an optional AL-DRAM table built from
+//! that DIMM's profile, and an ambient temperature — and owns a private
+//! `ThermalModel` fed by that channel's windowed bus utilization. This is
+//! the paper's per-module adaptation (§4/§6): two channels populated with
+//! different DIMMs run different timings and drift thermally apart.
+//! `SystemConfig::uniform` keeps the common all-channels-alike case a
+//! one-liner.
 
 use super::address::AddrMap;
 use super::controller::{Controller, Request, RowPolicy};
@@ -10,30 +19,100 @@ use crate::aldram::{AlDram, ThermalModel};
 use crate::timing::TimingParams;
 use crate::workloads::WorkloadSpec;
 
+/// Per-channel DIMM identity: the timing set the channel boots with, an
+/// optional AL-DRAM table managing it dynamically, and the channel's
+/// ambient temperature (DIMMs in one chassis can sit in different airflow).
+#[derive(Debug, Clone)]
+pub struct ChannelConfig {
+    pub timings: TimingParams,
+    /// If set, AL-DRAM manages this channel's timings from its thermal
+    /// model at refresh-epoch granularity.
+    pub aldram: Option<AlDram>,
+    /// Ambient temperature for this channel's thermal model (degC).
+    pub ambient_c: f64,
+}
+
+impl ChannelConfig {
+    /// A channel at standard DDR3 timings, unmanaged.
+    pub fn standard(ambient_c: f64) -> Self {
+        ChannelConfig {
+            timings: TimingParams::ddr3_standard(),
+            aldram: None,
+            ambient_c,
+        }
+    }
+
+    /// A channel whose DIMM is AL-DRAM-managed by the given table; boots
+    /// at standard timings until the first thermal epoch installs the
+    /// table's bin for the measured temperature.
+    pub fn profiled(table: AlDram, ambient_c: f64) -> Self {
+        ChannelConfig {
+            timings: TimingParams::ddr3_standard(),
+            aldram: Some(table),
+            ambient_c,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
-    pub channels: usize,
+    /// One entry per channel (the length is the channel count; must be a
+    /// power of two for the address interleave).
+    pub channels: Vec<ChannelConfig>,
     pub ranks_per_channel: usize,
     pub policy: RowPolicy,
-    pub timings: TimingParams,
-    /// Ambient temperature for the thermal model (degC).
-    pub ambient_c: f64,
-    /// If set, AL-DRAM manages timings dynamically from the thermal model.
-    pub aldram: Option<AlDram>,
 }
 
 impl SystemConfig {
     /// The paper's evaluated configuration: one channel, one rank,
     /// open-page, 55degC operating temperature.
     pub fn paper_default() -> Self {
+        SystemConfig::uniform(1, ChannelConfig::standard(55.0))
+    }
+
+    /// `n` identical channels (the pre-heterogeneity common case), one
+    /// rank each, open-page.
+    pub fn uniform(n: usize, channel: ChannelConfig) -> Self {
         SystemConfig {
-            channels: 1,
+            channels: vec![channel; n],
             ranks_per_channel: 1,
             policy: RowPolicy::Open,
-            timings: TimingParams::ddr3_standard(),
-            ambient_c: 55.0,
-            aldram: None,
         }
+    }
+
+    pub fn channel_count(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Replicate the first channel's configuration across `n` channels.
+    pub fn with_channels(mut self, n: usize) -> Self {
+        let ch = self.channels.first().expect("config has no channels").clone();
+        self.channels = vec![ch; n];
+        self
+    }
+
+    /// Set every channel's timing set.
+    pub fn with_timings(mut self, timings: TimingParams) -> Self {
+        for ch in &mut self.channels {
+            ch.timings = timings;
+        }
+        self
+    }
+
+    /// Set every channel's AL-DRAM table.
+    pub fn with_aldram(mut self, aldram: Option<AlDram>) -> Self {
+        for ch in &mut self.channels {
+            ch.aldram = aldram.clone();
+        }
+        self
+    }
+
+    /// Set every channel's ambient temperature.
+    pub fn with_ambient(mut self, ambient_c: f64) -> Self {
+        for ch in &mut self.channels {
+            ch.ambient_c = ambient_c;
+        }
+        self
     }
 }
 
@@ -47,6 +126,22 @@ pub struct CoreStats {
     pub stall_cycles: u64,
 }
 
+/// Per-channel slice of the run: traffic, latency, and the thermal /
+/// AL-DRAM trajectory of that channel's DIMM.
+#[derive(Debug, Clone)]
+pub struct ChannelStats {
+    pub reads_done: u64,
+    pub writes_done: u64,
+    pub avg_read_latency_cycles: f64,
+    pub row_hit_rate: f64,
+    /// Mean / final temperature of this channel's DIMM over the run.
+    pub mean_temp_c: f64,
+    pub final_temp_c: f64,
+    /// How many times AL-DRAM installed a *different* timing set on this
+    /// channel (0 for unmanaged channels).
+    pub timing_switches: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct SystemStats {
     pub cycles: u64,
@@ -58,11 +153,13 @@ pub struct SystemStats {
     pub refreshes: u64,
     /// Bus data cycles / total cycles (bandwidth utilization proxy).
     pub bus_utilization: f64,
+    /// Per-channel traffic/latency/thermal breakdown.
+    pub channels: Vec<ChannelStats>,
     /// Power-model inputs per channel.
     pub power_inputs: Vec<crate::power::PowerInputs>,
-    /// Mean DIMM temperature over the run (thermal model).
+    /// Mean DIMM temperature over the run, averaged across channels.
     pub mean_temp_c: f64,
-    /// DIMM temperature at the end of the run.
+    /// Average across channels of the end-of-run DIMM temperature.
     pub final_temp_c: f64,
 }
 
@@ -70,23 +167,33 @@ pub struct SystemStats {
 /// far finer than the <= 0.1 degC/s drift the paper measures).
 pub const THERMAL_EPOCH: u64 = 1024;
 
-pub struct System {
-    controllers: Vec<Controller>,
-    cores: Vec<Core>,
-    core_names: Vec<String>,
+/// Per-channel runtime state: the thermal model and AL-DRAM bookkeeping
+/// for one channel's DIMM.
+struct ChannelState {
     thermal: ThermalModel,
     aldram: Option<AlDram>,
-    chan_bits_mask: u64,
-    /// Channel interleave shift: one row per channel stripe, derived from
-    /// the address map's row size.
-    chan_shift: u32,
-    now: u64,
+    /// Timing set currently installed on the controller (tracked so a
+    /// table lookup that resolves to the same bin is not a "switch").
+    installed: TimingParams,
     temp_acc: f64,
     temp_samples: u64,
     /// Column completions observed up to the previous thermal epoch, so
     /// the thermal model sees the *windowed* utilization of the last
     /// epoch, not a run-cumulative average.
     last_epoch_done: u64,
+    timing_switches: u64,
+}
+
+pub struct System {
+    controllers: Vec<Controller>,
+    cores: Vec<Core>,
+    core_names: Vec<String>,
+    channels: Vec<ChannelState>,
+    chan_bits_mask: u64,
+    /// Channel interleave shift: one row per channel stripe, derived from
+    /// the address map's row size.
+    chan_shift: u32,
+    now: u64,
 }
 
 impl System {
@@ -100,9 +207,25 @@ impl System {
     /// size, so a different row geometry keeps row-granular interleave.
     pub fn new_with_map(cfg: &SystemConfig, map: AddrMap,
                         workloads: &[(WorkloadSpec, String)]) -> Self {
-        assert!(cfg.channels.is_power_of_two());
-        let controllers = (0..cfg.channels)
-            .map(|_| Controller::new(map, cfg.timings, cfg.policy))
+        assert!(!cfg.channels.is_empty(), "config has no channels");
+        assert!(cfg.channels.len().is_power_of_two());
+        let controllers = cfg
+            .channels
+            .iter()
+            .map(|ch| Controller::new(map, ch.timings, cfg.policy))
+            .collect();
+        let channels = cfg
+            .channels
+            .iter()
+            .map(|ch| ChannelState {
+                thermal: ThermalModel::new(ch.ambient_c),
+                aldram: ch.aldram.clone(),
+                installed: ch.timings,
+                temp_acc: 0.0,
+                temp_samples: 0,
+                last_epoch_done: 0,
+                timing_switches: 0,
+            })
             .collect();
         let cores = workloads
             .iter()
@@ -115,14 +238,10 @@ impl System {
             controllers,
             cores,
             core_names,
-            thermal: ThermalModel::new(cfg.ambient_c),
-            aldram: cfg.aldram.clone(),
-            chan_bits_mask: cfg.channels as u64 - 1,
+            channels,
+            chan_bits_mask: cfg.channels.len() as u64 - 1,
             chan_shift: map.row_bytes().trailing_zeros(),
             now: 0,
-            temp_acc: 0.0,
-            temp_samples: 0,
-            last_epoch_done: 0,
         }
     }
 
@@ -164,39 +283,36 @@ impl System {
             }
         }
 
-        // Thermal + AL-DRAM management at the epoch granularity.
+        // Thermal + AL-DRAM management at the epoch granularity, per
+        // channel: each DIMM heats with its own traffic and consults its
+        // own table.
         if now % THERMAL_EPOCH == 0 {
-            let util = self.bus_utilization_window();
-            let temp = self.thermal.step(THERMAL_EPOCH as f64 * 1.25e-9, util);
-            self.temp_acc += temp;
-            self.temp_samples += 1;
-            if let Some(al) = &self.aldram {
-                let t = al.timings_for(temp);
-                for ctrl in &mut self.controllers {
-                    ctrl.set_timings(t);
+            for (ch, ctrl) in
+                self.channels.iter_mut().zip(&mut self.controllers)
+            {
+                let done = ctrl.stats.reads_done + ctrl.stats.writes_done;
+                let delta = done - ch.last_epoch_done;
+                ch.last_epoch_done = done;
+                // Windowed utilization of the last epoch (run-cumulative
+                // counts would hide phase changes from the thermal model).
+                let util =
+                    ((delta * 4) as f64 / THERMAL_EPOCH as f64).min(1.0);
+                let temp =
+                    ch.thermal.step(THERMAL_EPOCH as f64 * 1.25e-9, util);
+                ch.temp_acc += temp;
+                ch.temp_samples += 1;
+                if let Some(al) = &ch.aldram {
+                    let t = al.timings_for(temp);
+                    if t != ch.installed {
+                        ch.installed = t;
+                        ch.timing_switches += 1;
+                        ctrl.set_timings(t);
+                    }
                 }
             }
         }
 
         self.now += 1;
-    }
-
-    /// Bus utilization over the last thermal epoch: data-bus cycles of the
-    /// column commands completed since the previous epoch, per channel.
-    /// (Run-cumulative counts would hide phase changes from the thermal
-    /// model — a bursty workload would read as its long-run average and
-    /// the temperature→timing feedback the paper evaluates would never
-    /// see the burst.)
-    fn bus_utilization_window(&mut self) -> f64 {
-        let done: u64 = self
-            .controllers
-            .iter()
-            .map(|c| c.stats.reads_done + c.stats.writes_done)
-            .sum();
-        let delta = done - self.last_epoch_done;
-        self.last_epoch_done = done;
-        let window = THERMAL_EPOCH * self.controllers.len() as u64;
-        ((delta * 4) as f64 / window as f64).min(1.0)
     }
 
     pub fn run(&mut self, cycles: u64) -> SystemStats {
@@ -292,18 +408,44 @@ impl System {
         let mut hit_num = 0.0;
         let mut hit_den = 0.0;
         let mut power_inputs = Vec::new();
-        for ctrl in &self.controllers {
+        let mut channels = Vec::new();
+        let mut temp_mean_sum = 0.0;
+        let mut temp_final_sum = 0.0;
+        for (ctrl, ch) in self.controllers.iter().zip(&self.channels) {
             let s = &ctrl.stats;
             reads += s.reads_done;
             writes += s.writes_done;
             refreshes += s.refreshes;
             lat_num += s.avg_read_latency() * s.reads_done as f64;
             hit_num += s.row_hits as f64;
-            hit_den +=
+            let ch_hit_den =
                 (s.row_hits + s.row_misses + s.row_conflicts) as f64;
+            hit_den += ch_hit_den;
             power_inputs.push(crate::power::PowerInputs::from_controller(
                 ctrl, cycles));
+            let mean_temp_c = if ch.temp_samples > 0 {
+                ch.temp_acc / ch.temp_samples as f64
+            } else {
+                ch.thermal.temperature()
+            };
+            let final_temp_c = ch.thermal.temperature();
+            temp_mean_sum += mean_temp_c;
+            temp_final_sum += final_temp_c;
+            channels.push(ChannelStats {
+                reads_done: s.reads_done,
+                writes_done: s.writes_done,
+                avg_read_latency_cycles: s.avg_read_latency(),
+                row_hit_rate: if ch_hit_den > 0.0 {
+                    s.row_hits as f64 / ch_hit_den
+                } else {
+                    0.0
+                },
+                mean_temp_c,
+                final_temp_c,
+                timing_switches: ch.timing_switches,
+            });
         }
+        let n_ch = self.controllers.len() as f64;
         SystemStats {
             cycles,
             cores,
@@ -318,13 +460,10 @@ impl System {
             refreshes,
             bus_utilization: ((reads + writes) * 4) as f64
                 / (cycles.max(1) * self.controllers.len() as u64) as f64,
+            channels,
             power_inputs,
-            mean_temp_c: if self.temp_samples > 0 {
-                self.temp_acc / self.temp_samples as f64
-            } else {
-                self.thermal.temperature()
-            },
-            final_temp_c: self.thermal.temperature(),
+            mean_temp_c: temp_mean_sum / n_ch,
+            final_temp_c: temp_final_sum / n_ch,
         }
     }
 
@@ -341,8 +480,7 @@ mod tests {
     use crate::workloads::by_name;
 
     fn run_one(name: &str, timings: TimingParams, cycles: u64) -> SystemStats {
-        let mut cfg = SystemConfig::paper_default();
-        cfg.timings = timings;
+        let cfg = SystemConfig::paper_default().with_timings(timings);
         let w = by_name(name).unwrap();
         let mut sys = System::new(&cfg, &[(w, "t/0".to_string())]);
         sys.run(cycles)
@@ -411,8 +549,7 @@ mod channel_tests {
 
     #[test]
     fn channel_interleave_is_row_granular() {
-        let cfg = SystemConfig { channels: 2,
-                                 ..SystemConfig::paper_default() };
+        let cfg = SystemConfig::paper_default().with_channels(2);
         let w = by_name("gups").unwrap();
         let sys = System::new(&cfg, &[(w, "c".into())]);
         assert_eq!(sys.channel_of(0), 0);
@@ -427,8 +564,7 @@ mod channel_tests {
         // Regression: the shift was hardcoded to `>> 13`, so a map with a
         // different row size lost row-granular striping. 16 KiB rows
         // (col_bits 8) must stripe at 16 KiB granularity.
-        let cfg = SystemConfig { channels: 2,
-                                 ..SystemConfig::paper_default() };
+        let cfg = SystemConfig::paper_default().with_channels(2);
         let map = AddrMap { col_bits: 8, ..AddrMap::ddr3_2gb(1) };
         assert_eq!(map.row_bytes(), 16 * 1024);
         let w = by_name("gups").unwrap();
@@ -443,6 +579,74 @@ mod channel_tests {
         let mut sys2 = System::new_with_map(&cfg, map2, &[(w2, "m".into())]);
         let s = sys2.run(10_000);
         assert!(s.reads_done + s.writes_done > 0);
+    }
+
+    #[test]
+    fn channels_run_distinct_timing_sets() {
+        // Two channels, the second with its own (faster) fixed AL-DRAM
+        // table: the managed channel must serve its reads with lower
+        // latency than the standard one, from the same address stream.
+        let fast = TimingParams::ddr3_standard()
+            .reduced(0.27, 0.32, 0.33, 0.18);
+        let cfg = SystemConfig {
+            channels: vec![
+                ChannelConfig::standard(55.0),
+                ChannelConfig::profiled(AlDram::fixed(fast), 55.0),
+            ],
+            ranks_per_channel: 1,
+            policy: RowPolicy::Open,
+        };
+        let w = by_name("gups").unwrap();
+        let wl: Vec<_> =
+            (0..4).map(|i| (w.clone(), format!("hc/{i}"))).collect();
+        let mut sys = System::new(&cfg, &wl);
+        let s = sys.run(120_000);
+        assert_eq!(s.channels.len(), 2);
+        assert!(s.channels[0].reads_done > 0 && s.channels[1].reads_done > 0);
+        assert!(s.channels[1].avg_read_latency_cycles
+                    < s.channels[0].avg_read_latency_cycles,
+                "managed channel not faster: {} vs {}",
+                s.channels[1].avg_read_latency_cycles,
+                s.channels[0].avg_read_latency_cycles);
+        // The fixed table differs from the boot timings: exactly one
+        // switch on the managed channel, none on the standard one.
+        assert_eq!(s.channels[0].timing_switches, 0);
+        assert_eq!(s.channels[1].timing_switches, 1);
+    }
+
+    #[test]
+    fn channels_have_independent_thermal_state() {
+        // Different ambient temperatures per channel: the stats must keep
+        // the two DIMMs' trajectories apart.
+        let cfg = SystemConfig {
+            channels: vec![ChannelConfig::standard(30.0),
+                           ChannelConfig::standard(70.0)],
+            ranks_per_channel: 1,
+            policy: RowPolicy::Open,
+        };
+        let w = by_name("stream.copy").unwrap();
+        let mut sys = System::new(&cfg, &[(w, "th".into())]);
+        let s = sys.run(100_000);
+        assert!(s.channels[0].mean_temp_c < 40.0,
+                "cool channel at {}", s.channels[0].mean_temp_c);
+        assert!(s.channels[1].mean_temp_c > 60.0,
+                "hot channel at {}", s.channels[1].mean_temp_c);
+        // The system-level temperature is the across-channel average.
+        let avg = (s.channels[0].mean_temp_c + s.channels[1].mean_temp_c)
+            / 2.0;
+        assert!((s.mean_temp_c - avg).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_builder_matches_explicit_config() {
+        let w = by_name("mcf").unwrap();
+        let a = SystemConfig::uniform(2, ChannelConfig::standard(55.0));
+        let b = SystemConfig::paper_default().with_channels(2);
+        let sa = System::new(&a, &[(w.clone(), "u".into())]).run(20_000);
+        let sb = System::new(&b, &[(w, "u".into())]).run(20_000);
+        assert_eq!(sa.reads_done, sb.reads_done);
+        assert_eq!(sa.cores[0].ipc, sb.cores[0].ipc);
+        assert_eq!(sa.mean_temp_c, sb.mean_temp_c);
     }
 }
 
@@ -469,8 +673,7 @@ mod thermal_window_tests {
         // Regression for the run-cumulative bus-utilization bug: the
         // thermal model must see *windowed* utilization, so a bursty and
         // a front-loaded schedule of comparable work heat differently.
-        let cfg = SystemConfig { ambient_c: 40.0,
-                                 ..SystemConfig::paper_default() };
+        let cfg = SystemConfig::paper_default().with_ambient(40.0);
         let front = phased("frontload", 3000, 2_000_000, false);
         let burst = phased("bursty", 400, 250_000, true);
         let sf = System::new(&cfg, &[(front, "ph".into())]).run(400_000);

@@ -14,7 +14,7 @@ use crate::timing::{SweepGrids, TimingParams};
 /// Sweep increment and safety margin (ms) from §5.1.
 pub const SAFETY_MARGIN_MS: f64 = 8.0;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RefreshProfile {
     pub temp_c: f64,
     /// Maximum error-free refresh interval (ms) across the module.

@@ -11,7 +11,7 @@ use crate::timing::TimingParams;
 use crate::util;
 
 /// Everything AL-DRAM needs to know about one DIMM at one temperature.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TimingProfile {
     pub temp_c: f64,
     pub tref_read_ms: f64,
@@ -50,7 +50,7 @@ impl TimingProfile {
 }
 
 /// Full characterization of one DIMM: the Fig 2 battery.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DimmProfile {
     pub id: usize,
     pub vendor: String,

@@ -53,7 +53,7 @@ pub struct FrontierPoint {
 }
 
 /// The most-reduced acceptable combination for one test kind.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BestCombo {
     pub trcd_ns: f64,
     pub third_ns: f64, // tRAS for read, tWR for write

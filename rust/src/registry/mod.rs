@@ -1,0 +1,474 @@
+//! The profile registry: persistent, per-DIMM characterization results.
+//!
+//! AL-DRAM's economics come from profiling a module *once* (at
+//! manufacture or deployment time) and reusing the result for the
+//! module's whole life (§4/§6). This module is that artifact: a
+//! `DimmProfile` — or a derived `AlDram` table — serialized to JSON
+//! through `util::json` (the offline crate mirror has no serde), one
+//! file per DIMM in a registry directory. `repro profile --save <dir>`
+//! writes a profiled population; every figure/eval harness reloads it
+//! with `--profiles <dir>` instead of re-running the characterization.
+//!
+//! Loading validates: timing sets go through [`TimingParams::validate`]
+//! and table assembly through [`AlDram::from_entries`], so a corrupt or
+//! hand-edited file fails loudly at load time, not as silent nonsense
+//! timings in a simulation.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::aldram::{AlDram, TableEntry};
+use crate::profiler::{BestCombo, DimmProfile, RefreshProfile, TimingProfile};
+use crate::timing::TimingParams;
+use crate::util::json::Json;
+
+/// Bumped when the on-disk layout changes; loaders reject unknown
+/// versions instead of guessing.
+pub const FORMAT_VERSION: f64 = 1.0;
+
+// ---------------------------------------------------------------------
+// JSON builders (util::json works on BTreeMap object nodes).
+// ---------------------------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn nums(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
+}
+
+// Non-panicking lookups: `util::json`'s `req`/`f64`/`str` accessors
+// panic on a missing or mistyped key (fine for the trusted
+// model_params.json), but a registry file is user-editable — every
+// corruption must surface as the Result that `load_profile` wraps with
+// the file path.
+fn field<'j>(j: &'j Json, key: &str) -> Result<&'j Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing key `{key}`"))
+}
+
+fn f64_of(j: &Json, key: &str) -> Result<f64> {
+    field(j, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("`{key}` is not a number"))
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    let x = f64_of(j, key)?;
+    anyhow::ensure!(x >= 0.0 && x.fract() == 0.0,
+                    "`{key}` is not a non-negative integer: {x}");
+    Ok(x as usize)
+}
+
+fn str_of(j: &Json, key: &str) -> Result<String> {
+    field(j, key)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("`{key}` is not a string"))
+}
+
+fn f64_vec(j: &Json, key: &str) -> Result<Vec<f64>> {
+    field(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("`{key}` is not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("`{key}` contains a non-number")
+            })
+        })
+        .collect()
+}
+
+fn bool_of(j: &Json, key: &str) -> Result<bool> {
+    match field(j, key)? {
+        Json::Bool(b) => Ok(*b),
+        other => anyhow::bail!("`{key}` is not a bool: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// DimmProfile <-> JSON
+// ---------------------------------------------------------------------
+
+fn combo_to_json(c: &BestCombo) -> Json {
+    obj(vec![
+        ("trcd_ns", Json::Num(c.trcd_ns)),
+        ("third_ns", Json::Num(c.third_ns)),
+        ("trp_ns", Json::Num(c.trp_ns)),
+        ("sum_ns", Json::Num(c.sum_ns)),
+        ("reduction", Json::Num(c.reduction)),
+    ])
+}
+
+fn combo_from_json(j: &Json) -> Result<BestCombo> {
+    Ok(BestCombo {
+        trcd_ns: f64_of(j, "trcd_ns")?,
+        third_ns: f64_of(j, "third_ns")?,
+        trp_ns: f64_of(j, "trp_ns")?,
+        sum_ns: f64_of(j, "sum_ns")?,
+        reduction: f64_of(j, "reduction")?,
+    })
+}
+
+fn timing_profile_to_json(t: &TimingProfile) -> Json {
+    obj(vec![
+        ("temp_c", Json::Num(t.temp_c)),
+        ("tref_read_ms", Json::Num(t.tref_read_ms)),
+        ("tref_write_ms", Json::Num(t.tref_write_ms)),
+        ("read", combo_to_json(&t.read)),
+        ("write", combo_to_json(&t.write)),
+    ])
+}
+
+fn timing_profile_from_json(j: &Json) -> Result<TimingProfile> {
+    let t = TimingProfile {
+        temp_c: f64_of(j, "temp_c")?,
+        tref_read_ms: f64_of(j, "tref_read_ms")?,
+        tref_write_ms: f64_of(j, "tref_write_ms")?,
+        read: combo_from_json(field(j, "read")?)?,
+        write: combo_from_json(field(j, "write")?)?,
+    };
+    // The operational set this profile resolves to must be a sane timing
+    // set — this is where a hand-edited negative tRCD or a tRAS below
+    // tRCD is caught.
+    t.combined()
+        .validate()
+        .with_context(|| format!("timing profile at {} C", t.temp_c))?;
+    Ok(t)
+}
+
+fn refresh_to_json(r: &RefreshProfile) -> Json {
+    obj(vec![
+        ("temp_c", Json::Num(r.temp_c)),
+        ("module_max_read_ms", Json::Num(r.module_max_read_ms)),
+        ("module_max_write_ms", Json::Num(r.module_max_write_ms)),
+        ("bank_max_read_ms", nums(&r.bank_max_read_ms)),
+        ("bank_max_write_ms", nums(&r.bank_max_write_ms)),
+        ("chip_max_read_ms", nums(&r.chip_max_read_ms)),
+        ("chip_max_write_ms", nums(&r.chip_max_write_ms)),
+        ("saturated_read", Json::Bool(r.saturated_read)),
+        ("saturated_write", Json::Bool(r.saturated_write)),
+    ])
+}
+
+fn refresh_from_json(j: &Json) -> Result<RefreshProfile> {
+    let r = RefreshProfile {
+        temp_c: f64_of(j, "temp_c")?,
+        module_max_read_ms: f64_of(j, "module_max_read_ms")?,
+        module_max_write_ms: f64_of(j, "module_max_write_ms")?,
+        bank_max_read_ms: f64_vec(j, "bank_max_read_ms")?,
+        bank_max_write_ms: f64_vec(j, "bank_max_write_ms")?,
+        chip_max_read_ms: f64_vec(j, "chip_max_read_ms")?,
+        chip_max_write_ms: f64_vec(j, "chip_max_write_ms")?,
+        saturated_read: bool_of(j, "saturated_read")?,
+        saturated_write: bool_of(j, "saturated_write")?,
+    };
+    anyhow::ensure!(
+        r.module_max_read_ms > 0.0 && r.module_max_write_ms > 0.0,
+        "non-positive refresh maxima at {} C", r.temp_c
+    );
+    Ok(r)
+}
+
+/// Serialize one DIMM's full characterization.
+pub fn profile_to_json(p: &DimmProfile) -> Json {
+    obj(vec![
+        ("format_version", Json::Num(FORMAT_VERSION)),
+        ("id", Json::Num(p.id as f64)),
+        ("vendor", Json::Str(p.vendor.clone())),
+        ("refresh85", refresh_to_json(&p.refresh85)),
+        ("at85", timing_profile_to_json(&p.at85)),
+        ("at55", timing_profile_to_json(&p.at55)),
+    ])
+}
+
+/// Parse + validate one DIMM profile.
+pub fn profile_from_json(j: &Json) -> Result<DimmProfile> {
+    let version = f64_of(j, "format_version")?;
+    anyhow::ensure!(version == FORMAT_VERSION,
+                    "unknown registry format version {version} \
+                     (this build reads {FORMAT_VERSION})");
+    let p = DimmProfile {
+        id: usize_of(j, "id")?,
+        vendor: str_of(j, "vendor")?,
+        refresh85: refresh_from_json(field(j, "refresh85")?)?,
+        at85: timing_profile_from_json(field(j, "at85")?)?,
+        at55: timing_profile_from_json(field(j, "at55")?)?,
+    };
+    // The profile must also assemble into a valid table (monotone bins);
+    // surface that here rather than at first use.
+    AlDram::try_from_profile(&p, crate::aldram::DEFAULT_BIN_C)
+        .with_context(|| format!("dimm {:03}", p.id))?;
+    Ok(p)
+}
+
+// ---------------------------------------------------------------------
+// AlDram table <-> JSON
+// ---------------------------------------------------------------------
+
+fn timings_to_json(t: &TimingParams) -> Json {
+    obj(vec![
+        ("trcd_ns", Json::Num(t.trcd_ns)),
+        ("tras_ns", Json::Num(t.tras_ns)),
+        ("twr_ns", Json::Num(t.twr_ns)),
+        ("trp_ns", Json::Num(t.trp_ns)),
+    ])
+}
+
+fn timings_from_json(j: &Json) -> Result<TimingParams> {
+    Ok(TimingParams::ddr3_standard().with_core(
+        f64_of(j, "trcd_ns")?,
+        f64_of(j, "tras_ns")?,
+        f64_of(j, "twr_ns")?,
+        f64_of(j, "trp_ns")?,
+    ))
+}
+
+/// Serialize a temperature-indexed timing table. The unbounded fallback
+/// entry's `max_c` is stored as JSON `null` (JSON has no infinity).
+pub fn aldram_to_json(t: &AlDram) -> Json {
+    let entries: Vec<Json> = t
+        .entries()
+        .iter()
+        .map(|e| {
+            let max_c = if e.max_c.is_finite() {
+                Json::Num(e.max_c)
+            } else {
+                Json::Null
+            };
+            obj(vec![("max_c", max_c),
+                     ("timings", timings_to_json(&e.timings))])
+        })
+        .collect();
+    obj(vec![
+        ("format_version", Json::Num(FORMAT_VERSION)),
+        ("guard_c", Json::Num(t.guard_c)),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+/// Parse + validate a timing table (invariants enforced by
+/// [`AlDram::from_entries`]).
+pub fn aldram_from_json(j: &Json) -> Result<AlDram> {
+    let version = f64_of(j, "format_version")?;
+    anyhow::ensure!(version == FORMAT_VERSION,
+                    "unknown registry format version {version}");
+    let entries: Vec<TableEntry> = field(j, "entries")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("`entries` is not an array"))?
+        .iter()
+        .map(|e| {
+            let max_c = match field(e, "max_c")? {
+                Json::Null => f64::INFINITY,
+                Json::Num(x) => *x,
+                other => anyhow::bail!(
+                    "`max_c` must be a number or null, got {other:?}"),
+            };
+            Ok(TableEntry {
+                max_c,
+                timings: timings_from_json(field(e, "timings")?)?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    AlDram::from_entries(entries, f64_of(j, "guard_c")?)
+}
+
+// ---------------------------------------------------------------------
+// Registry directory: one `dimm_NNN.json` per module.
+// ---------------------------------------------------------------------
+
+fn profile_path(dir: &Path, id: usize) -> PathBuf {
+    dir.join(format!("dimm_{id:03}.json"))
+}
+
+/// Write one profile into the registry directory (created if missing);
+/// returns the file path.
+pub fn save_profile(dir: &Path, p: &DimmProfile) -> Result<PathBuf> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating registry dir {}", dir.display()))?;
+    let path = profile_path(dir, p.id);
+    fs::write(&path, profile_to_json(p).to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Write a whole profiled population, replacing any previous registry:
+/// stale `dimm_*.json` from an earlier (larger, or differently-sampled)
+/// campaign are removed, so `--profiles` never loads a silently mixed
+/// population. The new files are fully staged as `*.json.tmp` (which
+/// loaders ignore) before the old registry is touched, so an
+/// interrupted save leaves either the old population intact or an
+/// empty-looking registry that `load_registry` rejects loudly — never
+/// a plausible truncated one.
+pub fn save_registry(dir: &Path, profiles: &[DimmProfile]) -> Result<()> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating registry dir {}", dir.display()))?;
+    let staged: Vec<(PathBuf, PathBuf)> = profiles
+        .iter()
+        .map(|p| {
+            let path = profile_path(dir, p.id);
+            let tmp = path.with_extension("json.tmp");
+            fs::write(&tmp, profile_to_json(p).to_string_pretty())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            Ok((tmp, path))
+        })
+        .collect::<Result<_>>()?;
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("dimm_") && name.ends_with(".json") {
+            fs::remove_file(&path)
+                .with_context(|| format!("removing stale {}", path.display()))?;
+        }
+    }
+    for (tmp, path) in staged {
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("installing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Load and validate one profile file.
+pub fn load_profile(path: &Path) -> Result<DimmProfile> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    profile_from_json(&j)
+        .with_context(|| format!("loading {}", path.display()))
+}
+
+/// Load every `dimm_*.json` in the registry directory, sorted by DIMM id.
+pub fn load_registry(dir: &Path) -> Result<Vec<DimmProfile>> {
+    let mut profiles = Vec::new();
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("reading registry dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("dimm_") && name.ends_with(".json") {
+            profiles.push(load_profile(&path)?);
+        }
+    }
+    anyhow::ensure!(!profiles.is_empty(),
+                    "no dimm_*.json profiles in {}", dir.display());
+    profiles.sort_by_key(|p| p.id);
+    Ok(profiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::profiler::profile_dimm;
+    use crate::runtime::NativeBackend;
+
+    fn profile(id: usize) -> DimmProfile {
+        let d = generate_dimm(id, 64, params());
+        let mut b = NativeBackend::new();
+        profile_dimm(&mut b, &d).unwrap()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("aldram_registry_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn profile_json_round_trips_exactly() {
+        let p = profile(3);
+        let j = profile_to_json(&p);
+        let reparsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let q = profile_from_json(&reparsed).unwrap();
+        // f64 Display in util::json is shortest-round-trip, so the whole
+        // profile — and therefore any table derived from it — is
+        // bit-identical after a disk round trip.
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn aldram_table_round_trips_including_infinity_bin() {
+        let t = AlDram::from_profile(&profile(1), 10.0);
+        let j = aldram_to_json(&t);
+        let reparsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let u = aldram_from_json(&reparsed).unwrap();
+        assert_eq!(t.entries(), u.entries());
+        assert_eq!(t.guard_c, u.guard_c);
+        assert!(u.entries().last().unwrap().max_c.is_infinite());
+    }
+
+    #[test]
+    fn registry_dir_saves_and_loads_sorted() {
+        let dir = tmp("sorted");
+        let (a, b) = (profile(5), profile(2));
+        save_registry(&dir, &[a.clone(), b.clone()]).unwrap();
+        let loaded = load_registry(&dir).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0], b);
+        assert_eq!(loaded[1], a);
+    }
+
+    #[test]
+    fn corrupt_registry_fails_loudly() {
+        let dir = tmp("corrupt");
+        let p = profile(0);
+        let path = save_profile(&dir, &p).unwrap();
+        let good = fs::read_to_string(&path).unwrap();
+
+        // Unknown format version.
+        fs::write(&path, good.replace("\"format_version\": 1",
+                                      "\"format_version\": 99"))
+            .unwrap();
+        assert!(load_profile(&path).is_err(), "version check");
+
+        // A hand-edited negative timing must be rejected by validation.
+        // (`third_ns` of the read chain becomes the operational tRAS
+        // directly, so corrupting every occurrence of this value is
+        // guaranteed to surface through `TimingParams::validate`.)
+        let key = format!("\"third_ns\": {}", p.at55.read.third_ns);
+        assert!(good.contains(&key), "fixture drifted: {key} not found");
+        fs::write(&path, good.replace(&key, "\"third_ns\": -4")).unwrap();
+        assert!(load_profile(&path).is_err(), "negative timing accepted");
+
+        // Truncated JSON.
+        fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(load_profile(&path).is_err(), "truncated file accepted");
+
+        // A deleted field must be an error (with the file path in the
+        // chain), not a panic from the trusted-input json accessors.
+        let mut j = Json::parse(&good).unwrap();
+        if let Json::Obj(m) = &mut j {
+            m.remove("vendor");
+        }
+        fs::write(&path, j.to_string_pretty()).unwrap();
+        let err = load_profile(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("vendor"), "{err:#}");
+    }
+
+    #[test]
+    fn save_registry_replaces_stale_population() {
+        let dir = tmp("stale");
+        save_registry(&dir, &[profile(0), profile(5)]).unwrap();
+        // Re-saving a smaller population must not leave dimm_005 behind.
+        save_registry(&dir, &[profile(2)]).unwrap();
+        let loaded = load_registry(&dir).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].id, 2);
+    }
+
+    #[test]
+    fn missing_registry_dir_is_an_error() {
+        assert!(load_registry(Path::new("/nonexistent/registry")).is_err());
+    }
+}

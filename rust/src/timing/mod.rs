@@ -69,6 +69,32 @@ impl TimingParams {
         )
     }
 
+    /// Sanity-check the four AL-DRAM-optimized parameters: finite and
+    /// non-negative, protocol-ordered (tRAS must cover tRCD), and never
+    /// slower than the JEDEC worst-case set (AL-DRAM tables only ever
+    /// *reduce* timings). Called from every `AlDram` table construction,
+    /// so a corrupt or hand-edited registry file fails loudly at load
+    /// time instead of silently simulating nonsense.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let std = TimingParams::ddr3_standard();
+        let core = [("tRCD", self.trcd_ns, std.trcd_ns),
+                    ("tRAS", self.tras_ns, std.tras_ns),
+                    ("tWR", self.twr_ns, std.twr_ns),
+                    ("tRP", self.trp_ns, std.trp_ns)];
+        for (name, v, max) in core {
+            anyhow::ensure!(v.is_finite() && v >= 0.0,
+                            "{name} = {v} ns must be finite and non-negative");
+            anyhow::ensure!(v <= max + 1e-6,
+                            "{name} = {v} ns exceeds the DDR3 standard \
+                             {max} ns (timing tables only reduce)");
+        }
+        anyhow::ensure!(self.tras_ns >= self.trcd_ns - 1e-6,
+                        "tRAS {} ns < tRCD {} ns: the row must stay open at \
+                         least until the column access can start",
+                        self.tras_ns, self.trcd_ns);
+        Ok(())
+    }
+
     /// Row-cycle time: tRC = tRAS + tRP, the back-to-back ACT period.
     pub fn trc_ns(&self) -> f64 {
         self.tras_ns + self.trp_ns
@@ -221,6 +247,30 @@ mod tests {
         }
         assert_eq!(g.tref_ms[0], 64.0);
         assert_eq!(*g.tref_ms.last().unwrap(), 448.0);
+    }
+
+    #[test]
+    fn validate_accepts_standard_and_reduced_sets() {
+        TimingParams::ddr3_standard().validate().unwrap();
+        TimingParams::ddr3_standard()
+            .reduced(0.27, 0.32, 0.33, 0.18)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_corrupt_sets() {
+        let std = TimingParams::ddr3_standard();
+        // Negative parameter.
+        assert!(std.with_core(-1.0, 35.0, 15.0, 13.75).validate().is_err());
+        // Non-finite parameter.
+        assert!(std.with_core(f64::NAN, 35.0, 15.0, 13.75)
+                    .validate()
+                    .is_err());
+        // tRAS below tRCD.
+        assert!(std.with_core(13.75, 10.0, 15.0, 13.75).validate().is_err());
+        // Slower than the JEDEC worst case.
+        assert!(std.with_core(13.75, 40.0, 15.0, 13.75).validate().is_err());
     }
 
     #[test]

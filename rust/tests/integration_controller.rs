@@ -78,7 +78,7 @@ fn timing_swap_mid_stream_is_seamless() {
 fn more_channels_increase_throughput() {
     let w = by_name("gups").unwrap();
     let run = |channels: usize| {
-        let cfg = SystemConfig { channels, ..SystemConfig::paper_default() };
+        let cfg = SystemConfig::paper_default().with_channels(channels);
         let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("ch/{i}"))).collect();
         let mut sys = System::new(&cfg, &wl);
         let s = sys.run(120_000);
@@ -137,12 +137,10 @@ fn stream_workload_cannot_postpone_refresh() {
 fn aldram_managed_system_tracks_temperature() {
     use aldram::aldram::AlDram;
     // A fixed-table AL-DRAM config runs and reports a plausible DIMM temp.
-    let cfg = SystemConfig {
-        aldram: Some(AlDram::fixed(
-            TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18))),
-        ambient_c: 30.0,
-        ..SystemConfig::paper_default()
-    };
+    let cfg = SystemConfig::paper_default()
+        .with_aldram(Some(AlDram::fixed(
+            TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18))))
+        .with_ambient(30.0);
     let w = by_name("stream.copy").unwrap();
     let wl: Vec<_> = (0..4).map(|i| (w.clone(), format!("t/{i}"))).collect();
     let mut sys = System::new(&cfg, &wl);

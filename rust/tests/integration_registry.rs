@@ -1,0 +1,83 @@
+//! The characterization→evaluation loop, closed: profile a module, save
+//! it to a registry, reload it, and drive the evaluation from the loaded
+//! artifact — with results identical to a profile-fresh run.
+
+use std::path::PathBuf;
+
+use aldram::aldram::AlDram;
+use aldram::aldram::DEFAULT_BIN_C;
+use aldram::eval;
+use aldram::model::params;
+use aldram::population::generate_dimm;
+use aldram::profiler::{profile_dimm, DimmProfile};
+use aldram::registry;
+use aldram::runtime::NativeBackend;
+
+fn profile(id: usize, cells: usize) -> DimmProfile {
+    let d = generate_dimm(id, cells, params());
+    let mut b = NativeBackend::new();
+    profile_dimm(&mut b, &d).unwrap()
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("aldram_reg_it_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn saved_registry_fig4_matches_profile_fresh_run() {
+    // The acceptance contract of the registry: a fig4 evaluation driven
+    // by a reloaded profile is bit-identical to one driven by the fresh
+    // profile, for every statistic (json round-trips f64 exactly, and
+    // the evaluation is a function of the table alone).
+    let p = profile(3, 64);
+    let dir = fresh_dir("fig4");
+    registry::save_profile(&dir, &p).unwrap();
+    let loaded = registry::load_registry(&dir).unwrap();
+    assert_eq!(loaded.len(), 1);
+    assert_eq!(loaded[0], p);
+
+    let fresh_table = AlDram::from_profile(&p, DEFAULT_BIN_C);
+    let loaded_table = AlDram::from_profile(&loaded[0], DEFAULT_BIN_C);
+    assert_eq!(fresh_table.entries(), loaded_table.entries());
+
+    let fresh = eval::fig4_profiled(3_000, 1, &fresh_table, 2);
+    let reloaded = eval::fig4_profiled(3_000, 1, &loaded_table, 2);
+    assert_eq!(fresh.per_workload.len(), reloaded.per_workload.len());
+    for (a, b) in fresh.per_workload.iter().zip(&reloaded.per_workload) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.single_speedup, b.single_speedup, "{}", a.name);
+        assert_eq!(a.multi_speedup, b.multi_speedup, "{}", a.name);
+    }
+    assert_eq!(fresh.gmean_intensive_multi, reloaded.gmean_intensive_multi);
+    assert_eq!(fresh.gmean_nonintensive_multi,
+               reloaded.gmean_nonintensive_multi);
+    assert_eq!(fresh.mean_all_multi, reloaded.mean_all_multi);
+    assert_eq!(fresh.max_multi, reloaded.max_multi);
+}
+
+#[test]
+fn saved_registry_drives_hetero_eval() {
+    // A population saved once feeds the module-heterogeneity eval: the
+    // channels host distinct reloaded DIMMs and the result matches the
+    // profile-fresh population exactly.
+    let dir = fresh_dir("hetero");
+    let fresh: Vec<DimmProfile> = (0..2).map(|id| profile(id, 64)).collect();
+    registry::save_registry(&dir, &fresh).unwrap();
+    let loaded = registry::load_registry(&dir).unwrap();
+    assert_eq!(loaded, fresh);
+
+    let a = eval::hetero_eval(10_000, 2, 2, &fresh);
+    let b = eval::hetero_eval(10_000, 2, 2, &loaded);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.mix, y.mix);
+        assert_eq!(x.dimm_ids, y.dimm_ids);
+        assert_ne!(x.dimm_ids[0], x.dimm_ids[1],
+                   "channels must host distinct modules");
+        assert_eq!(x.weighted_speedup, y.weighted_speedup);
+        assert_eq!(x.channel_latency_reduction, y.channel_latency_reduction);
+        assert_eq!(x.channel_spread, y.channel_spread);
+    }
+}

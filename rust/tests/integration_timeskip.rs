@@ -7,7 +7,8 @@
 //! `.claude/skills/verify/mirror/timeskip_checks.py`.)
 
 use aldram::aldram::AlDram;
-use aldram::mem::{RowPolicy, System, SystemConfig, SystemStats};
+use aldram::mem::{ChannelConfig, RowPolicy, System, SystemConfig,
+                  SystemStats};
 use aldram::timing::TimingParams;
 use aldram::workloads::by_name;
 
@@ -41,6 +42,18 @@ fn assert_stats_identical(label: &str, a: &SystemStats, b: &SystemStats) {
                "{label}: bus_utilization");
     assert_eq!(a.mean_temp_c, b.mean_temp_c, "{label}: mean_temp_c");
     assert_eq!(a.final_temp_c, b.final_temp_c, "{label}: final_temp_c");
+    assert_eq!(a.channels.len(), b.channels.len(), "{label}: channel count");
+    for (i, (ha, hb)) in a.channels.iter().zip(&b.channels).enumerate() {
+        assert_eq!(ha.reads_done, hb.reads_done, "{label}/ch{i}: reads");
+        assert_eq!(ha.writes_done, hb.writes_done, "{label}/ch{i}: writes");
+        assert_eq!(ha.avg_read_latency_cycles, hb.avg_read_latency_cycles,
+                   "{label}/ch{i}: read latency");
+        assert_eq!(ha.mean_temp_c, hb.mean_temp_c, "{label}/ch{i}: mean temp");
+        assert_eq!(ha.final_temp_c, hb.final_temp_c,
+                   "{label}/ch{i}: final temp");
+        assert_eq!(ha.timing_switches, hb.timing_switches,
+                   "{label}/ch{i}: timing switches");
+    }
     assert_eq!(a.cores.len(), b.cores.len(), "{label}: core count");
     for (ca, cb) in a.cores.iter().zip(&b.cores) {
         assert_eq!(ca.insts, cb.insts, "{label}/{}: insts", ca.name);
@@ -118,26 +131,50 @@ fn closed_policy() {
 
 #[test]
 fn multi_channel() {
-    let cfg = SystemConfig { channels: 2,
-                             ..SystemConfig::paper_default() };
+    let cfg = SystemConfig::paper_default().with_channels(2);
     check("2ch/4core/stream.add", &cfg, &[("stream.add", 4)], CYCLES, None);
 }
 
 #[test]
-fn aldram_managed() {
+fn heterogeneous_channels() {
+    // Distinct DIMM identity per channel: different fixed AL-DRAM tables
+    // *and* different ambient temperatures. The per-channel thermal and
+    // timing-switch trajectories must stay bit-identical across drivers.
+    let slower = TimingParams::ddr3_standard()
+        .reduced(0.10, 0.12, 0.15, 0.08);
     let cfg = SystemConfig {
-        aldram: Some(AlDram::fixed(fast_timings())),
-        ambient_c: 30.0,
-        ..SystemConfig::paper_default()
+        channels: vec![
+            ChannelConfig {
+                timings: TimingParams::ddr3_standard(),
+                aldram: Some(AlDram::fixed(fast_timings())),
+                ambient_c: 30.0,
+            },
+            ChannelConfig {
+                timings: TimingParams::ddr3_standard(),
+                aldram: Some(AlDram::fixed(slower)),
+                ambient_c: 70.0,
+            },
+        ],
+        ranks_per_channel: 1,
+        policy: RowPolicy::Open,
     };
+    check("hetero-ch/4core/gups", &cfg, &[("gups", 4)], CYCLES, None);
+    check("hetero-ch/mix", &cfg, &[("stream.copy", 2), ("mcf", 2)], CYCLES,
+          None);
+}
+
+#[test]
+fn aldram_managed() {
+    let cfg = SystemConfig::paper_default()
+        .with_aldram(Some(AlDram::fixed(fast_timings())))
+        .with_ambient(30.0);
     check("aldram/4core/stream.copy", &cfg, &[("stream.copy", 4)], CYCLES,
           None);
 }
 
 #[test]
 fn reduced_timing_set() {
-    let cfg = SystemConfig { timings: fast_timings(),
-                             ..SystemConfig::paper_default() };
+    let cfg = SystemConfig::paper_default().with_timings(fast_timings());
     check("fast-timings/2core/milc", &cfg, &[("milc", 2)], CYCLES, None);
 }
 
