@@ -6,7 +6,7 @@ use aldram::mem::{AddrMap, Controller, Request, RowPolicy, System,
                   SystemConfig};
 use aldram::timing::TimingParams;
 use aldram::util::bench::Bench;
-use aldram::workloads::by_name;
+use aldram::workloads::{by_name, NamedSource, SOURCE_BATCH};
 
 /// Drive one controller for `cycles` with synthetic open-loop traffic.
 fn controller_run(cycles: u64, stride: u64, timings: TimingParams) -> u64 {
@@ -65,6 +65,31 @@ fn main() {
         });
         b.report_speedup_tagged("TIMESKIP", &format!("system/4core/{name}"),
                                 &format!("system/4core/{name}/timeskip"));
+    }
+
+    // Request-source refill batching: one virtual `fill` call per
+    // SOURCE_BATCH references vs one per reference (the pre-refactor
+    // regime, batch = 1). Same stream, same stats — wall clock only.
+    for name in ["stream.copy", "gups"] {
+        let w = by_name(name).unwrap();
+        let run = |batch: usize| {
+            let cfg = SystemConfig::paper_default();
+            let src = NamedSource {
+                name: w.name.to_string(),
+                seed: "srcbench".to_string(),
+                footprint: w.footprint,
+                source: w.source_with_batch("srcbench", batch),
+            };
+            System::with_sources(&cfg, vec![src]).run_fast(4_000).reads_done
+        };
+        assert_eq!(run(1), run(SOURCE_BATCH),
+                   "batch size changed the stream for {name}");
+        b.bench_batch(&format!("source/{name}/batch1"), 4_000, || run(1));
+        b.bench_batch(&format!("source/{name}/batch{SOURCE_BATCH}"), 4_000,
+                      || run(SOURCE_BATCH));
+        b.report_speedup_tagged(
+            "SOURCE", &format!("source/{name}/batch1"),
+            &format!("source/{name}/batch{SOURCE_BATCH}"));
     }
 
     b.finish();

@@ -6,7 +6,7 @@
 
 pub mod thermal;
 
-pub use thermal::ThermalModel;
+pub use thermal::{ThermalModel, FULL_LOAD_RISE_C};
 
 use crate::profiler::DimmProfile;
 use crate::timing::TimingParams;

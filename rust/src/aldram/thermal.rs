@@ -6,6 +6,12 @@
 //! (self-heating) above the ambient, with the drift-rate bound enforced —
 //! which is what makes AL-DRAM's refresh-epoch timing updates safe.
 
+/// Steady-state self-heating at 100% bus utilization (degC above
+/// ambient). Exposed so evaluation harnesses can place a channel's
+/// ambient such that its *worst-case* DIMM temperature lands on a chosen
+/// operating point (see `eval::fig6::ambient_for`).
+pub const FULL_LOAD_RISE_C: f64 = 12.0;
+
 #[derive(Debug, Clone)]
 pub struct ThermalModel {
     ambient_c: f64,
@@ -23,7 +29,7 @@ impl ThermalModel {
         ThermalModel {
             ambient_c,
             temp_c: ambient_c,
-            heat_full_util_c: 12.0,
+            heat_full_util_c: FULL_LOAD_RISE_C,
             tau_s: 30.0,
             max_drift_c_per_s: 0.1,
         }

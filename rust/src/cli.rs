@@ -68,6 +68,14 @@ impl Args {
     pub fn jobs(&self) -> usize {
         self.get("jobs", crate::exec::default_jobs())
     }
+
+    /// The crate-wide `--seed` resolution: the label every workload / mix
+    /// instantiation folds into its RNG stream. Same seed ⇒ bit-identical
+    /// runs; different seed ⇒ different address streams (regression-
+    /// tested in `tests/integration_trace.rs`).
+    pub fn seed(&self) -> String {
+        self.str("seed", "0")
+    }
 }
 
 #[cfg(test)]
@@ -94,6 +102,15 @@ mod tests {
         let a = parse("calibrate");
         assert_eq!(a.get::<usize>("dimms", 30), 30);
         assert_eq!(a.str("out", "results"), "results");
+    }
+
+    #[test]
+    fn seed_flag_threads_through() {
+        let a = parse("trace record --workload milc --seed 42");
+        assert_eq!(a.seed(), "42");
+        // Absent: one crate-wide default label, shared by every entry
+        // point, so unseeded runs stay reproducible.
+        assert_eq!(parse("eval fig6").seed(), "0");
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Fig 6/7: the paper's headline *per-workload* result — AL-DRAM's
+//! performance improvement for every workload, in single-core and
+//! multi-programmed-mix configurations, at two operating temperatures
+//! (55 °C and 85 °C).
+//!
+//! Each evaluated unit (one of the 35 suite workloads single-core, or a
+//! named intensive×non-intensive mix from `workloads::mix`) runs four
+//! simulations per row: {baseline DDR3, AL-DRAM-managed} × {55 °C,
+//! 85 °C}. The AL-DRAM side installs the profiled module's own
+//! temperature-indexed table (reloaded from a `--profiles` registry, as
+//! in `fig4_profiled`), so the 85 °C column genuinely exercises the
+//! hotter — slower — table bins. The improvement metric is the weighted
+//! speedup (`SystemStats::weighted_speedup`): for a single-core unit it
+//! degenerates to the plain IPC ratio.
+
+use crate::aldram::{AlDram, FULL_LOAD_RISE_C};
+use crate::exec::Pool;
+use crate::mem::{ChannelConfig, System, SystemConfig, SystemStats};
+use crate::util;
+use crate::workloads::mix::MixSpec;
+use crate::workloads::{NamedSource, WorkloadSpec};
+
+/// The two evaluated operating temperatures (paper §8.3: performance
+/// sensitivity to temperature).
+pub const FIG6_TEMPS: [f64; 2] = [55.0, 85.0];
+
+/// Ambient temperature that places a channel's *worst-case* DIMM
+/// temperature at the operating point `temp_c`: full-load self-heating
+/// plus the table's lookup guardband both fit under the target, so the
+/// hottest bin the table can ever install is the `temp_c` bin — never
+/// the above-range standard fallback.
+pub fn ambient_for(temp_c: f64, guard_c: f64) -> f64 {
+    temp_c - FULL_LOAD_RISE_C - guard_c
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowKind {
+    /// One suite workload on one core.
+    Single,
+    /// A named multi-programmed mix (`workloads::mix`), one core per
+    /// member, scored by weighted speedup.
+    Mix,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub name: String,
+    pub kind: RowKind,
+    /// Workload MPKI (mean member MPKI for a mix).
+    pub mpki: f64,
+    /// Memory-intensive classification (any-member for a mix — always
+    /// true for the paired mixes).
+    pub intensive: bool,
+    /// Weighted speedup of the AL-DRAM side at each operating point.
+    pub speedup_55: f64,
+    pub speedup_85: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig6Result {
+    pub rows: Vec<Fig6Row>,
+    pub gmean_intensive_55: f64,
+    pub gmean_intensive_85: f64,
+    pub gmean_nonintensive_55: f64,
+    pub gmean_nonintensive_85: f64,
+    pub gmean_mix_55: f64,
+    pub gmean_mix_85: f64,
+}
+
+/// One evaluated unit of the Fig-6 grid.
+enum Unit {
+    Single(WorkloadSpec),
+    Mix(MixSpec),
+}
+
+impl Unit {
+    fn sources(&self, seed: &str) -> Vec<NamedSource> {
+        match self {
+            Unit::Single(w) => {
+                vec![w.named_source(&format!("fig6/{seed}/core0"))]
+            }
+            Unit::Mix(m) => m.sources(&format!("fig6/{seed}")),
+        }
+    }
+}
+
+/// Run the Fig-6 grid: `workloads` singles plus `mixes`, each × 2
+/// temperatures × {baseline, AL-DRAM `table`}, fanned out over `jobs`
+/// pool workers (one simulation per job, input-indexed reduction — the
+/// result is bit-identical for every job count). `seed` feeds every
+/// source's seed label (`--seed` on the CLI), so two runs with the same
+/// seed are bit-identical and different seeds draw different streams.
+pub fn fig6(cycles: u64, jobs: usize, table: &AlDram, seed: &str,
+            workloads: &[WorkloadSpec], mixes: &[MixSpec]) -> Fig6Result {
+    let units: Vec<Unit> = workloads
+        .iter()
+        .cloned()
+        .map(Unit::Single)
+        .chain(mixes.iter().cloned().map(Unit::Mix))
+        .collect();
+
+    // Job index layout: ((unit * 2 + temp) * 2 + side).
+    let n_jobs = units.len() * FIG6_TEMPS.len() * 2;
+    let stats: Vec<SystemStats> = Pool::new(jobs).run(n_jobs, |i| {
+        let side = i % 2;
+        let ti = (i / 2) % FIG6_TEMPS.len();
+        let ui = i / (2 * FIG6_TEMPS.len());
+        let ambient = ambient_for(FIG6_TEMPS[ti], table.guard_c);
+        let ch = if side == 0 {
+            ChannelConfig::standard(ambient)
+        } else {
+            ChannelConfig::profiled(table.clone(), ambient)
+        };
+        let cfg = SystemConfig::uniform(1, ch);
+        let mut sys = System::with_sources(&cfg, units[ui].sources(seed));
+        sys.run_fast(cycles)
+    });
+
+    let speedup_of = |ui: usize, ti: usize| -> f64 {
+        let at = (ui * 2 + ti) * 2;
+        stats[at + 1].weighted_speedup(&stats[at])
+    };
+
+    let rows: Vec<Fig6Row> = units
+        .iter()
+        .enumerate()
+        .map(|(ui, u)| {
+            let (name, kind, mpki, intensive) = match u {
+                Unit::Single(w) => (w.name.to_string(), RowKind::Single,
+                                    w.mpki, w.memory_intensive()),
+                Unit::Mix(m) => (m.name.clone(), RowKind::Mix, m.mpki(),
+                                 true),
+            };
+            Fig6Row {
+                name,
+                kind,
+                mpki,
+                intensive,
+                speedup_55: speedup_of(ui, 0),
+                speedup_85: speedup_of(ui, 1),
+            }
+        })
+        .collect();
+
+    let group = |kind: RowKind, intensive: bool, hot: bool| -> f64 {
+        let v: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.kind == kind
+                        && (kind == RowKind::Mix || r.intensive == intensive))
+            .map(|r| if hot { r.speedup_85 } else { r.speedup_55 })
+            .collect();
+        if v.is_empty() { 1.0 } else { util::geomean(&v) }
+    };
+
+    Fig6Result {
+        gmean_intensive_55: group(RowKind::Single, true, false),
+        gmean_intensive_85: group(RowKind::Single, true, true),
+        gmean_nonintensive_55: group(RowKind::Single, false, false),
+        gmean_nonintensive_85: group(RowKind::Single, false, true),
+        gmean_mix_55: group(RowKind::Mix, true, false),
+        gmean_mix_85: group(RowKind::Mix, true, true),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aldram::DEFAULT_BIN_C;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::profiler::profile_dimm;
+    use crate::runtime::NativeBackend;
+    use crate::workloads::{by_name, mix};
+
+    fn table() -> AlDram {
+        let d = generate_dimm(0, 64, params());
+        let mut b = NativeBackend::new();
+        let p = profile_dimm(&mut b, &d).unwrap();
+        AlDram::from_profile(&p, DEFAULT_BIN_C)
+    }
+
+    fn picks(names: &[&str]) -> Vec<WorkloadSpec> {
+        names.iter().map(|n| by_name(n).unwrap()).collect()
+    }
+
+    #[test]
+    fn fig6_rows_cover_workloads_and_mixes() {
+        let t = table();
+        let ws = picks(&["gups", "povray"]);
+        let mixes: Vec<_> = mix::suite().into_iter().take(2).collect();
+        let r = fig6(8_000, 2, &t, "0", &ws, &mixes);
+        assert_eq!(r.rows.len(), 4);
+        assert_eq!(r.rows[0].kind, RowKind::Single);
+        assert_eq!(r.rows[2].kind, RowKind::Mix);
+        assert_eq!(r.rows[2].name, mixes[0].name);
+        for row in &r.rows {
+            assert!(row.speedup_55 > 0.0 && row.speedup_85 > 0.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig6_is_deterministic_per_seed_and_job_count() {
+        let t = table();
+        let ws = picks(&["milc"]);
+        let mixes: Vec<_> = mix::suite().into_iter().take(1).collect();
+        let a = fig6(6_000, 1, &t, "s1", &ws, &mixes);
+        let b = fig6(6_000, 4, &t, "s1", &ws, &mixes);
+        let c = fig6(6_000, 2, &t, "s2", &ws, &mixes);
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.speedup_55, y.speedup_55, "{}", x.name);
+            assert_eq!(x.speedup_85, y.speedup_85, "{}", x.name);
+        }
+        // A different seed draws different address streams, so at least
+        // one statistic moves.
+        let moved = a.rows.iter().zip(&c.rows).any(|(x, y)| {
+            x.speedup_55 != y.speedup_55 || x.speedup_85 != y.speedup_85
+        });
+        assert!(moved, "seed change had no effect on the grid");
+    }
+
+    #[test]
+    fn cooler_operating_point_buys_at_least_as_much() {
+        // The 55 °C bins are never slower than the 85 °C bins, so the
+        // memory-intensive gmean at 55 °C must not fall below 85 °C's
+        // (paper §8.3: benefit decreases with temperature).
+        let t = table();
+        let ws = picks(&["gups", "libquantum", "milc"]);
+        let r = fig6(25_000, 2, &t, "0", &ws, &[]);
+        assert!(r.gmean_intensive_55 >= r.gmean_intensive_85 - 1e-3,
+                "55C {} < 85C {}", r.gmean_intensive_55,
+                r.gmean_intensive_85);
+        assert!(r.gmean_intensive_55 > 1.0,
+                "AL-DRAM bought nothing at 55C: {}", r.gmean_intensive_55);
+    }
+
+    #[test]
+    fn mixes_score_weighted_speedup_above_one() {
+        let t = table();
+        let mixes: Vec<_> = mix::suite().into_iter().take(2).collect();
+        let r = fig6(25_000, 2, &t, "0", &[], &mixes);
+        assert_eq!(r.rows.len(), 2);
+        for row in &r.rows {
+            assert_eq!(row.kind, RowKind::Mix);
+            assert!(row.speedup_55 > 1.0,
+                    "mix {} regressed at 55C: {}", row.name, row.speedup_55);
+        }
+        assert!(r.gmean_mix_55 > 1.0);
+    }
+}

@@ -1,5 +1,6 @@
 //! System-level evaluation harnesses: Fig 4 (real-system speedups), the
-//! §8.4 sensitivity and power analyses, and the §6 long-run stress test.
+//! Fig-6 per-workload/per-mix improvement table (`fig6`), the §8.4
+//! sensitivity and power analyses, and the §6 long-run stress test.
 //!
 //! Every harness comes in two flavors. The classic one drives the
 //! AL-DRAM side with one global set of fractional reductions
@@ -8,6 +9,10 @@
 //! actually proposes: each evaluated channel installs *its own DIMM's*
 //! `AlDram` table (built by the profiler, or reloaded from the registry)
 //! and lets the per-channel thermal model drive the bin selection.
+
+pub mod fig6;
+
+pub use fig6::{fig6, Fig6Result, Fig6Row, RowKind};
 
 use crate::aldram::{AlDram, DEFAULT_BIN_C};
 use crate::exec::Pool;
@@ -441,14 +446,7 @@ pub fn hetero_eval(cycles: u64, n_mixes: usize, channels: usize,
             let base = run(&base_cfg);
             let prof = run(&prof_cfg);
 
-            let ws = util::mean(
-                &base
-                    .cores
-                    .iter()
-                    .zip(&prof.cores)
-                    .map(|(b, f)| f.ipc / b.ipc)
-                    .collect::<Vec<_>>(),
-            );
+            let ws = prof.weighted_speedup(&base);
             let reductions: Vec<f64> = base
                 .channels
                 .iter()

@@ -1,0 +1,89 @@
+//! Fig 6/7: per-workload (and per-mix) AL-DRAM improvement table at
+//! 55 °C and 85 °C, driven by one profiled module's own table.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::aldram::AlDram;
+use crate::eval::{fig6 as fig6_eval, Fig6Result, RowKind};
+use crate::workloads::mix::MixSpec;
+use crate::workloads::WorkloadSpec;
+
+use super::csv::Csv;
+
+fn print_and_csv(r: &Fig6Result, out: &Path, file: &str) -> Result<()> {
+    println!("{:<24} {:>6} {:>6} {:>9} {:>9}",
+             "unit", "kind", "mpki", "55C", "85C");
+    let mut csv = Csv::new(&["name", "kind", "mpki", "intensive",
+                             "speedup_55c", "speedup_85c"]);
+    for row in &r.rows {
+        let kind = match row.kind {
+            RowKind::Single => "1core",
+            RowKind::Mix => "mix",
+        };
+        println!("{:<24} {:>6} {:>6.1} {:>8.1}% {:>8.1}%",
+                 row.name, kind, row.mpki,
+                 100.0 * (row.speedup_55 - 1.0),
+                 100.0 * (row.speedup_85 - 1.0));
+        csv.row(&[
+            row.name.clone(), kind.to_string(), format!("{}", row.mpki),
+            format!("{}", row.intensive),
+            format!("{}", row.speedup_55), format!("{}", row.speedup_85),
+        ]);
+    }
+    csv.write(out, file)?;
+
+    println!("---");
+    println!("single-core memory-intensive gmean: {:>5.1}% @55C, {:>5.1}% @85C",
+             100.0 * (r.gmean_intensive_55 - 1.0),
+             100.0 * (r.gmean_intensive_85 - 1.0));
+    println!("single-core non-intensive gmean:    {:>5.1}% @55C, {:>5.1}% @85C",
+             100.0 * (r.gmean_nonintensive_55 - 1.0),
+             100.0 * (r.gmean_nonintensive_85 - 1.0));
+    println!("mix weighted-speedup gmean:         {:>5.1}% @55C, {:>5.1}% @85C",
+             100.0 * (r.gmean_mix_55 - 1.0),
+             100.0 * (r.gmean_mix_85 - 1.0));
+    Ok(())
+}
+
+/// Regenerate the Fig-6 table for one profiled module's table, fanning
+/// (unit × temperature × side) out over `jobs` pool workers.
+#[allow(clippy::too_many_arguments)]
+pub fn fig6(cycles: u64, jobs: usize, table: &AlDram, label: &str,
+            seed: &str, workloads: &[WorkloadSpec], mixes: &[MixSpec],
+            out: &Path) -> Result<Fig6Result> {
+    let r = fig6_eval(cycles, jobs, table, seed, workloads, mixes);
+    println!("== Fig 6 (profiled {label}): per-workload AL-DRAM improvement, \
+              {} workloads + {} mixes x {{55C, 85C}} ({jobs} jobs, seed \
+              {seed}) ==",
+             workloads.len(), mixes.len());
+    print_and_csv(&r, out, "fig6.csv")?;
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aldram::DEFAULT_BIN_C;
+    use crate::model::params;
+    use crate::population::generate_dimm;
+    use crate::profiler::profile_dimm;
+    use crate::runtime::NativeBackend;
+    use crate::workloads::{by_name, mix};
+
+    #[test]
+    fn fig6_smoke() {
+        let d = generate_dimm(0, 64, params());
+        let mut b = NativeBackend::new();
+        let p = profile_dimm(&mut b, &d).unwrap();
+        let table = AlDram::from_profile(&p, DEFAULT_BIN_C);
+        let dir = std::env::temp_dir().join("aldram_fig6_test");
+        let ws = vec![by_name("gups").unwrap(), by_name("povray").unwrap()];
+        let mixes: Vec<_> = mix::suite().into_iter().take(1).collect();
+        let r = fig6(4_000, 2, &table, "dimm 000", "0", &ws, &mixes, &dir)
+            .unwrap();
+        assert_eq!(r.rows.len(), 3);
+        assert!(dir.join("fig6.csv").exists());
+    }
+}

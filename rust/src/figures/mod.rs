@@ -8,3 +8,4 @@ pub mod csv;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod fig6;

@@ -6,16 +6,25 @@
 //!   repro profile    --dimm N [--cells N] [--backend ...]
 //!   repro profile    --dimms N --save DIR   (profile a population once and
 //!                    persist it as a JSON registry, one dimm_NNN.json each)
-//!   repro figure     fig2a|fig2bc|fig3|fig4|all [--out DIR] [--jobs N]
-//!                    [--profiles DIR]       (fig4: drive the AL-DRAM side
-//!                    with a registry module's own table)
+//!   repro figure     fig2a|fig2bc|fig3|fig4|fig6|all [--out DIR] [--jobs N]
+//!                    [--profiles DIR]       (fig4/fig6: drive the AL-DRAM
+//!                    side with a registry module's own table)
 //!   repro ablate     refresh-latency|interdependence|repeatability|
 //!                    bank-granularity|ecc|sweep|ode [--jobs N]
-//!   repro eval       sensitivity|hetero|power|stress [--cycles N] [--jobs N]
-//!                    [--profiles DIR]       (profile-driven variants;
-//!                    hetero profiles a small population when absent)
-//!   repro bench-sim  [--cycles N]          (quick end-to-end smoke; prints
-//!                    the TIMESKIP line: event-driven vs cycle-stepped)
+//!   repro eval       sensitivity|hetero|power|stress|fig6 [--cycles N]
+//!                    [--jobs N] [--profiles DIR]  (profile-driven variants;
+//!                    hetero/fig6 profile modules when --profiles is absent;
+//!                    fig6: --workloads a,b,c --mixes N --seed S)
+//!   repro trace      record|replay|info|convert   (trace capture/replay:
+//!                    record --workload W|--mix M [--cores N] --out FILE;
+//!                    replay --trace FILE; --trace accepts ALDT binary or
+//!                    DRAMSim3 text; convert translates between the two;
+//!                    record/replay print a bit-exact STATS line for
+//!                    round-trip diffing)
+//!   repro bench-sim  [--cycles N] [--trace FILE]  (quick end-to-end smoke;
+//!                    prints the TIMESKIP line: event-driven vs
+//!                    cycle-stepped, and the SPEEDUP[SOURCE] line: batched
+//!                    vs per-reference source refill)
 //!   repro bench-profile [--cells N]        (profiling-engine smoke; prints
 //!                    the SPEEDUP[PROFILE] and SPEEDUP[SWEEP] lines:
 //!                    scalar native vs vectorized simd / probed+warm sweep)
@@ -87,6 +96,96 @@ fn table_for(args: &Args, profiles: &[DimmProfile])
         anyhow::anyhow!("dimm {want} is not in the registry")
     })?;
     Ok((p.id, AlDram::from_profile(p, DEFAULT_BIN_C)))
+}
+
+/// One module's table: from the `--profiles` registry when given, else
+/// freshly profiled (`--dimm N`, small-cell default — the `eval hetero`
+/// precedent for profile-less invocations).
+fn table_or_profile(args: &Args) -> anyhow::Result<(String, AlDram)> {
+    if args.has("profiles") {
+        let profiles = load_profiles(args)?;
+        let (id, table) = table_for(args, &profiles)?;
+        return Ok((format!("dimm {id:03}"), table));
+    }
+    let g = &params().geometry;
+    let cells = args.get("cells", g.cells_per_chip_bank_small);
+    let id = args.get("dimm", 0usize);
+    eprintln!("no --profiles registry; profiling dimm {id:03} at {cells} \
+               cells (save a population with `repro profile --save`)");
+    let mut b = backend_for(args, cells);
+    let d = generate_dimm(id, cells, params());
+    let p = profile_dimm(b.as_mut(), &d)?;
+    Ok((format!("dimm {id:03}"), AlDram::from_profile(&p, DEFAULT_BIN_C)))
+}
+
+/// The Fig-6 unit set: `--workloads a,b,c` filters the 35-workload suite
+/// (default: all of it), `--mixes N` truncates the named mix pool
+/// (default: all 10).
+fn fig6_units(args: &Args)
+              -> anyhow::Result<(Vec<aldram::workloads::WorkloadSpec>,
+                                 Vec<aldram::workloads::mix::MixSpec>)> {
+    let workloads = if args.has("workloads") {
+        args.str("workloads", "")
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|name| {
+                aldram::workloads::by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?
+    } else {
+        aldram::workloads::suite()
+    };
+    let mixes: Vec<_> = aldram::workloads::mix::suite()
+        .into_iter()
+        .take(args.get("mixes", usize::MAX))
+        .collect();
+    Ok((workloads, mixes))
+}
+
+fn run_fig6(args: &Args, jobs: usize, out: &std::path::Path)
+            -> anyhow::Result<()> {
+    let cycles = args.get("cycles", 100_000u64);
+    let (label, table) = table_or_profile(args)?;
+    let (workloads, mixes) = fig6_units(args)?;
+    aldram::figures::fig6::fig6(cycles, jobs, &table, &label, &args.seed(),
+                                &workloads, &mixes, out)?;
+    Ok(())
+}
+
+/// Refuse to write a trace onto the file it is being read from (the
+/// reader streams lazily, so `File::create` on the same path would
+/// destroy the input mid-replay).
+fn ensure_distinct_paths(input: &std::path::Path, out: &std::path::Path)
+                         -> anyhow::Result<()> {
+    let same = input == out
+        || match (input.canonicalize(), out.canonicalize()) {
+            (Ok(a), Ok(b)) => a == b,
+            _ => false,
+        };
+    anyhow::ensure!(!same,
+                    "--out {} would overwrite the input trace — pick a \
+                     different output path", out.display());
+    Ok(())
+}
+
+/// Canonical, diffable run summary: every count exact, every float as
+/// its raw bits — two runs print the same line iff their `SystemStats`
+/// are bit-identical (the trace record→replay CI check diffs these).
+fn stats_line(s: &aldram::mem::SystemStats) -> String {
+    let cores: Vec<String> = s
+        .cores
+        .iter()
+        .map(|c| format!("{}:{}:{}:{}:{}:{:016x}", c.name, c.insts, c.reads,
+                         c.writes, c.stall_cycles, c.ipc.to_bits()))
+        .collect();
+    format!(
+        "STATS cycles={} reads={} writes={} refreshes={} lat={:016x} \
+         hit={:016x} cores=[{}]",
+        s.cycles, s.reads_done, s.writes_done, s.refreshes,
+        s.avg_read_latency_cycles.to_bits(), s.row_hit_rate.to_bits(),
+        cores.join(",")
+    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -190,7 +289,12 @@ fn main() -> anyhow::Result<()> {
                     fig4::fig4(cycles, reps, jobs, &out)?;
                 }
             }
-            if !["fig2a", "fig2bc", "fig3", "fig4", "all"].contains(&which) {
+            if which == "fig6" || which == "all" {
+                run_fig6(&args, jobs, &out)?;
+            }
+            if !["fig2a", "fig2bc", "fig3", "fig4", "fig6", "all"]
+                .contains(&which)
+            {
                 anyhow::bail!("unknown figure `{which}`");
             }
         }
@@ -341,6 +445,12 @@ fn main() -> anyhow::Result<()> {
                     println!("average energy-per-work reduction: {:.1}% (paper 5.8%)",
                              100.0 * aldram::eval::power_saving(&rows));
                 }
+                "fig6" => {
+                    // Per-workload/per-mix improvement table (paper Fig
+                    // 6/7): all 35 workloads + the named mixes x {55 degC,
+                    // 85 degC}, driven by a profiled module's own table.
+                    run_fig6(&args, jobs, &out)?;
+                }
                 "stress" => {
                     let epochs = args.get("epochs", 64u64);
                     let r = aldram::eval::stress(
@@ -358,30 +468,194 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
+        Some("trace") => {
+            use aldram::eval::Driver;
+            use aldram::mem::{System, SystemConfig};
+            use aldram::workloads::{by_name, mix, trace};
+
+            let which = args.sub(1).unwrap_or("info");
+            let driver = match args.str("driver", "fast").as_str() {
+                "fast" => Driver::TimeSkip,
+                "step" => Driver::CycleStepped,
+                other => anyhow::bail!("unknown --driver `{other}` \
+                                        (fast|step)"),
+            };
+            let trace_path = || -> anyhow::Result<PathBuf> {
+                anyhow::ensure!(args.has("trace"),
+                                "trace {which} needs --trace FILE");
+                Ok(PathBuf::from(args.str("trace", "")))
+            };
+            match which {
+                "record" => {
+                    // Capture any run — a suite workload (--workload,
+                    // optionally --cores N), a named mix (--mix), or even
+                    // an existing trace (--trace) — into an ALDT file.
+                    let out_path = PathBuf::from(args.str("out", "run.altr"));
+                    let cycles = args.get("cycles", 200_000u64);
+                    let seed = args.seed();
+                    let sources = if args.has("mix") {
+                        let name = args.str("mix", "");
+                        let m = mix::mix_by_name(&name).ok_or_else(|| {
+                            anyhow::anyhow!("unknown mix `{name}` (see \
+                                             workloads::mix::suite)")
+                        })?;
+                        m.sources(&format!("trace/{seed}"))
+                    } else if args.has("trace") {
+                        let input = trace_path()?;
+                        ensure_distinct_paths(&input, &out_path)?;
+                        trace::open_any(&input)?.1
+                    } else {
+                        let name = args.str("workload", "stream.copy");
+                        let w = by_name(&name).ok_or_else(|| {
+                            anyhow::anyhow!("unknown workload `{name}`")
+                        })?;
+                        let cores = args.get("cores", 1usize);
+                        (0..cores)
+                            .map(|c| w.named_source(
+                                &format!("trace/{seed}/core{c}")))
+                            .collect()
+                    };
+                    let cfg = SystemConfig::paper_default();
+                    let mut sys = System::with_sources(&cfg, sources);
+                    let writer = sys.record_to(&out_path)?;
+                    let stats = match driver {
+                        Driver::TimeSkip => sys.run_fast(cycles),
+                        Driver::CycleStepped => sys.run(cycles),
+                    };
+                    trace::finish_shared(&writer)?;
+                    println!("recorded {} refs over {} cycles to {}",
+                             writer.borrow().count(), stats.cycles,
+                             out_path.display());
+                    println!("{}", stats_line(&stats));
+                }
+                "replay" => {
+                    let path = trace_path()?;
+                    let cycles = args.get("cycles", 200_000u64);
+                    let (info, sources) = trace::open_any(&path)?;
+                    println!("replaying {} refs / {} streams from {}",
+                             info.total_refs, info.streams.len(),
+                             path.display());
+                    let cfg = SystemConfig::paper_default();
+                    let mut sys = System::with_sources(&cfg, sources);
+                    let stats = match driver {
+                        Driver::TimeSkip => sys.run_fast(cycles),
+                        Driver::CycleStepped => sys.run(cycles),
+                    };
+                    println!("{}", stats_line(&stats));
+                }
+                "info" => {
+                    let path = trace_path()?;
+                    let (info, _) = trace::open_any(&path)?;
+                    println!("trace {} (v{}, row_bytes {})", path.display(),
+                             info.version, info.row_bytes);
+                    for (m, n) in
+                        info.streams.iter().zip(&info.per_stream_refs)
+                    {
+                        println!("  {:<16} seed {:<20} footprint {:>12} B  \
+                                  refs {}",
+                                 m.name, m.seed, m.footprint, n);
+                    }
+                    println!("total refs: {} (validated)", info.total_refs);
+                }
+                "convert" => {
+                    // ALDT binary <-> DRAMSim3 text (direction sniffed
+                    // from the input's magic bytes).
+                    let path = trace_path()?;
+                    anyhow::ensure!(args.has("out"),
+                                    "trace convert needs --out FILE");
+                    let out_path = PathBuf::from(args.str("out", ""));
+                    ensure_distinct_paths(&path, &out_path)?;
+                    let (info, mut sources) = trace::open_any(&path)?;
+                    if info.binary {
+                        anyhow::ensure!(
+                            info.streams.len() == 1,
+                            "DRAMSim3 text traces are single-stream; {} \
+                             carries {} streams",
+                            path.display(), info.streams.len()
+                        );
+                        let f = std::fs::File::create(&out_path)?;
+                        let mut tw = trace::TextWriter::new(
+                            std::io::BufWriter::new(f));
+                        let mut src = sources.remove(0).source;
+                        let mut buf = Vec::new();
+                        loop {
+                            buf.clear();
+                            if src.fill(&mut buf) == 0 {
+                                break;
+                            }
+                            for r in &buf {
+                                tw.push(*r)?;
+                            }
+                        }
+                        tw.flush()?;
+                        println!("wrote {} text records to {}", tw.count(),
+                                 out_path.display());
+                    } else {
+                        let src = sources.remove(0);
+                        let metas = [trace::StreamMeta {
+                            name: src.name.clone(),
+                            seed: src.seed.clone(),
+                            footprint: src.footprint,
+                        }];
+                        let w = trace::create_shared(&out_path, 0, &metas)?;
+                        let mut rec =
+                            trace::Recorder::new(src.source, 0, w.clone());
+                        let mut buf = Vec::new();
+                        loop {
+                            buf.clear();
+                            if aldram::workloads::RequestSource::fill(
+                                &mut rec, &mut buf) == 0
+                            {
+                                break;
+                            }
+                        }
+                        trace::finish_shared(&w)?;
+                        println!("wrote {} binary records to {}",
+                                 w.borrow().count(), out_path.display());
+                    }
+                }
+                other => anyhow::bail!(
+                    "unknown trace subcommand `{other}` \
+                     (record|replay|info|convert)"),
+            }
+        }
+
         Some("bench-sim") => {
-            // quick end-to-end smoke: one workload, base vs AL-DRAM, the
-            // time-skip driver vs the cycle-stepped oracle (identical
-            // numbers, TIMESKIP wall-clock line per timing set).
+            // quick end-to-end smoke: one request source (a suite
+            // workload, or --trace FILE — any replayable trace is accepted
+            // wherever --workload is), base vs AL-DRAM, the time-skip
+            // driver vs the cycle-stepped oracle (identical numbers,
+            // TIMESKIP wall-clock line per timing set), plus the
+            // SPEEDUP[SOURCE] line: batched vs per-reference refill.
             use aldram::mem::{System, SystemConfig};
             use aldram::timing::TimingParams;
-            use aldram::workloads::by_name;
+            use aldram::util::bench::Bench;
+            use aldram::workloads::{by_name, trace, NamedSource,
+                                    SOURCE_BATCH};
             use std::time::Instant;
             let cycles = args.get("cycles", 100_000u64);
-            let w = by_name(&args.str("workload", "stream.copy"))
-                .expect("unknown workload");
+            let seed = args.seed();
+            let sources_for = |label: &str| -> anyhow::Result<Vec<NamedSource>> {
+                if args.has("trace") {
+                    let path = PathBuf::from(args.str("trace", ""));
+                    Ok(trace::open_any(&path)?.1)
+                } else {
+                    let w = by_name(&args.str("workload", "stream.copy"))
+                        .expect("unknown workload");
+                    Ok(vec![w.named_source(&format!("bench/{seed}/{label}"))])
+                }
+            };
             for (label, t) in [
                 ("ddr3-standard", TimingParams::ddr3_standard()),
                 ("al-dram-55C", TimingParams::ddr3_standard()
                     .reduced(0.27, 0.32, 0.33, 0.18)),
             ] {
                 let cfg = SystemConfig::paper_default().with_timings(t);
-                let mut seq = System::new(
-                    &cfg, &[(w.clone(), "bench".into())]);
+                let mut seq = System::with_sources(&cfg, sources_for(label)?);
                 let t0 = Instant::now();
                 let s = seq.run(cycles);
                 let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
-                let mut fast = System::new(
-                    &cfg, &[(w.clone(), "bench".into())]);
+                let mut fast = System::with_sources(&cfg, sources_for(label)?);
                 let t0 = Instant::now();
                 let f = fast.run_fast(cycles);
                 let fast_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -398,6 +672,44 @@ fn main() -> anyhow::Result<()> {
                     seq_ms, fast_ms, seq_ms / fast_ms.max(1e-9)
                 );
             }
+
+            // Request-source refill batching: batch=1 is the pre-refactor
+            // one-virtual-call-per-reference regime. Identical stats
+            // (asserted), wall-clock-only difference. Always benched on a
+            // synthetic generator — trace replay pulls through the demux
+            // at the fixed SOURCE_BATCH, so batch=1 is not expressible
+            // there; say so rather than silently switching sources.
+            let wname = args.str("workload", "stream.copy");
+            if args.has("trace") {
+                println!("SOURCE batching benched on synthetic `{wname}` \
+                          (trace replay has a fixed refill batch)");
+            }
+            let wsrc = by_name(&wname).expect("unknown workload");
+            let run_batched = |batch: usize| {
+                let cfg = SystemConfig::paper_default();
+                let src = NamedSource {
+                    name: wsrc.name.to_string(),
+                    seed: format!("srcbench/{seed}"),
+                    footprint: wsrc.footprint,
+                    source: wsrc.source_with_batch(
+                        &format!("srcbench/{seed}"), batch),
+                };
+                System::with_sources(&cfg, vec![src]).run_fast(cycles)
+            };
+            let a = run_batched(1);
+            let b = run_batched(SOURCE_BATCH);
+            anyhow::ensure!(
+                a.reads_done == b.reads_done && a.cores[0].ipc == b.cores[0].ipc,
+                "refill batch size changed the simulated stream"
+            );
+            let mut bench = Bench::new("bench-sim").with_window(100, 400);
+            bench.bench("source/batch1", || run_batched(1).reads_done);
+            bench.bench(&format!("source/batch{SOURCE_BATCH}"),
+                        || run_batched(SOURCE_BATCH).reads_done);
+            bench.report_speedup_tagged(
+                "SOURCE", "source/batch1",
+                &format!("source/batch{SOURCE_BATCH}"));
+            bench.finish();
         }
 
         Some("bench-profile") => {
@@ -467,9 +779,10 @@ fn main() -> anyhow::Result<()> {
 
         _ => {
             println!("repro — AL-DRAM reproduction (see DESIGN.md)");
-            println!("commands: calibrate | profile | figure | ablate | eval | bench-sim | bench-profile");
+            println!("commands: calibrate | profile | figure | ablate | eval | trace | bench-sim | bench-profile");
             println!("global flags: --jobs N (parallel fan-out width, \
-                      default {})", exec::default_jobs());
+                      default {}), --seed S (workload/mix RNG label, \
+                      default 0)", exec::default_jobs());
         }
     }
     Ok(())

@@ -12,12 +12,15 @@
 //! `SystemConfig::uniform` keeps the common all-channels-alike case a
 //! one-liner.
 
+use std::path::Path;
+
 use super::address::AddrMap;
 use super::controller::{Controller, Request, RowPolicy};
 use super::cpu::Core;
 use crate::aldram::{AlDram, ThermalModel};
 use crate::timing::TimingParams;
-use crate::workloads::WorkloadSpec;
+use crate::workloads::trace::{self, Recorder, SharedTraceWriter, StreamMeta};
+use crate::workloads::{NamedSource, WorkloadSpec};
 
 /// Per-channel DIMM identity: the timing set the channel boots with, an
 /// optional AL-DRAM table managing it dynamically, and the channel's
@@ -163,6 +166,26 @@ pub struct SystemStats {
     pub final_temp_c: f64,
 }
 
+impl SystemStats {
+    /// Weighted speedup against a baseline run of the same workload set:
+    /// the mean over cores of the per-core IPC ratio — the standard
+    /// multi-programmed metric (insensitive to one core dominating the
+    /// throughput sum). This is the accounting `eval::fig6` and
+    /// `eval::hetero_eval` report for named mixes.
+    pub fn weighted_speedup(&self, base: &SystemStats) -> f64 {
+        assert_eq!(self.cores.len(), base.cores.len(),
+                   "weighted speedup needs matching core sets");
+        crate::util::mean(
+            &self
+                .cores
+                .iter()
+                .zip(&base.cores)
+                .map(|(f, b)| f.ipc / b.ipc)
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
 /// Thermal + AL-DRAM management interval in controller cycles (~1.28 us —
 /// far finer than the <= 0.1 degC/s drift the paper measures).
 pub const THERMAL_EPOCH: u64 = 1024;
@@ -188,11 +211,16 @@ pub struct System {
     controllers: Vec<Controller>,
     cores: Vec<Core>,
     core_names: Vec<String>,
+    /// Identity of each core's request source (what the trace-capture
+    /// hook persists into the file header).
+    source_meta: Vec<StreamMeta>,
     channels: Vec<ChannelState>,
     chan_bits_mask: u64,
     /// Channel interleave shift: one row per channel stripe, derived from
     /// the address map's row size.
     chan_shift: u32,
+    /// The address map's row size (the trace header's geometry anchor).
+    row_bytes: u64,
     now: u64,
 }
 
@@ -207,8 +235,28 @@ impl System {
     /// size, so a different row geometry keeps row-granular interleave.
     pub fn new_with_map(cfg: &SystemConfig, map: AddrMap,
                         workloads: &[(WorkloadSpec, String)]) -> Self {
+        let sources = workloads
+            .iter()
+            .map(|(w, seed)| w.named_source(seed))
+            .collect();
+        Self::with_sources_map(cfg, map, sources)
+    }
+
+    /// Build from arbitrary request sources (synthetic generators, trace
+    /// replays, mixes — anything implementing `RequestSource`), one per
+    /// core, on the default address map.
+    pub fn with_sources(cfg: &SystemConfig, sources: Vec<NamedSource>)
+                        -> Self {
+        Self::with_sources_map(cfg, AddrMap::ddr3_2gb(cfg.ranks_per_channel),
+                               sources)
+    }
+
+    /// [`System::with_sources`] with an explicit address map.
+    pub fn with_sources_map(cfg: &SystemConfig, map: AddrMap,
+                            sources: Vec<NamedSource>) -> Self {
         assert!(!cfg.channels.is_empty(), "config has no channels");
         assert!(cfg.channels.len().is_power_of_two());
+        assert!(!sources.is_empty(), "a system needs at least one core");
         let controllers = cfg
             .channels
             .iter()
@@ -227,22 +275,54 @@ impl System {
                 timing_switches: 0,
             })
             .collect();
-        let cores = workloads
+        let core_names: Vec<String> =
+            sources.iter().map(|s| s.name.clone()).collect();
+        let source_meta: Vec<StreamMeta> = sources
             .iter()
-            .enumerate()
-            .map(|(i, (w, seed))| Core::new(i, w.trace(seed)))
+            .map(|s| StreamMeta {
+                name: s.name.clone(),
+                seed: s.seed.clone(),
+                footprint: s.footprint,
+            })
             .collect();
-        let core_names =
-            workloads.iter().map(|(w, _)| w.name.to_string()).collect();
+        let cores = sources
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| Core::new(i, s.source))
+            .collect();
         System {
             controllers,
             cores,
             core_names,
+            source_meta,
             channels,
             chan_bits_mask: cfg.channels.len() as u64 - 1,
             chan_shift: map.row_bytes().trailing_zeros(),
+            row_bytes: map.row_bytes(),
             now: 0,
         }
+    }
+
+    /// Trace-capture hook: tee every reference the cores pull from their
+    /// sources into an ALDT trace file at `path`. Works for *any* run —
+    /// synthetic workloads, mixes, even a replay. Must be attached before
+    /// the first simulated cycle; call [`trace::finish_shared`] on the
+    /// returned writer after the run to seal the file.
+    pub fn record_to(&mut self, path: &Path)
+                     -> anyhow::Result<SharedTraceWriter> {
+        anyhow::ensure!(self.now == 0,
+                        "attach the recorder before running the system");
+        for core in &self.cores {
+            anyhow::ensure!(core.source_untouched(),
+                            "core {} already pulled references", core.id);
+        }
+        let writer = trace::create_shared(path, self.row_bytes as u32,
+                                          &self.source_meta)?;
+        for (i, core) in self.cores.iter_mut().enumerate() {
+            let w = writer.clone();
+            core.wrap_source(move |inner| Box::new(Recorder::new(inner, i, w)));
+        }
+        Ok(writer)
     }
 
     /// Channel selection: interleave by row-sized blocks so streams spread

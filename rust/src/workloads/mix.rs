@@ -1,0 +1,128 @@
+//! Named multi-programmed mixes for the paper's multi-core evaluation
+//! (§6/Fig 6-7): each mix pairs a memory-intensive workload with a
+//! non-intensive one, two cores each, so every mix keeps memory pressure
+//! while mixing intensity classes. The metric for a mix is the *weighted
+//! speedup* (`SystemStats::weighted_speedup`): the mean over cores of the
+//! per-core IPC ratio against the baseline run — insensitive to one core
+//! dominating the throughput sum.
+
+use super::{by_name, NamedSource, WorkloadSpec};
+
+/// How many cores a mix populates (two copies of each member).
+pub const MIX_CORES: usize = 4;
+
+/// One named multi-programmed mix.
+#[derive(Debug, Clone)]
+pub struct MixSpec {
+    /// `"<intensive>+<non-intensive>"`.
+    pub name: String,
+    /// One entry per core ([`MIX_CORES`] entries: intensive twice, then
+    /// non-intensive twice).
+    pub members: Vec<WorkloadSpec>,
+}
+
+impl MixSpec {
+    fn pair(intensive: &str, light: &str) -> Self {
+        let hi = by_name(intensive)
+            .unwrap_or_else(|| panic!("unknown workload `{intensive}`"));
+        let lo = by_name(light)
+            .unwrap_or_else(|| panic!("unknown workload `{light}`"));
+        assert!(hi.memory_intensive(), "{intensive} is not memory-intensive");
+        assert!(!lo.memory_intensive(), "{light} is memory-intensive");
+        MixSpec {
+            name: format!("{intensive}+{light}"),
+            members: vec![hi.clone(), hi, lo.clone(), lo],
+        }
+    }
+
+    /// Mean member MPKI (the mix's x-axis position in the Fig-6 table).
+    pub fn mpki(&self) -> f64 {
+        self.members.iter().map(|w| w.mpki).sum::<f64>()
+            / self.members.len() as f64
+    }
+
+    /// Instantiate one source per core, seeded
+    /// `"<seed_label>/core<k>"` per member (deterministic per mix, seed
+    /// and core slot).
+    pub fn sources(&self, seed_label: &str) -> Vec<NamedSource> {
+        self.members
+            .iter()
+            .enumerate()
+            .map(|(k, w)| w.named_source(&format!("{seed_label}/core{k}")))
+            .collect()
+    }
+}
+
+/// The named mix pool: 10 intensive × non-intensive pairings spanning the
+/// suite's pattern families (streaming, random, pointer-chase, mixed) on
+/// the intensive side.
+pub fn suite() -> Vec<MixSpec> {
+    [
+        ("stream.copy", "povray"),
+        ("gups", "h264ref"),
+        ("mcf", "gobmk"),
+        ("lbm", "namd"),
+        ("milc", "perlbench"),
+        ("libquantum", "bzip2"),
+        ("tpcc64", "sjeng"),
+        ("omnetpp", "gamess"),
+        ("soplex", "calculix"),
+        ("rand.read", "hmmer"),
+    ]
+    .into_iter()
+    .map(|(hi, lo)| MixSpec::pair(hi, lo))
+    .collect()
+}
+
+/// Look a mix up by its `"<intensive>+<non-intensive>"` name.
+pub fn mix_by_name(name: &str) -> Option<MixSpec> {
+    suite().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_pool_is_named_and_paired() {
+        let mixes = suite();
+        assert!(mixes.len() >= 8, "paper-style eval needs >= 8 mixes");
+        let mut names: Vec<&str> = mixes.iter().map(|m| m.name.as_str())
+            .collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), mixes.len(), "mix names must be unique");
+        for m in &mixes {
+            assert_eq!(m.members.len(), MIX_CORES);
+            let hi = m.members.iter()
+                .filter(|w| w.memory_intensive())
+                .count();
+            assert_eq!(hi, MIX_CORES / 2,
+                       "{}: intensive/non-intensive halves", m.name);
+            assert_eq!(m.name,
+                       format!("{}+{}", m.members[0].name, m.members[2].name));
+        }
+    }
+
+    #[test]
+    fn mix_lookup_and_sources() {
+        let m = mix_by_name("mcf+gobmk").unwrap();
+        assert!(mix_by_name("nope+nothing").is_none());
+        let srcs = m.sources("t");
+        assert_eq!(srcs.len(), MIX_CORES);
+        assert_eq!(srcs[0].name, "mcf");
+        assert_eq!(srcs[3].name, "gobmk");
+        assert_eq!(srcs[1].seed, "t/core1");
+        assert_eq!(srcs[0].footprint, m.members[0].footprint);
+        // Two copies of the same member must not share a seed (their
+        // address streams diverge immediately).
+        assert_ne!(srcs[0].seed, srcs[1].seed);
+    }
+
+    #[test]
+    fn mix_mpki_is_member_mean() {
+        let m = mix_by_name("gups+h264ref").unwrap();
+        let expect = (35.0 + 35.0 + 0.8 + 0.8) / 4.0;
+        assert!((m.mpki() - expect).abs() < 1e-12);
+    }
+}

@@ -1,14 +1,27 @@
-//! The 35-workload suite standing in for the paper's Fig-4 application mix
-//! (SPEC CPU2006, STREAM, TPC, GUPS-style kernels). Each workload is a
-//! synthetic address-stream generator parameterized by memory intensity
-//! (MPKI), access pattern, read/write mix and footprint, chosen so the
-//! suite spans the paper's memory-intensive (MPKI >= 10) and
-//! non-intensive groups.
+//! The unified request-source subsystem.
+//!
+//! Everything the simulated cores consume is a [`RequestSource`]: a
+//! batched stream of [`MemRef`]s refilled through `fill` (no per-reference
+//! virtual dispatch on the `mem::Core` hot loop). Three implementations
+//! live here:
+//!
+//! * [`Generator`] — the 35-workload synthetic suite standing in for the
+//!   paper's Fig-4/6 application mix (SPEC CPU2006, STREAM, TPC,
+//!   GUPS-style kernels), each parameterized by memory intensity (MPKI),
+//!   access pattern, read/write mix and footprint;
+//! * [`trace`] — recorded request streams: a versioned compact binary
+//!   format (delta-encoded, streaming, bounded memory) plus a
+//!   DRAMSim3-compatible text format for interop;
+//! * [`mix`] — named multi-programmed mixes (intensive × non-intensive
+//!   pairings) for the paper's multi-core evaluation.
+
+pub mod mix;
+pub mod trace;
 
 use crate::util::rng::Rng;
 
-/// One memory reference produced by a trace generator.
-#[derive(Debug, Clone, Copy)]
+/// One memory reference produced by a request source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MemRef {
     /// Non-memory instructions retired before this reference.
     pub gap_insts: u32,
@@ -18,9 +31,42 @@ pub struct MemRef {
     pub dependent: bool,
 }
 
-/// Infinite address-stream generator.
-pub trait Trace {
-    fn next(&mut self) -> MemRef;
+/// How many references a source appends per `fill` call (the `mem::Core`
+/// consumption batch — one virtual call amortized over this many refs).
+pub const SOURCE_BATCH: usize = 64;
+
+/// A batched stream of memory references.
+///
+/// `fill` appends up to [`SOURCE_BATCH`] references to `out` and returns
+/// how many were appended; 0 means the source is exhausted (finite trace
+/// sources — synthetic generators are infinite and always return a full
+/// batch). The consumer owns the buffer, so a refill is one virtual call
+/// per batch instead of one per reference.
+pub trait RequestSource {
+    fn fill(&mut self, out: &mut Vec<MemRef>) -> usize;
+}
+
+/// The empty source: immediately exhausted. Placeholder used when a
+/// core's source is temporarily taken (e.g. while wrapping it in a
+/// recorder) and a valid end-of-stream default elsewhere.
+pub struct NullSource;
+
+impl RequestSource for NullSource {
+    fn fill(&mut self, _out: &mut Vec<MemRef>) -> usize {
+        0
+    }
+}
+
+/// A request source with identity: the workload (or trace stream) name,
+/// the seed label it was instantiated with, and its footprint — the
+/// metadata `mem::System` carries per core and the trace recorder writes
+/// into the file header.
+pub struct NamedSource {
+    pub name: String,
+    pub seed: String,
+    /// Footprint in bytes (0 when unknown, e.g. an imported text trace).
+    pub footprint: u64,
+    pub source: Box<dyn RequestSource>,
 }
 
 /// Access-pattern families.
@@ -64,9 +110,28 @@ impl WorkloadSpec {
     }
 
     /// Instantiate the generator with a per-(workload, core, rep) seed.
-    pub fn trace(&self, seed_label: &str) -> Box<dyn Trace> {
+    pub fn source(&self, seed_label: &str) -> Box<dyn RequestSource> {
+        self.source_with_batch(seed_label, SOURCE_BATCH)
+    }
+
+    /// [`WorkloadSpec::source`] with an explicit refill batch size — the
+    /// SPEEDUP[SOURCE] benchmark compares `batch = 1` (the pre-batching
+    /// one-virtual-call-per-reference regime) against the default.
+    pub fn source_with_batch(&self, seed_label: &str, batch: usize)
+                             -> Box<dyn RequestSource> {
         let rng = Rng::from_label(&format!("{}/{}", self.name, seed_label));
-        Box::new(Generator::new(self.clone(), rng))
+        Box::new(Generator::with_batch(self.clone(), rng, batch))
+    }
+
+    /// The source plus its identity metadata (what `mem::System` records
+    /// per core and the trace recorder persists).
+    pub fn named_source(&self, seed_label: &str) -> NamedSource {
+        NamedSource {
+            name: self.name.to_string(),
+            seed: seed_label.to_string(),
+            footprint: self.footprint,
+            source: self.source(seed_label),
+        }
     }
 }
 
@@ -75,7 +140,8 @@ struct StreamState {
     base: u64,
 }
 
-struct Generator {
+/// The synthetic address-stream generator behind every suite workload.
+pub struct Generator {
     spec: WorkloadSpec,
     rng: Rng,
     streams: Vec<StreamState>,
@@ -83,10 +149,16 @@ struct Generator {
     chase_ptr: u64,
     /// References emitted so far (drives `Pattern::Phased` scheduling).
     phase_count: u64,
+    batch: usize,
 }
 
 impl Generator {
-    fn new(spec: WorkloadSpec, mut rng: Rng) -> Self {
+    pub fn new(spec: WorkloadSpec, rng: Rng) -> Self {
+        Generator::with_batch(spec, rng, SOURCE_BATCH)
+    }
+
+    fn with_batch(spec: WorkloadSpec, mut rng: Rng, batch: usize) -> Self {
+        assert!(batch >= 1, "refill batch must be at least 1");
         let n_streams = match spec.pattern {
             Pattern::MultiStream(n) => n as usize,
             Pattern::Stream => 1,
@@ -104,6 +176,13 @@ impl Generator {
                     Pattern::MultiStream(_) => {
                         rng.below(spec.footprint / bank_period) * bank_period
                     }
+                    // Mixed: the streamed half lives in a contiguous,
+                    // line-aligned half-footprint window, so base + pos
+                    // never wraps across the footprint boundary and never
+                    // aliases the random half mid-run.
+                    Pattern::Mixed => {
+                        rng.below(spec.footprint / 2 / 64) * 64
+                    }
                     _ => rng.below(spec.footprint / 64) * 64,
                 };
                 let _ = i;
@@ -112,7 +191,7 @@ impl Generator {
             .collect();
         let chase_ptr = rng.below(spec.footprint / 64) * 64;
         Generator { spec, rng, streams, next_stream: 0, chase_ptr,
-                    phase_count: 0 }
+                    phase_count: 0, batch }
     }
 
     fn gap(&mut self) -> u32 {
@@ -125,10 +204,8 @@ impl Generator {
     fn rand_line(&mut self) -> u64 {
         self.rng.below(self.spec.footprint / 64) * 64
     }
-}
 
-impl Trace for Generator {
-    fn next(&mut self) -> MemRef {
+    fn gen_ref(&mut self) -> MemRef {
         let mut gap = self.gap();
         let is_write = self.rng.chance(self.spec.write_ratio);
         let (addr, dependent) = match self.spec.pattern {
@@ -173,15 +250,28 @@ impl Trace for Generator {
             }
             Pattern::Mixed => {
                 if self.rng.chance(0.5) {
+                    // Contiguous half-footprint window: pos wraps within
+                    // the window, the address is always base + pos.
+                    let half = self.spec.footprint / 2;
                     let s = &mut self.streams[0];
-                    s.pos = (s.pos + 64) % (self.spec.footprint / 2);
-                    (s.base.wrapping_add(s.pos) % self.spec.footprint, false)
+                    s.pos = (s.pos + 64) % half;
+                    (s.base + s.pos, false)
                 } else {
                     (self.rand_line(), false)
                 }
             }
         };
         MemRef { gap_insts: gap, addr, is_write, dependent }
+    }
+}
+
+impl RequestSource for Generator {
+    fn fill(&mut self, out: &mut Vec<MemRef>) -> usize {
+        for _ in 0..self.batch {
+            let r = self.gen_ref();
+            out.push(r);
+        }
+        self.batch
     }
 }
 
@@ -242,6 +332,36 @@ pub fn by_name(name: &str) -> Option<WorkloadSpec> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    /// One-reference-at-a-time view over a batched source (test helper).
+    pub struct Pull {
+        src: Box<dyn RequestSource>,
+        buf: Vec<MemRef>,
+        pos: usize,
+    }
+
+    impl Pull {
+        pub fn new(src: Box<dyn RequestSource>) -> Self {
+            Pull { src, buf: Vec::new(), pos: 0 }
+        }
+
+        pub fn take_one(&mut self) -> MemRef {
+            if self.pos == self.buf.len() {
+                self.buf.clear();
+                self.pos = 0;
+                let n = self.src.fill(&mut self.buf);
+                assert!(n > 0, "source exhausted");
+            }
+            let r = self.buf[self.pos];
+            self.pos += 1;
+            r
+        }
+    }
+
+    fn pull(w: &WorkloadSpec, seed: &str) -> Pull {
+        Pull::new(w.source(seed))
+    }
 
     #[test]
     fn suite_has_35_unique_workloads() {
@@ -263,24 +383,58 @@ mod tests {
     }
 
     #[test]
-    fn traces_are_deterministic_per_seed() {
+    fn sources_are_deterministic_per_seed() {
         let w = by_name("mcf").unwrap();
-        let mut a = w.trace("core0/rep0");
-        let mut b = w.trace("core0/rep0");
-        let mut c = w.trace("core0/rep1");
-        let (ra, rb, rc) = (a.next(), b.next(), c.next());
-        assert_eq!(ra.addr, rb.addr);
-        assert_eq!(ra.gap_insts, rb.gap_insts);
+        let mut a = pull(&w, "core0/rep0");
+        let mut b = pull(&w, "core0/rep0");
+        let mut c = pull(&w, "core0/rep1");
+        let (ra, rb, rc) = (a.take_one(), b.take_one(), c.take_one());
+        assert_eq!(ra, rb);
         // Different rep starts elsewhere (pointer chase seed differs).
-        let _ = rc;
+        assert_ne!(ra.addr, rc.addr);
+    }
+
+    #[test]
+    fn batch_size_does_not_change_the_stream() {
+        // The batched refill is a pure transport change: the reference
+        // sequence is identical for every batch size.
+        let w = by_name("milc").unwrap();
+        let mut a = Pull::new(w.source_with_batch("b", 1));
+        let mut b = Pull::new(w.source_with_batch("b", SOURCE_BATCH));
+        let mut c = Pull::new(w.source_with_batch("b", 7));
+        for _ in 0..500 {
+            let ra = a.take_one();
+            assert_eq!(ra, b.take_one());
+            assert_eq!(ra, c.take_one());
+        }
+    }
+
+    #[test]
+    fn fill_appends_a_full_batch() {
+        let w = by_name("gups").unwrap();
+        let mut s = w.source("fb");
+        let mut buf = Vec::new();
+        assert_eq!(s.fill(&mut buf), SOURCE_BATCH);
+        assert_eq!(buf.len(), SOURCE_BATCH);
+        // fill *appends*: a second call must not clobber the first batch.
+        assert_eq!(s.fill(&mut buf), SOURCE_BATCH);
+        assert_eq!(buf.len(), 2 * SOURCE_BATCH);
+    }
+
+    #[test]
+    fn null_source_is_exhausted() {
+        let mut s = NullSource;
+        let mut buf = Vec::new();
+        assert_eq!(s.fill(&mut buf), 0);
+        assert!(buf.is_empty());
     }
 
     #[test]
     fn mean_gap_tracks_mpki() {
         let w = by_name("stream.copy").unwrap(); // mpki 45 -> gap ~22
-        let mut t = w.trace("x");
+        let mut t = pull(&w, "x");
         let n = 20_000;
-        let total: u64 = (0..n).map(|_| t.next().gap_insts as u64).sum();
+        let total: u64 = (0..n).map(|_| t.take_one().gap_insts as u64).sum();
         let mean = total as f64 / n as f64;
         let expect = 1000.0 / w.mpki;
         assert!((mean - expect).abs() < expect * 0.1,
@@ -290,9 +444,9 @@ mod tests {
     #[test]
     fn addresses_stay_in_footprint() {
         for w in suite() {
-            let mut t = w.trace("bounds");
+            let mut t = pull(&w, "bounds");
             for _ in 0..1000 {
-                let r = t.next();
+                let r = t.take_one();
                 assert!(r.addr < w.footprint, "{} addr {}", w.name, r.addr);
             }
         }
@@ -309,14 +463,14 @@ mod tests {
             footprint: 64 * MB,
         };
         // repeat: one idle reference closes each 11-reference period.
-        let mut t = mk(true).trace("x");
-        let idle = (0..110).filter(|_| t.next().gap_insts == 1_000_000)
+        let mut t = pull(&mk(true), "x");
+        let idle = (0..110).filter(|_| t.take_one().gap_insts == 1_000_000)
             .count();
         assert_eq!(idle, 10);
         // front-loaded: everything after the burst is idle.
-        let mut t = mk(false).trace("x");
+        let mut t = pull(&mk(false), "x");
         for i in 0..40 {
-            let g = t.next().gap_insts;
+            let g = t.take_one().gap_insts;
             if i < 10 {
                 assert!(g < 1_000_000, "ref {i} in the burst got gap {g}");
             } else {
@@ -327,11 +481,11 @@ mod tests {
 
     #[test]
     fn stream_is_sequential_random_is_not() {
-        let mut st = by_name("libquantum").unwrap().trace("s");
+        let mut st = pull(&by_name("libquantum").unwrap(), "s");
         let mut seq = 0;
-        let mut prev = st.next().addr;
+        let mut prev = st.take_one().addr;
         for _ in 0..100 {
-            let a = st.next().addr;
+            let a = st.take_one().addr;
             if a == prev + 64 {
                 seq += 1;
             }
@@ -339,16 +493,62 @@ mod tests {
         }
         assert!(seq > 90, "stream sequentiality {seq}/100");
 
-        let mut rnd = by_name("gups").unwrap().trace("r");
+        let mut rnd = pull(&by_name("gups").unwrap(), "r");
         let mut seq = 0;
-        let mut prev = rnd.next().addr;
+        let mut prev = rnd.take_one().addr;
         for _ in 0..100 {
-            let a = rnd.next().addr;
+            let a = rnd.take_one().addr;
             if a == prev + 64 {
                 seq += 1;
             }
             prev = a;
         }
         assert!(seq < 5, "random sequentiality {seq}/100");
+    }
+
+    #[test]
+    fn mixed_stream_half_is_contiguous_and_confined() {
+        // Regression: `pos` used to wrap at footprint/2 while the address
+        // was reduced `% footprint`, so the "sequential" half could alias
+        // the random half and split a run across the footprint boundary.
+        // Now it must stay inside one contiguous line-aligned
+        // half-footprint window and walk it monotonically between wraps.
+        let spec = WorkloadSpec {
+            name: "mixfix",
+            pattern: Pattern::Mixed,
+            mpki: 20.0,
+            write_ratio: 0.2,
+            footprint: MB, // small so the window wraps within the test
+        };
+        let rng = Rng::from_label("mixfix/window");
+        let mut g = Generator::new(spec.clone(), rng);
+        let half = spec.footprint / 2;
+        let base = g.streams[0].base;
+        assert_eq!(base % 64, 0, "window is line-aligned");
+        assert!(base + half <= spec.footprint,
+                "window [{},{}) exceeds the footprint", base, base + half);
+        let mut prev_pos = g.streams[0].pos;
+        let mut streamed = 0u64;
+        let mut wraps = 0u64;
+        for _ in 0..60_000 {
+            let r = g.gen_ref();
+            let pos = g.streams[0].pos;
+            if pos == prev_pos {
+                continue; // random-half reference: stream state untouched
+            }
+            streamed += 1;
+            assert_eq!(r.addr, base + pos, "streamed addr confined to window");
+            assert!(r.addr < spec.footprint);
+            if pos == 0 {
+                assert_eq!(prev_pos, half - 64, "wrap only from the window end");
+                wraps += 1;
+            } else {
+                assert_eq!(pos, prev_pos + 64,
+                           "stream must be monotone-contiguous between wraps");
+            }
+            prev_pos = pos;
+        }
+        assert!(streamed > 20_000, "stream half starved: {streamed}");
+        assert!(wraps >= 1, "window never wrapped — test footprint too big");
     }
 }

@@ -1,0 +1,861 @@
+//! Trace capture and replay: recorded request streams as first-class
+//! request sources.
+//!
+//! Two on-disk formats:
+//!
+//! * **ALDT binary (v1)** — the native format: a small header (geometry
+//!   anchor, per-stream workload name / seed label / footprint) followed
+//!   by delta-encoded records, streamed through hand-rolled varint codecs
+//!   with bounded memory in both directions. A trailing sentinel carries
+//!   the record count, so truncated files fail loudly at open time.
+//! * **DRAMSim3 text** — `0x<ADDR> READ|WRITE <cycle>` lines (the
+//!   interop format DRAMSim3's trace CPU consumes). Lossy: the cycle
+//!   column carries the cumulative instruction position (so gaps round
+//!   trip exactly) but the `dependent` flag is dropped and only one
+//!   stream fits per file.
+//!
+//! Capture is a [`Recorder`] wrapper around any [`RequestSource`]; the
+//! `mem::System::record_to` hook installs one per core, so *any* run —
+//! synthetic, mix, even a replay — can be recorded. Replaying a recorded
+//! file through [`open_sources`] reproduces the recorded run's
+//! `SystemStats` bit-identically (asserted in
+//! `tests/integration_trace.rs` and the Python mirror).
+//!
+//! ## ALDT v1 byte layout
+//!
+//! ```text
+//! magic   b"ALDT"
+//! u8      version (= 1)
+//! u32 LE  row_bytes          (address-map row size of the recorded run)
+//! u8      n_streams          (1 ..= 48)
+//! per stream:
+//!   u8 len + bytes           workload name (UTF-8)
+//!   u8 len + bytes           seed label (UTF-8)
+//!   u64 LE                   footprint in bytes
+//! records (any order, tagged):
+//!   u8      tag: bits 0-5 stream index, bit 6 is_write, bit 7 dependent
+//!   varint  gap_insts
+//!   varint  zigzag(addr - prev_addr[stream])   (prev starts at 0)
+//! footer:
+//!   u8 0xFF + u64 LE total record count
+//! ```
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Lines, Read, Write};
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Context;
+
+use super::{MemRef, NamedSource, RequestSource, SOURCE_BATCH};
+
+pub const MAGIC: [u8; 4] = *b"ALDT";
+pub const VERSION: u8 = 1;
+/// Stream indices live in the tag's low 6 bits, but the end sentinel
+/// (0xFF) must stay unambiguous, so the index stops short of 63.
+pub const MAX_STREAMS: usize = 48;
+const END_TAG: u8 = 0xFF;
+
+/// Identity of one recorded stream (one simulated core's source).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamMeta {
+    pub name: String,
+    pub seed: String,
+    pub footprint: u64,
+}
+
+/// Header + validation summary of a trace file.
+#[derive(Debug, Clone)]
+pub struct TraceInfo {
+    pub version: u8,
+    /// Address-map row size of the recorded run (0 for text imports).
+    pub row_bytes: u32,
+    /// True for the ALDT binary format, false for a DRAMSim3 text import
+    /// (`row_bytes` cannot distinguish them: a converted text trace is a
+    /// binary file that legitimately stores 0).
+    pub binary: bool,
+    pub streams: Vec<StreamMeta>,
+    pub total_refs: u64,
+    pub per_stream_refs: Vec<u64>,
+}
+
+// ---------------------------------------------------------------------
+// varint / zigzag codecs
+// ---------------------------------------------------------------------
+
+fn write_varint<W: Write>(w: &mut W, mut v: u64) -> io::Result<()> {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            return w.write_all(&[b]);
+        }
+        w.write_all(&[b | 0x80])?;
+    }
+}
+
+fn read_u8<R: Read>(r: &mut R) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn corrupt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn read_varint<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = read_u8(r)?;
+        // The 10th byte may only carry u64 bit 63: anything else (payload
+        // bits that would be shifted out, or a continuation bit) is a
+        // corrupt encoding and must fail loudly, not silently truncate.
+        if shift == 63 && (b & !0x01) != 0 {
+            return Err(corrupt("varint overflows u64"));
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err(corrupt("varint overflows u64"));
+        }
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+// ---------------------------------------------------------------------
+// Writer + capture
+// ---------------------------------------------------------------------
+
+/// Streaming ALDT writer: header up front, one delta-encoded record per
+/// `push`, sentinel + count on `finish`. Memory use is O(streams).
+pub struct TraceWriter<W: Write> {
+    w: W,
+    prev_addr: Vec<u64>,
+    count: u64,
+    finished: bool,
+}
+
+/// The concrete writer the recording paths share.
+pub type FileTraceWriter = TraceWriter<BufWriter<File>>;
+
+/// A writer shared by the per-core [`Recorder`] wrappers of one run.
+pub type SharedTraceWriter = Rc<RefCell<FileTraceWriter>>;
+
+impl<W: Write> TraceWriter<W> {
+    /// Write the header for `streams` onto `w`.
+    pub fn new(mut w: W, row_bytes: u32, streams: &[StreamMeta])
+               -> anyhow::Result<Self> {
+        anyhow::ensure!(!streams.is_empty(), "a trace needs >= 1 stream");
+        anyhow::ensure!(streams.len() <= MAX_STREAMS,
+                        "trace format carries at most {MAX_STREAMS} streams, \
+                         got {}", streams.len());
+        w.write_all(&MAGIC)?;
+        w.write_all(&[VERSION])?;
+        w.write_all(&row_bytes.to_le_bytes())?;
+        w.write_all(&[streams.len() as u8])?;
+        for m in streams {
+            for s in [&m.name, &m.seed] {
+                let b = s.as_bytes();
+                anyhow::ensure!(b.len() <= 255,
+                                "stream label longer than 255 bytes");
+                w.write_all(&[b.len() as u8])?;
+                w.write_all(b)?;
+            }
+            w.write_all(&m.footprint.to_le_bytes())?;
+        }
+        Ok(TraceWriter {
+            w,
+            prev_addr: vec![0; streams.len()],
+            count: 0,
+            finished: false,
+        })
+    }
+
+    /// Append one reference of stream `stream`.
+    pub fn push(&mut self, stream: usize, r: MemRef) -> io::Result<()> {
+        assert!(!self.finished, "push after finish");
+        assert!(stream < self.prev_addr.len(), "stream {stream} out of range");
+        let mut tag = stream as u8;
+        if r.is_write {
+            tag |= 0x40;
+        }
+        if r.dependent {
+            tag |= 0x80;
+        }
+        self.w.write_all(&[tag])?;
+        write_varint(&mut self.w, r.gap_insts as u64)?;
+        // Wrapping, mirroring the reader's wrapping_add: addresses that
+        // straddle 2^63 (possible in imported traces) stay round-trippable
+        // and never overflow in debug builds.
+        let delta =
+            (r.addr as i64).wrapping_sub(self.prev_addr[stream] as i64);
+        write_varint(&mut self.w, zigzag(delta))?;
+        self.prev_addr[stream] = r.addr;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Write the end sentinel + record count and flush. Idempotent.
+    pub fn finish(&mut self) -> io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.w.write_all(&[END_TAG])?;
+        self.w.write_all(&self.count.to_le_bytes())?;
+        self.w.flush()?;
+        self.finished = true;
+        Ok(())
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Create a shared file-backed writer (what `System::record_to` uses).
+pub fn create_shared(path: &Path, row_bytes: u32, streams: &[StreamMeta])
+                     -> anyhow::Result<SharedTraceWriter> {
+    let f = File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    let w = TraceWriter::new(BufWriter::new(f), row_bytes, streams)?;
+    Ok(Rc::new(RefCell::new(w)))
+}
+
+/// Finish a shared writer (sentinel + flush). Call after the recorded run.
+pub fn finish_shared(w: &SharedTraceWriter) -> anyhow::Result<()> {
+    w.borrow_mut().finish().context("finishing trace file")
+}
+
+/// Capture wrapper: tees every reference the wrapped source emits into
+/// the shared writer, preserving the stream untouched.
+pub struct Recorder {
+    inner: Box<dyn RequestSource>,
+    stream: usize,
+    writer: SharedTraceWriter,
+}
+
+impl Recorder {
+    pub fn new(inner: Box<dyn RequestSource>, stream: usize,
+               writer: SharedTraceWriter) -> Self {
+        Recorder { inner, stream, writer }
+    }
+}
+
+impl RequestSource for Recorder {
+    fn fill(&mut self, out: &mut Vec<MemRef>) -> usize {
+        let start = out.len();
+        let n = self.inner.fill(out);
+        let mut w = self.writer.borrow_mut();
+        for r in &out[start..] {
+            w.push(self.stream, *r).expect("trace capture write failed");
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader + replay
+// ---------------------------------------------------------------------
+
+enum Record {
+    Ref { stream: usize, gap: u64, delta: i64, is_write: bool,
+          dependent: bool },
+    End { count: u64 },
+}
+
+fn read_label<R: Read>(r: &mut R, i: usize, what: &str)
+                       -> anyhow::Result<String> {
+    let len = read_u8(r)
+        .with_context(|| format!("stream {i} {what} truncated"))?;
+    let mut b = vec![0u8; len as usize];
+    r.read_exact(&mut b)
+        .with_context(|| format!("stream {i} {what} truncated"))?;
+    String::from_utf8(b)
+        .with_context(|| format!("stream {i} {what} is not UTF-8"))
+}
+
+fn read_record<R: Read>(r: &mut R, n_streams: usize) -> io::Result<Record> {
+    let tag = read_u8(r)?;
+    if tag == END_TAG {
+        let mut c = [0u8; 8];
+        r.read_exact(&mut c)?;
+        return Ok(Record::End { count: u64::from_le_bytes(c) });
+    }
+    let stream = (tag & 0x3f) as usize;
+    if stream >= n_streams {
+        return Err(corrupt("record stream index out of range"));
+    }
+    let gap = read_varint(r)?;
+    let delta = unzigzag(read_varint(r)?);
+    Ok(Record::Ref {
+        stream,
+        gap,
+        delta,
+        is_write: tag & 0x40 != 0,
+        dependent: tag & 0x80 != 0,
+    })
+}
+
+fn read_header<R: Read>(r: &mut R) -> anyhow::Result<(u8, u32, Vec<StreamMeta>)> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("trace header truncated")?;
+    anyhow::ensure!(magic == MAGIC,
+                    "not an ALDT trace (magic {magic:02x?})");
+    let version = read_u8(r).context("trace header truncated")?;
+    anyhow::ensure!(version == VERSION,
+                    "unsupported trace version {version} (this build reads \
+                     v{VERSION})");
+    let mut rb = [0u8; 4];
+    r.read_exact(&mut rb).context("trace header truncated")?;
+    let row_bytes = u32::from_le_bytes(rb);
+    let n = read_u8(r).context("trace header truncated")? as usize;
+    anyhow::ensure!((1..=MAX_STREAMS).contains(&n),
+                    "stream count {n} out of range 1..={MAX_STREAMS}");
+    let mut streams = Vec::with_capacity(n);
+    for i in 0..n {
+        let name = read_label(r, i, "name")?;
+        let seed = read_label(r, i, "seed")?;
+        let mut fp = [0u8; 8];
+        r.read_exact(&mut fp)
+            .with_context(|| format!("stream {i} footprint truncated"))?;
+        streams.push(StreamMeta {
+            name,
+            seed,
+            footprint: u64::from_le_bytes(fp),
+        });
+    }
+    Ok((version, row_bytes, streams))
+}
+
+/// Parse + fully validate a trace file: header well-formed, every record
+/// decodable, the footer present and its count matching. O(file) time,
+/// O(streams) memory. This runs before any replay, so a truncated or
+/// corrupt file fails loudly at open time — never mid-simulation.
+pub fn info(path: &Path) -> anyhow::Result<TraceInfo> {
+    let f = File::open(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let (version, row_bytes, streams) = read_header(&mut r)?;
+    let n = streams.len();
+    let mut per = vec![0u64; n];
+    let mut total = 0u64;
+    loop {
+        let rec = read_record(&mut r, n).map_err(|e| {
+            anyhow::anyhow!("trace body truncated or corrupt after \
+                             {total} records: {e}")
+        })?;
+        match rec {
+            Record::End { count } => {
+                anyhow::ensure!(count == total,
+                                "trace footer says {count} records but \
+                                 {total} were read");
+                break;
+            }
+            Record::Ref { stream, gap, .. } => {
+                anyhow::ensure!(gap <= u32::MAX as u64,
+                                "record {total}: gap {gap} overflows u32");
+                per[stream] += 1;
+                total += 1;
+            }
+        }
+    }
+    let mut one = [0u8; 1];
+    anyhow::ensure!(r.read(&mut one)? == 0,
+                    "trailing bytes after the trace footer");
+    Ok(TraceInfo { version, row_bytes, binary: true, streams,
+                   total_refs: total, per_stream_refs: per })
+}
+
+/// Shared demultiplexer: records are read from the file in recorded
+/// order and parked per stream until that stream's source pulls them.
+/// Queues stay small in practice because replay consumes in roughly the
+/// recorded order.
+struct Demux {
+    r: BufReader<File>,
+    n: usize,
+    pending: Vec<VecDeque<MemRef>>,
+    prev_addr: Vec<u64>,
+    done: bool,
+}
+
+impl Demux {
+    /// Advance by one record; false once the end sentinel is reached.
+    fn pump(&mut self) -> bool {
+        if self.done {
+            return false;
+        }
+        // The open-time validation pass proved the body decodable; an
+        // error here means the file changed underneath us.
+        let rec = read_record(&mut self.r, self.n)
+            .expect("trace read failed after validation");
+        match rec {
+            Record::End { .. } => {
+                self.done = true;
+                false
+            }
+            Record::Ref { stream, gap, delta, is_write, dependent } => {
+                let addr =
+                    (self.prev_addr[stream] as i64).wrapping_add(delta) as u64;
+                self.prev_addr[stream] = addr;
+                self.pending[stream].push_back(MemRef {
+                    gap_insts: gap as u32,
+                    addr,
+                    is_write,
+                    dependent,
+                });
+                true
+            }
+        }
+    }
+}
+
+/// One recorded stream as a request source (replay side).
+pub struct TraceStream {
+    idx: usize,
+    demux: Rc<RefCell<Demux>>,
+}
+
+impl RequestSource for TraceStream {
+    fn fill(&mut self, out: &mut Vec<MemRef>) -> usize {
+        let mut d = self.demux.borrow_mut();
+        let mut n = 0;
+        while n < SOURCE_BATCH {
+            if let Some(r) = d.pending[self.idx].pop_front() {
+                out.push(r);
+                n += 1;
+                continue;
+            }
+            if !d.pump() {
+                break;
+            }
+        }
+        n
+    }
+}
+
+/// Open an ALDT trace for replay: validates the whole file, then hands
+/// back one streaming [`NamedSource`] per recorded stream.
+pub fn open_sources(path: &Path)
+                    -> anyhow::Result<(TraceInfo, Vec<NamedSource>)> {
+    let inf = info(path)?;
+    let f = File::open(path)?;
+    let mut r = BufReader::new(f);
+    read_header(&mut r)?; // reposition past the header
+    let n = inf.streams.len();
+    let demux = Rc::new(RefCell::new(Demux {
+        r,
+        n,
+        pending: vec![VecDeque::new(); n],
+        prev_addr: vec![0; n],
+        done: false,
+    }));
+    let sources = inf
+        .streams
+        .iter()
+        .enumerate()
+        .map(|(i, m)| NamedSource {
+            name: m.name.clone(),
+            seed: m.seed.clone(),
+            footprint: m.footprint,
+            source: Box::new(TraceStream { idx: i, demux: Rc::clone(&demux) }),
+        })
+        .collect();
+    Ok((inf, sources))
+}
+
+/// Open either format: ALDT binary (sniffed by magic) or DRAMSim3 text.
+/// The returned `TraceInfo::binary` records which format was detected.
+pub fn open_any(path: &Path)
+                -> anyhow::Result<(TraceInfo, Vec<NamedSource>)> {
+    let is_binary = {
+        let mut f = File::open(path)
+            .with_context(|| format!("opening trace {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        // read_exact, not read: a short read must not misclassify a valid
+        // ALDT file. A file shorter than the magic cannot be ALDT.
+        match f.read_exact(&mut magic) {
+            Ok(()) => magic == MAGIC,
+            Err(_) => false,
+        }
+    };
+    if is_binary {
+        return open_sources(path);
+    }
+    let (count, src) = open_text(path)?;
+    let meta = StreamMeta {
+        name: src.name.clone(),
+        seed: src.seed.clone(),
+        footprint: src.footprint,
+    };
+    Ok((
+        TraceInfo {
+            version: VERSION,
+            row_bytes: 0,
+            binary: false,
+            streams: vec![meta],
+            total_refs: count,
+            per_stream_refs: vec![count],
+        },
+        vec![src],
+    ))
+}
+
+// ---------------------------------------------------------------------
+// DRAMSim3 text interop
+// ---------------------------------------------------------------------
+
+/// Streaming `0x<ADDR> READ|WRITE <cycle>` emitter; the cycle column is
+/// the cumulative instruction position (sum of gaps), so a round trip
+/// reconstructs every gap exactly.
+pub struct TextWriter<W: Write> {
+    w: W,
+    cycle: u64,
+    count: u64,
+}
+
+impl<W: Write> TextWriter<W> {
+    pub fn new(w: W) -> Self {
+        TextWriter { w, cycle: 0, count: 0 }
+    }
+
+    pub fn push(&mut self, r: MemRef) -> io::Result<()> {
+        self.cycle += r.gap_insts as u64;
+        writeln!(self.w, "0x{:X} {} {}", r.addr,
+                 if r.is_write { "WRITE" } else { "READ" }, self.cycle)?;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// One-shot [`TextWriter`] convenience: emit `refs` and return the line
+/// count.
+pub fn write_text<W: Write>(w: &mut W, refs: impl IntoIterator<Item = MemRef>)
+                            -> io::Result<u64> {
+    let mut tw = TextWriter::new(w);
+    for r in refs {
+        tw.push(r)?;
+    }
+    Ok(tw.count())
+}
+
+fn parse_text_line(line: &str, lineno: usize, prev_cycle: u64)
+                   -> anyhow::Result<(MemRef, u64)> {
+    let mut it = line.split_whitespace();
+    let err = |what: &str| {
+        anyhow::anyhow!("text trace line {lineno}: {what}: `{line}`")
+    };
+    let addr_s = it.next().ok_or_else(|| err("missing address"))?;
+    let op = it.next().ok_or_else(|| err("missing READ/WRITE"))?;
+    let cyc_s = it.next().ok_or_else(|| err("missing cycle"))?;
+    anyhow::ensure!(it.next().is_none(), err("trailing fields"));
+    let hex = addr_s
+        .strip_prefix("0x")
+        .or_else(|| addr_s.strip_prefix("0X"))
+        .ok_or_else(|| err("address must be 0x-prefixed hex"))?;
+    let addr = u64::from_str_radix(hex, 16)
+        .map_err(|_| err("bad hex address"))?;
+    let is_write = match op {
+        "READ" => false,
+        "WRITE" => true,
+        _ => return Err(err("op must be READ or WRITE")),
+    };
+    let cycle: u64 = cyc_s.parse().map_err(|_| err("bad cycle"))?;
+    anyhow::ensure!(cycle >= prev_cycle,
+                    err("cycle column must be non-decreasing"));
+    let gap = cycle - prev_cycle;
+    anyhow::ensure!(gap <= u32::MAX as u64, err("gap overflows u32"));
+    Ok((
+        MemRef { gap_insts: gap as u32, addr, is_write, dependent: false },
+        cycle,
+    ))
+}
+
+/// Streaming text-trace source (single stream — the format carries no
+/// stream tag).
+pub struct TextSource {
+    lines: Lines<BufReader<File>>,
+    prev_cycle: u64,
+    lineno: usize,
+}
+
+impl RequestSource for TextSource {
+    fn fill(&mut self, out: &mut Vec<MemRef>) -> usize {
+        let mut n = 0;
+        while n < SOURCE_BATCH {
+            match self.lines.next() {
+                None => break,
+                Some(line) => {
+                    let line = line.expect("text trace read failed");
+                    self.lineno += 1;
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let (r, c) =
+                        parse_text_line(&line, self.lineno, self.prev_cycle)
+                            .expect("text trace corrupt after validation");
+                    self.prev_cycle = c;
+                    out.push(r);
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+/// Open a DRAMSim3 text trace: full validation pass first (bad lines
+/// fail loudly here), then a streaming source named after the file.
+pub fn open_text(path: &Path) -> anyhow::Result<(u64, NamedSource)> {
+    let f = File::open(path)
+        .with_context(|| format!("opening text trace {}", path.display()))?;
+    let mut prev = 0u64;
+    let mut count = 0u64;
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (_, c) = parse_text_line(&line, i + 1, prev)?;
+        prev = c;
+        count += 1;
+    }
+    anyhow::ensure!(count > 0, "text trace {} has no records",
+                    path.display());
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "text-trace".to_string());
+    let src = TextSource {
+        lines: BufReader::new(File::open(path)?).lines(),
+        prev_cycle: 0,
+        lineno: 0,
+    };
+    Ok((
+        count,
+        NamedSource {
+            name,
+            seed: "text".to_string(),
+            footprint: 0,
+            source: Box::new(src),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn refs() -> Vec<MemRef> {
+        vec![
+            MemRef { gap_insts: 5, addr: 0x1000, is_write: false,
+                     dependent: false },
+            MemRef { gap_insts: 0, addr: 0x2A40, is_write: true,
+                     dependent: false },
+            MemRef { gap_insts: 17, addr: 0x1040, is_write: false,
+                     dependent: true },
+        ]
+    }
+
+    #[test]
+    fn varint_zigzag_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX] {
+            let mut b = Vec::new();
+            write_varint(&mut b, v).unwrap();
+            assert_eq!(read_varint(&mut Cursor::new(&b)).unwrap(), v);
+        }
+        for d in [0i64, 1, -1, 63, -64, 1 << 40, -(1 << 40), i64::MAX,
+                  i64::MIN] {
+            assert_eq!(unzigzag(zigzag(d)), d);
+        }
+        // Small deltas stay small on disk: |d| < 64 is one byte.
+        let mut b = Vec::new();
+        write_varint(&mut b, zigzag(-63)).unwrap();
+        assert_eq!(b.len(), 1);
+        // Non-canonical 10-byte encodings whose final byte would shift
+        // payload bits past bit 63 are corrupt, not silently truncated.
+        let mut bad = vec![0xFFu8; 9];
+        bad.push(0x03);
+        assert!(read_varint(&mut Cursor::new(&bad)).is_err());
+        let mut cont = vec![0xFFu8; 9];
+        cont.push(0x81);
+        assert!(read_varint(&mut Cursor::new(&cont)).is_err());
+    }
+
+    #[test]
+    fn extreme_addresses_roundtrip() {
+        // Addresses straddling 2^63 (legal in imported traces): the
+        // wrapping delta encode/decode pair must reproduce them exactly.
+        let metas = [StreamMeta { name: "x".into(), seed: "s".into(),
+                                  footprint: 0 }];
+        let addrs = [0u64, u64::MAX & !63, 0x40, 1 << 63, 0];
+        let mut buf = Vec::new();
+        let mut w = TraceWriter::new(&mut buf, 0, &metas).unwrap();
+        for &a in &addrs {
+            w.push(0, MemRef { gap_insts: 1, addr: a, is_write: false,
+                               dependent: false }).unwrap();
+        }
+        w.finish().unwrap();
+        drop(w);
+        let mut c = Cursor::new(&buf);
+        read_header(&mut c).unwrap();
+        let mut prev = 0u64;
+        let mut got = Vec::new();
+        while let Record::Ref { delta, .. } = read_record(&mut c, 1).unwrap()
+        {
+            prev = (prev as i64).wrapping_add(delta) as u64;
+            got.push(prev);
+        }
+        assert_eq!(got, addrs);
+    }
+
+    #[test]
+    fn binary_codec_roundtrip_in_memory() {
+        let metas = [
+            StreamMeta { name: "mcf".into(), seed: "s/0".into(),
+                         footprint: 1 << 20 },
+            StreamMeta { name: "gups".into(), seed: "s/1".into(),
+                         footprint: 1 << 22 },
+        ];
+        let mut buf = Vec::new();
+        let mut w = TraceWriter::new(&mut buf, 8192, &metas).unwrap();
+        for (i, r) in refs().iter().enumerate() {
+            w.push(i % 2, *r).unwrap();
+        }
+        assert_eq!(w.count(), 3);
+        w.finish().unwrap();
+        w.finish().unwrap(); // idempotent
+        drop(w);
+
+        let mut c = Cursor::new(&buf);
+        let (version, row_bytes, streams) = read_header(&mut c).unwrap();
+        assert_eq!(version, VERSION);
+        assert_eq!(row_bytes, 8192);
+        assert_eq!(streams, metas);
+        // Decode the three records back, tracking per-stream deltas.
+        let mut prev = [0u64; 2];
+        let mut got = Vec::new();
+        loop {
+            match read_record(&mut c, 2).unwrap() {
+                Record::End { count } => {
+                    assert_eq!(count, 3);
+                    break;
+                }
+                Record::Ref { stream, gap, delta, is_write, dependent } => {
+                    let addr =
+                        (prev[stream] as i64).wrapping_add(delta) as u64;
+                    prev[stream] = addr;
+                    got.push((stream, MemRef { gap_insts: gap as u32, addr,
+                                               is_write, dependent }));
+                }
+            }
+        }
+        let want = refs();
+        assert_eq!(got, vec![(0, want[0]), (1, want[1]), (0, want[2])]);
+    }
+
+    #[test]
+    fn binary_format_golden_bytes() {
+        // Byte-for-byte pin of the v1 format. The Python mirror
+        // (mirror/source_checks.py) pins the *same* hex string, so the
+        // two codecs are provably bit-compatible.
+        let metas = [
+            StreamMeta { name: "mcf".into(), seed: "s/0".into(),
+                         footprint: 1 << 20 },
+            StreamMeta { name: "gups".into(), seed: "s/1".into(),
+                         footprint: 1 << 22 },
+        ];
+        let mut buf = Vec::new();
+        let mut w = TraceWriter::new(&mut buf, 8192, &metas).unwrap();
+        for (i, r) in refs().iter().enumerate() {
+            w.push(i % 2, *r).unwrap();
+        }
+        w.finish().unwrap();
+        drop(w);
+        let hex: String = buf.iter().map(|b| format!("{b:02x}")).collect();
+        assert_eq!(
+            hex,
+            "414c4454010020000002036d636603732f30000010000000000004677570\
+             7303732f31000040000000000000058040410080a90180118001ff030000\
+             0000000000"
+        );
+    }
+
+    #[test]
+    fn writer_rejects_bad_stream_sets() {
+        assert!(TraceWriter::new(Vec::new(), 0, &[]).is_err());
+        let many: Vec<StreamMeta> = (0..MAX_STREAMS + 1)
+            .map(|i| StreamMeta { name: format!("w{i}"), seed: "s".into(),
+                                  footprint: 0 })
+            .collect();
+        assert!(TraceWriter::new(Vec::new(), 0, &many).is_err());
+    }
+
+    #[test]
+    fn dramsim3_text_golden() {
+        // The exact interop byte stream: cumulative instruction position
+        // in the cycle column, upper-case hex, upper-case op.
+        let mut out = Vec::new();
+        let n = write_text(&mut out, refs()).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            "0x1000 READ 5\n0x2A40 WRITE 5\n0x1040 READ 22\n"
+        );
+    }
+
+    #[test]
+    fn text_lines_roundtrip_gaps() {
+        let mut out = Vec::new();
+        write_text(&mut out, refs()).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let mut prev = 0u64;
+        let mut got = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let (r, c) = parse_text_line(line, i + 1, prev).unwrap();
+            prev = c;
+            got.push(r);
+        }
+        // dependent is not representable in the text format; everything
+        // else survives.
+        let want: Vec<MemRef> = refs()
+            .into_iter()
+            .map(|r| MemRef { dependent: false, ..r })
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn text_parser_rejects_garbage() {
+        assert!(parse_text_line("0x10 READ", 1, 0).is_err());
+        assert!(parse_text_line("10 READ 5", 1, 0).is_err());
+        assert!(parse_text_line("0xZZ READ 5", 1, 0).is_err());
+        assert!(parse_text_line("0x10 FETCH 5", 1, 0).is_err());
+        assert!(parse_text_line("0x10 READ x", 1, 0).is_err());
+        assert!(parse_text_line("0x10 READ 5 extra", 1, 0).is_err());
+        // Non-monotone cycle: the previous line ended at 10.
+        assert!(parse_text_line("0x10 READ 5", 2, 10).is_err());
+    }
+}
