@@ -8,7 +8,7 @@ pub mod thermal;
 
 pub use thermal::{ThermalModel, FULL_LOAD_RISE_C};
 
-use crate::profiler::DimmProfile;
+use crate::profiler::{DimmProfile, RegionDimmProfile};
 use crate::timing::TimingParams;
 
 /// Default interpolation bin width (degC) for tables built from profiles
@@ -60,10 +60,16 @@ impl AlDram {
     /// install a *shorter* timing.
     pub fn try_from_profile(p: &DimmProfile, bin_c: f64)
                             -> anyhow::Result<Self> {
+        Self::try_from_anchors(p.at55.combined(), p.at85.combined(), bin_c)
+    }
+
+    /// The table-building core shared by module-level and region-level
+    /// profiles: two profiled anchors (55degC / 85degC) plus interpolation
+    /// bins, the standard set above 85degC.
+    pub fn try_from_anchors(t55: TimingParams, t85_raw: TimingParams,
+                            bin_c: f64) -> anyhow::Result<Self> {
         anyhow::ensure!(bin_c > 0.0 && bin_c.is_finite(),
                         "bin width must be positive, got {bin_c}");
-        let t55 = p.at55.combined();
-        let t85_raw = p.at85.combined();
         let t85 = t85_raw.with_core(
             t85_raw.trcd_ns.max(t55.trcd_ns),
             t85_raw.tras_ns.max(t55.tras_ns),
@@ -139,17 +145,190 @@ impl AlDram {
 
     /// Timing set for the current DIMM temperature.
     pub fn timings_for(&self, temp_c: f64) -> TimingParams {
+        self.entries[self.bin_index(temp_c)].timings
+    }
+
+    /// Index of the bin selected at `temp_c` (guardband applied) —
+    /// region tables use this to detect bin transitions, which is finer
+    /// than watching the module timing set alone (two bins can share the
+    /// collapsed module timings while their region entries differ).
+    pub fn bin_index(&self, temp_c: f64) -> usize {
         let t = temp_c + self.guard_c;
-        for e in &self.entries {
-            if t <= e.max_c {
-                return e.timings;
-            }
-        }
-        self.entries.last().expect("table non-empty").timings
+        self.entries
+            .iter()
+            .position(|e| t <= e.max_c)
+            .unwrap_or(self.entries.len() - 1)
     }
 
     pub fn entries(&self) -> &[TableEntry] {
         &self.entries
+    }
+}
+
+/// Region-indexed timing table: one temperature-indexed [`AlDram`] per
+/// (bank, row-region), bank-major. The unit of timing in the memory
+/// controller is a *region* — a module-uniform table is just the
+/// 1-region special case ([`RegionTable::uniform`]), which keeps every
+/// pre-region call site a one-liner and bit-compatible with the scalar
+/// path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionTable {
+    banks: usize,
+    regions_per_bank: usize,
+    /// Length 1 (uniform) or `banks * regions_per_bank`, bank-major.
+    entries: Vec<AlDram>,
+    /// Per-parameter max collapse across regions — the timing set a
+    /// controller without region support would have to install to be
+    /// safe for every region (the "module-uniform" comparison point).
+    module: AlDram,
+}
+
+impl RegionTable {
+    /// Wrap a module-level table: one region covering everything.
+    pub fn uniform(table: AlDram) -> Self {
+        RegionTable {
+            banks: 1,
+            regions_per_bank: 1,
+            entries: vec![table.clone()],
+            module: table,
+        }
+    }
+
+    /// Assemble from per-(bank, region) tables, bank-major. All entries
+    /// must share the same bin structure (max_c ladder and guardband) —
+    /// true by construction when each comes from
+    /// [`AlDram::try_from_anchors`] with one bin width — so a single
+    /// temperature selects the same bin index in every region.
+    pub fn from_regions(banks: usize, regions_per_bank: usize,
+                        entries: Vec<AlDram>) -> anyhow::Result<Self> {
+        anyhow::ensure!(banks > 0 && regions_per_bank > 0,
+                        "degenerate region geometry {banks}x{regions_per_bank}");
+        anyhow::ensure!(entries.len() == banks * regions_per_bank,
+                        "expected {} region tables, got {}",
+                        banks * regions_per_bank, entries.len());
+        let first = &entries[0];
+        for (i, e) in entries.iter().enumerate() {
+            anyhow::ensure!(
+                e.guard_c == first.guard_c
+                    && e.entries.len() == first.entries.len()
+                    && e.entries
+                        .iter()
+                        .zip(&first.entries)
+                        .all(|(a, b)| a.max_c == b.max_c),
+                "region {i} has a different bin structure"
+            );
+        }
+        // Collapse: per-parameter max across regions at each bin. Max of
+        // per-entry-monotone sequences is monotone, so `from_entries`
+        // revalidates cleanly.
+        let module_entries: Vec<TableEntry> = (0..first.entries.len())
+            .map(|k| {
+                let t = entries.iter().map(|e| e.entries[k].timings).fold(
+                    first.entries[k].timings,
+                    |acc, t| acc.with_core(
+                        acc.trcd_ns.max(t.trcd_ns),
+                        acc.tras_ns.max(t.tras_ns),
+                        acc.twr_ns.max(t.twr_ns),
+                        acc.trp_ns.max(t.trp_ns),
+                    ),
+                );
+                TableEntry { max_c: first.entries[k].max_c, timings: t }
+            })
+            .collect();
+        let module = AlDram::from_entries(module_entries, first.guard_c)?;
+        Ok(RegionTable { banks, regions_per_bank, entries, module })
+    }
+
+    /// Build from a region profile: one anchored-and-interpolated table
+    /// per (bank, region), all sharing `bin_c` (hence one bin ladder).
+    /// Never faster than profiled per region by construction — each
+    /// entry's 55/85degC anchors *are* that region's profiled combined
+    /// sets, and interpolation bins sit between them.
+    pub fn try_from_region_profile(p: &RegionDimmProfile, bin_c: f64)
+                                   -> anyhow::Result<Self> {
+        anyhow::ensure!(p.regions_per_bank >= 1, "no regions in profile");
+        anyhow::ensure!(
+            !p.regions.is_empty()
+                && p.regions.len() % p.regions_per_bank == 0,
+            "region list ({}) does not tile {} regions per bank",
+            p.regions.len(), p.regions_per_bank
+        );
+        let banks = p.regions.len() / p.regions_per_bank;
+        for (i, r) in p.regions.iter().enumerate() {
+            anyhow::ensure!(
+                r.bank == i / p.regions_per_bank
+                    && r.region == i % p.regions_per_bank,
+                "region list not bank-major at index {i} \
+                 (bank {}, region {})", r.bank, r.region
+            );
+        }
+        let entries = p
+            .regions
+            .iter()
+            .map(|r| AlDram::try_from_anchors(
+                r.at55.combined(), r.at85.combined(), bin_c))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Self::from_regions(banks, p.regions_per_bank, entries)
+    }
+
+    /// Panicking [`RegionTable::try_from_region_profile`], for profiles
+    /// we just computed (mirrors `AlDram::from_profile`).
+    pub fn from_region_profile(p: &RegionDimmProfile, bin_c: f64) -> Self {
+        Self::try_from_region_profile(p, bin_c)
+            .expect("region profile produced an invalid timing table")
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.entries.len() == 1
+    }
+
+    pub fn banks(&self) -> usize {
+        self.banks
+    }
+
+    pub fn regions_per_bank(&self) -> usize {
+        self.regions_per_bank
+    }
+
+    pub fn entry(&self, bank: usize, region: usize) -> &AlDram {
+        if self.is_uniform() {
+            &self.entries[0]
+        } else {
+            &self.entries[bank * self.regions_per_bank + region]
+        }
+    }
+
+    pub fn entries(&self) -> &[AlDram] {
+        &self.entries
+    }
+
+    /// The per-parameter max collapse — what a region-unaware controller
+    /// would install. Equals the wrapped table for uniform tables.
+    pub fn module(&self) -> &AlDram {
+        &self.module
+    }
+
+    /// Collapse to a module-uniform table (for the region-vs-uniform
+    /// comparison evals).
+    pub fn collapsed(&self) -> RegionTable {
+        RegionTable::uniform(self.module.clone())
+    }
+
+    pub fn timings_for(&self, bank: usize, region: usize, temp_c: f64)
+                       -> TimingParams {
+        self.entry(bank, region).timings_for(temp_c)
+    }
+
+    /// Bin selected at `temp_c` — identical across regions because all
+    /// entries share one ladder (enforced by `from_regions`).
+    pub fn bin_index(&self, temp_c: f64) -> usize {
+        self.entries[0].bin_index(temp_c)
+    }
+
+    /// All region timing sets at `temp_c`, bank-major — the controller
+    /// install vector.
+    pub fn region_timings_for(&self, temp_c: f64) -> Vec<TimingParams> {
+        self.entries.iter().map(|e| e.timings_for(temp_c)).collect()
     }
 }
 
@@ -237,6 +416,104 @@ mod tests {
                 assert!(a.trp_ns <= b.trp_ns + 1e-9, "bin_c {bin_c}: tRP");
             }
         });
+    }
+
+    #[test]
+    fn region_tables_monotone_and_never_faster_than_profiled() {
+        // Property (satellite): for generated spatial maps, every region's
+        // table is monotone in temperature and never installs a timing
+        // faster than that region's profiled bins.
+        use crate::profiler::profile_dimm_regions;
+        let mut b = NativeBackend::new();
+        for id in [2usize, 9] {
+            let d = generate_dimm(id, 64, params());
+            let rp = profile_dimm_regions(&mut b, &d, 4).unwrap();
+            let t = RegionTable::from_region_profile(&rp, DEFAULT_BIN_C);
+            assert_eq!(t.banks(), d.arrays.banks);
+            assert_eq!(t.regions_per_bank(), 4);
+            let dominates = |a: &TimingParams, b: &TimingParams| {
+                a.trcd_ns >= b.trcd_ns - 1e-9
+                    && a.tras_ns >= b.tras_ns - 1e-9
+                    && a.twr_ns >= b.twr_ns - 1e-9
+                    && a.trp_ns >= b.trp_ns - 1e-9
+            };
+            let temps = [40.0, 50.0, 58.0, 66.0, 74.0, 82.0, 90.0];
+            for bank in 0..t.banks() {
+                for r in 0..t.regions_per_bank() {
+                    let prof = &rp.regions[bank * 4 + r];
+                    // Monotone in temperature.
+                    for w in temps.windows(2) {
+                        assert!(dominates(
+                            &t.timings_for(bank, r, w[1]),
+                            &t.timings_for(bank, r, w[0])),
+                            "dimm {id} bank {bank} region {r}: \
+                             {} C slower than {} C", w[0], w[1]);
+                    }
+                    // Never faster than the profiled bins: every bin
+                    // dominates the 55degC anchor, and every bin at or
+                    // above the hot anchor dominates the 85degC profile.
+                    let t55 = prof.at55.combined();
+                    let t85 = prof.at85.combined();
+                    for temp in temps {
+                        let inst = t.timings_for(bank, r, temp);
+                        assert!(dominates(&inst, &t55),
+                                "dimm {id} b{bank}r{r}@{temp}: faster than \
+                                 the 55C profile");
+                        if temp + 2.0 > 80.0 {
+                            assert!(dominates(&inst, &t85),
+                                    "dimm {id} b{bank}r{r}@{temp}: faster \
+                                     than the 85C profile");
+                        }
+                    }
+                    // The module collapse dominates every region.
+                    for temp in temps {
+                        assert!(dominates(&t.module().timings_for(temp),
+                                          &t.timings_for(bank, r, temp)));
+                    }
+                }
+            }
+            // Some spatial spread must actually be visible: not all
+            // regions identical at 55degC (the gradient spans a grid step).
+            let distinct: std::collections::BTreeSet<String> = rp
+                .regions
+                .iter()
+                .map(|r| format!("{:?}", r.at55.combined()))
+                .collect();
+            assert!(distinct.len() > 1,
+                    "dimm {id}: spatial map produced no region spread");
+        }
+    }
+
+    #[test]
+    fn uniform_region_table_is_the_wrapped_module_table() {
+        let t = table();
+        let rt = RegionTable::uniform(t.clone());
+        assert!(rt.is_uniform());
+        assert_eq!(rt.banks(), 1);
+        assert_eq!(rt.regions_per_bank(), 1);
+        for temp in [30.0, 55.0, 70.0, 90.0] {
+            assert_eq!(rt.timings_for(0, 0, temp), t.timings_for(temp));
+            assert_eq!(rt.module().timings_for(temp), t.timings_for(temp));
+            assert_eq!(rt.bin_index(temp), t.bin_index(temp));
+        }
+        // Out-of-range (bank, region) still resolves for uniform tables —
+        // the controller may index any decoded (bank, row).
+        assert_eq!(rt.timings_for(7, 3, 55.0), t.timings_for(55.0));
+    }
+
+    #[test]
+    fn from_regions_rejects_mismatched_shapes() {
+        let t = table();
+        assert!(RegionTable::from_regions(2, 2, vec![t.clone(); 3]).is_err());
+        assert!(RegionTable::from_regions(0, 1, vec![t.clone()]).is_err());
+        // Mismatched bin structure across regions.
+        let other = AlDram::fixed(TimingParams::ddr3_standard());
+        assert!(RegionTable::from_regions(1, 2, vec![t.clone(), other])
+            .is_err());
+        // A well-formed grid is accepted and collapses to itself.
+        let rt = RegionTable::from_regions(1, 2, vec![t.clone(), t.clone()])
+            .unwrap();
+        assert_eq!(rt.module().entries(), t.entries());
     }
 
     #[test]

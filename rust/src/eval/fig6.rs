@@ -13,7 +13,7 @@
 //! speedup (`SystemStats::weighted_speedup`): for a single-core unit it
 //! degenerates to the plain IPC ratio.
 
-use crate::aldram::{AlDram, FULL_LOAD_RISE_C};
+use crate::aldram::{AlDram, RegionTable, FULL_LOAD_RISE_C};
 use crate::exec::Pool;
 use crate::mem::{ChannelConfig, System, SystemConfig, SystemStats};
 use crate::util;
@@ -92,6 +92,16 @@ impl Unit {
 /// seed are bit-identical and different seeds draw different streams.
 pub fn fig6(cycles: u64, jobs: usize, table: &AlDram, seed: &str,
             workloads: &[WorkloadSpec], mixes: &[MixSpec]) -> Fig6Result {
+    fig6_regions(cycles, jobs, &RegionTable::uniform(table.clone()), seed,
+                 workloads, mixes)
+}
+
+/// [`fig6`] at region granularity: the AL-DRAM side installs the region
+/// table (per-(bank, row-region) bins) instead of a module-uniform one.
+/// A uniform wrapper reproduces `fig6` bit for bit.
+pub fn fig6_regions(cycles: u64, jobs: usize, table: &RegionTable,
+                    seed: &str, workloads: &[WorkloadSpec],
+                    mixes: &[MixSpec]) -> Fig6Result {
     let units: Vec<Unit> = workloads
         .iter()
         .cloned()
@@ -105,11 +115,11 @@ pub fn fig6(cycles: u64, jobs: usize, table: &AlDram, seed: &str,
         let side = i % 2;
         let ti = (i / 2) % FIG6_TEMPS.len();
         let ui = i / (2 * FIG6_TEMPS.len());
-        let ambient = ambient_for(FIG6_TEMPS[ti], table.guard_c);
+        let ambient = ambient_for(FIG6_TEMPS[ti], table.module().guard_c);
         let ch = if side == 0 {
             ChannelConfig::standard(ambient)
         } else {
-            ChannelConfig::profiled(table.clone(), ambient)
+            ChannelConfig::profiled_regions(table.clone(), ambient)
         };
         let cfg = SystemConfig::uniform(1, ch);
         let mut sys = System::with_sources(&cfg, units[ui].sources(seed));

@@ -12,14 +12,14 @@
 
 pub mod fig6;
 
-pub use fig6::{fig6, Fig6Result, Fig6Row, RowKind};
+pub use fig6::{fig6, fig6_regions, Fig6Result, Fig6Row, RowKind};
 
-use crate::aldram::{AlDram, DEFAULT_BIN_C};
+use crate::aldram::{AlDram, RegionTable, DEFAULT_BIN_C};
 use crate::exec::Pool;
-use crate::mem::{ChannelConfig, RowPolicy, System, SystemConfig,
-                 SystemStats};
+use crate::mem::{AddrMap, ChannelConfig, RegionRemap, RowPolicy, System,
+                 SystemConfig, SystemStats};
 use crate::power::{power, IddSpec};
-use crate::profiler::DimmProfile;
+use crate::profiler::{DimmProfile, RegionDimmProfile};
 use crate::timing::TimingParams;
 use crate::util;
 use crate::workloads::{suite, WorkloadSpec};
@@ -135,9 +135,19 @@ pub fn fig4_jobs_with(cycles: u64, reps: usize, reductions: [f64; 4],
 /// profile-fresh run bit for bit (`tests/integration_registry.rs`).
 pub fn fig4_profiled(cycles: u64, reps: usize, table: &AlDram,
                      jobs: usize) -> Fig4Result {
+    fig4_profiled_regions(cycles, reps, &RegionTable::uniform(table.clone()),
+                          jobs)
+}
+
+/// [`fig4_profiled`] at region granularity: the AL-DRAM side installs the
+/// full region table. A uniform wrapper reproduces `fig4_profiled` bit
+/// for bit; comparing against `fig4_profiled_regions(&table.collapsed())`
+/// isolates what region indexing buys over the module-uniform collapse.
+pub fn fig4_profiled_regions(cycles: u64, reps: usize, table: &RegionTable,
+                             jobs: usize) -> Fig4Result {
     let base_cfg = SystemConfig::paper_default();
-    let fast_cfg =
-        SystemConfig::paper_default().with_aldram(Some(table.clone()));
+    let fast_cfg = SystemConfig::paper_default()
+        .with_region_table(Some(table.clone()));
     fig4_pair(cycles, reps, jobs, Driver::TimeSkip, &base_cfg, &fast_cfg)
 }
 
@@ -478,6 +488,137 @@ pub fn hetero_eval(cycles: u64, n_mixes: usize, channels: usize,
         .collect()
 }
 
+/// One mix of the region-granularity heterogeneity eval: the same
+/// channel population evaluated three ways against the standard-timing
+/// baseline — module-uniform (each channel installs its table's
+/// per-parameter-max collapse), region-indexed (the full per-(bank,
+/// row-region) table), and optionally region-indexed plus
+/// variation-aware page placement.
+#[derive(Debug, Clone)]
+pub struct HeteroRegionResult {
+    pub mix: Vec<String>,
+    pub dimm_ids: Vec<usize>,
+    /// Weighted speedup of the module-uniform collapse over baseline.
+    pub ws_uniform: f64,
+    /// Weighted speedup of the region-indexed tables over baseline.
+    pub ws_region: f64,
+    /// Region-indexed + fastest-first row-region remap (only when
+    /// placement was requested and the grid has >= 2 regions).
+    pub ws_placement: Option<f64>,
+    /// `ws_region - ws_uniform`: what region indexing buys on this mix.
+    pub delta: f64,
+}
+
+/// Region-granularity module heterogeneity (§8.4 extended): every mix
+/// populates the channels with distinct region-profiled DIMMs and runs
+/// the *same* workloads and baseline under the module-uniform collapse
+/// and under the region-indexed tables, so `delta` isolates the value of
+/// region indexing on the same profiled population. With `placement`,
+/// a third run adds the fastest-first row-region remap (derived from
+/// channel 0's table; the shared address map carries one permutation).
+pub fn hetero_eval_regions(cycles: u64, n_mixes: usize, channels: usize,
+                           profiles: &[RegionDimmProfile], placement: bool)
+                           -> Vec<HeteroRegionResult> {
+    use crate::util::rng::Rng;
+    assert!(channels >= 2 && channels.is_power_of_two(),
+            "module heterogeneity needs >= 2 channels (power of two)");
+    assert!(profiles.len() >= channels,
+            "need at least one distinct profile per channel: {} < {}",
+            profiles.len(), channels);
+
+    let pool = suite();
+    let intensive: Vec<WorkloadSpec> = pool
+        .iter()
+        .filter(|w| w.memory_intensive())
+        .cloned()
+        .collect();
+    let tables: Vec<RegionTable> = profiles
+        .iter()
+        .map(|p| RegionTable::from_region_profile(p, DEFAULT_BIN_C))
+        .collect();
+    let mut order: Vec<usize> = (0..profiles.len()).collect();
+    order.sort_by(|&a, &b| {
+        let key = |i: usize| profiles[i].base.at55.combined().read_sum_ns();
+        key(a).partial_cmp(&key(b)).unwrap()
+    });
+    let quart = (profiles.len() / 4).max(1);
+    // Own stream: the scalar hetero eval's draws stay untouched.
+    let mut rng = Rng::from_label("hetero-mixes-regions");
+
+    (0..n_mixes)
+        .map(|mi| {
+            let mut picks: Vec<usize> = Vec::with_capacity(channels);
+            picks.push(order[rng.below(quart as u64) as usize]);
+            picks.push(order[profiles.len() - 1
+                             - rng.below(quart as u64) as usize]);
+            while picks.len() < channels {
+                let cand = rng.below(profiles.len() as u64) as usize;
+                if !picks.contains(&cand) {
+                    picks.push(cand);
+                }
+            }
+
+            let mix = [
+                rng.choose(&intensive).clone(),
+                rng.choose(&intensive).clone(),
+                rng.choose(&pool).clone(),
+                rng.choose(&pool).clone(),
+            ];
+            let wl: Vec<(WorkloadSpec, String)> = mix
+                .iter()
+                .enumerate()
+                .map(|(i, w)| (w.clone(), format!("hxr{mi}/{i}")))
+                .collect();
+
+            let base_cfg = SystemConfig::uniform(
+                channels, ChannelConfig::standard(55.0));
+            let uni_cfg = SystemConfig {
+                channels: picks
+                    .iter()
+                    .map(|&di| ChannelConfig::profiled(
+                        tables[di].module().clone(), 55.0))
+                    .collect(),
+                ..base_cfg.clone()
+            };
+            let reg_cfg = SystemConfig {
+                channels: picks
+                    .iter()
+                    .map(|&di| ChannelConfig::profiled_regions(
+                        tables[di].clone(), 55.0))
+                    .collect(),
+                ..base_cfg.clone()
+            };
+            let map = AddrMap::ddr3_2gb(1);
+            let run = |cfg: &SystemConfig, map: AddrMap| {
+                let mut sys = System::new_with_map(cfg, map, &wl);
+                sys.run_fast(cycles)
+            };
+            let base = run(&base_cfg, map);
+            let ws_uniform = run(&uni_cfg, map).weighted_speedup(&base);
+            let ws_region = run(&reg_cfg, map).weighted_speedup(&base);
+            let ws_placement = (placement
+                                && tables[picks[0]].regions_per_bank() >= 2)
+                .then(|| {
+                    let remap = RegionRemap::fastest_first(
+                        &tables[picks[0]], map.row_bits);
+                    run(&reg_cfg, map.with_remap(remap))
+                        .weighted_speedup(&base)
+                });
+
+            HeteroRegionResult {
+                mix: mix.iter().map(|w| w.name.to_string()).collect(),
+                dimm_ids: picks.iter()
+                    .map(|&di| profiles[di].base.id)
+                    .collect(),
+                ws_uniform,
+                ws_region,
+                ws_placement,
+                delta: ws_region - ws_uniform,
+            }
+        })
+        .collect()
+}
+
 // ---------------------------------------------------------------------
 // §8.4: DRAM power.
 // ---------------------------------------------------------------------
@@ -669,6 +810,34 @@ mod tests {
             for (ch, sw) in m.channel_switches.iter().enumerate() {
                 assert!(*sw >= 1, "channel {ch} never switched timings");
             }
+        }
+    }
+
+    #[test]
+    fn region_indexing_never_hurts_and_placement_runs() {
+        // Region bins are per-parameter <= the module collapse, so the
+        // region-indexed run can only speed channels up relative to the
+        // uniform run (modulo cycle quantization — hence the tolerance).
+        let mut b = NativeBackend::new();
+        let ps: Vec<_> = (0..4)
+            .map(|id| {
+                let d = generate_dimm(id, 64, params());
+                crate::profiler::profile_dimm_regions(&mut b, &d, 2).unwrap()
+            })
+            .collect();
+        let mixes = hetero_eval_regions(30_000, 2, 2, &ps, true);
+        assert_eq!(mixes.len(), 2);
+        for m in &mixes {
+            assert_eq!(m.mix.len(), 4);
+            assert_ne!(m.dimm_ids[0], m.dimm_ids[1]);
+            assert!(m.ws_uniform > 0.99,
+                    "uniform run regressed on {:?}: {}", m.mix, m.ws_uniform);
+            assert!(m.ws_region >= m.ws_uniform - 5e-3,
+                    "region indexing hurt {:?}: {} vs {}", m.mix,
+                    m.ws_region, m.ws_uniform);
+            assert_eq!(m.delta, m.ws_region - m.ws_uniform);
+            let wp = m.ws_placement.expect("placement run requested");
+            assert!(wp > 0.99, "placement regressed on {:?}: {wp}", m.mix);
         }
     }
 

@@ -4,7 +4,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::aldram::AlDram;
+use crate::aldram::{AlDram, RegionTable};
 use crate::eval::{self, fig4_jobs, Fig4Result, PAPER_REDUCTIONS_55C};
 
 use super::csv::Csv;
@@ -67,6 +67,33 @@ pub fn fig4_profiled(cycles: u64, reps: usize, jobs: usize, table: &AlDram,
               DDR3 standard ({jobs} jobs) ==");
     print_and_csv(&r, out, "fig4_profiled.csv")?;
     Ok(r)
+}
+
+/// Fig 4 at region granularity: the grid runs twice — the module-uniform
+/// collapse of `table`, then the full region-indexed table — and the
+/// summary reports the gmean speedup delta region indexing buys on the
+/// *same* profiled module. Returns the region-indexed result.
+pub fn fig4_regions(cycles: u64, reps: usize, jobs: usize,
+                    table: &RegionTable, label: &str, out: &Path)
+                    -> Result<Fig4Result> {
+    let uni = eval::fig4_profiled_regions(cycles, reps, &table.collapsed(),
+                                          jobs);
+    let reg = eval::fig4_profiled_regions(cycles, reps, table, jobs);
+    println!("== Fig 4 (profiled {label}, region-indexed {} banks x {} \
+              regions) vs DDR3 standard ({jobs} jobs) ==",
+             table.banks(), table.regions_per_bank());
+    print_and_csv(&reg, out, "fig4_regions.csv")?;
+    let pp = |r: f64, u: f64| 100.0 * (r / u - 1.0);
+    println!("region-indexed vs module-uniform (same profile):");
+    println!("  intensive multi-core gmean delta: {:+.2}%  ({:.1}% vs {:.1}%)",
+             pp(reg.gmean_intensive_multi, uni.gmean_intensive_multi),
+             100.0 * (reg.gmean_intensive_multi - 1.0),
+             100.0 * (uni.gmean_intensive_multi - 1.0));
+    println!("  all-35 multi-core mean delta:     {:+.2}%  ({:.1}% vs {:.1}%)",
+             pp(reg.mean_all_multi, uni.mean_all_multi),
+             100.0 * (reg.mean_all_multi - 1.0),
+             100.0 * (uni.mean_all_multi - 1.0));
+    Ok(reg)
 }
 
 #[cfg(test)]

@@ -5,8 +5,10 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::aldram::AlDram;
-use crate::eval::{fig6 as fig6_eval, Fig6Result, RowKind};
+use crate::aldram::{AlDram, RegionTable};
+use crate::eval::{fig6 as fig6_eval, fig6_regions as fig6_regions_eval,
+                  Fig6Result, RowKind};
+use crate::util;
 use crate::workloads::mix::MixSpec;
 use crate::workloads::WorkloadSpec;
 
@@ -60,6 +62,40 @@ pub fn fig6(cycles: u64, jobs: usize, table: &AlDram, label: &str,
              workloads.len(), mixes.len());
     print_and_csv(&r, out, "fig6.csv")?;
     Ok(r)
+}
+
+/// [`fig6`] at region granularity: the grid runs twice — module-uniform
+/// collapse, then region-indexed — and the summary reports the gmean
+/// weighted-speedup delta region indexing buys at each operating point.
+/// Returns the region-indexed result.
+#[allow(clippy::too_many_arguments)]
+pub fn fig6_regions(cycles: u64, jobs: usize, table: &RegionTable,
+                    label: &str, seed: &str, workloads: &[WorkloadSpec],
+                    mixes: &[MixSpec], out: &Path) -> Result<Fig6Result> {
+    let uni = fig6_regions_eval(cycles, jobs, &table.collapsed(), seed,
+                                workloads, mixes);
+    let reg = fig6_regions_eval(cycles, jobs, table, seed, workloads, mixes);
+    println!("== Fig 6 (profiled {label}, region-indexed {} banks x {} \
+              regions): {} workloads + {} mixes x {{55C, 85C}} ({jobs} \
+              jobs, seed {seed}) ==",
+             table.banks(), table.regions_per_bank(), workloads.len(),
+             mixes.len());
+    print_and_csv(&reg, out, "fig6_regions.csv")?;
+    let gmean_ratio = |hot: bool| -> f64 {
+        let v: Vec<f64> = reg
+            .rows
+            .iter()
+            .zip(&uni.rows)
+            .map(|(r, u)| if hot { r.speedup_85 / u.speedup_85 }
+                          else { r.speedup_55 / u.speedup_55 })
+            .collect();
+        util::geomean(&v)
+    };
+    println!("region-indexed vs module-uniform gmean weighted-speedup \
+              delta: {:+.2}% @55C, {:+.2}% @85C",
+             100.0 * (gmean_ratio(false) - 1.0),
+             100.0 * (gmean_ratio(true) - 1.0));
+    Ok(reg)
 }
 
 #[cfg(test)]

@@ -4,17 +4,23 @@
 //!   repro calibrate  [--dimms N] [--cells N]
 //!                    [--backend native|simd|pjrt|auto] [--jobs N]
 //!   repro profile    --dimm N [--cells N] [--backend ...]
-//!   repro profile    --dimms N --save DIR   (profile a population once and
-//!                    persist it as a JSON registry, one dimm_NNN.json each)
+//!   repro profile    --dimms N --save DIR [--regions R]  (profile a
+//!                    population once and persist it as a JSON registry,
+//!                    one dimm_NNN.json each; --regions R additionally bins
+//!                    every (bank, row-region) — registry format v2)
 //!   repro figure     fig2a|fig2bc|fig3|fig4|fig6|all [--out DIR] [--jobs N]
-//!                    [--profiles DIR]       (fig4/fig6: drive the AL-DRAM
-//!                    side with a registry module's own table)
+//!                    [--profiles DIR] [--regions R]  (fig4/fig6: drive the
+//!                    AL-DRAM side with a registry module's own table;
+//!                    --regions loads the v2 region registry and reports the
+//!                    region-indexed vs module-uniform delta)
 //!   repro ablate     refresh-latency|interdependence|repeatability|
 //!                    bank-granularity|ecc|sweep|ode [--jobs N]
 //!   repro eval       sensitivity|hetero|power|stress|fig6 [--cycles N]
 //!                    [--jobs N] [--profiles DIR]  (profile-driven variants;
 //!                    hetero/fig6 profile modules when --profiles is absent;
-//!                    fig6: --workloads a,b,c --mixes N --seed S)
+//!                    fig6: --workloads a,b,c --mixes N --seed S;
+//!                    hetero: --regions R [--placement] scores region-
+//!                    indexed tables against their module-uniform collapse)
 //!   repro trace      record|replay|info|convert   (trace capture/replay:
 //!                    record --workload W|--mix M [--cores N] --out FILE;
 //!                    replay --trace FILE; --trace accepts ALDT binary or
@@ -28,6 +34,10 @@
 //!   repro bench-profile [--cells N]        (profiling-engine smoke; prints
 //!                    the SPEEDUP[PROFILE] and SPEEDUP[SWEEP] lines:
 //!                    scalar native vs vectorized simd / probed+warm sweep)
+//!   repro bench all  [--json-dir DIR]      (run both bench suites and
+//!                    write their SPEEDUP[*] comparisons as structured
+//!                    records to BENCH_SIM.json / BENCH_PROFILE.json — the
+//!                    repo-root baselines CI diffs structurally)
 //!
 //! Every system-level evaluation runs on the event-driven time-skip
 //! driver (`System::run_fast`), which is bit-identical to the
@@ -44,16 +54,19 @@
 
 use std::path::PathBuf;
 
-use aldram::aldram::{AlDram, DEFAULT_BIN_C};
+use aldram::aldram::{AlDram, RegionTable, DEFAULT_BIN_C};
 use aldram::cli::Args;
 use aldram::exec;
 use aldram::figures::{ablate, calibrate, fig2, fig3, fig4};
 use aldram::model::params;
 use aldram::population::generate_dimm;
-use aldram::profiler::{profile_dimm, DimmProfile};
+use aldram::profiler::{profile_dimm, profile_dimm_regions, DimmProfile,
+                       RegionDimmProfile};
 use aldram::registry;
 use aldram::runtime::{artifacts_dir, auto_backend, NativeBackend,
                       ProfilingBackend, SimdBackend};
+use aldram::util::bench::SpeedupRecord;
+use aldram::util::json::Json;
 
 fn make_backend(kind: &str, cells: usize) -> Box<dyn ProfilingBackend> {
     match kind {
@@ -96,6 +109,69 @@ fn table_for(args: &Args, profiles: &[DimmProfile])
         anyhow::anyhow!("dimm {want} is not in the registry")
     })?;
     Ok((p.id, AlDram::from_profile(p, DEFAULT_BIN_C)))
+}
+
+/// The validated `--regions R` flag: `None` when absent (module-uniform
+/// paths), `Some(R)` — a power of two, as the controller's row-region
+/// decode requires — when present.
+fn regions_flag(args: &Args) -> anyhow::Result<Option<usize>> {
+    if !args.has("regions") {
+        return Ok(None);
+    }
+    let r = args.get("regions", 4usize);
+    anyhow::ensure!(r >= 1 && r.is_power_of_two(),
+                    "--regions must be a power of two >= 1, got {r}");
+    Ok(Some(r))
+}
+
+/// Resolve the `--profiles DIR` registry into a region-granularity (v2)
+/// population. Scalar (v1) registries fail here with a re-profile hint.
+fn load_region_profiles(args: &Args)
+                        -> anyhow::Result<Vec<RegionDimmProfile>> {
+    let dir = PathBuf::from(args.str("profiles", "registry"));
+    let profiles = registry::load_region_registry(&dir)?;
+    eprintln!("loaded {} region profiles from {}", profiles.len(),
+              dir.display());
+    Ok(profiles)
+}
+
+/// Pick one module out of a v2 registry and build its region table.
+fn region_table_for(args: &Args, profiles: &[RegionDimmProfile])
+                    -> anyhow::Result<(usize, RegionTable)> {
+    let want = args.get("dimm", profiles[0].base.id);
+    let p = profiles.iter().find(|p| p.base.id == want).ok_or_else(|| {
+        anyhow::anyhow!("dimm {want} is not in the registry")
+    })?;
+    Ok((p.base.id, RegionTable::try_from_region_profile(p, DEFAULT_BIN_C)?))
+}
+
+/// One module's region table: from the `--profiles` v2 registry when
+/// given (its stored granularity must match `--regions`), else freshly
+/// region-profiled — the region analogue of [`table_or_profile`].
+fn region_table_or_profile(args: &Args, regions: usize)
+                           -> anyhow::Result<(String, RegionTable)> {
+    if args.has("profiles") {
+        let profiles = load_region_profiles(args)?;
+        let (id, table) = region_table_for(args, &profiles)?;
+        anyhow::ensure!(
+            table.regions_per_bank() == regions,
+            "--regions {regions} but the registry holds {} regions per \
+             bank — re-profile, or pass --regions {}",
+            table.regions_per_bank(), table.regions_per_bank()
+        );
+        return Ok((format!("dimm {id:03}"), table));
+    }
+    let g = &params().geometry;
+    let cells = args.get("cells", g.cells_per_chip_bank_small);
+    let id = args.get("dimm", 0usize);
+    eprintln!("no --profiles registry; region-profiling dimm {id:03} at \
+               {cells} cells x {regions} regions (save a population with \
+               `repro profile --save --regions {regions}`)");
+    let mut b = backend_for(args, cells);
+    let d = generate_dimm(id, cells, params());
+    let p = profile_dimm_regions(b.as_mut(), &d, regions)?;
+    Ok((format!("dimm {id:03}"),
+        RegionTable::try_from_region_profile(&p, DEFAULT_BIN_C)?))
 }
 
 /// One module's table: from the `--profiles` registry when given, else
@@ -146,8 +222,15 @@ fn fig6_units(args: &Args)
 fn run_fig6(args: &Args, jobs: usize, out: &std::path::Path)
             -> anyhow::Result<()> {
     let cycles = args.get("cycles", 100_000u64);
-    let (label, table) = table_or_profile(args)?;
     let (workloads, mixes) = fig6_units(args)?;
+    if let Some(regions) = regions_flag(args)? {
+        let (label, table) = region_table_or_profile(args, regions)?;
+        aldram::figures::fig6::fig6_regions(cycles, jobs, &table, &label,
+                                            &args.seed(), &workloads, &mixes,
+                                            out)?;
+        return Ok(());
+    }
+    let (label, table) = table_or_profile(args)?;
     aldram::figures::fig6::fig6(cycles, jobs, &table, &label, &args.seed(),
                                 &workloads, &mixes, out)?;
     Ok(())
@@ -188,6 +271,185 @@ fn stats_line(s: &aldram::mem::SystemStats) -> String {
     )
 }
 
+/// The `bench-sim` suite: one request source, base vs AL-DRAM, the
+/// time-skip driver vs the cycle-stepped oracle (identical numbers,
+/// TIMESKIP wall-clock line per timing set), plus the SPEEDUP[SOURCE]
+/// line: batched vs per-reference source refill. Every comparison is
+/// also returned as a structured record for `bench all`'s JSON emitter.
+fn bench_sim(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
+    use aldram::mem::{System, SystemConfig};
+    use aldram::timing::TimingParams;
+    use aldram::util::bench::Bench;
+    use aldram::workloads::{by_name, trace, NamedSource, SOURCE_BATCH};
+    use std::time::Instant;
+    let cycles = args.get("cycles", 100_000u64);
+    let seed = args.seed();
+    let mut records: Vec<SpeedupRecord> = Vec::new();
+    let sources_for = |label: &str| -> anyhow::Result<Vec<NamedSource>> {
+        if args.has("trace") {
+            let path = PathBuf::from(args.str("trace", ""));
+            Ok(trace::open_any(&path)?.1)
+        } else {
+            let w = by_name(&args.str("workload", "stream.copy"))
+                .expect("unknown workload");
+            Ok(vec![w.named_source(&format!("bench/{seed}/{label}"))])
+        }
+    };
+    for (label, t) in [
+        ("ddr3-standard", TimingParams::ddr3_standard()),
+        ("al-dram-55C", TimingParams::ddr3_standard()
+            .reduced(0.27, 0.32, 0.33, 0.18)),
+    ] {
+        let cfg = SystemConfig::paper_default().with_timings(t);
+        let mut seq = System::with_sources(&cfg, sources_for(label)?);
+        let t0 = Instant::now();
+        let s = seq.run(cycles);
+        let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut fast = System::with_sources(&cfg, sources_for(label)?);
+        let t0 = Instant::now();
+        let f = fast.run_fast(cycles);
+        let fast_ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(s.reads_done == f.reads_done
+                        && s.cores[0].ipc == f.cores[0].ipc,
+                        "drivers diverged on {label}");
+        println!(
+            "{label:<14} ipc {:.3}  read-lat {:.1} cyc  bw {:.1}%  hits {:.1}%",
+            s.cores[0].ipc, s.avg_read_latency_cycles,
+            100.0 * s.bus_utilization, 100.0 * s.row_hit_rate
+        );
+        println!(
+            "  TIMESKIP {:.1} ms -> {:.1} ms ({:.2}x, identical stats)",
+            seq_ms, fast_ms, seq_ms / fast_ms.max(1e-9)
+        );
+        records.push(SpeedupRecord {
+            suite: "bench-sim".into(),
+            tag: "TIMESKIP".into(),
+            base: format!("run/{label}"),
+            test: format!("run_fast/{label}"),
+            speedup: seq_ms / fast_ms.max(1e-9),
+            base_median_ns: seq_ms * 1e6,
+            test_median_ns: fast_ms * 1e6,
+        });
+    }
+
+    // Request-source refill batching: batch=1 is the pre-refactor
+    // one-virtual-call-per-reference regime. Identical stats
+    // (asserted), wall-clock-only difference. Always benched on a
+    // synthetic generator — trace replay pulls through the demux
+    // at the fixed SOURCE_BATCH, so batch=1 is not expressible
+    // there; say so rather than silently switching sources.
+    let wname = args.str("workload", "stream.copy");
+    if args.has("trace") {
+        println!("SOURCE batching benched on synthetic `{wname}` \
+                  (trace replay has a fixed refill batch)");
+    }
+    let wsrc = by_name(&wname).expect("unknown workload");
+    let run_batched = |batch: usize| {
+        let cfg = SystemConfig::paper_default();
+        let src = NamedSource {
+            name: wsrc.name.to_string(),
+            seed: format!("srcbench/{seed}"),
+            footprint: wsrc.footprint,
+            source: wsrc.source_with_batch(
+                &format!("srcbench/{seed}"), batch),
+        };
+        System::with_sources(&cfg, vec![src]).run_fast(cycles)
+    };
+    let a = run_batched(1);
+    let b = run_batched(SOURCE_BATCH);
+    anyhow::ensure!(
+        a.reads_done == b.reads_done && a.cores[0].ipc == b.cores[0].ipc,
+        "refill batch size changed the simulated stream"
+    );
+    let mut bench = Bench::new("bench-sim").with_window(100, 400);
+    bench.bench("source/batch1", || run_batched(1).reads_done);
+    bench.bench(&format!("source/batch{SOURCE_BATCH}"),
+                || run_batched(SOURCE_BATCH).reads_done);
+    records.extend(bench.speedup_record(
+        "SOURCE", "source/batch1",
+        &format!("source/batch{SOURCE_BATCH}")));
+    bench.finish();
+    Ok(records)
+}
+
+/// The `bench-profile` suite: scalar native vs the vectorized simd
+/// kernel on one combo batch, and the cold full-profile sweep ladder vs
+/// the probed + warm-started one. Identical results (asserted here),
+/// SPEEDUP[PROFILE] / SPEEDUP[SWEEP] lines for EXPERIMENTS.md and the
+/// CI grep, returned as structured records for `bench all`.
+fn bench_profile(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
+    use aldram::profiler::{sweep_seeded, TestKind};
+    use aldram::util::bench::Bench;
+    let cells = args.get("cells", 512usize);
+    let combos_n = args.get("combos", 64usize);
+    let d = generate_dimm(args.get("dimm", 0usize), cells, params());
+    let combos: Vec<aldram::model::Combo> = (0..combos_n)
+        .map(|i| aldram::model::Combo {
+            trcd: 13.75 - (i % 7) as f32 * 1.25,
+            tras: 35.0 - (i % 11) as f32 * 1.25,
+            twr: 15.0 - (i % 8) as f32 * 1.25,
+            trp: 13.75 - (i % 7) as f32 * 1.25,
+            tref_ms: 64.0 + (i % 48) as f32 * 8.0,
+            temp_c: if i % 2 == 0 { 85.0 } else { 55.0 },
+        })
+        .collect();
+    let mut native = NativeBackend::new();
+    let mut simd = SimdBackend::new();
+    let a = native.profile(&d.arrays, &combos)?;
+    let b = simd.profile(&d.arrays, &combos)?;
+    anyhow::ensure!(a.tot_r == b.tot_r && a.tot_w == b.tot_w,
+                    "simd/native error counts diverged");
+
+    let mut bench = Bench::new("bench-profile").with_window(80, 400);
+    bench.bench(&format!("profile/native/cells{cells}"), || {
+        native.profile(&d.arrays, &combos).unwrap().tot_r[0]
+    });
+    bench.bench(&format!("profile/simd/cells{cells}"), || {
+        simd.profile(&d.arrays, &combos).unwrap().tot_r[0]
+    });
+    let mut records: Vec<SpeedupRecord> = Vec::new();
+    records.extend(bench.speedup_record(
+        "PROFILE",
+        &format!("profile/native/cells{cells}"),
+        &format!("profile/simd/cells{cells}"),
+    ));
+
+    // Two-point temperature ladder, as the fig3 campaign runs it.
+    bench.bench("sweep/native-cold", || {
+        let hot = aldram::profiler::sweep(
+            &mut native, &d.arrays, TestKind::Read, 85.0, 200.0)
+            .unwrap();
+        let cool = aldram::profiler::sweep(
+            &mut native, &d.arrays, TestKind::Read, 55.0, 200.0)
+            .unwrap();
+        (hot.best.map(|b| b.sum_ns), cool.best.map(|b| b.sum_ns))
+    });
+    bench.bench("sweep/simd-probe-warm", || {
+        let hot = aldram::profiler::sweep(
+            &mut simd, &d.arrays, TestKind::Read, 85.0, 200.0)
+            .unwrap();
+        let cool = sweep_seeded(&mut simd, &d.arrays, TestKind::Read,
+                                55.0, 200.0, Some(&hot))
+            .unwrap();
+        (hot.best.map(|b| b.sum_ns), cool.best.map(|b| b.sum_ns))
+    });
+    records.extend(bench.speedup_record("SWEEP", "sweep/native-cold",
+                                        "sweep/simd-probe-warm"));
+    bench.finish();
+    Ok(records)
+}
+
+/// Serialize `bench all` speedup records as a top-level JSON array —
+/// the committed `BENCH_SIM.json` / `BENCH_PROFILE.json` baselines.
+fn write_bench_json(path: &std::path::Path, records: &[SpeedupRecord])
+                    -> anyhow::Result<()> {
+    let j = Json::Arr(records.iter().map(|r| r.to_json()).collect());
+    std::fs::write(path, j.to_string_pretty() + "\n")?;
+    println!("wrote {} speedup records to {}", records.len(),
+             path.display());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let out = PathBuf::from(args.str("out", "results"));
@@ -214,6 +476,40 @@ fn main() -> anyhow::Result<()> {
                 // instead saves that single module (below).
                 let dimms = args.get("dimms", 8usize);
                 let kind = args.str("backend", "auto");
+                if let Some(rpb) = regions_flag(&args)? {
+                    // Region granularity: every module's weakest cells are
+                    // swept per (bank, row-region); the registry is written
+                    // in format v2 (scalar loaders still read it at module
+                    // granularity).
+                    let results: Vec<anyhow::Result<RegionDimmProfile>> =
+                        exec::Pool::new(jobs).run(dimms, |i| {
+                            let mut b = make_backend(&kind, cells);
+                            let d = generate_dimm(i, cells, params());
+                            profile_dimm_regions(b.as_mut(), &d, rpb)
+                        });
+                    let profiles = results.into_iter()
+                        .collect::<anyhow::Result<Vec<_>>>()?;
+                    for p in &profiles {
+                        let sums: Vec<f64> = p.regions.iter()
+                            .map(|r| r.at55.combined().read_sum_ns())
+                            .collect();
+                        let (lo, hi) = sums.iter().fold(
+                            (f64::INFINITY, f64::NEG_INFINITY),
+                            |(lo, hi), &s| (lo.min(s), hi.max(s)));
+                        println!("dimm {:03} ({:<10}) {} banks x {} regions \
+                                  @55C read-sum {:.2}..{:.2} ns",
+                                 p.base.id, p.base.vendor,
+                                 p.regions.len() / p.regions_per_bank,
+                                 p.regions_per_bank, lo, hi);
+                    }
+                    if args.has("save") {
+                        let dir = PathBuf::from(args.str("save", "registry"));
+                        registry::save_region_registry(&dir, &profiles)?;
+                        println!("saved {} region profiles (v2) to {}",
+                                 profiles.len(), dir.display());
+                    }
+                    return Ok(());
+                }
                 let r = calibrate::run_par(|| make_backend(&kind, cells),
                                            dimms, cells, jobs)?;
                 for p in &r.profiles {
@@ -280,7 +576,12 @@ fn main() -> anyhow::Result<()> {
             if which == "fig4" || which == "all" {
                 let cycles = args.get("cycles", 300_000u64);
                 let reps = args.get("reps", 3usize);
-                if args.has("profiles") {
+                if let Some(regions) = regions_flag(&args)? {
+                    let (label, table) =
+                        region_table_or_profile(&args, regions)?;
+                    fig4::fig4_regions(cycles, reps, jobs, &table, &label,
+                                       &out)?;
+                } else if args.has("profiles") {
                     let profiles = load_profiles(&args)?;
                     let (id, table) = table_for(&args, &profiles)?;
                     fig4::fig4_profiled(cycles, reps, jobs, &table,
@@ -376,6 +677,94 @@ fn main() -> anyhow::Result<()> {
                         "--channels must be a power of two >= 2, got \
                          {channels}"
                     );
+                    if let Some(rpb) = regions_flag(&args)? {
+                        // Region granularity: the same profiled population
+                        // runs under its module-uniform collapse and under
+                        // the region-indexed tables, so the reported delta
+                        // isolates what region indexing buys.
+                        let profiles = if args.has("profiles") {
+                            load_region_profiles(&args)?
+                        } else {
+                            let cells = args.get(
+                                "cells", g.cells_per_chip_bank_small);
+                            let dimms =
+                                args.get("dimms", (2 * channels).max(8));
+                            eprintln!("no --profiles registry; \
+                                       region-profiling {dimms} modules at \
+                                       {cells} cells x {rpb} regions");
+                            let kind = args.str("backend", "auto");
+                            let results: Vec<anyhow::Result<
+                                RegionDimmProfile>> =
+                                exec::Pool::new(jobs).run(dimms, |i| {
+                                    let mut b = make_backend(&kind, cells);
+                                    let d = generate_dimm(i, cells, params());
+                                    profile_dimm_regions(b.as_mut(), &d, rpb)
+                                });
+                            results.into_iter()
+                                .collect::<anyhow::Result<Vec<_>>>()?
+                        };
+                        anyhow::ensure!(
+                            profiles.iter()
+                                .all(|p| p.regions_per_bank == rpb),
+                            "--regions {rpb} but the registry holds a \
+                             different granularity — re-profile or match \
+                             the stored regions-per-bank"
+                        );
+                        anyhow::ensure!(
+                            profiles.len() >= channels,
+                            "registry has {} profiles but --channels \
+                             {channels} needs one distinct module per \
+                             channel",
+                            profiles.len()
+                        );
+                        let placement = args.has("placement");
+                        let mixes = aldram::eval::hetero_eval_regions(
+                            cycles, args.get("mixes", 8usize), channels,
+                            &profiles, placement);
+                        println!("== §8.4: heterogeneous modules at region \
+                                  granularity — {channels} channels, {rpb} \
+                                  regions per bank ==");
+                        let (mut wu, mut wr, mut wp) =
+                            (Vec::new(), Vec::new(), Vec::new());
+                        for m in &mixes {
+                            let dimms: Vec<String> = m.dimm_ids.iter()
+                                .map(|d| format!("{d:03}"))
+                                .collect();
+                            let place = m.ws_placement
+                                .map(|p| format!("  +placement {:+5.1}%",
+                                                 100.0 * (p - 1.0)))
+                                .unwrap_or_default();
+                            println!(
+                                "{:<44} dimms[{}] uniform {:+5.1}%  region \
+                                 {:+5.1}%  delta {:+.2}pp{place}",
+                                m.mix.join("+"), dimms.join(","),
+                                100.0 * (m.ws_uniform - 1.0),
+                                100.0 * (m.ws_region - 1.0),
+                                100.0 * m.delta
+                            );
+                            wu.push(m.ws_uniform);
+                            wr.push(m.ws_region);
+                            if let Some(p) = m.ws_placement {
+                                wp.push(p);
+                            }
+                        }
+                        let gu = aldram::util::geomean(&wu);
+                        let gr = aldram::util::geomean(&wr);
+                        println!("gmean weighted speedup: module-uniform \
+                                  {:.1}%, region-indexed {:.1}%",
+                                 100.0 * (gu - 1.0), 100.0 * (gr - 1.0));
+                        println!("region-indexed vs module-uniform gmean \
+                                  weighted-speedup delta: {:+.2}%",
+                                 100.0 * (gr / gu - 1.0));
+                        if !wp.is_empty() {
+                            let gp = aldram::util::geomean(&wp);
+                            println!("with variation-aware placement: \
+                                      {:.1}% (delta vs uniform {:+.2}%)",
+                                     100.0 * (gp - 1.0),
+                                     100.0 * (gp / gu - 1.0));
+                        }
+                        return Ok(());
+                    }
                     let profiles = if args.has("profiles") {
                         load_profiles(&args)?
                     } else {
@@ -621,165 +1010,34 @@ fn main() -> anyhow::Result<()> {
         }
 
         Some("bench-sim") => {
-            // quick end-to-end smoke: one request source (a suite
-            // workload, or --trace FILE — any replayable trace is accepted
-            // wherever --workload is), base vs AL-DRAM, the time-skip
-            // driver vs the cycle-stepped oracle (identical numbers,
-            // TIMESKIP wall-clock line per timing set), plus the
-            // SPEEDUP[SOURCE] line: batched vs per-reference refill.
-            use aldram::mem::{System, SystemConfig};
-            use aldram::timing::TimingParams;
-            use aldram::util::bench::Bench;
-            use aldram::workloads::{by_name, trace, NamedSource,
-                                    SOURCE_BATCH};
-            use std::time::Instant;
-            let cycles = args.get("cycles", 100_000u64);
-            let seed = args.seed();
-            let sources_for = |label: &str| -> anyhow::Result<Vec<NamedSource>> {
-                if args.has("trace") {
-                    let path = PathBuf::from(args.str("trace", ""));
-                    Ok(trace::open_any(&path)?.1)
-                } else {
-                    let w = by_name(&args.str("workload", "stream.copy"))
-                        .expect("unknown workload");
-                    Ok(vec![w.named_source(&format!("bench/{seed}/{label}"))])
-                }
-            };
-            for (label, t) in [
-                ("ddr3-standard", TimingParams::ddr3_standard()),
-                ("al-dram-55C", TimingParams::ddr3_standard()
-                    .reduced(0.27, 0.32, 0.33, 0.18)),
-            ] {
-                let cfg = SystemConfig::paper_default().with_timings(t);
-                let mut seq = System::with_sources(&cfg, sources_for(label)?);
-                let t0 = Instant::now();
-                let s = seq.run(cycles);
-                let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
-                let mut fast = System::with_sources(&cfg, sources_for(label)?);
-                let t0 = Instant::now();
-                let f = fast.run_fast(cycles);
-                let fast_ms = t0.elapsed().as_secs_f64() * 1e3;
-                anyhow::ensure!(s.reads_done == f.reads_done
-                                && s.cores[0].ipc == f.cores[0].ipc,
-                                "drivers diverged on {label}");
-                println!(
-                    "{label:<14} ipc {:.3}  read-lat {:.1} cyc  bw {:.1}%  hits {:.1}%",
-                    s.cores[0].ipc, s.avg_read_latency_cycles,
-                    100.0 * s.bus_utilization, 100.0 * s.row_hit_rate
-                );
-                println!(
-                    "  TIMESKIP {:.1} ms -> {:.1} ms ({:.2}x, identical stats)",
-                    seq_ms, fast_ms, seq_ms / fast_ms.max(1e-9)
-                );
-            }
-
-            // Request-source refill batching: batch=1 is the pre-refactor
-            // one-virtual-call-per-reference regime. Identical stats
-            // (asserted), wall-clock-only difference. Always benched on a
-            // synthetic generator — trace replay pulls through the demux
-            // at the fixed SOURCE_BATCH, so batch=1 is not expressible
-            // there; say so rather than silently switching sources.
-            let wname = args.str("workload", "stream.copy");
-            if args.has("trace") {
-                println!("SOURCE batching benched on synthetic `{wname}` \
-                          (trace replay has a fixed refill batch)");
-            }
-            let wsrc = by_name(&wname).expect("unknown workload");
-            let run_batched = |batch: usize| {
-                let cfg = SystemConfig::paper_default();
-                let src = NamedSource {
-                    name: wsrc.name.to_string(),
-                    seed: format!("srcbench/{seed}"),
-                    footprint: wsrc.footprint,
-                    source: wsrc.source_with_batch(
-                        &format!("srcbench/{seed}"), batch),
-                };
-                System::with_sources(&cfg, vec![src]).run_fast(cycles)
-            };
-            let a = run_batched(1);
-            let b = run_batched(SOURCE_BATCH);
-            anyhow::ensure!(
-                a.reads_done == b.reads_done && a.cores[0].ipc == b.cores[0].ipc,
-                "refill batch size changed the simulated stream"
-            );
-            let mut bench = Bench::new("bench-sim").with_window(100, 400);
-            bench.bench("source/batch1", || run_batched(1).reads_done);
-            bench.bench(&format!("source/batch{SOURCE_BATCH}"),
-                        || run_batched(SOURCE_BATCH).reads_done);
-            bench.report_speedup_tagged(
-                "SOURCE", "source/batch1",
-                &format!("source/batch{SOURCE_BATCH}"));
-            bench.finish();
+            bench_sim(&args)?;
         }
 
         Some("bench-profile") => {
-            // Profiling-engine smoke: scalar native vs the vectorized simd
-            // kernel on one combo batch, and the cold full-profile sweep
-            // ladder vs the probed + warm-started one. Identical results
-            // (asserted here), SPEEDUP[PROFILE] / SPEEDUP[SWEEP] lines for
-            // EXPERIMENTS.md and the CI grep.
-            use aldram::profiler::{sweep_seeded, TestKind};
-            use aldram::util::bench::Bench;
-            let cells = args.get("cells", 512usize);
-            let combos_n = args.get("combos", 64usize);
-            let d = generate_dimm(args.get("dimm", 0usize), cells, params());
-            let combos: Vec<aldram::model::Combo> = (0..combos_n)
-                .map(|i| aldram::model::Combo {
-                    trcd: 13.75 - (i % 7) as f32 * 1.25,
-                    tras: 35.0 - (i % 11) as f32 * 1.25,
-                    twr: 15.0 - (i % 8) as f32 * 1.25,
-                    trp: 13.75 - (i % 7) as f32 * 1.25,
-                    tref_ms: 64.0 + (i % 48) as f32 * 8.0,
-                    temp_c: if i % 2 == 0 { 85.0 } else { 55.0 },
-                })
-                .collect();
-            let mut native = NativeBackend::new();
-            let mut simd = SimdBackend::new();
-            let a = native.profile(&d.arrays, &combos)?;
-            let b = simd.profile(&d.arrays, &combos)?;
-            anyhow::ensure!(a.tot_r == b.tot_r && a.tot_w == b.tot_w,
-                            "simd/native error counts diverged");
+            bench_profile(&args)?;
+        }
 
-            let mut bench = Bench::new("bench-profile").with_window(80, 400);
-            bench.bench(&format!("profile/native/cells{cells}"), || {
-                native.profile(&d.arrays, &combos).unwrap().tot_r[0]
-            });
-            bench.bench(&format!("profile/simd/cells{cells}"), || {
-                simd.profile(&d.arrays, &combos).unwrap().tot_r[0]
-            });
-            bench.report_speedup_tagged(
-                "PROFILE",
-                &format!("profile/native/cells{cells}"),
-                &format!("profile/simd/cells{cells}"),
-            );
-
-            // Two-point temperature ladder, as the fig3 campaign runs it.
-            bench.bench("sweep/native-cold", || {
-                let hot = aldram::profiler::sweep(
-                    &mut native, &d.arrays, TestKind::Read, 85.0, 200.0)
-                    .unwrap();
-                let cool = aldram::profiler::sweep(
-                    &mut native, &d.arrays, TestKind::Read, 55.0, 200.0)
-                    .unwrap();
-                (hot.best.map(|b| b.sum_ns), cool.best.map(|b| b.sum_ns))
-            });
-            bench.bench("sweep/simd-probe-warm", || {
-                let hot = aldram::profiler::sweep(
-                    &mut simd, &d.arrays, TestKind::Read, 85.0, 200.0)
-                    .unwrap();
-                let cool = sweep_seeded(&mut simd, &d.arrays, TestKind::Read,
-                                        55.0, 200.0, Some(&hot))
-                    .unwrap();
-                (hot.best.map(|b| b.sum_ns), cool.best.map(|b| b.sum_ns))
-            });
-            bench.report_speedup_tagged("SWEEP", "sweep/native-cold",
-                                        "sweep/simd-probe-warm");
-            bench.finish();
+        Some("bench") => {
+            // `bench all`: both suites end to end, with every SPEEDUP[*]
+            // comparison also written as a structured JSON record. CI runs
+            // this in release and diffs the record *structure* (suite/
+            // tag/base/test) against the committed repo-root baselines,
+            // so a renamed or vanished comparison fails fast while
+            // wall-clock noise does not.
+            let which = args.sub(1).unwrap_or("all");
+            anyhow::ensure!(which == "all",
+                            "unknown bench subcommand `{which}` (all)");
+            let dir = PathBuf::from(args.str("json-dir", "."));
+            std::fs::create_dir_all(&dir)?;
+            let sim = bench_sim(&args)?;
+            write_bench_json(&dir.join("BENCH_SIM.json"), &sim)?;
+            let prof = bench_profile(&args)?;
+            write_bench_json(&dir.join("BENCH_PROFILE.json"), &prof)?;
         }
 
         _ => {
             println!("repro — AL-DRAM reproduction (see DESIGN.md)");
-            println!("commands: calibrate | profile | figure | ablate | eval | trace | bench-sim | bench-profile");
+            println!("commands: calibrate | profile | figure | ablate | eval | trace | bench all | bench-sim | bench-profile");
             println!("global flags: --jobs N (parallel fan-out width, \
                       default {}), --seed S (workload/mix RNG label, \
                       default 0)", exec::default_jobs());

@@ -2,6 +2,84 @@
 //! consecutive cache lines stripe across columns within a row, then banks,
 //! so streaming workloads see row hits and bank-level parallelism (the
 //! standard open-page-friendly interleaving).
+//!
+//! The optional [`RegionRemap`] layer is the variation-aware page
+//! placement of region-indexed timing (DESIGN.md §12): a permutation of
+//! the top row bits applied in `decode` (inverted in `encode`), steering
+//! the low — most frequently touched — logical rows into the physically
+//! fastest row regions. Off by default; purely a relabeling, so any
+//! remapped map stays bijective.
+
+use crate::aldram::RegionTable;
+
+/// Upper bound on remappable row regions — fixed-size arrays keep
+/// `AddrMap` `Copy`, which the controller relies on.
+pub const MAX_REMAP_REGIONS: usize = 16;
+
+/// Permutation of the top `log2(regions)` row bits: logical row region
+/// (address order) -> physical row region (distance from sense amps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionRemap {
+    pub regions: u8,
+    /// `row_bits - log2(regions)`: bits below the region index.
+    pub shift: u8,
+    fwd: [u8; MAX_REMAP_REGIONS],
+    inv: [u8; MAX_REMAP_REGIONS],
+}
+
+impl RegionRemap {
+    /// Build from an explicit logical->physical permutation.
+    pub fn new(row_bits: u32, fwd_perm: &[usize]) -> Self {
+        let regions = fwd_perm.len();
+        assert!(regions.is_power_of_two() && regions >= 2
+                && regions <= MAX_REMAP_REGIONS,
+                "remap regions must be a power of two in [2, {}], got {}",
+                MAX_REMAP_REGIONS, regions);
+        let bits = regions.trailing_zeros();
+        assert!(bits <= row_bits, "{regions} regions exceed {row_bits} row bits");
+        let mut fwd = [0u8; MAX_REMAP_REGIONS];
+        let mut inv = [u8::MAX; MAX_REMAP_REGIONS];
+        for (g, p) in fwd_perm.iter().enumerate() {
+            assert!(*p < regions, "region {p} out of range");
+            assert!(inv[*p] == u8::MAX, "region {p} appears twice");
+            fwd[g] = *p as u8;
+            inv[*p] = g as u8;
+        }
+        RegionRemap {
+            regions: regions as u8,
+            shift: (row_bits - bits) as u8,
+            fwd,
+            inv,
+        }
+    }
+
+    /// Placement policy: logical region 0 (the low rows every footprint
+    /// touches first and most) goes to the physically fastest region —
+    /// ranked by the mean 55degC read-latency sum across banks — and so
+    /// on down to the slowest. Identity when the table is uniform in the
+    /// row direction.
+    pub fn fastest_first(table: &RegionTable, row_bits: u32) -> Self {
+        let r = table.regions_per_bank();
+        let mut score: Vec<(f64, usize)> = (0..r)
+            .map(|region| {
+                let s: f64 = (0..table.banks())
+                    .map(|b| table.timings_for(b, region, 55.0).read_sum_ns())
+                    .sum();
+                (s / table.banks() as f64, region)
+            })
+            .collect();
+        score.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let fwd: Vec<usize> = score.into_iter().map(|(_, p)| p).collect();
+        Self::new(row_bits, &fwd)
+    }
+
+    #[inline]
+    fn apply(&self, map: &[u8; MAX_REMAP_REGIONS], row: u64) -> u64 {
+        let region = (row >> self.shift) as usize;
+        let low = row & ((1u64 << self.shift) - 1);
+        ((map[region] as u64) << self.shift) | low
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AddrMap {
@@ -10,6 +88,9 @@ pub struct AddrMap {
     pub bank_bits: u32,
     pub rank_bits: u32,
     pub row_bits: u32,
+    /// Variation-aware page placement (region-indexed timing); `None` =
+    /// identity, the default.
+    pub remap: Option<RegionRemap>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,16 +105,31 @@ impl AddrMap {
     /// 1 rank x 8 banks x 32k rows x 128 lines/row (8 KB row) — a 2 GB
     /// channel, matching the evaluated system's single-rank channel.
     pub fn ddr3_2gb(ranks: usize) -> Self {
+        assert!(ranks >= 1 && ranks.is_power_of_two(),
+                "rank count must be a power of two, got {ranks}");
         AddrMap {
             line_bits: 6,
             col_bits: 7,
             bank_bits: 3,
             rank_bits: ranks.trailing_zeros(),
             row_bits: 15,
+            remap: None,
         }
     }
 
+    /// The same map with a region remap installed.
+    pub fn with_remap(mut self, remap: RegionRemap) -> Self {
+        assert!(u32::from(remap.shift)
+                + remap.regions.trailing_zeros() == self.row_bits,
+                "remap built for a different row width");
+        self.remap = Some(remap);
+        self
+    }
+
     pub fn decode(&self, addr: u64) -> Decoded {
+        debug_assert!(addr < self.capacity_bytes(),
+                      "address {addr:#x} beyond the {} B channel",
+                      self.capacity_bytes());
         let mut a = addr >> self.line_bits;
         let col = a & ((1 << self.col_bits) - 1);
         a >>= self.col_bits;
@@ -41,12 +137,18 @@ impl AddrMap {
         a >>= self.bank_bits;
         let rank = (a & ((1 << self.rank_bits) - 1)) as usize;
         a >>= self.rank_bits;
-        let row = a & ((1 << self.row_bits) - 1);
+        let mut row = a & ((1 << self.row_bits) - 1);
+        if let Some(m) = &self.remap {
+            row = m.apply(&m.fwd, row);
+        }
         Decoded { rank, bank, row, col }
     }
 
     pub fn encode(&self, d: &Decoded) -> u64 {
         let mut a = d.row;
+        if let Some(m) = &self.remap {
+            a = m.apply(&m.inv, a);
+        }
         a = (a << self.rank_bits) | d.rank as u64;
         a = (a << self.bank_bits) | d.bank as u64;
         a = (a << self.col_bits) | d.col;
@@ -111,5 +213,53 @@ mod tests {
         assert_eq!(m.capacity_bytes(), 2 * 1024 * 1024 * 1024);
         assert_eq!(m.ranks(), 1);
         assert_eq!(m.banks(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_ranks_rejected() {
+        // Regression: `3usize.trailing_zeros() == 0` used to silently
+        // build a 1-rank map for a 3-rank request.
+        let _ = AddrMap::ddr3_2gb(3);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "beyond the")]
+    fn decode_rejects_out_of_range_addresses_in_debug() {
+        let m = AddrMap::ddr3_2gb(1);
+        let _ = m.decode(m.capacity_bytes());
+    }
+
+    #[test]
+    fn remap_permutes_row_regions_bijectively() {
+        let m = AddrMap::ddr3_2gb(1);
+        let remap = RegionRemap::new(m.row_bits, &[2, 0, 3, 1]);
+        let rm = m.with_remap(remap);
+        // Logical region 0 decodes into physical region 2.
+        let shift = m.row_bits - 2;
+        let addr_of_row = |row: u64| row << (m.line_bits + m.col_bits
+                                             + m.bank_bits + m.rank_bits);
+        let d = rm.decode(addr_of_row(1));
+        assert_eq!(d.row >> shift, 2);
+        assert_eq!(d.row & ((1 << shift) - 1), 1);
+        // encode inverts decode for every region, and the physical rows
+        // seen across regions form a permutation.
+        let mut seen = std::collections::BTreeSet::new();
+        for g in 0..4u64 {
+            let addr = addr_of_row(g << shift | 17);
+            let d = rm.decode(addr);
+            assert_eq!(rm.encode(&d), addr, "region {g} round trip");
+            seen.insert(d.row >> shift);
+        }
+        assert_eq!(seen.len(), 4);
+        // Without a remap the same addresses decode to identity regions.
+        assert_eq!(m.decode(addr_of_row(1)).row, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "appears twice")]
+    fn remap_rejects_non_permutations() {
+        let _ = RegionRemap::new(15, &[0, 0, 1, 2]);
     }
 }

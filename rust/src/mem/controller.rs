@@ -6,7 +6,7 @@
 use std::collections::VecDeque;
 
 use super::address::AddrMap;
-use super::dram::{Cycle, Rank};
+use super::dram::{Cycle, Rank, RegionCycles};
 use crate::timing::{TimingCycles, TimingParams};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +162,38 @@ impl Controller {
                             timings: Option<TimingParams>) {
         let tc = timings.map(|t| t.to_cycles(self.tck_ns));
         self.ranks[rank].set_bank_timings(bank, tc);
+    }
+
+    /// Region-granular AL-DRAM: install per-(bank, row-region) core
+    /// timings on every rank, bank-major with `banks * regions_per_bank`
+    /// entries (`None` restores rank granularity). The region index is
+    /// the decoded row's top bits (`row >> (row_bits - log2(regions))`),
+    /// so `regions_per_bank` must be a power of two.
+    pub fn set_region_timings(&mut self, regions_per_bank: usize,
+                              timings: Option<&[TimingParams]>) {
+        let Some(ts) = timings else {
+            for r in &mut self.ranks {
+                r.set_region_timings(None);
+            }
+            return;
+        };
+        assert!(regions_per_bank.is_power_of_two(),
+                "regions per bank must be a power of two, got \
+                 {regions_per_bank}");
+        let bits = regions_per_bank.trailing_zeros();
+        assert!(bits <= self.map.row_bits,
+                "{regions_per_bank} regions exceed {} row bits",
+                self.map.row_bits);
+        assert_eq!(ts.len(), self.map.banks() * regions_per_bank,
+                   "region timing vector does not tile the banks");
+        let rc = RegionCycles {
+            regions_per_bank,
+            shift: self.map.row_bits - bits,
+            t: ts.iter().map(|t| t.to_cycles(self.tck_ns)).collect(),
+        };
+        for r in &mut self.ranks {
+            r.set_region_timings(Some(rc.clone()));
+        }
     }
 
     /// §7.1: scale the refresh interval (1.0 = standard 64 ms). Deadlines

@@ -61,11 +61,36 @@ impl Bank {
     }
 }
 
+/// Per-(bank, row-region) timing sets installed by the controller when a
+/// region-indexed AL-DRAM table manages the channel. The region index is
+/// the top row bits (`row >> shift`) — rows near the sense amps (low
+/// index) are the fast ones. Takes precedence over the rank set and any
+/// per-bank override for the *bank-scoped* parameters; rank-level gates
+/// (tRRD, tFAW, data bus, tRFC) always come from the rank set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionCycles {
+    pub regions_per_bank: usize,
+    /// `row_bits - log2(regions_per_bank)`.
+    pub shift: u32,
+    /// Bank-major: `t[bank * regions_per_bank + region]`.
+    pub t: Vec<TimingCycles>,
+}
+
+impl RegionCycles {
+    #[inline]
+    pub fn lookup(&self, bank: usize, row: u64) -> TimingCycles {
+        let r = ((row >> self.shift) as usize).min(self.regions_per_bank - 1);
+        self.t[bank * self.regions_per_bank + r]
+    }
+}
+
 /// One rank of DDR3 devices (8 banks).
 #[derive(Debug, Clone)]
 pub struct Rank {
     pub banks: Vec<Bank>,
     t: TimingCycles,
+    /// Region-granular AL-DRAM timing (None = rank/bank granularity).
+    region: Option<RegionCycles>,
     /// ACT-to-ACT (tRRD) gate.
     next_act_any: Cycle,
     /// Sliding window of the last 4 ACT times (tFAW).
@@ -95,6 +120,7 @@ impl Rank {
         Rank {
             banks: (0..banks).map(|_| Bank::new()).collect(),
             t,
+            region: None,
             next_act_any: 0,
             act_window: VecDeque::new(),
             data_free: 0,
@@ -126,6 +152,30 @@ impl Rank {
     pub fn set_bank_timings(&mut self, bank: usize,
                             t: Option<TimingCycles>) {
         self.banks[bank].t_override = t;
+    }
+
+    /// Install (or clear) region-granular timing. Like `set_timings`,
+    /// applied at a refresh boundary; in-flight constraints keep their
+    /// already-computed deadlines.
+    pub fn set_region_timings(&mut self, region: Option<RegionCycles>) {
+        if let Some(r) = &region {
+            debug_assert_eq!(r.t.len(),
+                             self.banks.len() * r.regions_per_bank);
+        }
+        self.region = region;
+    }
+
+    /// Effective timing set for one decoded (bank, row): the region
+    /// entry when region timing is installed, else the bank override or
+    /// rank set. All bank-scoped deadlines are baked at issue time from
+    /// this lookup, which is what keeps the time-skip driver's gate
+    /// queries (`earliest_*`) oblivious to region granularity.
+    #[inline]
+    pub fn timings_for_row(&self, bank: usize, row: u64) -> TimingCycles {
+        match &self.region {
+            Some(m) => m.lookup(bank, row),
+            None => self.bank_timings(bank),
+        }
     }
 
     /// AL-DRAM: swap the timing set (performed at a refresh boundary when
@@ -197,7 +247,7 @@ impl Rank {
         debug_assert!(self.can_act(bank, now));
         self.track_open(now);
         let rank_t = self.t;
-        let t = self.bank_timings(bank);
+        let t = self.timings_for_row(bank, row);
         let b = &mut self.banks[bank];
         b.state = BankState::Open(row);
         b.next_col = now + t.trcd as u64;
@@ -215,7 +265,7 @@ impl Rank {
     /// Returns the cycle the read data burst completes.
     pub fn issue_read(&mut self, bank: usize, row: u64, now: Cycle) -> Cycle {
         debug_assert!(self.can_read(bank, row, now));
-        let t = self.bank_timings(bank);
+        let t = self.timings_for_row(bank, row);
         let data_start = (now + t.tcl as u64).max(self.data_free);
         let data_end = data_start + t.tburst as u64;
         self.data_free = data_end;
@@ -234,7 +284,7 @@ impl Rank {
     /// posted; the requester does not wait for the array restore).
     pub fn issue_write(&mut self, bank: usize, row: u64, now: Cycle) -> Cycle {
         debug_assert!(self.can_write(bank, row, now));
-        let t = self.bank_timings(bank);
+        let t = self.timings_for_row(bank, row);
         let data_start = (now + t.tcwl as u64).max(self.data_free);
         let data_end = data_start + t.tburst as u64;
         self.data_free = data_end;
@@ -251,7 +301,9 @@ impl Rank {
     pub fn issue_pre(&mut self, bank: usize, now: Cycle) {
         debug_assert!(self.can_pre(bank, now));
         self.track_open(now);
-        let t = self.bank_timings(bank);
+        // tRP is region-scoped: resolve via the row being closed.
+        let row = self.banks[bank].open_row().unwrap_or(0);
+        let t = self.timings_for_row(bank, row);
         let b = &mut self.banks[bank];
         b.state = BankState::Idle;
         b.next_act = b.next_act.max(now + t.trp as u64);
@@ -520,6 +572,50 @@ mod bank_override_tests {
         assert_eq!(r.bank_timings(5), fast.to_cycles(1.25));
         r.set_bank_timings(5, None);
         assert_eq!(r.bank_timings(5), *r.timings());
+    }
+
+    #[test]
+    fn region_timings_select_by_row_region() {
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        let mut r = Rank::new(8, std.to_cycles(1.25));
+        // 2 regions per bank over 15 row bits: region 0 (rows below
+        // 1<<14) fast, region 1 standard — for every bank.
+        let mut t = Vec::new();
+        for _ in 0..8 {
+            t.push(fast.to_cycles(1.25));
+            t.push(std.to_cycles(1.25));
+        }
+        r.set_region_timings(Some(RegionCycles {
+            regions_per_bank: 2,
+            shift: 14,
+            t,
+        }));
+        let low_row = 100u64;
+        let high_row = 1 << 14;
+        assert_eq!(r.timings_for_row(0, low_row), fast.to_cycles(1.25));
+        assert_eq!(r.timings_for_row(0, high_row), std.to_cycles(1.25));
+
+        // ACT to a fast-region row opens the column gate sooner.
+        let trcd_fast = fast.to_cycles(1.25).trcd as u64;
+        let trcd_std = std.to_cycles(1.25).trcd as u64;
+        r.issue_act(0, low_row, 0);
+        assert!(r.can_read(0, low_row, trcd_fast));
+        let trrd = r.timings().trrd as u64;
+        r.issue_act(1, high_row, trrd);
+        assert!(!r.can_read(1, high_row, trrd + trcd_std - 1));
+        assert!(r.can_read(1, high_row, trrd + trcd_std));
+
+        // PRE resolves tRP through the open row's region.
+        let tras_fast = fast.to_cycles(1.25).tras as u64;
+        let trp_fast = fast.to_cycles(1.25).trp as u64;
+        assert!(r.can_pre(0, tras_fast));
+        r.issue_pre(0, tras_fast);
+        assert!(!r.can_act(0, tras_fast + trp_fast - 1));
+
+        // Clearing restores the rank set.
+        r.set_region_timings(None);
+        assert_eq!(r.timings_for_row(0, low_row), *r.timings());
     }
 
     #[test]

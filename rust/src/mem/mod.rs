@@ -8,9 +8,9 @@ pub mod cpu;
 pub mod dram;
 pub mod system;
 
-pub use address::AddrMap;
+pub use address::{AddrMap, RegionRemap, MAX_REMAP_REGIONS};
 pub use controller::{Controller, CtrlStats, Request, RowPolicy};
 pub use cpu::Core;
-pub use dram::{Bank, BankState, Cycle, Rank};
+pub use dram::{Bank, BankState, Cycle, Rank, RegionCycles};
 pub use system::{ChannelConfig, ChannelStats, System, SystemConfig,
                  SystemStats};

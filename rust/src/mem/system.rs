@@ -17,7 +17,7 @@ use std::path::Path;
 use super::address::AddrMap;
 use super::controller::{Controller, Request, RowPolicy};
 use super::cpu::Core;
-use crate::aldram::{AlDram, ThermalModel};
+use crate::aldram::{AlDram, RegionTable, ThermalModel};
 use crate::timing::TimingParams;
 use crate::workloads::trace::{self, Recorder, SharedTraceWriter, StreamMeta};
 use crate::workloads::{NamedSource, WorkloadSpec};
@@ -29,8 +29,10 @@ use crate::workloads::{NamedSource, WorkloadSpec};
 pub struct ChannelConfig {
     pub timings: TimingParams,
     /// If set, AL-DRAM manages this channel's timings from its thermal
-    /// model at refresh-epoch granularity.
-    pub aldram: Option<AlDram>,
+    /// model at refresh-epoch granularity. A uniform table reproduces the
+    /// module-granular mechanism; a region table additionally installs
+    /// per-(bank, row-region) timings on the controller (DESIGN.md §12).
+    pub aldram: Option<RegionTable>,
     /// Ambient temperature for this channel's thermal model (degC).
     pub ambient_c: f64,
 }
@@ -49,6 +51,13 @@ impl ChannelConfig {
     /// at standard timings until the first thermal epoch installs the
     /// table's bin for the measured temperature.
     pub fn profiled(table: AlDram, ambient_c: f64) -> Self {
+        Self::profiled_regions(RegionTable::uniform(table), ambient_c)
+    }
+
+    /// [`ChannelConfig::profiled`] at region granularity: the table's
+    /// per-(bank, row-region) bins are installed alongside the module
+    /// collapse whenever the thermal bin changes.
+    pub fn profiled_regions(table: RegionTable, ambient_c: f64) -> Self {
         ChannelConfig {
             timings: TimingParams::ddr3_standard(),
             aldram: Some(table),
@@ -102,10 +111,15 @@ impl SystemConfig {
         self
     }
 
-    /// Set every channel's AL-DRAM table.
+    /// Set every channel's AL-DRAM table (module-uniform).
     pub fn with_aldram(mut self, aldram: Option<AlDram>) -> Self {
+        self.with_region_table(aldram.map(RegionTable::uniform))
+    }
+
+    /// Set every channel's AL-DRAM table at region granularity.
+    pub fn with_region_table(mut self, table: Option<RegionTable>) -> Self {
         for ch in &mut self.channels {
-            ch.aldram = aldram.clone();
+            ch.aldram = table.clone();
         }
         self
     }
@@ -194,10 +208,14 @@ pub const THERMAL_EPOCH: u64 = 1024;
 /// for one channel's DIMM.
 struct ChannelState {
     thermal: ThermalModel,
-    aldram: Option<AlDram>,
+    aldram: Option<RegionTable>,
     /// Timing set currently installed on the controller (tracked so a
     /// table lookup that resolves to the same bin is not a "switch").
     installed: TimingParams,
+    /// Temperature bin whose region timings are installed (region tables
+    /// only; module timings can coincide across bins whose region entries
+    /// differ, so the bin is tracked separately from `installed`).
+    installed_bin: Option<usize>,
     temp_acc: f64,
     temp_samples: u64,
     /// Column completions observed up to the previous thermal epoch, so
@@ -269,6 +287,7 @@ impl System {
                 thermal: ThermalModel::new(ch.ambient_c),
                 aldram: ch.aldram.clone(),
                 installed: ch.timings,
+                installed_bin: None,
                 temp_acc: 0.0,
                 temp_samples: 0,
                 last_epoch_done: 0,
@@ -381,12 +400,21 @@ impl System {
                     ch.thermal.step(THERMAL_EPOCH as f64 * 1.25e-9, util);
                 ch.temp_acc += temp;
                 ch.temp_samples += 1;
-                if let Some(al) = &ch.aldram {
-                    let t = al.timings_for(temp);
+                if let Some(rt) = &ch.aldram {
+                    let t = rt.module().timings_for(temp);
                     if t != ch.installed {
                         ch.installed = t;
                         ch.timing_switches += 1;
                         ctrl.set_timings(t);
+                    }
+                    if !rt.is_uniform() {
+                        let bin = rt.bin_index(temp);
+                        if ch.installed_bin != Some(bin) {
+                            ch.installed_bin = Some(bin);
+                            ctrl.set_region_timings(
+                                rt.regions_per_bank(),
+                                Some(&rt.region_timings_for(temp)));
+                        }
                     }
                 }
             }

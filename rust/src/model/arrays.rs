@@ -111,6 +111,29 @@ impl CellArrays {
         out
     }
 
+    /// Extract the cell sub-population of one (bank, row-region) as a
+    /// standalone 1-bank array: cells [cells*r/R, cells*(r+1)/R) of every
+    /// chip of bank `bank`. Cell j samples normalized row position
+    /// j/cells, so contiguous cell ranges *are* contiguous row regions.
+    /// Both profiling backends accept arbitrary geometry, which is what
+    /// makes per-region sweeps a plain reuse of the module path.
+    pub fn region_view(&self, bank: usize, region: usize,
+                       regions: usize) -> CellArrays {
+        assert!(bank < self.banks && region < regions);
+        assert!(regions <= self.cells,
+                "{} regions over {} cells per chip", regions, self.cells);
+        let lo = self.cells * region / regions;
+        let hi = self.cells * (region + 1) / regions;
+        let mut out = CellArrays::zeroed(1, self.chips, hi - lo);
+        for c in 0..self.chips {
+            for (dj, j) in (lo..hi).enumerate() {
+                out.set(out.idx(0, c, dj), self.cell(self.idx(bank, c, j)));
+            }
+        }
+        out.compute_screening();
+        out
+    }
+
     /// Precompute the weakest-first screening order consumed by
     /// `pass_probe`. The key is the worse of the two test margins at the
     /// fixed stress point `SCREEN_COMBO` — a conservative scalar dominance
@@ -279,6 +302,34 @@ mod tests {
             a.qcap[j] = j as f32;
         }
         assert_eq!(a.downsample(4).qcap, vec![0.0, 2.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn region_view_partitions_the_bank() {
+        let mut a = CellArrays::zeroed(2, 2, 10);
+        for b in 0..2 {
+            for c in 0..2 {
+                for j in 0..10 {
+                    a.qcap[a.idx(b, c, j)] = (b * 100 + c * 10 + j) as f32;
+                }
+            }
+        }
+        let regions = 4;
+        let mut total = 0;
+        for r in 0..regions {
+            let v = a.region_view(1, r, regions);
+            assert_eq!(v.banks, 1);
+            assert_eq!(v.chips, 2);
+            total += v.cells;
+            assert!(v.screening().is_some());
+            // Region r covers [10r/4, 10(r+1)/4) of each chip of bank 1.
+            let lo = 10 * r / regions;
+            for c in 0..2 {
+                assert_eq!(v.qcap[v.idx(0, c, 0)],
+                           (100 + c * 10 + lo) as f32);
+            }
+        }
+        assert_eq!(total, 10, "regions must partition the cells");
     }
 
     #[test]

@@ -36,6 +36,12 @@ pub struct Population {
     pub sigma_qcap: f64,
     pub qcap_clip_lo: f64,
     pub qcap_clip_hi: f64,
+    /// Spatial (design-induced) variation: lognormal sigma of the
+    /// per-bank RC multiplier (banks far from the I/O pads are slower).
+    pub spatial_bank_sigma: f64,
+    /// Fractional RC increase from the row nearest the sense amps to the
+    /// farthest row of the bank (monotone gradient; arxiv 1610.09604).
+    pub spatial_grad_span: f64,
     pub vendors: Vec<Vendor>,
 }
 
@@ -162,6 +168,8 @@ impl ModelParams {
                 sigma_qcap: pop.f64("sigma_qcap"),
                 qcap_clip_lo: pop.f64("qcap_clip_lo"),
                 qcap_clip_hi: pop.f64("qcap_clip_hi"),
+                spatial_bank_sigma: pop.f64("spatial_bank_sigma"),
+                spatial_grad_span: pop.f64("spatial_grad_span"),
                 vendors: pop
                     .arr("vendors")
                     .iter()

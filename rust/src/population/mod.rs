@@ -17,11 +17,43 @@ pub struct Dimm {
     /// Vendor index into `ModelParams::population.vendors`.
     pub vendor_idx: usize,
     pub arrays: CellArrays,
+    /// The spatial (design-induced) variation map baked into `arrays`.
+    pub spatial: SpatialMap,
 }
 
 impl Dimm {
     pub fn label(&self) -> String {
         format!("dimm/{:03}", self.id)
+    }
+}
+
+/// Design-induced variation map: a per-bank RC multiplier (banks far
+/// from the I/O pads are slower) plus a monotone distance-from-sense-amp
+/// gradient across the row axis of each bank. Seeded from the DIMM label
+/// (stream `dimm/NNN/spatial`) so the map is persisted with the module
+/// identity and identical at every sampling resolution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpatialMap {
+    pub bank_offset: Vec<f64>,
+    /// Fractional RC increase from row-position 0 (at the sense amps) to
+    /// row-position 1 (the far edge of the bank).
+    pub grad_span: f64,
+}
+
+impl SpatialMap {
+    pub fn generate(id: usize, p: &ModelParams) -> Self {
+        let pop = &p.population;
+        let mut rng = Rng::from_label(&format!("dimm/{id:03}/spatial"));
+        let bank_offset = (0..p.geometry.banks)
+            .map(|_| rng.lognormal(0.0, pop.spatial_bank_sigma))
+            .collect();
+        SpatialMap { bank_offset, grad_span: pop.spatial_grad_span }
+    }
+
+    /// RC multiplier for bank `b` at normalized row position `pos` in
+    /// [0, 1). Monotone in `pos` by construction.
+    pub fn factor(&self, b: usize, pos: f64) -> f64 {
+        self.bank_offset[b] * (1.0 + self.grad_span * pos)
     }
 }
 
@@ -58,14 +90,19 @@ pub fn generate_dimm(id: usize, cells_per_chip_bank: usize,
     let vendor = &pop.vendors[vi];
     let g = &p.geometry;
 
+    let spatial = SpatialMap::generate(id, p);
     let mut arrays = CellArrays::zeroed(g.banks, g.chips, cells_per_chip_bank);
     // One stream per (dimm, bank, chip) so downsampled and full populations
-    // share structure and bank-level statistics are independent.
+    // share structure and bank-level statistics are independent. Cell j
+    // samples normalized row position j/cells, so the spatial gradient is
+    // resolution-consistent (downsampling picks src = j*cells/cells_out,
+    // preserving the position fraction).
     for b in 0..g.banks {
         for c in 0..g.chips {
             let mut rng = Rng::from_label(&format!("dimm/{id:03}/b{b}/c{c}"));
             for j in 0..cells_per_chip_bank {
                 let i = arrays.idx(b, c, j);
+                let sf = spatial.factor(b, j as f64 / cells_per_chip_bank as f64);
                 let tau_s = rng.lognormal(
                     vendor.mu_ln_tau_s + vendor.tau_shift, pop.sigma_tau_s);
                 let tau_r = pop.tau_r_ratio * tau_s
@@ -80,9 +117,9 @@ pub fn generate_dimm(id: usize, cells_per_chip_bank: usize,
                     .lognormal(0.0, pop.sigma_qcap)
                     .clamp(pop.qcap_clip_lo, pop.qcap_clip_hi);
                 arrays.qcap[i] = qcap as f32;
-                arrays.tau_s[i] = tau_s as f32;
-                arrays.tau_r[i] = tau_r as f32;
-                arrays.tau_p[i] = tau_p as f32;
+                arrays.tau_s[i] = (tau_s * sf) as f32;
+                arrays.tau_r[i] = (tau_r * sf) as f32;
+                arrays.tau_p[i] = (tau_p * sf) as f32;
                 arrays.lam85[i] = lam85 as f32;
             }
         }
@@ -91,7 +128,7 @@ pub fn generate_dimm(id: usize, cells_per_chip_bank: usize,
     // (runtime::ProfilingBackend::pass_probe); heuristic only — results
     // never depend on it.
     arrays.compute_screening();
-    Dimm { id, vendor: vendor.name.clone(), vendor_idx: vi, arrays }
+    Dimm { id, vendor: vendor.name.clone(), vendor_idx: vi, arrays, spatial }
 }
 
 /// The full population at a given per-chip-bank sampling resolution.
@@ -164,6 +201,47 @@ mod tests {
                 .filter(|l| **l as f64 > lam_med * 5.0).count();
         }
         assert!(weak > 0, "no weak-tail cells generated");
+    }
+
+    #[test]
+    fn spatial_map_is_persisted_with_the_dimm() {
+        let p = params();
+        let a = generate_dimm(5, 64, p);
+        let b = generate_dimm(5, 256, p);
+        // Same map at every sampling resolution — it is module identity.
+        assert_eq!(a.spatial, b.spatial);
+        assert_eq!(a.spatial.bank_offset.len(), p.geometry.banks);
+        assert!(a.spatial.grad_span > 0.0);
+        for off in &a.spatial.bank_offset {
+            assert!(*off > 0.8 && *off < 1.25, "bank offset {off}");
+        }
+    }
+
+    #[test]
+    fn spatial_gradient_is_monotone_across_row_regions() {
+        // Rows far from the sense amps (high j) must be slower on average:
+        // the mean tau_s of the last quarter exceeds the first quarter in
+        // every bank (the gradient dominates the i.i.d. noise at n=64*8).
+        let p = params();
+        let d = generate_dimm(11, 256, p);
+        let a = &d.arrays;
+        let q = a.cells / 4;
+        for b in 0..a.banks {
+            let over = |lo: usize, hi: usize| -> f64 {
+                let mut s = 0.0;
+                let mut n = 0;
+                for c in 0..a.chips {
+                    for j in lo..hi {
+                        s += a.tau_s[a.idx(b, c, j)] as f64;
+                        n += 1;
+                    }
+                }
+                s / n as f64
+            };
+            let near = over(0, q);
+            let far = over(a.cells - q, a.cells);
+            assert!(far > near, "bank {b}: far {far} <= near {near}");
+        }
     }
 
     #[test]

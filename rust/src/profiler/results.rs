@@ -108,6 +108,101 @@ pub fn profile_dimm(backend: &mut dyn ProfilingBackend, dimm: &Dimm)
     })
 }
 
+/// Timing characterization of one (bank, row-region) cell sub-population
+/// at both profiled temperatures. Refresh intervals are module-level
+/// (refresh hardware is per-rank, not per-region).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionProfile {
+    pub bank: usize,
+    pub region: usize,
+    pub at85: TimingProfile,
+    pub at55: TimingProfile,
+}
+
+/// A module profile extended with per-(bank, row-region) timing bins —
+/// the registry format-v2 payload and the input to
+/// `aldram::RegionTable::try_from_region_profile`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionDimmProfile {
+    pub base: DimmProfile,
+    pub regions_per_bank: usize,
+    /// Bank-major: `regions[bank * regions_per_bank + region]`.
+    pub regions: Vec<RegionProfile>,
+}
+
+/// Profile one DIMM at region granularity: the module battery first
+/// (refresh sweep + module timing sweeps, identical to `profile_dimm`),
+/// then a timing sweep per (bank, row-region) over that region's cells
+/// (`CellArrays::region_view`), at the module's safe refresh intervals.
+///
+/// Cost control: each region's 85degC sweep is warm-started from its
+/// *spatial neighbor* — the previous region of the same bank, or for a
+/// bank's first region, region 0 of the previous bank. The spatial
+/// variation map is smooth (per-bank offset + monotone row gradient), so
+/// neighbors land at most a grid step apart and each seeded sweep
+/// converges in a couple of probe waves instead of a full bisection;
+/// seeding never changes results (`sweep::sweep_seeded` re-proves seeds).
+/// The 55degC sweeps warm-start from the region's own 85degC frontier,
+/// as in the module path.
+pub fn profile_dimm_regions(backend: &mut dyn ProfilingBackend, dimm: &Dimm,
+                            regions_per_bank: usize)
+                            -> Result<RegionDimmProfile> {
+    anyhow::ensure!(regions_per_bank >= 1, "need at least one region");
+    anyhow::ensure!(regions_per_bank <= dimm.arrays.cells,
+                    "{regions_per_bank} regions over {} sampled cells",
+                    dimm.arrays.cells);
+    let base = profile_dimm(backend, dimm)?;
+    let tref_r = base.at85.tref_read_ms;
+    let tref_w = base.at85.tref_write_ms;
+
+    let banks = dimm.arrays.banks;
+    let mut regions = Vec::with_capacity(banks * regions_per_bank);
+    // Seeds for the next region-0 sweep (previous bank's region 0) and
+    // for the next in-bank sweep (previous region of this bank).
+    let mut bank0_seed: Option<(SweepResult, SweepResult)> = None;
+    for b in 0..banks {
+        let mut prev: Option<(SweepResult, SweepResult)> = None;
+        for r in 0..regions_per_bank {
+            let view = dimm.arrays.region_view(b, r, regions_per_bank);
+            let seed = if r > 0 { prev.as_ref() } else { bank0_seed.as_ref() };
+            let read85 = sweep_seeded(backend, &view, TestKind::Read, 85.0,
+                                      tref_r, seed.map(|s| &s.0))?;
+            let write85 = sweep_seeded(backend, &view, TestKind::Write, 85.0,
+                                       tref_w, seed.map(|s| &s.1))?;
+            let read55 = sweep_seeded(backend, &view, TestKind::Read, 55.0,
+                                      tref_r, Some(&read85))?;
+            let write55 = sweep_seeded(backend, &view, TestKind::Write, 55.0,
+                                       tref_w, Some(&write85))?;
+            let at = |temp: f64, read: &SweepResult, write: &SweepResult|
+             -> Result<TimingProfile> {
+                let best = |s: &SweepResult, what: &str| {
+                    s.best.clone().ok_or_else(|| anyhow::anyhow!(
+                        "dimm {} bank {b} region {r} infeasible {what} \
+                         sweep at {temp}C", dimm.id))
+                };
+                Ok(TimingProfile {
+                    temp_c: temp,
+                    tref_read_ms: tref_r,
+                    tref_write_ms: tref_w,
+                    read: best(read, "read")?,
+                    write: best(write, "write")?,
+                })
+            };
+            regions.push(RegionProfile {
+                bank: b,
+                region: r,
+                at85: at(85.0, &read85, &write85)?,
+                at55: at(55.0, &read55, &write55)?,
+            });
+            if r == 0 {
+                bank0_seed = Some((read85.clone(), write85.clone()));
+            }
+            prev = Some((read85, write85));
+        }
+    }
+    Ok(RegionDimmProfile { base, regions_per_bank, regions })
+}
+
 /// Population-level summary (the numbers quoted in §5.2 / Fig 3c-d).
 #[derive(Debug, Clone)]
 pub struct PopulationSummary {

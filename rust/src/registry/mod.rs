@@ -20,14 +20,22 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::aldram::{AlDram, TableEntry};
-use crate::profiler::{BestCombo, DimmProfile, RefreshProfile, TimingProfile};
+use crate::aldram::{AlDram, RegionTable, TableEntry};
+use crate::profiler::{BestCombo, DimmProfile, RefreshProfile,
+                      RegionDimmProfile, RegionProfile, TimingProfile};
 use crate::timing::TimingParams;
 use crate::util::json::Json;
 
 /// Bumped when the on-disk layout changes; loaders reject unknown
 /// versions instead of guessing.
 pub const FORMAT_VERSION: f64 = 1.0;
+
+/// Region registries: the same per-DIMM file layout with the module
+/// profile at top level (so v1 readers of the *fields* keep working via
+/// [`load_registry`]) plus a bank-major `regions` array of per-region
+/// 55/85degC anchors. Scalar registries stay at [`FORMAT_VERSION`] —
+/// their bytes are unchanged by the region feature.
+pub const REGION_FORMAT_VERSION: f64 = 2.0;
 
 // ---------------------------------------------------------------------
 // JSON builders (util::json works on BTreeMap object nodes).
@@ -191,12 +199,17 @@ pub fn profile_to_json(p: &DimmProfile) -> Json {
     ])
 }
 
-/// Parse + validate one DIMM profile.
+/// Parse + validate one DIMM profile. Accepts both the scalar v1 layout
+/// and the v2 region layout (whose module-level fields are a superset of
+/// v1), so pre-region registries and region registries both resolve to a
+/// module-granularity [`DimmProfile`] here.
 pub fn profile_from_json(j: &Json) -> Result<DimmProfile> {
     let version = f64_of(j, "format_version")?;
-    anyhow::ensure!(version == FORMAT_VERSION,
+    anyhow::ensure!(version == FORMAT_VERSION
+                        || version == REGION_FORMAT_VERSION,
                     "unknown registry format version {version} \
-                     (this build reads {FORMAT_VERSION})");
+                     (this build reads {FORMAT_VERSION} and \
+                      {REGION_FORMAT_VERSION})");
     let p = DimmProfile {
         id: usize_of(j, "id")?,
         vendor: str_of(j, "vendor")?,
@@ -208,6 +221,70 @@ pub fn profile_from_json(j: &Json) -> Result<DimmProfile> {
     // surface that here rather than at first use.
     AlDram::try_from_profile(&p, crate::aldram::DEFAULT_BIN_C)
         .with_context(|| format!("dimm {:03}", p.id))?;
+    Ok(p)
+}
+
+// ---------------------------------------------------------------------
+// RegionDimmProfile <-> JSON (format v2)
+// ---------------------------------------------------------------------
+
+/// Serialize a region-granular characterization: the module profile's
+/// fields at top level (stamped v2) plus the per-(bank, region) anchors.
+pub fn region_profile_to_json(p: &RegionDimmProfile) -> Json {
+    let regions: Vec<Json> = p
+        .regions
+        .iter()
+        .map(|r| obj(vec![
+            ("bank", Json::Num(r.bank as f64)),
+            ("region", Json::Num(r.region as f64)),
+            ("at85", timing_profile_to_json(&r.at85)),
+            ("at55", timing_profile_to_json(&r.at55)),
+        ]))
+        .collect();
+    let Json::Obj(mut m) = profile_to_json(&p.base) else {
+        unreachable!("profile_to_json returns an object")
+    };
+    m.insert("format_version".to_string(),
+             Json::Num(REGION_FORMAT_VERSION));
+    m.insert("regions_per_bank".to_string(),
+             Json::Num(p.regions_per_bank as f64));
+    m.insert("regions".to_string(), Json::Arr(regions));
+    Json::Obj(m)
+}
+
+/// Parse + validate a region profile. A scalar (v1) file is a distinct,
+/// actionable error — the region data was simply never profiled.
+pub fn region_profile_from_json(j: &Json) -> Result<RegionDimmProfile> {
+    let version = f64_of(j, "format_version")?;
+    anyhow::ensure!(
+        version != FORMAT_VERSION,
+        "scalar (v{FORMAT_VERSION}) registry has no region data; \
+         re-profile with --regions to write a v{REGION_FORMAT_VERSION} \
+         registry"
+    );
+    anyhow::ensure!(version == REGION_FORMAT_VERSION,
+                    "unknown registry format version {version} \
+                     (region loader reads {REGION_FORMAT_VERSION})");
+    let base = profile_from_json(j)?;
+    let regions_per_bank = usize_of(j, "regions_per_bank")?;
+    let regions = field(j, "regions")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("`regions` is not an array"))?
+        .iter()
+        .map(|r| {
+            Ok(RegionProfile {
+                bank: usize_of(r, "bank")?,
+                region: usize_of(r, "region")?,
+                at85: timing_profile_from_json(field(r, "at85")?)?,
+                at55: timing_profile_from_json(field(r, "at55")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let p = RegionDimmProfile { base, regions_per_bank, regions };
+    // Geometry and table invariants (bank-major order, monotone bins)
+    // surface at load time, mirroring the scalar path.
+    RegionTable::try_from_region_profile(&p, crate::aldram::DEFAULT_BIN_C)
+        .with_context(|| format!("dimm {:03} region table", p.base.id))?;
     Ok(p)
 }
 
@@ -310,14 +387,32 @@ pub fn save_profile(dir: &Path, p: &DimmProfile) -> Result<PathBuf> {
 /// empty-looking registry that `load_registry` rejects loudly — never
 /// a plausible truncated one.
 pub fn save_registry(dir: &Path, profiles: &[DimmProfile]) -> Result<()> {
+    install_registry(dir,
+                     profiles.iter()
+                         .map(|p| (p.id, profile_to_json(p)))
+                         .collect())
+}
+
+/// [`save_registry`] for region-granular profiles: same directory
+/// layout, one v2 `dimm_NNN.json` per module, same replace-the-whole-
+/// population staging.
+pub fn save_region_registry(dir: &Path, profiles: &[RegionDimmProfile])
+                            -> Result<()> {
+    install_registry(dir,
+                     profiles.iter()
+                         .map(|p| (p.base.id, region_profile_to_json(p)))
+                         .collect())
+}
+
+fn install_registry(dir: &Path, files: Vec<(usize, Json)>) -> Result<()> {
     fs::create_dir_all(dir)
         .with_context(|| format!("creating registry dir {}", dir.display()))?;
-    let staged: Vec<(PathBuf, PathBuf)> = profiles
+    let staged: Vec<(PathBuf, PathBuf)> = files
         .iter()
-        .map(|p| {
-            let path = profile_path(dir, p.id);
+        .map(|(id, j)| {
+            let path = profile_path(dir, *id);
             let tmp = path.with_extension("json.tmp");
-            fs::write(&tmp, profile_to_json(p).to_string_pretty())
+            fs::write(&tmp, j.to_string_pretty())
                 .with_context(|| format!("writing {}", tmp.display()))?;
             Ok((tmp, path))
         })
@@ -347,22 +442,47 @@ pub fn load_profile(path: &Path) -> Result<DimmProfile> {
         .with_context(|| format!("loading {}", path.display()))
 }
 
+/// Load and validate one region profile file.
+pub fn load_region_profile(path: &Path) -> Result<RegionDimmProfile> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    region_profile_from_json(&j)
+        .with_context(|| format!("loading {}", path.display()))
+}
+
 /// Load every `dimm_*.json` in the registry directory, sorted by DIMM id.
+/// Region (v2) files load too, at module granularity.
 pub fn load_registry(dir: &Path) -> Result<Vec<DimmProfile>> {
-    let mut profiles = Vec::new();
+    let mut profiles = load_dir(dir, load_profile)?;
+    profiles.sort_by_key(|p| p.id);
+    Ok(profiles)
+}
+
+/// Load a region registry, sorted by DIMM id. Scalar (v1) files are an
+/// error — region data cannot be conjured from a module profile.
+pub fn load_region_registry(dir: &Path) -> Result<Vec<RegionDimmProfile>> {
+    let mut profiles = load_dir(dir, load_region_profile)?;
+    profiles.sort_by_key(|p| p.base.id);
+    Ok(profiles)
+}
+
+fn load_dir<T>(dir: &Path, load: impl Fn(&Path) -> Result<T>)
+               -> Result<Vec<T>> {
+    let mut out = Vec::new();
     let entries = fs::read_dir(dir)
         .with_context(|| format!("reading registry dir {}", dir.display()))?;
     for entry in entries {
         let path = entry?.path();
         let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
         if name.starts_with("dimm_") && name.ends_with(".json") {
-            profiles.push(load_profile(&path)?);
+            out.push(load(&path)?);
         }
     }
-    anyhow::ensure!(!profiles.is_empty(),
+    anyhow::ensure!(!out.is_empty(),
                     "no dimm_*.json profiles in {}", dir.display());
-    profiles.sort_by_key(|p| p.id);
-    Ok(profiles)
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -454,6 +574,51 @@ mod tests {
         fs::write(&path, j.to_string_pretty()).unwrap();
         let err = load_profile(&path).unwrap_err();
         assert!(format!("{err:#}").contains("vendor"), "{err:#}");
+    }
+
+    fn region_profile(id: usize) -> RegionDimmProfile {
+        let d = generate_dimm(id, 64, params());
+        let mut b = NativeBackend::new();
+        crate::profiler::profile_dimm_regions(&mut b, &d, 2).unwrap()
+    }
+
+    #[test]
+    fn region_registry_round_trips_exactly() {
+        let dir = tmp("regions");
+        let p = region_profile(4);
+        save_region_registry(&dir, &[p.clone()]).unwrap();
+        let loaded = load_region_registry(&dir).unwrap();
+        assert_eq!(loaded.len(), 1);
+        // Bit-exact: every per-region anchor survives the disk round trip,
+        // so the rebuilt RegionTable is identical too.
+        assert_eq!(loaded[0], p);
+    }
+
+    #[test]
+    fn scalar_loader_reads_region_registries_at_module_granularity() {
+        let dir = tmp("regions_as_scalar");
+        let p = region_profile(6);
+        save_region_registry(&dir, &[p.clone()]).unwrap();
+        let loaded = load_registry(&dir).unwrap();
+        assert_eq!(loaded, vec![p.base]);
+    }
+
+    #[test]
+    fn region_loader_rejects_scalar_registries_with_guidance() {
+        let dir = tmp("scalar_as_regions");
+        save_registry(&dir, &[profile(1)]).unwrap();
+        let err = load_region_registry(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("--regions"), "{err:#}");
+    }
+
+    #[test]
+    fn scalar_writer_format_is_unchanged_by_the_region_feature() {
+        // Back-compat pin: v1 files keep their version stamp and gain no
+        // region keys, so registries written before the region feature
+        // and after it are byte-compatible.
+        let text = profile_to_json(&profile(2)).to_string_pretty();
+        assert!(text.contains("\"format_version\": 1"), "{text}");
+        assert!(!text.contains("regions"), "{text}");
     }
 
     #[test]

@@ -24,6 +24,37 @@ pub struct BenchResult {
     pub p95_ns: f64,
 }
 
+/// One SPEEDUP[*] comparison as a structured record — the machine-
+/// readable twin of the `SPEEDUP[tag] a -> b` line. `repro bench all`
+/// collects these into `BENCH_SIM.json` / `BENCH_PROFILE.json`, which CI
+/// diffs structurally (suite/tag/base/test) against the committed
+/// baselines at the repo root.
+#[derive(Debug, Clone)]
+pub struct SpeedupRecord {
+    pub suite: String,
+    pub tag: String,
+    pub base: String,
+    pub test: String,
+    pub speedup: f64,
+    pub base_median_ns: f64,
+    pub test_median_ns: f64,
+}
+
+impl SpeedupRecord {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("suite".into(), Json::Str(self.suite.clone()));
+        m.insert("tag".into(), Json::Str(self.tag.clone()));
+        m.insert("base".into(), Json::Str(self.base.clone()));
+        m.insert("test".into(), Json::Str(self.test.clone()));
+        m.insert("speedup".into(), Json::Num(self.speedup));
+        m.insert("base_median_ns".into(), Json::Num(self.base_median_ns));
+        m.insert("test_median_ns".into(), Json::Num(self.test_median_ns));
+        Json::Obj(m)
+    }
+}
+
 pub struct Bench {
     suite: String,
     warmup: Duration,
@@ -179,6 +210,14 @@ impl Bench {
     /// EXPERIMENTS.md tooling can tell speedup families apart.
     pub fn report_speedup_tagged(&self, tag: &str, a: &str, b: &str)
                                  -> Option<f64> {
+        self.speedup_record(tag, a, b).map(|r| r.speedup)
+    }
+
+    /// [`report_speedup_tagged`], returning the full structured record
+    /// (for `repro bench all`'s JSON emitters) alongside the printed
+    /// lines. `None` when either benchmark was skipped by the filter.
+    pub fn speedup_record(&self, tag: &str, a: &str, b: &str)
+                          -> Option<SpeedupRecord> {
         let ra = self.results.iter().find(|r| r.name == a)?;
         let rb = self.results.iter().find(|r| r.name == b)?;
         let ratio = ra.median_ns / rb.median_ns;
@@ -197,7 +236,15 @@ impl Bench {
             self.suite, tag, ra.name, rb.name, ratio, ra.median_ns,
             rb.median_ns
         );
-        Some(ratio)
+        Some(SpeedupRecord {
+            suite: self.suite.clone(),
+            tag: tag.to_string(),
+            base: ra.name.clone(),
+            test: rb.name.clone(),
+            speedup: ratio,
+            base_median_ns: ra.median_ns,
+            test_median_ns: rb.median_ns,
+        })
     }
 
     pub fn finish(self) {
@@ -253,6 +300,22 @@ mod tests {
         b.bench("fast2", || std::hint::black_box(1 + 1));
         let r = b.report_speedup_tagged("TIMESKIP", "slow2", "fast2").unwrap();
         assert!(r > 1.0, "slow2/fast2 ratio {r}");
+    }
+
+    #[test]
+    fn speedup_records_carry_the_comparison() {
+        let mut b = Bench::new("t").with_window(5, 20);
+        b.bench("slow3", || std::thread::sleep(
+            std::time::Duration::from_micros(300)));
+        b.bench("fast3", || std::hint::black_box(1 + 1));
+        let r = b.speedup_record("SRC", "slow3", "fast3").unwrap();
+        assert_eq!((r.suite.as_str(), r.tag.as_str()), ("t", "SRC"));
+        assert_eq!((r.base.as_str(), r.test.as_str()), ("slow3", "fast3"));
+        assert!(r.speedup > 1.0 && r.base_median_ns > r.test_median_ns);
+        let j = r.to_json();
+        assert_eq!(j.str("tag"), "SRC");
+        assert_eq!(j.f64("speedup"), r.speedup);
+        assert!(b.speedup_record("SRC", "slow3", "missing").is_none());
     }
 
     #[test]

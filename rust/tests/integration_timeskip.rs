@@ -6,9 +6,9 @@
 //! (The Python mirror harness carries the same matrix in
 //! `.claude/skills/verify/mirror/timeskip_checks.py`.)
 
-use aldram::aldram::AlDram;
-use aldram::mem::{ChannelConfig, RowPolicy, System, SystemConfig,
-                  SystemStats};
+use aldram::aldram::{AlDram, RegionTable};
+use aldram::mem::{AddrMap, ChannelConfig, RegionRemap, RowPolicy, System,
+                  SystemConfig, SystemStats};
 use aldram::timing::TimingParams;
 use aldram::workloads::by_name;
 
@@ -77,9 +77,16 @@ fn assert_stats_identical(label: &str, a: &SystemStats, b: &SystemStats) {
 
 fn check(label: &str, cfg: &SystemConfig, names: &[(&str, usize)],
          cycles: u64, refresh_scale: Option<f64>) {
+    check_with_map(label, cfg, AddrMap::ddr3_2gb(cfg.ranks_per_channel),
+                   names, cycles, refresh_scale);
+}
+
+fn check_with_map(label: &str, cfg: &SystemConfig, map: AddrMap,
+                  names: &[(&str, usize)], cycles: u64,
+                  refresh_scale: Option<f64>) {
     let wl = workload_list(names);
-    let mut oracle = System::new(cfg, &wl);
-    let mut fast = System::new(cfg, &wl);
+    let mut oracle = System::new_with_map(cfg, map, &wl);
+    let mut fast = System::new_with_map(cfg, map, &wl);
     if let Some(s) = refresh_scale {
         oracle.set_refresh_scale(s);
         fast.set_refresh_scale(s);
@@ -146,12 +153,13 @@ fn heterogeneous_channels() {
         channels: vec![
             ChannelConfig {
                 timings: TimingParams::ddr3_standard(),
-                aldram: Some(AlDram::fixed(fast_timings())),
+                aldram: Some(RegionTable::uniform(
+                    AlDram::fixed(fast_timings()))),
                 ambient_c: 30.0,
             },
             ChannelConfig {
                 timings: TimingParams::ddr3_standard(),
-                aldram: Some(AlDram::fixed(slower)),
+                aldram: Some(RegionTable::uniform(AlDram::fixed(slower))),
                 ambient_c: 70.0,
             },
         ],
@@ -170,6 +178,60 @@ fn aldram_managed() {
         .with_ambient(30.0);
     check("aldram/4core/stream.copy", &cfg, &[("stream.copy", 4)], CYCLES,
           None);
+}
+
+/// A deliberately non-uniform region grid: 8 banks x 2 row regions,
+/// region 0 fast and region 1 slower, with a per-bank wobble so banks
+/// differ too.
+fn region_grid() -> RegionTable {
+    let entries: Vec<AlDram> = (0..16)
+        .map(|i| {
+            let (bank, region) = (i / 2, i % 2);
+            let f = 1.0 - 0.02 * bank as f64;
+            let t = if region == 0 {
+                fast_timings().with_core(
+                    fast_timings().trcd_ns * f,
+                    fast_timings().tras_ns * f,
+                    fast_timings().twr_ns * f,
+                    fast_timings().trp_ns * f,
+                )
+            } else {
+                TimingParams::ddr3_standard()
+                    .reduced(0.10, 0.12, 0.15, 0.08)
+            };
+            AlDram::fixed(t)
+        })
+        .collect();
+    RegionTable::from_regions(8, 2, entries).unwrap()
+}
+
+#[test]
+fn region_indexed_timing() {
+    // Region-granular tables: ACT/PRE/WR deadlines now depend on the
+    // decoded row's region, exercising the per-row timing lookup in both
+    // drivers. The stats must stay bit-identical.
+    let cfg = SystemConfig::paper_default()
+        .with_region_table(Some(region_grid()))
+        .with_ambient(30.0);
+    check("regions/4core/gups", &cfg, &[("gups", 4)], CYCLES, None);
+    check("regions/mix", &cfg, &[("stream.copy", 2), ("mcf", 2)], CYCLES,
+          None);
+}
+
+#[test]
+fn region_placement_remap() {
+    // Variation-aware page placement on top of region timing: the remap
+    // permutes row regions inside `decode`, so the drivers must agree on
+    // the remapped trajectory too.
+    let table = region_grid();
+    let map = AddrMap::ddr3_2gb(1);
+    let map = map.with_remap(RegionRemap::fastest_first(&table,
+                                                        map.row_bits));
+    let cfg = SystemConfig::paper_default()
+        .with_region_table(Some(table))
+        .with_ambient(30.0);
+    check_with_map("regions-remap/4core/gups", &cfg, map, &[("gups", 4)],
+                   CYCLES, None);
 }
 
 #[test]
