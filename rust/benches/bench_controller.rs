@@ -92,5 +92,37 @@ fn main() {
             &format!("source/{name}/batch{SOURCE_BATCH}"));
     }
 
+    // Inline protocol-checker overhead: identical runs with and without
+    // the conformance audit attached (observation-only, asserted). The
+    // CHECK tag is the overhead EXPERIMENTS.md §Perf records — expect a
+    // ratio just under 1.0.
+    for name in ["stream.copy", "gups"] {
+        let w = by_name(name).unwrap();
+        let run = |checked: bool| {
+            let cfg = SystemConfig::paper_default();
+            let src = NamedSource {
+                name: w.name.to_string(),
+                seed: "checkbench".to_string(),
+                footprint: w.footprint,
+                source: w.source_with_batch("checkbench", SOURCE_BATCH),
+            };
+            let mut sys = System::with_sources(&cfg, vec![src]);
+            if checked {
+                sys.enable_check();
+            }
+            let stats = sys.run_fast(4_000);
+            if let Some(sum) = sys.check_summary() {
+                assert_eq!(sum.violations, 0, "{name}: {}", sum.line());
+            }
+            stats.reads_done
+        };
+        assert_eq!(run(false), run(true),
+                   "the checker changed the stream for {name}");
+        b.bench_batch(&format!("check/{name}/off"), 4_000, || run(false));
+        b.bench_batch(&format!("check/{name}/on"), 4_000, || run(true));
+        b.report_speedup_tagged("CHECK", &format!("check/{name}/off"),
+                                &format!("check/{name}/on"));
+    }
+
     b.finish();
 }

@@ -135,8 +135,13 @@ impl AlDram {
     }
 
     /// A fixed-operating-point table (the paper's Fig-4 evaluation: one
-    /// reduced set installed for 55degC operation).
+    /// reduced set installed for 55degC operation). The timing set passes
+    /// the same validator as every registry-loaded entry — `fixed` and
+    /// [`RegionTable::uniform`] (which wraps it) are the only constructor
+    /// paths that previously skipped it.
     pub fn fixed(timings: TimingParams) -> Self {
+        timings.validate()
+            .expect("fixed-operating-point timing set is invalid");
         AlDram {
             entries: vec![TableEntry { max_c: f64::INFINITY, timings }],
             guard_c: 0.0,
@@ -184,8 +189,15 @@ pub struct RegionTable {
 }
 
 impl RegionTable {
-    /// Wrap a module-level table: one region covering everything.
+    /// Wrap a module-level table: one region covering everything. Every
+    /// `AlDram` constructor validates its timing sets, so the wrapped
+    /// table is valid by construction; the debug re-check here guards the
+    /// (test-only) struct-literal escape hatch.
     pub fn uniform(table: AlDram) -> Self {
+        debug_assert!(table.entries()
+                          .iter()
+                          .all(|e| e.timings.validate().is_ok()),
+                      "uniform region table wraps an invalid timing set");
         RegionTable {
             banks: 1,
             regions_per_bank: 1,

@@ -1,0 +1,546 @@
+//! ALCT: a versioned binary command-trace format (sibling of the ALDT
+//! request-trace format in `workloads::trace`). Where ALDT records what
+//! the cores *asked for*, ALCT records what the controller actually *put
+//! on the command bus* — the stream the protocol checker audits — plus
+//! the timing-environment events (timing-set installs, region-table
+//! installs, refresh-scale changes) needed to re-derive the constraint
+//! windows offline.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! header   : b"ALCT"  version:u8  ranks:u8  banks:u8  row_bits:u8  tck:f64
+//! CMD      : kind:u8 (0=ACT 1=RD 2=WR 3=PRE 4=REF)  rank:u8  bank:u8
+//!            pad:u8=0  row:u32  cycle:u64                      (16 bytes)
+//! TIMING   : 5  then 14 x f64 — the TimingParams ns fields in
+//!            declaration order (trcd, tras, twr, trp, tcl, tcwl, tccd,
+//!            trrd, tfaw, trtp, twtr, trfc, trefi_us, tburst)
+//! REGION   : 6  rpb:u8 (0 = table cleared)  count:u16  count x 14 f64
+//! SCALE    : 7  then f64
+//! footer   : 0xFF  records:u64 (count of CMD/TIMING/REGION/SCALE records)
+//! ```
+
+use std::cell::RefCell;
+use std::fs;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::mem::controller::{Cmd, CmdKind, CmdSink};
+use crate::timing::TimingParams;
+
+use super::{CheckSummary, ProtocolChecker};
+
+pub const MAGIC: &[u8; 4] = b"ALCT";
+pub const VERSION: u8 = 1;
+
+const TAG_TIMING: u8 = 5;
+const TAG_REGION: u8 = 6;
+const TAG_SCALE: u8 = 7;
+const END_TAG: u8 = 0xFF;
+const N_TIMING_FIELDS: usize = 14;
+
+fn kind_tag(k: CmdKind) -> u8 {
+    match k {
+        CmdKind::Act => 0,
+        CmdKind::Read => 1,
+        CmdKind::Write => 2,
+        CmdKind::Pre => 3,
+        CmdKind::Ref => 4,
+    }
+}
+
+fn tag_kind(t: u8) -> Option<CmdKind> {
+    match t {
+        0 => Some(CmdKind::Act),
+        1 => Some(CmdKind::Read),
+        2 => Some(CmdKind::Write),
+        3 => Some(CmdKind::Pre),
+        4 => Some(CmdKind::Ref),
+        _ => None,
+    }
+}
+
+fn timing_fields(t: &TimingParams) -> [f64; N_TIMING_FIELDS] {
+    [t.trcd_ns, t.tras_ns, t.twr_ns, t.trp_ns, t.tcl_ns, t.tcwl_ns,
+     t.tccd_ns, t.trrd_ns, t.tfaw_ns, t.trtp_ns, t.twtr_ns, t.trfc_ns,
+     t.trefi_us, t.tburst_ns]
+}
+
+fn fields_timing(f: &[f64; N_TIMING_FIELDS]) -> TimingParams {
+    TimingParams {
+        trcd_ns: f[0], tras_ns: f[1], twr_ns: f[2], trp_ns: f[3],
+        tcl_ns: f[4], tcwl_ns: f[5], tccd_ns: f[6], trrd_ns: f[7],
+        tfaw_ns: f[8], trtp_ns: f[9], twtr_ns: f[10], trfc_ns: f[11],
+        trefi_us: f[12], tburst_ns: f[13],
+    }
+}
+
+/// In-memory ALCT writer. Buffering in memory keeps the `CmdSink`
+/// methods infallible (no I/O in the simulation hot path); the file is
+/// written once at [`CmdTraceWriter::finish_to`]. A 140k-cycle adversarial
+/// run is well under a megabyte of records.
+pub struct CmdTraceWriter {
+    buf: Vec<u8>,
+    records: u64,
+}
+
+impl CmdTraceWriter {
+    pub fn new(ranks: usize, banks: usize, row_bits: u32, tck: f64) -> Self {
+        let mut buf = Vec::with_capacity(1 << 16);
+        buf.extend_from_slice(MAGIC);
+        buf.push(VERSION);
+        buf.push(ranks as u8);
+        buf.push(banks as u8);
+        buf.push(row_bits as u8);
+        buf.extend_from_slice(&tck.to_le_bytes());
+        CmdTraceWriter { buf, records: 0 }
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Append the footer and return the completed byte image.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.buf.push(END_TAG);
+        self.buf.extend_from_slice(&self.records.to_le_bytes());
+        self.buf
+    }
+
+    /// Seal and write the trace; returns the record count.
+    pub fn finish_to(self, path: &Path) -> Result<u64> {
+        let records = self.records;
+        let bytes = self.finish();
+        fs::write(path, bytes)
+            .with_context(|| format!("writing cmd trace {}", path.display()))?;
+        Ok(records)
+    }
+}
+
+impl CmdSink for CmdTraceWriter {
+    fn cmd(&mut self, c: Cmd) {
+        self.buf.push(kind_tag(c.kind));
+        self.buf.push(c.rank);
+        self.buf.push(c.bank);
+        self.buf.push(0);
+        self.buf.extend_from_slice(&(c.row as u32).to_le_bytes());
+        self.buf.extend_from_slice(&c.cycle.to_le_bytes());
+        self.records += 1;
+    }
+
+    fn on_timings(&mut self, t: &TimingParams) {
+        self.buf.push(TAG_TIMING);
+        for v in timing_fields(t) {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.records += 1;
+    }
+
+    fn on_region_timings(&mut self, regions_per_bank: usize,
+                         t: Option<&[TimingParams]>) {
+        self.buf.push(TAG_REGION);
+        match t {
+            None => {
+                self.buf.push(0);
+                self.buf.extend_from_slice(&0u16.to_le_bytes());
+            }
+            Some(ts) => {
+                self.buf.push(regions_per_bank as u8);
+                self.buf.extend_from_slice(&(ts.len() as u16).to_le_bytes());
+                for p in ts {
+                    for v in timing_fields(p) {
+                        self.buf.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        self.records += 1;
+    }
+
+    fn on_refresh_scale(&mut self, scale: f64) {
+        self.buf.push(TAG_SCALE);
+        self.buf.extend_from_slice(&scale.to_le_bytes());
+        self.records += 1;
+    }
+}
+
+/// Shared-writer handle for attaching to a controller tap
+/// (`Rc<RefCell<dyn CmdSink>>`), mirroring `trace::create_shared`.
+pub type SharedCmdWriter = Rc<RefCell<CmdTraceWriter>>;
+
+pub fn create_shared(ranks: usize, banks: usize, row_bits: u32, tck: f64)
+                     -> SharedCmdWriter {
+    Rc::new(RefCell::new(CmdTraceWriter::new(ranks, banks, row_bits, tck)))
+}
+
+/// Seal a shared writer and write the file; returns the record count.
+pub fn finish_shared(w: SharedCmdWriter, path: &Path) -> Result<u64> {
+    let w = Rc::try_unwrap(w)
+        .map_err(|_| anyhow::anyhow!(
+            "cmd-trace writer still attached to a live controller"))?
+        .into_inner();
+    w.finish_to(path)
+}
+
+/// Header + validated whole-file statistics (`repro check info`).
+#[derive(Debug, Clone)]
+pub struct CmdTraceInfo {
+    pub version: u8,
+    pub ranks: usize,
+    pub banks: usize,
+    pub row_bits: u32,
+    pub tck: f64,
+    pub records: u64,
+    pub commands: u64,
+    pub timing_updates: u64,
+    pub region_updates: u64,
+    pub scale_updates: u64,
+    /// Cycle of the last command (0 for an empty trace).
+    pub last_cycle: u64,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.b.len(),
+                "cmd trace truncated at byte {} (wanted {} more)",
+                self.pos, n);
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn timing(&mut self) -> Result<TimingParams> {
+        let mut f = [0.0; N_TIMING_FIELDS];
+        for v in &mut f {
+            *v = self.f64()?;
+        }
+        let t = fields_timing(&f);
+        for v in timing_fields(&t) {
+            ensure!(v.is_finite(), "non-finite timing field in cmd trace");
+        }
+        Ok(t)
+    }
+}
+
+/// One parsed event, in stream order.
+enum Event {
+    Cmd(CmdKind, u8, u8, u64, u64),
+    Timings(TimingParams),
+    Region(usize, Option<Vec<TimingParams>>),
+    Scale(f64),
+}
+
+/// Streaming walk over a trace: header checks, then `f` per record, then
+/// footer checks (count match, no trailing bytes).
+fn walk(bytes: &[u8],
+        mut f: impl FnMut(Event, &CmdTraceInfo) -> Result<()>)
+        -> Result<CmdTraceInfo> {
+    let mut c = Cursor { b: bytes, pos: 0 };
+    ensure!(c.take(4)? == MAGIC, "not an ALCT cmd trace (bad magic)");
+    let version = c.u8()?;
+    ensure!(version == VERSION,
+            "unsupported ALCT version {version} (expected {VERSION})");
+    let mut info = CmdTraceInfo {
+        version,
+        ranks: c.u8()? as usize,
+        banks: c.u8()? as usize,
+        row_bits: c.u8()? as u32,
+        tck: c.f64()?,
+        records: 0,
+        commands: 0,
+        timing_updates: 0,
+        region_updates: 0,
+        scale_updates: 0,
+        last_cycle: 0,
+    };
+    ensure!(info.ranks > 0 && info.banks > 0, "cmd trace has no geometry");
+    ensure!(info.tck.is_finite() && info.tck > 0.0,
+            "cmd trace tck {} is not a positive clock period", info.tck);
+    loop {
+        let tag = c.u8()?;
+        if tag == END_TAG {
+            let footer = c.u64()?;
+            ensure!(footer == info.records,
+                    "cmd trace footer says {footer} records, file has {}",
+                    info.records);
+            ensure!(c.pos == bytes.len(),
+                    "{} trailing bytes after cmd trace footer",
+                    bytes.len() - c.pos);
+            return Ok(info);
+        }
+        let ev = if let Some(kind) = tag_kind(tag) {
+            let rank = c.u8()?;
+            let bank = c.u8()?;
+            let pad = c.u8()?;
+            ensure!(pad == 0, "nonzero pad byte in cmd record");
+            let row = c.u32()? as u64;
+            let cycle = c.u64()?;
+            ensure!((rank as usize) < info.ranks,
+                    "cmd rank {rank} out of range (trace has {})", info.ranks);
+            ensure!((bank as usize) < info.banks,
+                    "cmd bank {bank} out of range (trace has {})", info.banks);
+            ensure!(row < (1u64 << info.row_bits),
+                    "cmd row {row:#x} out of range for {} row bits",
+                    info.row_bits);
+            ensure!(cycle >= info.last_cycle,
+                    "cmd trace not cycle-ordered: {cycle} after {}",
+                    info.last_cycle);
+            info.last_cycle = cycle;
+            info.commands += 1;
+            Event::Cmd(kind, rank, bank, row, cycle)
+        } else {
+            match tag {
+                TAG_TIMING => {
+                    info.timing_updates += 1;
+                    Event::Timings(c.timing()?)
+                }
+                TAG_REGION => {
+                    let rpb = c.u8()? as usize;
+                    let count = c.u16()? as usize;
+                    info.region_updates += 1;
+                    if rpb == 0 {
+                        ensure!(count == 0,
+                                "cleared region record carries {count} sets");
+                        Event::Region(0, None)
+                    } else {
+                        ensure!(rpb.is_power_of_two(),
+                                "regions/bank {rpb} is not a power of two");
+                        ensure!(count == rpb * info.banks,
+                                "region record has {count} sets, geometry \
+                                 needs {} ({} banks x {rpb})",
+                                rpb * info.banks, info.banks);
+                        let mut ts = Vec::with_capacity(count);
+                        for _ in 0..count {
+                            ts.push(c.timing()?);
+                        }
+                        Event::Region(rpb, Some(ts))
+                    }
+                }
+                TAG_SCALE => {
+                    let s = c.f64()?;
+                    ensure!(s.is_finite() && s > 0.0,
+                            "refresh scale {s} must be positive");
+                    info.scale_updates += 1;
+                    Event::Scale(s)
+                }
+                t => bail!("unknown cmd-trace record tag {t:#x} at byte {}",
+                           c.pos - 1),
+            }
+        };
+        info.records += 1;
+        f(ev, &info)?;
+    }
+}
+
+/// Validate a trace end-to-end and summarize it (`repro check info`).
+pub fn info(path: &Path) -> Result<CmdTraceInfo> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading cmd trace {}", path.display()))?;
+    walk(&bytes, |_, _| Ok(()))
+}
+
+/// Replay a trace through a fresh `ProtocolChecker` built from the
+/// header, returning the audit (`repro check replay`).
+pub fn replay(path: &Path) -> Result<(CmdTraceInfo, ProtocolChecker, String)> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading cmd trace {}", path.display()))?;
+    let mut ck: Option<ProtocolChecker> = None;
+    let info = walk(&bytes, |ev, info| {
+        let ck = ck.get_or_insert_with(|| {
+            ProtocolChecker::new(info.ranks, info.banks, info.row_bits,
+                                 info.tck)
+        });
+        match ev {
+            Event::Cmd(kind, rank, bank, row, cycle) => {
+                ck.cmd_at(kind, rank as usize, bank as usize, row, cycle)
+            }
+            Event::Timings(t) => ck.on_timings(&t),
+            Event::Region(rpb, ts) => ck.on_region_timings(rpb, ts.as_deref()),
+            Event::Scale(s) => ck.on_refresh_scale(s),
+        }
+        Ok(())
+    })?;
+    let ck = ck.unwrap_or_else(|| {
+        ProtocolChecker::new(info.ranks, info.banks, info.row_bits, info.tck)
+    });
+    let report = ck.report();
+    Ok((info, ck, report))
+}
+
+/// Replay and reduce to a summary (library callers / tests).
+pub fn replay_summary(path: &Path) -> Result<CheckSummary> {
+    let (_, ck, _) = replay(path)?;
+    Ok(ck.summary())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::env;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        env::temp_dir().join(format!("alct_test_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn golden_header_and_record_bytes() {
+        // Pin the on-disk layout: header, one ACT record, footer.
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 2, row: 5, cycle: 7 });
+        let bytes = w.finish();
+        let expect: Vec<u8> = [
+            // "ALCT", version 1, ranks 1, banks 8, row_bits 15
+            &[0x41, 0x4C, 0x43, 0x54, 0x01, 0x01, 0x08, 0x0F][..],
+            // tck = 1.25 f64 LE
+            &[0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF4, 0x3F],
+            // ACT rank 0 bank 2 pad, row 5, cycle 7
+            &[0x00, 0x00, 0x02, 0x00],
+            &[0x05, 0x00, 0x00, 0x00],
+            &[0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            // footer: END, 1 record
+            &[0xFF, 0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+        ]
+        .concat();
+        assert_eq!(bytes, expect);
+    }
+
+    #[test]
+    fn round_trip_with_timing_events() {
+        let path = tmp("round_trip");
+        let std_t = TimingParams::ddr3_standard();
+        let fast = std_t.reduced(0.27, 0.32, 0.33, 0.18);
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.on_timings(&std_t);
+        w.on_refresh_scale(1.0);
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 0, row: 5, cycle: 0 });
+        w.cmd(Cmd { kind: CmdKind::Read, rank: 0, bank: 0, row: 5, cycle: 11 });
+        w.on_timings(&fast);
+        w.cmd(Cmd { kind: CmdKind::Pre, rank: 0, bank: 0, row: 5, cycle: 28 });
+        let n = w.finish_to(&path).unwrap();
+        assert_eq!(n, 6);
+
+        let i = info(&path).unwrap();
+        assert_eq!(i.version, VERSION);
+        assert_eq!((i.ranks, i.banks, i.row_bits), (1, 8, 15));
+        assert_eq!(i.records, 6);
+        assert_eq!(i.commands, 3);
+        assert_eq!(i.timing_updates, 2);
+        assert_eq!(i.scale_updates, 1);
+        assert_eq!(i.last_cycle, 28);
+
+        let s = replay_summary(&path).unwrap();
+        assert_eq!(s.commands, 3);
+        assert_eq!(s.violations, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_flags_a_violating_trace() {
+        let path = tmp("violating");
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 0, row: 5, cycle: 0 });
+        w.cmd(Cmd { kind: CmdKind::Read, rank: 0, bank: 0, row: 5, cycle: 10 });
+        w.finish_to(&path).unwrap();
+        let s = replay_summary(&path).unwrap();
+        assert_eq!(s.violations, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn region_records_round_trip_and_scope_replay() {
+        let path = tmp("regions");
+        let std_t = TimingParams::ddr3_standard();
+        let fast = std_t.reduced(0.27, 0.32, 0.33, 0.18);
+        let fast_trcd =
+            ((fast.trcd_ns / 1.25 - 1e-9).ceil()).max(0.0) as u64;
+        let mut ts = Vec::new();
+        for _ in 0..8 {
+            ts.push(fast); // region 0
+            ts.push(std_t); // region 1
+        }
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.on_region_timings(2, Some(&ts));
+        // Fast-region row is fine at the reduced tRCD; slow-region row
+        // (top bit set) at the same offset violates.
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 0, row: 100,
+                    cycle: 0 });
+        w.cmd(Cmd { kind: CmdKind::Read, rank: 0, bank: 0, row: 100,
+                    cycle: fast_trcd });
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 1, row: 1 << 14,
+                    cycle: 1000 });
+        w.cmd(Cmd { kind: CmdKind::Read, rank: 0, bank: 1, row: 1 << 14,
+                    cycle: 1000 + fast_trcd });
+        w.finish_to(&path).unwrap();
+        let i = info(&path).unwrap();
+        assert_eq!(i.region_updates, 1);
+        let s = replay_summary(&path).unwrap();
+        assert_eq!(s.violations, 1, "only the slow-region read violates");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validation_rejects_corrupt_traces() {
+        // Bad magic.
+        let path = tmp("corrupt");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(info(&path).is_err());
+        // Truncated mid-record: drop the footer and a few bytes.
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 0, row: 5, cycle: 0 });
+        let mut bytes = w.finish();
+        bytes.truncate(bytes.len() - 12);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(info(&path).is_err());
+        // Footer count mismatch.
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 0, row: 5, cycle: 0 });
+        let mut bytes = w.finish();
+        let n = bytes.len();
+        bytes[n - 8] = 9;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(info(&path).is_err());
+        // Out-of-range bank.
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 9, row: 5, cycle: 0 });
+        let bytes = w.finish();
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(info(&path).is_err());
+        // Cycle ordering violation.
+        let mut w = CmdTraceWriter::new(1, 8, 15, 1.25);
+        w.cmd(Cmd { kind: CmdKind::Act, rank: 0, bank: 0, row: 5,
+                    cycle: 100 });
+        w.cmd(Cmd { kind: CmdKind::Pre, rank: 0, bank: 0, row: 5,
+                    cycle: 50 });
+        let bytes = w.finish();
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(info(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

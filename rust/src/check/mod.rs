@@ -1,0 +1,956 @@
+//! Independent JEDEC DDR3 protocol-conformance checker.
+//!
+//! Every other correctness argument in this repo is self-referential:
+//! `run_fast` is verified bit-identical to `run()`, but both drive the
+//! same `Controller` gates, so a systematic gate bug passes every
+//! equivalence test. This module audits the *command stream* instead: a
+//! tap in `mem::controller` reports each issued ACT/RD/WR/PRE/REF, and
+//! `ProtocolChecker` re-derives the inter-command constraints (tRCD,
+//! tRP, tRAS, tRC, tRRD, tFAW, tWR, tWTR, tRTP, tCCD, tRFC, tREFI, bus
+//! turnaround) from the active `TimingParams` alone — it shares *no*
+//! gate code with `Controller` and never looks at its deadlines.
+//!
+//! Constraint windows are baked from the timing set live at each
+//! command's issue cycle (the tap forwards `set_timings` /
+//! `set_region_timings` in stream order), mirroring how a real
+//! controller applies a timing update: in-flight windows keep the old
+//! values. The ns->cycle quantization deliberately re-implements the
+//! same documented rounding rule as `TimingParams::to_cycles`
+//! (`ceil(ns/tck - 1e-9)`) — a checker that rounded differently would
+//! flag conforming streams.
+//!
+//! The hot path is allocation-free: per-bank/rank state is fixed-size,
+//! the violation sample vector is pre-reserved (overflow only counts),
+//! and coverage counters are flat arrays. Only a region-table install
+//! (thermal-epoch rate) allocates.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::mem::controller::{Cmd, CmdKind, CmdSink};
+use crate::timing::TimingParams;
+
+pub mod cmd_trace;
+pub mod mutate;
+
+/// The audited inter-command constraints. `Structural` covers command
+/// legality that is not a timing window (ACT to an open bank, column to
+/// a closed/wrong row, REF with open banks, PRE on an idle bank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Constraint {
+    Trcd,
+    Trp,
+    Tras,
+    Trc,
+    Trrd,
+    Tfaw,
+    Twr,
+    Twtr,
+    Trtp,
+    Tccd,
+    Trfc,
+    Trefi,
+    Turnaround,
+    Structural,
+}
+
+pub const N_CONSTRAINTS: usize = 14;
+
+impl Constraint {
+    pub const ALL: [Constraint; N_CONSTRAINTS] = [
+        Constraint::Trcd, Constraint::Trp, Constraint::Tras, Constraint::Trc,
+        Constraint::Trrd, Constraint::Tfaw, Constraint::Twr, Constraint::Twtr,
+        Constraint::Trtp, Constraint::Tccd, Constraint::Trfc,
+        Constraint::Trefi, Constraint::Turnaround, Constraint::Structural,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Constraint::Trcd => "tRCD",
+            Constraint::Trp => "tRP",
+            Constraint::Tras => "tRAS",
+            Constraint::Trc => "tRC",
+            Constraint::Trrd => "tRRD",
+            Constraint::Tfaw => "tFAW",
+            Constraint::Twr => "tWR",
+            Constraint::Twtr => "tWTR",
+            Constraint::Trtp => "tRTP",
+            Constraint::Tccd => "tCCD",
+            Constraint::Trfc => "tRFC",
+            Constraint::Trefi => "tREFI",
+            Constraint::Turnaround => "RD->WR",
+            Constraint::Structural => "structural",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// One detected conformance violation, with full command context.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub constraint: Constraint,
+    pub kind: CmdKind,
+    pub rank: usize,
+    pub bank: usize,
+    pub row: u64,
+    pub cycle: u64,
+    /// Earliest cycle the command would have been legal (0 for
+    /// structural violations).
+    pub earliest: u64,
+    pub detail: &'static str,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "{} violation: {} rank {} bank {} row {:#x} at cycle {} \
+                (earliest legal {}; {})",
+               self.constraint.name(), self.kind.name(), self.rank,
+               self.bank, self.row, self.cycle, self.earliest, self.detail)
+    }
+}
+
+/// Independent cycle-domain timing set. Deliberately *not*
+/// `timing::TimingCycles`: the conversion is re-derived here from the ns
+/// fields so a quantization bug in `timing/` cannot silently agree with
+/// itself (the rounding *rule* is the same by spec — see module docs).
+#[derive(Debug, Clone, Copy)]
+struct CkTimings {
+    trcd: u64,
+    tras: u64,
+    trp: u64,
+    trc: u64,
+    trrd: u64,
+    tfaw: u64,
+    twr: u64,
+    twtr: u64,
+    trtp: u64,
+    tccd: u64,
+    tcl: u64,
+    tcwl: u64,
+    tburst: u64,
+    trfc: u64,
+    trefi: u64,
+}
+
+impl CkTimings {
+    fn from_ns(p: &TimingParams, tck: f64) -> Self {
+        let c = |ns: f64| ((ns / tck - 1e-9).ceil()).max(0.0) as u64;
+        CkTimings {
+            trcd: c(p.trcd_ns),
+            tras: c(p.tras_ns),
+            trp: c(p.trp_ns),
+            trc: c(p.tras_ns + p.trp_ns),
+            trrd: c(p.trrd_ns),
+            tfaw: c(p.tfaw_ns),
+            twr: c(p.twr_ns),
+            twtr: c(p.twtr_ns),
+            trtp: c(p.trtp_ns),
+            tccd: c(p.tccd_ns),
+            tcl: c(p.tcl_ns),
+            tcwl: c(p.tcwl_ns),
+            tburst: c(p.tburst_ns),
+            trfc: c(p.trfc_ns),
+            trefi: c(p.trefi_us * 1000.0),
+        }
+    }
+}
+
+/// Per-(bank, row-region) sets plus the checker's own region lookup
+/// (again re-derived: `row >> shift`, clamped to the last region).
+#[derive(Debug, Clone)]
+struct CkRegion {
+    regions_per_bank: usize,
+    shift: u32,
+    t: Vec<CkTimings>,
+}
+
+impl CkRegion {
+    #[inline]
+    fn region_of(&self, row: u64) -> usize {
+        ((row >> self.shift) as usize).min(self.regions_per_bank - 1)
+    }
+}
+
+/// Per-bank audit state: the open row plus the constraint windows baked
+/// when each predecessor command was observed.
+#[derive(Debug, Clone, Copy)]
+struct BankAudit {
+    open_row: Option<u64>,
+    /// ACT + tRCD: earliest column command.
+    col_ok: u64,
+    /// ACT + tRAS: earliest PRE (row-restore component).
+    pre_ok_ras: u64,
+    /// last RD + tRTP: earliest PRE (read-to-precharge component).
+    pre_ok_rtp: u64,
+    /// last WR data end + tWR: earliest PRE (write-recovery component).
+    pre_ok_wr: u64,
+    /// ACT + tRC: earliest next ACT (cycle-time component).
+    act_ok_trc: u64,
+    /// PRE + tRP: earliest next ACT (precharge component).
+    act_ok_trp: u64,
+}
+
+impl BankAudit {
+    fn new() -> Self {
+        BankAudit { open_row: None, col_ok: 0, pre_ok_ras: 0, pre_ok_rtp: 0,
+                    pre_ok_wr: 0, act_ok_trc: 0, act_ok_trp: 0 }
+    }
+}
+
+/// Per-rank audit state: rank-shared gates (tRRD, tFAW, data bus,
+/// turnaround, refresh) plus the banks.
+#[derive(Debug, Clone)]
+struct RankAudit {
+    banks: Vec<BankAudit>,
+    /// last ACT + tRRD.
+    act_ok_any: u64,
+    /// Rolling window of the last four ACT cycles (tFAW).
+    faw: [u64; 4],
+    faw_len: usize,
+    faw_head: usize,
+    /// Earliest cycle the shared data bus is free.
+    data_free: u64,
+    /// last RD + tCCD.
+    rd_ok_ccd: u64,
+    /// last WR data end + tWTR.
+    rd_ok_wtr: u64,
+    /// last WR + tCCD.
+    wr_ok_ccd: u64,
+    /// last RD + (tCL + tBURST + 2 - tCWL): read->write bus turnaround.
+    wr_ok_turn: u64,
+    /// last REF + tRFC: no command before this.
+    ref_fence: u64,
+    /// Cycle of the last REF (tREFI postponement bound).
+    last_ref: u64,
+    refs: u64,
+}
+
+impl RankAudit {
+    fn new(banks: usize) -> Self {
+        RankAudit {
+            banks: vec![BankAudit::new(); banks],
+            act_ok_any: 0,
+            faw: [0; 4],
+            faw_len: 0,
+            faw_head: 0,
+            data_free: 0,
+            rd_ok_ccd: 0,
+            rd_ok_wtr: 0,
+            wr_ok_ccd: 0,
+            wr_ok_turn: 0,
+            ref_fence: 0,
+            last_ref: 0,
+            refs: 0,
+        }
+    }
+}
+
+/// How many violation records are kept verbatim (the count is exact
+/// regardless).
+pub const MAX_VIOLATION_SAMPLE: usize = 32;
+
+/// JEDEC allows postponing up to 8 REF commands, i.e. the gap between
+/// consecutive REFs may not exceed 9 x tREFI.
+pub const TREFI_POSTPONE_LIMIT: u64 = 9;
+
+pub struct ProtocolChecker {
+    ranks: Vec<RankAudit>,
+    row_bits: u32,
+    tck: f64,
+    module: CkTimings,
+    region: Option<CkRegion>,
+    refresh_scale: f64,
+    commands: u64,
+    n_violations: u64,
+    sample: Vec<Violation>,
+    /// Check counts, `checks[rank * N_CONSTRAINTS + c]`: how often each
+    /// constraint was actually evaluated against a live predecessor
+    /// window on that rank (the coverage matrix).
+    checks: Vec<u64>,
+    /// Region-lookup counts per region index (across ranks/banks).
+    region_hits: Vec<u64>,
+}
+
+impl ProtocolChecker {
+    pub fn new(ranks: usize, banks: usize, row_bits: u32, tck: f64) -> Self {
+        ProtocolChecker {
+            ranks: (0..ranks).map(|_| RankAudit::new(banks)).collect(),
+            row_bits,
+            tck,
+            module: CkTimings::from_ns(&TimingParams::ddr3_standard(), tck),
+            region: None,
+            refresh_scale: 1.0,
+            commands: 0,
+            n_violations: 0,
+            sample: Vec::with_capacity(MAX_VIOLATION_SAMPLE),
+            checks: vec![0; ranks * N_CONSTRAINTS],
+            region_hits: Vec::new(),
+        }
+    }
+
+    pub fn commands(&self) -> u64 {
+        self.commands
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.n_violations
+    }
+
+    pub fn sample(&self) -> &[Violation] {
+        &self.sample
+    }
+
+    /// Total times `c` was evaluated against a live window, over all
+    /// ranks.
+    pub fn checked(&self, c: Constraint) -> u64 {
+        (0..self.ranks.len())
+            .map(|r| self.checks[r * N_CONSTRAINTS + c.idx()])
+            .sum()
+    }
+
+    pub fn exercised(&self, c: Constraint) -> bool {
+        self.checked(c) > 0
+    }
+
+    /// Region-lookup counts per region index (empty when no region table
+    /// was ever installed).
+    pub fn region_hits(&self) -> &[u64] {
+        &self.region_hits
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn violate(&mut self, c: Constraint, cmd: CmdKind, rank: usize,
+               bank: usize, row: u64, cycle: u64, earliest: u64,
+               detail: &'static str) {
+        self.n_violations += 1;
+        if self.sample.len() < MAX_VIOLATION_SAMPLE {
+            self.sample.push(Violation {
+                constraint: c, kind: cmd, rank, bank, row, cycle, earliest,
+                detail,
+            });
+        }
+    }
+
+    /// Evaluate one window: counts coverage when a predecessor actually
+    /// armed it (earliest > 0), records a violation when `cycle` lands
+    /// inside it.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn require(&mut self, c: Constraint, cmd: CmdKind, rank: usize,
+               bank: usize, row: u64, cycle: u64, earliest: u64,
+               detail: &'static str) {
+        if earliest > 0 {
+            self.checks[rank * N_CONSTRAINTS + c.idx()] += 1;
+        }
+        if cycle < earliest {
+            self.violate(c, cmd, rank, bank, row, cycle, earliest, detail);
+        }
+    }
+
+    /// Timing set governing (bank, row): the region entry when a region
+    /// table is installed, else the module set — the checker's own
+    /// resolution-at-issue-time lookup.
+    #[inline]
+    fn timings_for(&mut self, bank: usize, row: u64) -> CkTimings {
+        match &self.region {
+            Some(m) => {
+                let r = m.region_of(row);
+                self.region_hits[r] += 1;
+                m.t[bank * m.regions_per_bank + r]
+            }
+            None => self.module,
+        }
+    }
+
+    fn scaled_trefi(&self) -> u64 {
+        ((self.module.trefi as f64) * self.refresh_scale).max(1.0) as u64
+    }
+
+    pub fn cmd_at(&mut self, kind: CmdKind, rank: usize, bank: usize,
+                  row: u64, cycle: u64) {
+        self.commands += 1;
+        // Structural legality (open/closed/row-match) is evaluated for
+        // every command; count it so the coverage matrix reflects that.
+        self.checks[rank * N_CONSTRAINTS + Constraint::Structural.idx()] += 1;
+        let fence = self.ranks[rank].ref_fence;
+        if self.ranks[rank].refs > 0 {
+            self.require(Constraint::Trfc, kind, rank, bank, row, cycle,
+                         fence, "command inside the tRFC window of a REF");
+        }
+        match kind {
+            CmdKind::Act => self.on_act(rank, bank, row, cycle),
+            CmdKind::Read => self.on_col(false, rank, bank, row, cycle),
+            CmdKind::Write => self.on_col(true, rank, bank, row, cycle),
+            CmdKind::Pre => self.on_pre(rank, bank, row, cycle),
+            CmdKind::Ref => self.on_ref(rank, cycle),
+        }
+    }
+
+    fn on_act(&mut self, rank: usize, bank: usize, row: u64, cycle: u64) {
+        let k = CmdKind::Act;
+        if self.ranks[rank].banks[bank].open_row.is_some() {
+            self.violate(Constraint::Structural, k, rank, bank, row, cycle,
+                         0, "ACT to a bank with an open row");
+            return;
+        }
+        let b = self.ranks[rank].banks[bank];
+        self.require(Constraint::Trc, k, rank, bank, row, cycle,
+                     b.act_ok_trc, "ACT inside tRC of the previous ACT");
+        self.require(Constraint::Trp, k, rank, bank, row, cycle,
+                     b.act_ok_trp, "ACT inside tRP of the previous PRE");
+        let act_any = self.ranks[rank].act_ok_any;
+        self.require(Constraint::Trrd, k, rank, bank, row, cycle, act_any,
+                     "ACT inside tRRD of the previous ACT");
+        // tFAW: evaluated with the module set live *now* (the rolling
+        // window is a rank-level resource, not a per-row one).
+        if self.ranks[rank].faw_len == 4 {
+            let oldest = self.ranks[rank].faw[self.ranks[rank].faw_head];
+            self.require(Constraint::Tfaw, k, rank, bank, row, cycle,
+                         oldest + self.module.tfaw,
+                         "fifth ACT inside the tFAW window");
+        }
+        let t = self.timings_for(bank, row);
+        let trrd = self.module.trrd;
+        let r = &mut self.ranks[rank];
+        let b = &mut r.banks[bank];
+        b.open_row = Some(row);
+        b.col_ok = cycle + t.trcd;
+        b.pre_ok_ras = cycle + t.tras;
+        b.act_ok_trc = cycle + t.trc;
+        r.act_ok_any = cycle + trrd;
+        if r.faw_len == 4 {
+            r.faw[r.faw_head] = cycle;
+            r.faw_head = (r.faw_head + 1) % 4;
+        } else {
+            r.faw[(r.faw_head + r.faw_len) % 4] = cycle;
+            r.faw_len += 1;
+        }
+    }
+
+    fn on_col(&mut self, is_write: bool, rank: usize, bank: usize, row: u64,
+              cycle: u64) {
+        let k = if is_write { CmdKind::Write } else { CmdKind::Read };
+        match self.ranks[rank].banks[bank].open_row {
+            Some(r) if r == row => {}
+            Some(_) => {
+                self.violate(Constraint::Structural, k, rank, bank, row,
+                             cycle, 0, "column command to the wrong row");
+                return;
+            }
+            None => {
+                self.violate(Constraint::Structural, k, rank, bank, row,
+                             cycle, 0, "column command to a closed bank");
+                return;
+            }
+        }
+        let col_ok = self.ranks[rank].banks[bank].col_ok;
+        self.require(Constraint::Trcd, k, rank, bank, row, cycle, col_ok,
+                     "column command inside tRCD of the ACT");
+        let t = self.timings_for(bank, row);
+        let r = &mut self.ranks[rank];
+        if is_write {
+            let ccd = r.wr_ok_ccd;
+            let turn = r.wr_ok_turn;
+            self.require(Constraint::Tccd, k, rank, bank, row, cycle, ccd,
+                         "WR inside tCCD of the previous WR");
+            self.require(Constraint::Turnaround, k, rank, bank, row, cycle,
+                         turn, "WR inside the read->write bus turnaround");
+            let r = &mut self.ranks[rank];
+            let data_end = (cycle + t.tcwl).max(r.data_free) + t.tburst;
+            r.data_free = data_end;
+            r.wr_ok_ccd = cycle + t.tccd;
+            r.rd_ok_wtr = r.rd_ok_wtr.max(data_end + t.twtr);
+            let b = &mut r.banks[bank];
+            b.pre_ok_wr = b.pre_ok_wr.max(data_end + t.twr);
+        } else {
+            let ccd = r.rd_ok_ccd;
+            let wtr = r.rd_ok_wtr;
+            self.require(Constraint::Tccd, k, rank, bank, row, cycle, ccd,
+                         "RD inside tCCD of the previous RD");
+            self.require(Constraint::Twtr, k, rank, bank, row, cycle, wtr,
+                         "RD inside tWTR of the previous WR's data burst");
+            let r = &mut self.ranks[rank];
+            let data_end = (cycle + t.tcl).max(r.data_free) + t.tburst;
+            r.data_free = data_end;
+            r.rd_ok_ccd = cycle + t.tccd;
+            r.wr_ok_turn = r.wr_ok_turn
+                .max(cycle + (t.tcl + t.tburst + 2).saturating_sub(t.tcwl));
+            let b = &mut r.banks[bank];
+            b.pre_ok_rtp = b.pre_ok_rtp.max(cycle + t.trtp);
+        }
+    }
+
+    fn on_pre(&mut self, rank: usize, bank: usize, row: u64, cycle: u64) {
+        let k = CmdKind::Pre;
+        if self.ranks[rank].banks[bank].open_row.is_none() {
+            self.violate(Constraint::Structural, k, rank, bank, row, cycle,
+                         0, "PRE to an idle bank");
+            return;
+        }
+        let b = self.ranks[rank].banks[bank];
+        self.require(Constraint::Tras, k, rank, bank, row, cycle,
+                     b.pre_ok_ras, "PRE inside tRAS of the ACT");
+        self.require(Constraint::Trtp, k, rank, bank, row, cycle,
+                     b.pre_ok_rtp, "PRE inside tRTP of the last RD");
+        self.require(Constraint::Twr, k, rank, bank, row, cycle,
+                     b.pre_ok_wr, "PRE inside tWR of the last WR's data");
+        // tRP resolves through the *closed* row's region (the tap reports
+        // it on PRE for exactly this reason).
+        let t = self.timings_for(bank, row);
+        let b = &mut self.ranks[rank].banks[bank];
+        b.open_row = None;
+        b.act_ok_trp = cycle + t.trp;
+    }
+
+    fn on_ref(&mut self, rank: usize, cycle: u64) {
+        let k = CmdKind::Ref;
+        let nb = self.ranks[rank].banks.len();
+        for bank in 0..nb {
+            let b = self.ranks[rank].banks[bank];
+            if b.open_row.is_some() {
+                self.violate(Constraint::Structural, k, rank, bank,
+                             b.open_row.unwrap_or(0), cycle, 0,
+                             "REF with a row open");
+            } else {
+                // A precharged bank must still be tRP-complete.
+                self.require(Constraint::Trp, k, rank, bank, 0, cycle,
+                             b.act_ok_trp, "REF inside tRP of a PRE");
+            }
+        }
+        // Postponement bound: consecutive REFs no further apart than
+        // 9 x (scaled) tREFI. Applied from cycle 0 — JEDEC requires the
+        // cadence from init, and the controller seeds its first deadline
+        // at one tREFI.
+        let gap = cycle - self.ranks[rank].last_ref;
+        let limit = TREFI_POSTPONE_LIMIT * self.scaled_trefi();
+        self.checks[rank * N_CONSTRAINTS + Constraint::Trefi.idx()] += 1;
+        if gap > limit {
+            self.violate(Constraint::Trefi, k, rank, 0, 0, cycle,
+                         self.ranks[rank].last_ref + limit,
+                         "REF gap exceeds the 9 x tREFI postponement bound");
+        }
+        let trfc = self.module.trfc;
+        let r = &mut self.ranks[rank];
+        r.last_ref = cycle;
+        r.ref_fence = cycle + trfc;
+        r.refs += 1;
+    }
+
+    /// One-line summary plus the constraint-coverage matrix.
+    pub fn report(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let exercised =
+            Constraint::ALL.iter().filter(|c| self.exercised(**c)).count();
+        let _ = writeln!(
+            s, "commands={} violations={} constraints_exercised={}/{}",
+            self.commands, self.n_violations, exercised, N_CONSTRAINTS);
+        for c in Constraint::ALL {
+            let per_rank: Vec<String> = (0..self.ranks.len())
+                .map(|r| self.checks[r * N_CONSTRAINTS + c.idx()].to_string())
+                .collect();
+            let _ = writeln!(s, "  {:10} checks={:10} per-rank=[{}]",
+                             c.name(), self.checked(c), per_rank.join(", "));
+        }
+        if !self.region_hits.is_empty() {
+            let hits: Vec<String> =
+                self.region_hits.iter().map(|h| h.to_string()).collect();
+            let _ = writeln!(s, "  region lookups per region: [{}]",
+                             hits.join(", "));
+        }
+        for v in &self.sample {
+            let _ = writeln!(s, "  {v}");
+        }
+        s
+    }
+
+    pub fn summary(&self) -> CheckSummary {
+        let mut checks = [0u64; N_CONSTRAINTS];
+        for c in Constraint::ALL {
+            checks[c.idx()] = self.checked(c);
+        }
+        CheckSummary {
+            systems: 1,
+            commands: self.commands,
+            violations: self.n_violations,
+            checks,
+            region_hits: self.region_hits.clone(),
+            sample: self.sample.clone(),
+        }
+    }
+}
+
+impl CmdSink for ProtocolChecker {
+    fn cmd(&mut self, c: Cmd) {
+        self.cmd_at(c.kind, c.rank as usize, c.bank as usize, c.row, c.cycle);
+    }
+
+    fn on_timings(&mut self, t: &TimingParams) {
+        self.module = CkTimings::from_ns(t, self.tck);
+    }
+
+    fn on_region_timings(&mut self, regions_per_bank: usize,
+                         t: Option<&[TimingParams]>) {
+        match t {
+            None => self.region = None,
+            Some(ts) => {
+                assert!(regions_per_bank.is_power_of_two());
+                let bits = regions_per_bank.trailing_zeros();
+                if self.region_hits.len() != regions_per_bank {
+                    self.region_hits = vec![0; regions_per_bank];
+                }
+                self.region = Some(CkRegion {
+                    regions_per_bank,
+                    shift: self.row_bits - bits,
+                    t: ts.iter()
+                        .map(|p| CkTimings::from_ns(p, self.tck))
+                        .collect(),
+                });
+            }
+        }
+    }
+
+    fn on_refresh_scale(&mut self, scale: f64) {
+        self.refresh_scale = scale;
+    }
+}
+
+/// Mergeable audit aggregate (per-`System`, or fleet-wide for the
+/// process-global `--check` accumulator).
+#[derive(Debug, Clone)]
+pub struct CheckSummary {
+    pub systems: u64,
+    pub commands: u64,
+    pub violations: u64,
+    pub checks: [u64; N_CONSTRAINTS],
+    pub region_hits: Vec<u64>,
+    pub sample: Vec<Violation>,
+}
+
+impl Default for CheckSummary {
+    fn default() -> Self {
+        CheckSummary { systems: 0, commands: 0, violations: 0,
+                       checks: [0; N_CONSTRAINTS], region_hits: Vec::new(),
+                       sample: Vec::new() }
+    }
+}
+
+impl CheckSummary {
+    pub fn merge(&mut self, other: &CheckSummary) {
+        self.systems += other.systems;
+        self.commands += other.commands;
+        self.violations += other.violations;
+        for i in 0..N_CONSTRAINTS {
+            self.checks[i] += other.checks[i];
+        }
+        if self.region_hits.len() < other.region_hits.len() {
+            self.region_hits.resize(other.region_hits.len(), 0);
+        }
+        for (i, h) in other.region_hits.iter().enumerate() {
+            self.region_hits[i] += h;
+        }
+        for v in &other.sample {
+            if self.sample.len() >= MAX_VIOLATION_SAMPLE {
+                break;
+            }
+            self.sample.push(v.clone());
+        }
+    }
+
+    pub fn exercised(&self) -> usize {
+        self.checks.iter().filter(|c| **c > 0).count()
+    }
+
+    /// The `CHECK` summary line printed by `--check` / `repro check`.
+    pub fn line(&self) -> String {
+        format!("CHECK systems={} commands={} violations={} \
+                 constraints_exercised={}/{}",
+                self.systems, self.commands, self.violations,
+                self.exercised(), N_CONSTRAINTS)
+    }
+}
+
+// ---- process-global inline audit (`--check` flag) -----------------------
+//
+// `System::with_sources_map` consults `inline_enabled()` and attaches a
+// fresh checker to every controller it builds, so a single flag covers
+// every eval/figure path without threading state through each harness.
+// Each `System` folds its summary into the global accumulator on drop;
+// `report_inline` prints the aggregate and fails the process on any
+// violation. `exec::Pool` workers build their Systems on worker threads,
+// hence the mutex.
+
+static INLINE: AtomicBool = AtomicBool::new(false);
+static AUDIT: Mutex<Option<CheckSummary>> = Mutex::new(None);
+
+pub fn enable_inline() {
+    INLINE.store(true, Ordering::SeqCst);
+}
+
+pub fn inline_enabled() -> bool {
+    INLINE.load(Ordering::SeqCst)
+}
+
+/// Fold one System's audit into the global accumulator.
+pub fn record_inline(summary: &CheckSummary) {
+    let mut audit = AUDIT.lock().unwrap();
+    audit.get_or_insert_with(CheckSummary::default).merge(summary);
+}
+
+/// Take the accumulated audit (None when nothing was recorded).
+pub fn take_inline() -> Option<CheckSummary> {
+    AUDIT.lock().unwrap().take()
+}
+
+/// End-of-run report for `--check`: print the aggregate `CHECK` line and
+/// fail on any violation. No-op when the flag was never enabled.
+pub fn report_inline() -> Result<()> {
+    if !inline_enabled() {
+        return Ok(());
+    }
+    let Some(audit) = take_inline() else {
+        println!("CHECK systems=0 commands=0 violations=0 (no simulations \
+                  ran with the checker attached)");
+        return Ok(());
+    };
+    println!("{}", audit.line());
+    for v in &audit.sample {
+        println!("  {v}");
+    }
+    if audit.violations > 0 {
+        bail!("protocol checker found {} violation(s)", audit.violations);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checker() -> ProtocolChecker {
+        ProtocolChecker::new(1, 8, 15, 1.25)
+    }
+
+    // Standard DDR3-1600 cycle values at tCK=1.25 ns: trcd=11 tras=28
+    // trp=11 trc=39 trrd=5 tfaw=24 twr=12 twtr=6 trtp=6 tccd=4 tcl=11
+    // tcwl=8 tburst=4 trfc=128 trefi=6240.
+
+    #[test]
+    fn independent_conversion_matches_timing_module() {
+        // Same documented rounding rule — the values must agree or the
+        // checker would flag conforming streams.
+        let p = TimingParams::ddr3_standard();
+        let ours = CkTimings::from_ns(&p, 1.25);
+        let theirs = p.to_cycles(1.25);
+        assert_eq!(ours.trcd, theirs.trcd as u64);
+        assert_eq!(ours.tras, theirs.tras as u64);
+        assert_eq!(ours.trp, theirs.trp as u64);
+        assert_eq!(ours.trc, theirs.trc as u64);
+        assert_eq!(ours.trfc, theirs.trfc as u64);
+        assert_eq!(ours.trefi, theirs.trefi as u64);
+        let f = p.reduced(0.27, 0.32, 0.33, 0.18);
+        let of = CkTimings::from_ns(&f, 1.25);
+        let tf = f.to_cycles(1.25);
+        assert_eq!(of.trcd, tf.trcd as u64);
+        assert_eq!(of.tras, tf.tras as u64);
+        assert_eq!(of.trp, tf.trp as u64);
+    }
+
+    #[test]
+    fn legal_sequence_is_clean() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        c.cmd_at(CmdKind::Read, 0, 0, 5, 11); // tRCD
+        c.cmd_at(CmdKind::Read, 0, 0, 5, 15); // tCCD
+        c.cmd_at(CmdKind::Pre, 0, 0, 5, 28); // tRAS, tRTP ok
+        c.cmd_at(CmdKind::Act, 0, 0, 6, 39); // tRP + tRC
+        assert_eq!(c.violations(), 0, "{}", c.report());
+        assert!(c.exercised(Constraint::Trcd));
+        assert!(c.exercised(Constraint::Tccd));
+        assert!(c.exercised(Constraint::Tras));
+        assert!(c.exercised(Constraint::Trp));
+        assert!(c.exercised(Constraint::Trc));
+    }
+
+    #[test]
+    fn early_column_read_flags_trcd() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        c.cmd_at(CmdKind::Read, 0, 0, 5, 10); // one early
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Trcd);
+        assert_eq!(c.sample()[0].earliest, 11);
+    }
+
+    #[test]
+    fn early_pre_flags_tras_and_early_act_flags_trp() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        c.cmd_at(CmdKind::Pre, 0, 0, 5, 27);
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Tras);
+        // tRP from the (early) PRE at 27: next ACT legal at 38; 37 is
+        // early. The tRC window (0+39) flags too.
+        c.cmd_at(CmdKind::Act, 0, 0, 6, 37);
+        assert_eq!(c.violations(), 3);
+        assert!(c.sample().iter().any(|v| v.constraint == Constraint::Trp));
+        assert!(c.sample().iter().any(|v| v.constraint == Constraint::Trc));
+    }
+
+    #[test]
+    fn trrd_and_tfaw_window() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Act, 0, 0, 1, 0);
+        c.cmd_at(CmdKind::Act, 0, 1, 1, 4); // tRRD=5: early
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Trrd);
+        let mut c = checker();
+        for (b, t) in [(0u64, 0u64), (1, 5), (2, 10), (3, 15)] {
+            c.cmd_at(CmdKind::Act, 0, b as usize, 1, t);
+        }
+        c.cmd_at(CmdKind::Act, 0, 4, 1, 23); // tFAW=24: one early
+        assert!(c.sample().iter().any(|v| v.constraint == Constraint::Tfaw),
+                "{}", c.report());
+        let mut c = checker();
+        for (b, t) in [(0u64, 0u64), (1, 5), (2, 10), (3, 15)] {
+            c.cmd_at(CmdKind::Act, 0, b as usize, 1, t);
+        }
+        c.cmd_at(CmdKind::Act, 0, 4, 1, 24);
+        assert_eq!(c.violations(), 0, "{}", c.report());
+    }
+
+    #[test]
+    fn write_recovery_and_wtr() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        c.cmd_at(CmdKind::Write, 0, 0, 5, 11);
+        // data end = 11 + tCWL(8) + tBURST(4) = 23; PRE legal at 23 +
+        // tWR(12) = 35, RD legal at 23 + tWTR(6) = 29.
+        c.cmd_at(CmdKind::Read, 0, 0, 5, 28);
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Twtr);
+        c.cmd_at(CmdKind::Pre, 0, 0, 5, 34);
+        assert_eq!(c.violations(), 2);
+        assert_eq!(c.sample()[1].constraint, Constraint::Twr);
+    }
+
+    #[test]
+    fn read_to_write_turnaround() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        c.cmd_at(CmdKind::Read, 0, 0, 5, 11);
+        // turnaround = tCL(11) + tBURST(4) + 2 - tCWL(8) = 9.
+        c.cmd_at(CmdKind::Write, 0, 0, 5, 19);
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Turnaround);
+        assert_eq!(c.sample()[0].earliest, 20);
+    }
+
+    #[test]
+    fn refresh_fence_and_cadence() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Ref, 0, 0, 0, 100);
+        c.cmd_at(CmdKind::Act, 0, 0, 1, 100 + 127); // tRFC=128: one early
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Trfc);
+        // Postponement bound: 9 x 6240 after the last REF.
+        let mut c = checker();
+        c.cmd_at(CmdKind::Ref, 0, 0, 0, 6240);
+        c.cmd_at(CmdKind::Ref, 0, 0, 0, 6240 + 9 * 6240 + 1);
+        assert_eq!(c.violations(), 1, "{}", c.report());
+        assert_eq!(c.sample()[0].constraint, Constraint::Trefi);
+    }
+
+    #[test]
+    fn structural_violations() {
+        let mut c = checker();
+        c.cmd_at(CmdKind::Read, 0, 0, 5, 0); // closed bank
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 100);
+        c.cmd_at(CmdKind::Act, 0, 0, 6, 200); // already open
+        c.cmd_at(CmdKind::Read, 0, 0, 7, 300); // wrong row
+        c.cmd_at(CmdKind::Ref, 0, 0, 0, 400); // row open
+        // 600, not 500: the PRE must sit past the REF's tRFC fence
+        // (400 + 128) so only the idle-bank violation fires.
+        c.cmd_at(CmdKind::Pre, 0, 1, 0, 600); // idle bank
+        assert_eq!(c.violations(), 5);
+        assert!(c.sample().iter()
+            .all(|v| v.constraint == Constraint::Structural));
+    }
+
+    #[test]
+    fn region_table_scopes_the_windows() {
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        let mut c = checker();
+        // 2 regions x 8 banks: region 0 fast, region 1 standard.
+        let mut ts = Vec::new();
+        for _ in 0..8 {
+            ts.push(fast);
+            ts.push(std);
+        }
+        c.on_region_timings(2, Some(&ts));
+        let fast_trcd = CkTimings::from_ns(&fast, 1.25).trcd;
+        assert!(fast_trcd < 11);
+        // Fast-region row: the reduced tRCD is enough.
+        c.cmd_at(CmdKind::Act, 0, 0, 100, 0);
+        c.cmd_at(CmdKind::Read, 0, 0, 100, fast_trcd);
+        assert_eq!(c.violations(), 0, "{}", c.report());
+        // Standard-region row (top bit set): the reduced tRCD is an
+        // early column command.
+        let slow_row = 1 << 14;
+        c.cmd_at(CmdKind::Act, 0, 1, slow_row, 1000);
+        c.cmd_at(CmdKind::Read, 0, 1, slow_row, 1000 + fast_trcd);
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Trcd);
+        assert_eq!(c.region_hits().len(), 2);
+        assert!(c.region_hits()[0] > 0 && c.region_hits()[1] > 0);
+    }
+
+    #[test]
+    fn timing_switch_applies_to_new_windows_only() {
+        // Windows are baked at issue time: an ACT observed under the
+        // standard set keeps its tRCD=11 window even if a faster set is
+        // installed mid-flight — and vice versa.
+        let std = TimingParams::ddr3_standard();
+        let fast = std.reduced(0.27, 0.32, 0.33, 0.18);
+        let fast_trcd = CkTimings::from_ns(&fast, 1.25).trcd;
+        let mut c = checker();
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        c.on_timings(&fast);
+        c.cmd_at(CmdKind::Read, 0, 0, 5, fast_trcd); // still under old tRCD
+        assert_eq!(c.violations(), 1);
+        assert_eq!(c.sample()[0].constraint, Constraint::Trcd);
+        assert_eq!(c.sample()[0].earliest, 11);
+        // New ACT after the switch uses the fast window.
+        let mut c = checker();
+        c.on_timings(&fast);
+        c.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        c.cmd_at(CmdKind::Read, 0, 0, 5, fast_trcd);
+        assert_eq!(c.violations(), 0, "{}", c.report());
+    }
+
+    #[test]
+    fn summary_merges() {
+        let mut a = checker();
+        a.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        a.cmd_at(CmdKind::Read, 0, 0, 5, 11);
+        let mut b = checker();
+        b.cmd_at(CmdKind::Act, 0, 0, 5, 0);
+        b.cmd_at(CmdKind::Read, 0, 0, 5, 10); // violation
+        let mut total = CheckSummary::default();
+        total.merge(&a.summary());
+        total.merge(&b.summary());
+        assert_eq!(total.systems, 2);
+        assert_eq!(total.commands, 4);
+        assert_eq!(total.violations, 1);
+        assert_eq!(total.sample.len(), 1);
+        assert!(total.line().contains("violations=1"));
+    }
+}

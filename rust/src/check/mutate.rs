@@ -1,0 +1,256 @@
+//! Mutation harness: proves the protocol checker is *sensitive*, not
+//! vacuously green. Each `GateMutation` (see `mem::dram`) shortens one
+//! controller timing gate by `MUTATION_SLACK` cycles — or corrupts the
+//! region lookup / refresh cadence — and the harness asserts the checker
+//! flags every mutant while the unmutated baseline stays clean.
+//!
+//! The adversarial configuration is chosen so every gate actually
+//! *binds* during the run (a gate that never constrains scheduling can't
+//! produce an observable violation when shortened):
+//!
+//! * a 2-regions-per-bank table — low rows at the paper's 55degC
+//!   operating point, high rows at standard timings (so the region-lookup
+//!   mutants misresolve to observably-wrong sets);
+//! * two `FuzzSource` cores (bank-conflict storms, boundary hammering,
+//!   write/read drain flips, refresh-straddling spread);
+//! * long enough (~140k cycles) that the x16 refresh-postponement mutant
+//!   overruns the 9 x tREFI bound on its second REF;
+//! * for the tFAW mutant only, a widened-tFAW module set under which the
+//!   four-ACT window genuinely constrains scheduling — see
+//!   [`stress_timings`] for the reachability analysis.
+//!
+//! Note `tRC` has no mutant: in this controller tRC = tRAS + tRP exactly,
+//! so the tRC gate is redundant with the tRAS and tRP gates it follows —
+//! shortening it alone can never change the command stream. The checker
+//! still audits tRC (the coverage matrix shows it exercised); there is
+//! simply no single-gate mutation that violates only it.
+
+use anyhow::{ensure, Result};
+
+use crate::aldram::{AlDram, RegionTable};
+use crate::exec::Pool;
+use crate::mem::address::AddrMap;
+use crate::mem::dram::GateMutation;
+use crate::mem::system::{ChannelConfig, System, SystemConfig};
+use crate::timing::TimingParams;
+use crate::workloads::fuzz::FuzzSource;
+
+use super::{CheckSummary, Violation};
+
+/// Long enough for two REFs under the x16 postponement mutant.
+pub const DEFAULT_CYCLES: u64 = 140_000;
+
+/// Every seeded mutant, one per perturbable gate / lookup.
+pub fn mutants() -> Vec<GateMutation> {
+    vec![
+        GateMutation::Trcd,
+        GateMutation::Trp,
+        GateMutation::Tras,
+        GateMutation::Trrd,
+        GateMutation::Tfaw,
+        GateMutation::Twr,
+        GateMutation::Twtr,
+        GateMutation::Trtp,
+        GateMutation::Tccd,
+        GateMutation::Trfc,
+        GateMutation::Turnaround,
+        GateMutation::RegionIgnoreRow,
+        GateMutation::RegionSwap,
+        GateMutation::TrefiPostpone,
+    ]
+}
+
+/// The harness's per-(bank, region) table: region 0 (low rows) at the
+/// paper's 55degC reduced timings, region 1 at the DDR3 standard.
+pub fn harness_table() -> RegionTable {
+    let std_t = TimingParams::ddr3_standard();
+    let fast = std_t.reduced(0.27, 0.32, 0.33, 0.18);
+    let map = AddrMap::ddr3_2gb(1);
+    let mut entries = Vec::with_capacity(map.banks() * 2);
+    for _bank in 0..map.banks() {
+        entries.push(AlDram::fixed(fast));
+        entries.push(AlDram::fixed(std_t));
+    }
+    RegionTable::from_regions(map.banks(), 2, entries)
+        .expect("harness table is statically valid")
+}
+
+/// tFAW stress set: the DDR3 standard with tFAW widened 30 ns -> 60 ns
+/// (24 -> 48 cycles at tCK = 1.25 ns); every other parameter keeps its
+/// JEDEC value.
+///
+/// Reachability: at the JEDEC 24-cycle window this controller can never
+/// supply a fifth same-rank ACT inside it. ACT/PRE issue only from a
+/// queue head, each head is pinned ~tRCD cycles until its column
+/// command retires it, and the rank-level read<->write turnarounds
+/// throttle the two heads further — putting a measured >= 29-cycle
+/// floor on any same-rank four-ACT span, above tFAW = 24. The gate
+/// therefore never binds, and no workload can observe it being
+/// weakened (a mutant must be *reachable* to be killable). Auditing the
+/// tFAW mutant under a 48-cycle window, well above that structural
+/// floor, makes the gate bind constantly; the harness also re-audits
+/// the unmutated baseline under this set to prove the stress
+/// configuration itself is conformant.
+pub fn stress_timings() -> TimingParams {
+    let mut t = TimingParams::ddr3_standard();
+    t.tfaw_ns = 60.0;
+    t.validate().expect("stress set is statically valid");
+    t
+}
+
+/// The module timing set a given run is audited under: the DDR3
+/// standard, except the tFAW mutant which needs [`stress_timings`] for
+/// its gate to bind at all.
+pub fn module_timings(mutation: Option<GateMutation>) -> TimingParams {
+    match mutation {
+        Some(GateMutation::Tfaw) => stress_timings(),
+        _ => TimingParams::ddr3_standard(),
+    }
+}
+
+/// One audited adversarial run; `mutation: None` is the baseline.
+pub fn run_audit(mutation: Option<GateMutation>, cycles: u64, seed: &str)
+                 -> CheckSummary {
+    run_audit_with(mutation, cycles, seed, module_timings(mutation))
+}
+
+/// [`run_audit`] with an explicit module timing set (the harness uses
+/// this to re-audit the clean baseline under [`stress_timings`]).
+pub fn run_audit_with(mutation: Option<GateMutation>, cycles: u64,
+                      seed: &str, timings: TimingParams) -> CheckSummary {
+    let map = AddrMap::ddr3_2gb(1);
+    let mut ch = ChannelConfig::profiled_regions(harness_table(), 55.0);
+    ch.timings = timings;
+    let cfg = SystemConfig::uniform(1, ch);
+    let sources = (0..2)
+        .map(|i| FuzzSource::named(map, &format!("{seed}/{i}")))
+        .collect();
+    let mut sys = System::with_sources_map(&cfg, map, sources);
+    sys.enable_check();
+    sys.set_gate_mutation(mutation);
+    sys.run(cycles);
+    sys.check_summary().expect("checker was attached")
+}
+
+#[derive(Debug, Clone)]
+pub struct MutantResult {
+    pub mutation: GateMutation,
+    pub commands: u64,
+    pub violations: u64,
+    pub first: Option<Violation>,
+}
+
+impl MutantResult {
+    pub fn detected(&self) -> bool {
+        self.violations > 0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MutationReport {
+    pub cycles: u64,
+    pub baseline: CheckSummary,
+    /// The unmutated controller re-audited under [`stress_timings`] —
+    /// the set the tFAW mutant runs with must itself be conformant.
+    pub stress_baseline: CheckSummary,
+    pub results: Vec<MutantResult>,
+}
+
+impl MutationReport {
+    pub fn detected(&self) -> usize {
+        self.results.iter().filter(|r| r.detected()).count()
+    }
+
+    /// The harness's acceptance predicate: clean baselines (standard and
+    /// stress sets) AND every mutant caught.
+    pub fn all_detected(&self) -> bool {
+        self.baseline.violations == 0
+            && self.stress_baseline.violations == 0
+            && self.results.iter().all(|r| r.detected())
+    }
+
+    pub fn require_all_detected(&self) -> Result<()> {
+        ensure!(self.baseline.violations == 0,
+                "mutation baseline is not clean: {} violation(s) — the \
+                 checker disagrees with the unmutated controller",
+                self.baseline.violations);
+        ensure!(self.stress_baseline.violations == 0,
+                "stress-set baseline is not clean: {} violation(s) — the \
+                 checker disagrees with the unmutated controller under \
+                 the widened-tFAW set",
+                self.stress_baseline.violations);
+        for r in &self.results {
+            ensure!(r.detected(),
+                    "mutant {:?} escaped: {} commands, no violations",
+                    r.mutation, r.commands);
+        }
+        Ok(())
+    }
+}
+
+/// Run the full harness: clean baselines under the standard and stress
+/// sets plus every mutant, fanned out over `jobs` workers.
+pub fn run_harness(cycles: u64, seed: &str, jobs: usize) -> MutationReport {
+    let ms = mutants();
+    let runs: Vec<(Option<GateMutation>, TimingParams)> =
+        [(None, TimingParams::ddr3_standard()), (None, stress_timings())]
+            .into_iter()
+            .chain(ms.into_iter().map(|m| (Some(m), module_timings(Some(m)))))
+            .collect();
+    let summaries = Pool::new(jobs)
+        .run(runs.len(), |i| run_audit_with(runs[i].0, cycles, seed,
+                                            runs[i].1));
+    let mut it = summaries.into_iter();
+    let baseline = it.next().expect("baseline run present");
+    let stress_baseline = it.next().expect("stress baseline run present");
+    let results = runs[2..]
+        .iter()
+        .zip(it)
+        .map(|((m, _), s)| MutantResult {
+            mutation: m.expect("mutant runs carry a mutation"),
+            commands: s.commands,
+            violations: s.violations,
+            first: s.sample.first().cloned(),
+        })
+        .collect();
+    MutationReport { cycles, baseline, stress_baseline, results }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_least_ten_mutants_and_no_duplicates() {
+        let ms = mutants();
+        assert!(ms.len() >= 10, "{} mutants", ms.len());
+        for (i, a) in ms.iter().enumerate() {
+            assert!(!ms[i + 1..].contains(a), "duplicate mutant {a:?}");
+        }
+    }
+
+    #[test]
+    fn stress_set_widens_only_tfaw() {
+        let std_t = TimingParams::ddr3_standard();
+        let s = stress_timings();
+        assert_eq!(s.tfaw_ns, 60.0);
+        let mut back = s;
+        back.tfaw_ns = std_t.tfaw_ns;
+        assert_eq!(back, std_t, "stress set differs beyond tFAW");
+        assert_eq!(module_timings(Some(GateMutation::Tfaw)), s);
+        assert_eq!(module_timings(Some(GateMutation::Trcd)), std_t);
+        assert_eq!(module_timings(None), std_t);
+    }
+
+    #[test]
+    fn baseline_is_clean_and_a_core_gate_mutant_is_caught() {
+        // The full 14-mutant sweep lives in tests/integration_check.rs;
+        // this is the cheap smoke: a clean baseline and the most direct
+        // mutant (tRCD) at short horizon.
+        let base = run_audit(None, 30_000, "smoke");
+        assert!(base.commands > 1_000, "harness idle: {} cmds", base.commands);
+        assert_eq!(base.violations, 0, "{}", base.line());
+        let m = run_audit(Some(GateMutation::Trcd), 30_000, "smoke");
+        assert!(m.violations > 0, "tRCD mutant escaped: {}", m.line());
+    }
+}

@@ -122,10 +122,21 @@ pub fn fig4_jobs(cycles: u64, reps: usize, reductions: [f64; 4],
 pub fn fig4_jobs_with(cycles: u64, reps: usize, reductions: [f64; 4],
                       jobs: usize, driver: Driver) -> Fig4Result {
     let base_cfg = SystemConfig::paper_default();
-    let fast_cfg = SystemConfig::paper_default().with_timings(
-        TimingParams::ddr3_standard().reduced(
-            reductions[0], reductions[1], reductions[2], reductions[3]));
+    let fast_cfg = SystemConfig::paper_default()
+        .with_timings(reduced_validated(reductions));
     fig4_pair(cycles, reps, jobs, driver, &base_cfg, &fast_cfg)
+}
+
+/// Every caller-supplied reduction vector passes the timing validator
+/// before it reaches a controller: a negative or >100% reduction would
+/// otherwise silently simulate nonsensical (or super-standard) timings
+/// that the protocol checker then has to audit against.
+fn reduced_validated(reductions: [f64; 4]) -> TimingParams {
+    let t = TimingParams::ddr3_standard().reduced(
+        reductions[0], reductions[1], reductions[2], reductions[3]);
+    t.validate()
+        .expect("reduction percentages produce an invalid timing set");
+    t
 }
 
 /// Fig 4 for *one profiled module*: the AL-DRAM side installs the DIMM's
@@ -267,8 +278,7 @@ pub fn sensitivity(cycles: u64, reductions: [f64; 4]) -> Vec<SensitivityRow> {
 /// configurations — the paper's claim is that it helps in *all* of them.
 pub fn sensitivity_jobs(cycles: u64, reductions: [f64; 4],
                         jobs: usize) -> Vec<SensitivityRow> {
-    let fast = TimingParams::ddr3_standard().reduced(
-        reductions[0], reductions[1], reductions[2], reductions[3]);
+    let fast = reduced_validated(reductions);
     let cfgs: Vec<(SystemConfig, SystemConfig)> = (0..SENSITIVITY_GRID.len())
         .map(|gi| {
             let base = sensitivity_base_cfg(gi);
@@ -636,8 +646,7 @@ pub struct PowerResult {
 /// DRAM power comparison on memory-intensive multi-core runs. The paper's
 /// §8.4 reports 5.8% average DRAM power reduction.
 pub fn power_eval(cycles: u64, reductions: [f64; 4]) -> Vec<PowerResult> {
-    let fast = TimingParams::ddr3_standard().reduced(
-        reductions[0], reductions[1], reductions[2], reductions[3]);
+    let fast = reduced_validated(reductions);
     power_pair(cycles, &SystemConfig::paper_default(),
                &SystemConfig::paper_default().with_timings(fast))
 }

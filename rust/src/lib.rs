@@ -15,6 +15,7 @@
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod aldram;
+pub mod check;
 pub mod cli;
 pub mod eval;
 pub mod exec;

@@ -29,8 +29,10 @@
 //!                    round-trip diffing)
 //!   repro bench-sim  [--cycles N] [--trace FILE]  (quick end-to-end smoke;
 //!                    prints the TIMESKIP line: event-driven vs
-//!                    cycle-stepped, and the SPEEDUP[SOURCE] line: batched
-//!                    vs per-reference source refill)
+//!                    cycle-stepped, the SPEEDUP[SOURCE] line: batched
+//!                    vs per-reference source refill, and the
+//!                    SPEEDUP[CHECK] line: inline conformance-audit
+//!                    overhead)
 //!   repro bench-profile [--cells N]        (profiling-engine smoke; prints
 //!                    the SPEEDUP[PROFILE] and SPEEDUP[SWEEP] lines:
 //!                    scalar native vs vectorized simd / probed+warm sweep)
@@ -38,6 +40,20 @@
 //!                    write their SPEEDUP[*] comparisons as structured
 //!                    records to BENCH_SIM.json / BENCH_PROFILE.json — the
 //!                    repo-root baselines CI diffs structurally)
+//!   repro check      run|capture|replay|info|mutate   (independent JEDEC
+//!                    protocol-conformance audit, DESIGN.md §13: `run`
+//!                    audits a simulation inline (--driver fast|step|both
+//!                    cross-certifies the drivers; --fuzz sources by
+//!                    default, or --workload/--mix; --grid for the
+//!                    adversarial region config); `capture --out F` records
+//!                    the command stream to an ALCT file; `replay`/`info`
+//!                    audit/validate one offline; `mutate` (also `repro
+//!                    check --mutate`) runs the seeded gate-mutation
+//!                    harness and fails unless every mutant is detected)
+//!
+//! `--check` on any other command attaches the conformance checker to
+//! every simulated memory system and fails the process at exit if any
+//! command-stream violation was observed (the aggregate CHECK line).
 //!
 //! Every system-level evaluation runs on the event-driven time-skip
 //! driver (`System::run_fast`), which is bit-identical to the
@@ -274,8 +290,10 @@ fn stats_line(s: &aldram::mem::SystemStats) -> String {
 /// The `bench-sim` suite: one request source, base vs AL-DRAM, the
 /// time-skip driver vs the cycle-stepped oracle (identical numbers,
 /// TIMESKIP wall-clock line per timing set), plus the SPEEDUP[SOURCE]
-/// line: batched vs per-reference source refill. Every comparison is
-/// also returned as a structured record for `bench all`'s JSON emitter.
+/// line: batched vs per-reference source refill, plus the SPEEDUP[CHECK]
+/// line: the inline protocol-conformance audit's overhead (observation-
+/// only, identical stats asserted). Every comparison is also returned as
+/// a structured record for `bench all`'s JSON emitter.
 fn bench_sim(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
     use aldram::mem::{System, SystemConfig};
     use aldram::timing::TimingParams;
@@ -300,6 +318,7 @@ fn bench_sim(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
         ("al-dram-55C", TimingParams::ddr3_standard()
             .reduced(0.27, 0.32, 0.33, 0.18)),
     ] {
+        t.validate()?;
         let cfg = SystemConfig::paper_default().with_timings(t);
         let mut seq = System::with_sources(&cfg, sources_for(label)?);
         let t0 = Instant::now();
@@ -368,6 +387,40 @@ fn bench_sim(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
     records.extend(bench.speedup_record(
         "SOURCE", "source/batch1",
         &format!("source/batch{SOURCE_BATCH}")));
+
+    // Inline protocol-checker overhead (satellite of DESIGN.md §13):
+    // identical run with and without the conformance audit attached. The
+    // checker is observation-only — identical stats asserted, zero
+    // violations required — so SPEEDUP[CHECK] is purely the tap + audit
+    // cost (a ratio just under 1.0; EXPERIMENTS.md records it).
+    let run_checked = |checked: bool| {
+        let cfg = SystemConfig::paper_default();
+        let src = NamedSource {
+            name: wsrc.name.to_string(),
+            seed: format!("checkbench/{seed}"),
+            footprint: wsrc.footprint,
+            source: wsrc.source_with_batch(
+                &format!("checkbench/{seed}"), SOURCE_BATCH),
+        };
+        let mut sys = System::with_sources(&cfg, vec![src]);
+        if checked {
+            sys.enable_check();
+        }
+        let stats = sys.run_fast(cycles);
+        let sum = sys.check_summary();
+        (stats, sum)
+    };
+    let (plain, _) = run_checked(false);
+    let (audited, sum) = run_checked(true);
+    let sum = sum.expect("checker was attached");
+    anyhow::ensure!(plain.reads_done == audited.reads_done
+                    && plain.cores[0].ipc == audited.cores[0].ipc,
+                    "attaching the checker changed the simulated stream");
+    anyhow::ensure!(sum.violations == 0,
+                    "bench workload violated the protocol: {}", sum.line());
+    bench.bench("check/off", || run_checked(false).0.reads_done);
+    bench.bench("check/on", || run_checked(true).0.reads_done);
+    records.extend(bench.speedup_record("CHECK", "check/off", "check/on"));
     bench.finish();
     Ok(records)
 }
@@ -452,6 +505,22 @@ fn write_bench_json(path: &std::path::Path, records: &[SpeedupRecord])
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    // `--check` attaches the independent protocol checker to every System
+    // any command builds (zero code change per command — see check::
+    // enable_inline). The `check` command itself manages checkers
+    // explicitly (its mutation harness *expects* violations), so the
+    // global audit stays off there.
+    if args.has("check") && args.cmd() != Some("check") {
+        aldram::check::enable_inline();
+    }
+    run(args)?;
+    // No-op unless --check was enabled; errors if any audited system saw
+    // a protocol violation. Sits outside run() so every early `return
+    // Ok(())` path is still covered.
+    aldram::check::report_inline()
+}
+
+fn run(args: Args) -> anyhow::Result<()> {
     let out = PathBuf::from(args.str("out", "results"));
     let g = &params().geometry;
     let jobs = args.jobs();
@@ -1009,6 +1078,224 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
+        Some("check") => {
+            use aldram::check::{cmd_trace, mutate};
+            use aldram::eval::Driver;
+            use aldram::mem::address::AddrMap;
+            use aldram::mem::{ChannelConfig, System, SystemConfig};
+            use aldram::timing::TimingParams;
+            use aldram::workloads::{by_name, fuzz::FuzzSource, mix,
+                                    NamedSource};
+
+            // `repro check --mutate` is the ISSUE-spelled alias for
+            // `repro check mutate`.
+            let which = args.sub(1)
+                .unwrap_or(if args.has("mutate") { "mutate" } else { "run" });
+            let cycles = args.get("cycles", mutate::DEFAULT_CYCLES);
+            let seed = args.seed();
+            let map = AddrMap::ddr3_2gb(1);
+            // Sources: adversarial fuzz by default (2 cores), or any suite
+            // workload / named mix — same flags as `trace record`.
+            let build_sources = |label: &str|
+                                -> anyhow::Result<Vec<NamedSource>> {
+                if args.has("mix") {
+                    let name = args.str("mix", "");
+                    let m = mix::mix_by_name(&name).ok_or_else(|| {
+                        anyhow::anyhow!("unknown mix `{name}` (see \
+                                         workloads::mix::suite)")
+                    })?;
+                    Ok(m.sources(&format!("check/{seed}/{label}")))
+                } else if args.has("workload") {
+                    let name = args.str("workload", "");
+                    let w = by_name(&name).ok_or_else(|| {
+                        anyhow::anyhow!("unknown workload `{name}`")
+                    })?;
+                    let cores = args.get("cores", 1usize);
+                    Ok((0..cores)
+                        .map(|c| w.named_source(
+                            &format!("check/{seed}/{label}/core{c}")))
+                        .collect())
+                } else {
+                    let cores = args.get("cores", 2usize);
+                    Ok((0..cores)
+                        .map(|c| FuzzSource::named(
+                            map, &format!("{seed}/{label}/{c}")))
+                        .collect())
+                }
+            };
+            // Config: standard timings by default; --aldram for the
+            // paper's 55degC uniformly-reduced module; --grid for the
+            // adversarial 2-regions-per-bank table the mutation harness
+            // uses (fast low rows, standard high rows).
+            let config = || -> SystemConfig {
+                if args.has("grid") {
+                    SystemConfig::uniform(
+                        1,
+                        ChannelConfig::profiled_regions(
+                            mutate::harness_table(), 55.0))
+                } else if args.has("aldram") {
+                    let fast = TimingParams::ddr3_standard()
+                        .reduced(0.27, 0.32, 0.33, 0.18);
+                    SystemConfig::uniform(
+                        1, ChannelConfig::profiled(AlDram::fixed(fast), 55.0))
+                } else {
+                    SystemConfig::paper_default()
+                }
+            };
+            let trace_path = || -> anyhow::Result<PathBuf> {
+                anyhow::ensure!(args.has("trace"),
+                                "check {which} needs --trace FILE");
+                Ok(PathBuf::from(args.str("trace", "")))
+            };
+            match which {
+                "run" => {
+                    // Audit one simulation inline. `--driver both` runs
+                    // the time-skip driver *and* the cycle-stepped oracle
+                    // on the same sources and requires them to produce the
+                    // same audited command count — the conformance leg of
+                    // the run/run_fast equivalence matrix.
+                    let drivers: Vec<(&str, Driver)> =
+                        match args.str("driver", "fast").as_str() {
+                            "fast" => vec![("fast", Driver::TimeSkip)],
+                            "step" => vec![("step", Driver::CycleStepped)],
+                            "both" => vec![("step", Driver::CycleStepped),
+                                           ("fast", Driver::TimeSkip)],
+                            other => anyhow::bail!(
+                                "unknown --driver `{other}` (fast|step|both)"),
+                        };
+                    let mut sums = Vec::new();
+                    for (dl, d) in &drivers {
+                        let mut sys = System::with_sources_map(
+                            &config(), map, build_sources("run")?);
+                        sys.enable_check();
+                        let stats = match d {
+                            Driver::TimeSkip => sys.run_fast(cycles),
+                            Driver::CycleStepped => sys.run(cycles),
+                        };
+                        let reports = sys.check_reports();
+                        let sum = sys.check_summary()
+                            .expect("checker was attached");
+                        println!("driver {dl}: {}", stats_line(&stats));
+                        for r in reports {
+                            print!("{r}");
+                        }
+                        println!("{}", sum.line());
+                        sums.push((*dl, sum));
+                    }
+                    if sums.len() == 2 {
+                        anyhow::ensure!(
+                            sums[0].1.commands == sums[1].1.commands,
+                            "drivers audited different command counts: \
+                             step {} vs fast {}",
+                            sums[0].1.commands, sums[1].1.commands);
+                        println!("drivers agree: {} audited commands each",
+                                 sums[0].1.commands);
+                    }
+                    for (dl, s) in &sums {
+                        anyhow::ensure!(
+                            s.violations == 0,
+                            "driver {dl}: {} protocol violation(s)",
+                            s.violations);
+                    }
+                }
+                "capture" => {
+                    // Record the *command* stream (not the request stream
+                    // `trace record` captures) to a versioned ALCT file
+                    // for offline audit. Single-channel configs only —
+                    // the ALCT header carries one geometry.
+                    let out_path =
+                        PathBuf::from(args.str("out", "run.alct"));
+                    let cfg = config();
+                    let mut sys = System::with_sources_map(
+                        &cfg, map, build_sources("capture")?);
+                    let tck = sys.controllers()[0].tck_ns();
+                    let w = cmd_trace::create_shared(
+                        map.ranks(), map.banks(), map.row_bits, tck);
+                    sys.attach_cmd_tap(0, w.clone());
+                    let driver = match args.str("driver", "fast").as_str() {
+                        "fast" => Driver::TimeSkip,
+                        "step" => Driver::CycleStepped,
+                        other => anyhow::bail!(
+                            "unknown --driver `{other}` (fast|step)"),
+                    };
+                    let stats = match driver {
+                        Driver::TimeSkip => sys.run_fast(cycles),
+                        Driver::CycleStepped => sys.run(cycles),
+                    };
+                    drop(sys); // release the controller's tap handle
+                    let n = cmd_trace::finish_shared(w, &out_path)?;
+                    println!("captured {n} command-trace records over {} \
+                              cycles to {}",
+                             stats.cycles, out_path.display());
+                    println!("{}", stats_line(&stats));
+                }
+                "replay" => {
+                    let path = trace_path()?;
+                    let (info, ck, report) = cmd_trace::replay(&path)?;
+                    println!("cmd trace {} (v{}): {}r x {}b, {} row bits, \
+                              tck {} ns",
+                             path.display(), info.version, info.ranks,
+                             info.banks, info.row_bits, info.tck);
+                    println!("  {} records: {} commands, {} timing / {} \
+                              region / {} scale updates, last cycle {}",
+                             info.records, info.commands,
+                             info.timing_updates, info.region_updates,
+                             info.scale_updates, info.last_cycle);
+                    print!("{report}");
+                    anyhow::ensure!(
+                        ck.violations() == 0,
+                        "{} protocol violation(s) in {}",
+                        ck.violations(), path.display());
+                }
+                "info" => {
+                    let path = trace_path()?;
+                    let info = cmd_trace::info(&path)?;
+                    println!("cmd trace {} (v{}): {}r x {}b, {} row bits, \
+                              tck {} ns",
+                             path.display(), info.version, info.ranks,
+                             info.banks, info.row_bits, info.tck);
+                    println!("  {} records: {} commands, {} timing / {} \
+                              region / {} scale updates, last cycle {} \
+                              (validated)",
+                             info.records, info.commands,
+                             info.timing_updates, info.region_updates,
+                             info.scale_updates, info.last_cycle);
+                }
+                "mutate" => {
+                    // The sensitivity harness: a clean baseline plus one
+                    // run per seeded controller-gate mutant; fails unless
+                    // the checker catches every one of them.
+                    let r = mutate::run_harness(cycles, &seed, jobs);
+                    println!("== mutation harness: {} mutants x {} cycles \
+                              (seed {seed}) ==",
+                             r.results.len(), r.cycles);
+                    println!("baseline  {}", r.baseline.line());
+                    println!("baseline* {}  (*widened-tFAW stress set, \
+                              used for the Tfaw mutant)",
+                             r.stress_baseline.line());
+                    for m in &r.results {
+                        let status = if m.detected() { "DETECTED" }
+                                     else { "ESCAPED " };
+                        match &m.first {
+                            Some(v) => println!(
+                                "{status}  {:<16} {:>6} violations  \
+                                 first: {v}",
+                                format!("{:?}", m.mutation), m.violations),
+                            None => println!(
+                                "{status}  {:<16} {:>6} violations",
+                                format!("{:?}", m.mutation), m.violations),
+                        }
+                    }
+                    println!("detected {}/{} mutants", r.detected(),
+                             r.results.len());
+                    r.require_all_detected()?;
+                }
+                other => anyhow::bail!(
+                    "unknown check subcommand `{other}` \
+                     (run|capture|replay|info|mutate)"),
+            }
+        }
+
         Some("bench-sim") => {
             bench_sim(&args)?;
         }
@@ -1037,10 +1324,11 @@ fn main() -> anyhow::Result<()> {
 
         _ => {
             println!("repro — AL-DRAM reproduction (see DESIGN.md)");
-            println!("commands: calibrate | profile | figure | ablate | eval | trace | bench all | bench-sim | bench-profile");
+            println!("commands: calibrate | profile | figure | ablate | eval | trace | check | bench all | bench-sim | bench-profile");
             println!("global flags: --jobs N (parallel fan-out width, \
                       default {}), --seed S (workload/mix RNG label, \
-                      default 0)", exec::default_jobs());
+                      default 0), --check (attach the protocol-conformance \
+                      checker to every simulation)", exec::default_jobs());
         }
     }
     Ok(())

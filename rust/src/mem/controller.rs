@@ -3,11 +3,62 @@
 //! runtime-swappable timing set (the paper's evaluated system exposes
 //! exactly this through BIOS-visible config registers [10, 11]).
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 
 use super::address::AddrMap;
-use super::dram::{Cycle, Rank, RegionCycles};
+use super::dram::{Cycle, GateMutation, Rank, RegionCycles};
 use crate::timing::{TimingCycles, TimingParams};
+
+/// DDR3 command classes visible on the command bus. What the command tap
+/// reports; the protocol checker re-derives legality from this stream
+/// alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmdKind {
+    Act,
+    Read,
+    Write,
+    Pre,
+    Ref,
+}
+
+impl CmdKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CmdKind::Act => "ACT",
+            CmdKind::Read => "RD",
+            CmdKind::Write => "WR",
+            CmdKind::Pre => "PRE",
+            CmdKind::Ref => "REF",
+        }
+    }
+}
+
+/// One issued command as seen at the controller's pins. For `Pre` the row
+/// is the row being closed (tRP is region-scoped, so the auditor needs
+/// it); for `Ref` bank and row are 0.
+#[derive(Debug, Clone, Copy)]
+pub struct Cmd {
+    pub kind: CmdKind,
+    pub rank: u8,
+    pub bank: u8,
+    pub row: u64,
+    pub cycle: Cycle,
+}
+
+/// Consumer of the controller's command stream (protocol checker, command
+/// trace writer). Timing notifications mirror the controller's own
+/// `set_*` calls so a sink always knows which `TimingParams` were active
+/// when a command issued — constraint windows must be baked from the set
+/// live at issue time, exactly as the controller bakes its deadlines.
+pub trait CmdSink {
+    fn cmd(&mut self, c: Cmd);
+    fn on_timings(&mut self, _t: &TimingParams) {}
+    fn on_region_timings(&mut self, _regions_per_bank: usize,
+                         _t: Option<&[TimingParams]>) {}
+    fn on_refresh_scale(&mut self, _scale: f64) {}
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RowPolicy {
@@ -108,6 +159,12 @@ pub struct Controller {
     /// Refresh-interval multiple of the 64 ms standard (AL-DRAM leaves it
     /// at 1.0; §7.1 experiments vary it).
     refresh_scale: f64,
+    /// Command tap: every issued command (plus timing-set switches) is
+    /// forwarded here. None in normal operation — the disabled cost is
+    /// one branch per issue site.
+    tap: Option<Rc<RefCell<dyn CmdSink>>>,
+    /// Seeded bug for the checker mutation harness (None = correct).
+    mutation: Option<GateMutation>,
 }
 
 impl Controller {
@@ -134,6 +191,40 @@ impl Controller {
             timings_ns: timings,
             tck_ns: tck,
             refresh_scale: 1.0,
+            tap: None,
+            mutation: None,
+        }
+    }
+
+    /// Attach a command sink (protocol checker / trace writer). The sink
+    /// is immediately told the current timing set and refresh scale, and
+    /// from then on sees every issued command and every timing switch in
+    /// issue order. Must be attached before any region table is installed
+    /// (the `System` constructor attaches taps first).
+    pub fn attach_tap(&mut self, tap: Rc<RefCell<dyn CmdSink>>) {
+        {
+            let mut t = tap.borrow_mut();
+            t.on_timings(&self.timings_ns);
+            t.on_refresh_scale(self.refresh_scale);
+        }
+        self.tap = Some(tap);
+    }
+
+    #[inline]
+    fn tap_cmd(&self, kind: CmdKind, rank: usize, bank: usize, row: u64,
+               now: Cycle) {
+        if let Some(tap) = &self.tap {
+            tap.borrow_mut().cmd(Cmd { kind, rank: rank as u8,
+                                       bank: bank as u8, row, cycle: now });
+        }
+    }
+
+    /// Seed (or clear) a gate bug for the mutation harness. Forwarded to
+    /// every rank; the tREFI-postponement mutant lives in `trefi()`.
+    pub fn set_gate_mutation(&mut self, m: Option<GateMutation>) {
+        self.mutation = m;
+        for r in &mut self.ranks {
+            r.set_mutation(m);
         }
     }
 
@@ -154,6 +245,9 @@ impl Controller {
         for r in &mut self.ranks {
             r.set_timings(tc);
         }
+        if let Some(tap) = &self.tap {
+            tap.borrow_mut().on_timings(&timings);
+        }
     }
 
     /// Bank-granular AL-DRAM (§5.2 future work): install per-bank core
@@ -171,6 +265,9 @@ impl Controller {
     /// so `regions_per_bank` must be a power of two.
     pub fn set_region_timings(&mut self, regions_per_bank: usize,
                               timings: Option<&[TimingParams]>) {
+        if let Some(tap) = &self.tap {
+            tap.borrow_mut().on_region_timings(regions_per_bank, timings);
+        }
         let Some(ts) = timings else {
             for r in &mut self.ranks {
                 r.set_region_timings(None);
@@ -210,6 +307,9 @@ impl Controller {
                 *deadline = (*deadline + new).saturating_sub(old);
             }
         }
+        if let Some(tap) = &self.tap {
+            tap.borrow_mut().on_refresh_scale(scale);
+        }
     }
 
     /// Whether the write queue is currently in drain mode (crossed `wq_hi`
@@ -227,7 +327,14 @@ impl Controller {
 
     fn trefi(&self) -> u64 {
         let tc: TimingCycles = self.timings_ns.to_cycles(self.tck_ns);
-        ((tc.trefi as f64) * self.refresh_scale).max(1.0) as u64
+        let base = ((tc.trefi as f64) * self.refresh_scale).max(1.0) as u64;
+        // Mutation harness: stretch the interval past the JEDEC 9x tREFI
+        // postponement bound (16x so the bug is unambiguous).
+        if self.mutation == Some(GateMutation::TrefiPostpone) {
+            base * 16
+        } else {
+            base
+        }
     }
 
     pub fn can_accept(&self, is_write: bool) -> bool {
@@ -306,16 +413,18 @@ impl Controller {
                 // Close open rows as they become precharge-able.
                 if !self.ranks[r].all_banks_idle() {
                     for b in 0..self.map.banks() {
-                        if self.ranks[r].banks[b].open_row().is_some()
-                            && self.ranks[r].can_pre(b, now)
-                        {
-                            self.ranks[r].issue_pre(b, now);
-                            self.stats.issued_cycles += 1;
-                            return done; // one command per cycle
+                        if let Some(row) = self.ranks[r].banks[b].open_row() {
+                            if self.ranks[r].can_pre(b, now) {
+                                self.ranks[r].issue_pre(b, now);
+                                self.tap_cmd(CmdKind::Pre, r, b, row, now);
+                                self.stats.issued_cycles += 1;
+                                return done; // one command per cycle
+                            }
                         }
                     }
                 } else if self.ranks[r].can_refresh(now) {
                     self.ranks[r].issue_refresh(now);
+                    self.tap_cmd(CmdKind::Ref, r, 0, 0, now);
                     self.refresh_due[r] = false;
                     self.next_refresh[r] += self.trefi();
                     self.stats.refreshes += 1;
@@ -359,6 +468,7 @@ impl Controller {
                             .any(|p| p.rank == r && p.bank == b && p.row == row);
                         if !wanted && self.ranks[r].can_pre(b, now) {
                             self.ranks[r].issue_pre(b, now);
+                            self.tap_cmd(CmdKind::Pre, r, b, row, now);
                             break 'outer;
                         }
                     }
@@ -412,6 +522,8 @@ impl Controller {
             } else {
                 rk.issue_read(p.bank, p.row, now)
             };
+            let kind = if writes { CmdKind::Write } else { CmdKind::Read };
+            self.tap_cmd(kind, p.rank, p.bank, p.row, now);
             if !p.counted {
                 self.stats.row_hits += 1;
             }
@@ -440,6 +552,7 @@ impl Controller {
             Some(row) if row != head.row => {
                 if self.ranks[head.rank].can_pre(head.bank, now) {
                     self.ranks[head.rank].issue_pre(head.bank, now);
+                    self.tap_cmd(CmdKind::Pre, head.rank, head.bank, row, now);
                     if !head.counted {
                         self.stats.row_conflicts += 1;
                     }
@@ -450,6 +563,8 @@ impl Controller {
             None => {
                 if self.ranks[head.rank].can_act(head.bank, now) {
                     self.ranks[head.rank].issue_act(head.bank, head.row, now);
+                    self.tap_cmd(CmdKind::Act, head.rank, head.bank, head.row,
+                                 now);
                     if !head.counted {
                         self.stats.row_misses += 1;
                     }

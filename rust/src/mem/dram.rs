@@ -84,6 +84,52 @@ impl RegionCycles {
     }
 }
 
+/// Seeded controller bugs for the protocol-checker mutation harness
+/// (`repro check mutate`). Each variant perturbs exactly one timing gate
+/// or the region lookup, always at the *deadline-baking* point inside
+/// `issue_*` / `timings_for_row` — so the `can_*` predicates and the
+/// time-skip `earliest_*` queries stay mutually consistent and the bug is
+/// observable only in the emitted command stream, which is precisely what
+/// the independent checker audits. `MUTATION_SLACK` cycles are shaved off
+/// each mutated window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateMutation {
+    /// ACT->column window too short.
+    Trcd,
+    /// PRE->ACT window too short.
+    Trp,
+    /// ACT->PRE window too short.
+    Tras,
+    /// ACT->ACT (different banks) window too short.
+    Trrd,
+    /// Rolling four-ACT window logged too early (fifth ACT admitted
+    /// before the real window expires).
+    Tfaw,
+    /// Write recovery before PRE too short.
+    Twr,
+    /// Write->read turnaround too short.
+    Twtr,
+    /// Read->PRE window too short.
+    Trtp,
+    /// Column->column spacing too short.
+    Tccd,
+    /// Refresh fence released too early.
+    Trfc,
+    /// Read->write bus turnaround too short.
+    Turnaround,
+    /// Region lookup ignores the row: every row gets region 0's (fast)
+    /// timings.
+    RegionIgnoreRow,
+    /// Region lookup mirrored: region r resolves to `regions-1-r`.
+    RegionSwap,
+    /// Refresh cadence stretched past the JEDEC 9x tREFI postponement
+    /// bound (applied in `Controller::trefi`, not here).
+    TrefiPostpone,
+}
+
+/// Cycles shaved off a mutated timing window.
+pub const MUTATION_SLACK: u64 = 3;
+
 /// One rank of DDR3 devices (8 banks).
 #[derive(Debug, Clone)]
 pub struct Rank {
@@ -103,6 +149,8 @@ pub struct Rank {
     next_write: Cycle,
     /// Rank busy until (refresh).
     busy_until: Cycle,
+    /// Seeded gate bug for the checker mutation harness (None = correct).
+    mutation: Option<GateMutation>,
     /// Statistics: command counts.
     pub n_act: u64,
     pub n_pre: u64,
@@ -127,6 +175,7 @@ impl Rank {
             next_read: 0,
             next_write: 0,
             busy_until: 0,
+            mutation: None,
             n_act: 0,
             n_pre: 0,
             n_read: 0,
@@ -173,8 +222,37 @@ impl Rank {
     #[inline]
     pub fn timings_for_row(&self, bank: usize, row: u64) -> TimingCycles {
         match &self.region {
-            Some(m) => m.lookup(bank, row),
+            Some(m) => match self.mutation {
+                None => m.lookup(bank, row),
+                Some(mu) => {
+                    let mut r = ((row >> m.shift) as usize)
+                        .min(m.regions_per_bank - 1);
+                    match mu {
+                        GateMutation::RegionIgnoreRow => r = 0,
+                        GateMutation::RegionSwap => {
+                            r = m.regions_per_bank - 1 - r;
+                        }
+                        _ => {}
+                    }
+                    m.t[bank * m.regions_per_bank + r]
+                }
+            },
             None => self.bank_timings(bank),
+        }
+    }
+
+    /// Install (or clear) a seeded gate bug for the mutation harness.
+    pub fn set_mutation(&mut self, m: Option<GateMutation>) {
+        self.mutation = m;
+    }
+
+    /// `base` shaved by `MUTATION_SLACK` when `m` is the active mutation.
+    #[inline]
+    fn mutated(&self, m: GateMutation, base: u64) -> u64 {
+        if self.mutation == Some(m) {
+            base.saturating_sub(MUTATION_SLACK)
+        } else {
+            base
         }
     }
 
@@ -248,13 +326,21 @@ impl Rank {
         self.track_open(now);
         let rank_t = self.t;
         let t = self.timings_for_row(bank, row);
+        let trcd = self.mutated(GateMutation::Trcd, t.trcd as u64);
+        let tras = self.mutated(GateMutation::Tras, t.tras as u64);
+        let trrd = self.mutated(GateMutation::Trrd, rank_t.trrd as u64);
+        let logged = if self.mutation == Some(GateMutation::Tfaw) {
+            now.saturating_sub(MUTATION_SLACK)
+        } else {
+            now
+        };
         let b = &mut self.banks[bank];
         b.state = BankState::Open(row);
-        b.next_col = now + t.trcd as u64;
-        b.next_pre = now + t.tras as u64;
+        b.next_col = now + trcd;
+        b.next_pre = now + tras;
         b.next_act = now + t.trc as u64;
-        self.next_act_any = now + rank_t.trrd as u64;
-        self.act_window.push_back(now);
+        self.next_act_any = now + trrd;
+        self.act_window.push_back(logged);
         if self.act_window.len() > 4 {
             self.act_window.pop_front();
         }
@@ -269,13 +355,16 @@ impl Rank {
         let data_start = (now + t.tcl as u64).max(self.data_free);
         let data_end = data_start + t.tburst as u64;
         self.data_free = data_end;
-        self.next_read = now + t.tccd as u64;
+        self.next_read = now + self.mutated(GateMutation::Tccd, t.tccd as u64);
         // read->write turnaround: write CAS may not collide on the bus.
+        let turn = (t.tcl as u64 + t.tburst as u64 + 2)
+            .saturating_sub(t.tcwl as u64);
         self.next_write = self
             .next_write
-            .max(now + t.tcl as u64 + t.tburst as u64 + 2 - t.tcwl as u64);
+            .max(now + self.mutated(GateMutation::Turnaround, turn));
+        let trtp = self.mutated(GateMutation::Trtp, t.trtp as u64);
         let b = &mut self.banks[bank];
-        b.next_pre = b.next_pre.max(now + t.trtp as u64);
+        b.next_pre = b.next_pre.max(now + trtp);
         self.n_read += 1;
         data_end
     }
@@ -288,12 +377,14 @@ impl Rank {
         let data_start = (now + t.tcwl as u64).max(self.data_free);
         let data_end = data_start + t.tburst as u64;
         self.data_free = data_end;
-        self.next_write = now + t.tccd as u64;
+        self.next_write = now + self.mutated(GateMutation::Tccd, t.tccd as u64);
         // write->read same rank: tWTR after the data burst.
-        self.next_read = self.next_read.max(data_end + t.twtr as u64);
+        let twtr = self.mutated(GateMutation::Twtr, t.twtr as u64);
+        self.next_read = self.next_read.max(data_end + twtr);
+        let twr = self.mutated(GateMutation::Twr, t.twr as u64);
         let b = &mut self.banks[bank];
         // tWR: write recovery after the data burst before PRE.
-        b.next_pre = b.next_pre.max(data_end + t.twr as u64);
+        b.next_pre = b.next_pre.max(data_end + twr);
         self.n_write += 1;
         data_end
     }
@@ -304,16 +395,18 @@ impl Rank {
         // tRP is region-scoped: resolve via the row being closed.
         let row = self.banks[bank].open_row().unwrap_or(0);
         let t = self.timings_for_row(bank, row);
+        let trp = self.mutated(GateMutation::Trp, t.trp as u64);
         let b = &mut self.banks[bank];
         b.state = BankState::Idle;
-        b.next_act = b.next_act.max(now + t.trp as u64);
+        b.next_act = b.next_act.max(now + trp);
         self.open_banks -= 1;
         self.n_pre += 1;
     }
 
     pub fn issue_refresh(&mut self, now: Cycle) {
         debug_assert!(self.can_refresh(now));
-        self.busy_until = now + self.t.trfc as u64;
+        self.busy_until = now + self.mutated(GateMutation::Trfc,
+                                             self.t.trfc as u64);
         for b in &mut self.banks {
             b.next_act = b.next_act.max(self.busy_until);
         }

@@ -9,8 +9,10 @@ pub mod dram;
 pub mod system;
 
 pub use address::{AddrMap, RegionRemap, MAX_REMAP_REGIONS};
-pub use controller::{Controller, CtrlStats, Request, RowPolicy};
+pub use controller::{Cmd, CmdKind, CmdSink, Controller, CtrlStats, Request,
+                     RowPolicy};
 pub use cpu::Core;
-pub use dram::{Bank, BankState, Cycle, Rank, RegionCycles};
+pub use dram::{Bank, BankState, Cycle, GateMutation, Rank, RegionCycles,
+               MUTATION_SLACK};
 pub use system::{ChannelConfig, ChannelStats, System, SystemConfig,
                  SystemStats};

@@ -12,12 +12,16 @@
 //! `SystemConfig::uniform` keeps the common all-channels-alike case a
 //! one-liner.
 
+use std::cell::RefCell;
 use std::path::Path;
+use std::rc::Rc;
 
 use super::address::AddrMap;
-use super::controller::{Controller, Request, RowPolicy};
+use super::controller::{CmdSink, Controller, Request, RowPolicy};
 use super::cpu::Core;
+use super::dram::GateMutation;
 use crate::aldram::{AlDram, RegionTable, ThermalModel};
+use crate::check::{self, CheckSummary, ProtocolChecker};
 use crate::timing::TimingParams;
 use crate::workloads::trace::{self, Recorder, SharedTraceWriter, StreamMeta};
 use crate::workloads::{NamedSource, WorkloadSpec};
@@ -239,6 +243,11 @@ pub struct System {
     chan_shift: u32,
     /// The address map's row size (the trace header's geometry anchor).
     row_bytes: u64,
+    /// Protocol checkers, one per channel, when conformance auditing is
+    /// on (explicitly via [`System::enable_check`] or globally via
+    /// `check::enable_inline`). Empty otherwise — the tap in the
+    /// controller is `None` and costs one branch per issued command.
+    checkers: Vec<Rc<RefCell<ProtocolChecker>>>,
     now: u64,
 }
 
@@ -309,7 +318,7 @@ impl System {
             .enumerate()
             .map(|(i, s)| Core::new(i, s.source))
             .collect();
-        System {
+        let mut sys = System {
             controllers,
             cores,
             core_names,
@@ -318,7 +327,72 @@ impl System {
             chan_bits_mask: cfg.channels.len() as u64 - 1,
             chan_shift: map.row_bytes().trailing_zeros(),
             row_bytes: map.row_bytes(),
+            checkers: Vec::new(),
             now: 0,
+        };
+        // `--check` attaches a conformance audit to every System any
+        // harness builds, without threading a flag through each one.
+        if check::inline_enabled() {
+            sys.enable_check();
+        }
+        sys
+    }
+
+    /// Attach an independent `ProtocolChecker` to every channel's command
+    /// tap. Must run before the first simulated cycle (the audit derives
+    /// bank state from the stream, so it has to see it from cycle 0).
+    /// Idempotent.
+    pub fn enable_check(&mut self) {
+        assert_eq!(self.now, 0,
+                   "attach the protocol checker before running the system");
+        if !self.checkers.is_empty() {
+            return;
+        }
+        for ctrl in &mut self.controllers {
+            let ck = Rc::new(RefCell::new(ProtocolChecker::new(
+                ctrl.map.ranks(), ctrl.map.banks(), ctrl.map.row_bits,
+                ctrl.tck_ns())));
+            ctrl.attach_tap(ck.clone());
+            self.checkers.push(ck);
+        }
+    }
+
+    /// Aggregate conformance audit across channels (None when
+    /// [`System::enable_check`] was never called).
+    pub fn check_summary(&self) -> Option<CheckSummary> {
+        if self.checkers.is_empty() {
+            return None;
+        }
+        let mut total = CheckSummary::default();
+        for ck in &self.checkers {
+            total.merge(&ck.borrow().summary());
+        }
+        total.systems = 1;
+        Some(total)
+    }
+
+    /// Full per-channel audit reports (summary line + coverage matrix +
+    /// violation samples) for `repro check run`.
+    pub fn check_reports(&self) -> Vec<String> {
+        self.checkers.iter().map(|ck| ck.borrow().report()).collect()
+    }
+
+    /// Attach an arbitrary command sink (e.g. a `CmdTraceWriter`) to one
+    /// channel's tap. Same cycle-0 restriction as [`System::enable_check`];
+    /// a channel carries at most one tap, so this is mutually exclusive
+    /// with checking that channel inline.
+    pub fn attach_cmd_tap(&mut self, channel: usize,
+                          tap: Rc<RefCell<dyn CmdSink>>) {
+        assert_eq!(self.now, 0,
+                   "attach command taps before running the system");
+        self.controllers[channel].attach_tap(tap);
+    }
+
+    /// Mutation harness: apply one deliberately-broken timing gate to
+    /// every channel (None restores correct gates).
+    pub fn set_gate_mutation(&mut self, m: Option<GateMutation>) {
+        for ctrl in &mut self.controllers {
+            ctrl.set_gate_mutation(m);
         }
     }
 
@@ -579,6 +653,20 @@ impl System {
     /// their `CtrlStats` across simulation drivers).
     pub fn controllers(&self) -> &[Controller] {
         &self.controllers
+    }
+}
+
+impl Drop for System {
+    /// Under the global `--check` flag, every System folds its audit into
+    /// the process-wide accumulator when it dies, so `check::report_inline`
+    /// at the end of `main` sees the whole fleet (including Systems built
+    /// on `exec::Pool` worker threads).
+    fn drop(&mut self) {
+        if check::inline_enabled() {
+            if let Some(s) = self.check_summary() {
+                check::record_inline(&s);
+            }
+        }
     }
 }
 

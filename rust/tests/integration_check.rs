@@ -1,0 +1,257 @@
+//! Conformance matrix for the independent protocol checker (DESIGN.md
+//! §13). Four legs:
+//!
+//! * real simulations — workloads and adversarial fuzz — audit
+//!   violation-free under BOTH drivers, and the two drivers audit the
+//!   same number of commands (the conformance leg of the run/run_fast
+//!   equivalence matrix);
+//! * refresh x region interactions: the tRFC fence against per-region
+//!   tRP/tRCD at the refresh boundary, scaled-refresh cadence, and
+//!   refresh while a page-placement remap is active;
+//! * the command-trace round trip: capture to an ALCT file, replay it
+//!   offline, same audit verdict;
+//! * the full gate-mutation sensitivity sweep: a clean baseline and
+//!   every seeded controller mutant detected.
+
+use aldram::aldram::AlDram;
+use aldram::check::cmd_trace;
+use aldram::check::mutate::{self, DEFAULT_CYCLES};
+use aldram::check::{CheckSummary, Constraint, N_CONSTRAINTS};
+use aldram::exec;
+use aldram::mem::{AddrMap, ChannelConfig, RegionRemap, System, SystemConfig,
+                  SystemStats};
+use aldram::timing::TimingParams;
+use aldram::workloads::fuzz::FuzzSource;
+use aldram::workloads::{by_name, NamedSource};
+
+const CYCLES: u64 = 30_000;
+
+fn fast_timings() -> TimingParams {
+    TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18)
+}
+
+fn fuzz_sources(map: AddrMap, seed: &str) -> Vec<NamedSource> {
+    (0..2)
+        .map(|i| FuzzSource::named(map, &format!("{seed}/{i}")))
+        .collect()
+}
+
+/// Run the same config + sources under the cycle-stepped oracle and the
+/// time-skip driver, checker attached to both. Asserts both audits are
+/// violation-free, both drivers audited the *same command count*, and
+/// the visible stats agree; returns the (shared) audit summary.
+fn audit_both(label: &str, cfg: &SystemConfig, map: AddrMap, seed: &str,
+              cycles: u64, refresh_scale: Option<f64>)
+              -> (SystemStats, CheckSummary) {
+    let run = |fast: bool| {
+        let mut sys = System::with_sources_map(cfg, map,
+                                               fuzz_sources(map, seed));
+        sys.enable_check();
+        if let Some(s) = refresh_scale {
+            sys.set_refresh_scale(s);
+        }
+        let stats = if fast { sys.run_fast(cycles) } else { sys.run(cycles) };
+        let sum = sys.check_summary().expect("checker was attached");
+        (stats, sum)
+    };
+    let (sa, ka) = run(false);
+    let (sb, kb) = run(true);
+    assert_eq!(ka.violations, 0, "{label}/step: {}", ka.line());
+    assert_eq!(kb.violations, 0, "{label}/fast: {}", kb.line());
+    assert_eq!(ka.commands, kb.commands,
+               "{label}: drivers audited different command counts");
+    assert_eq!(ka.checks, kb.checks,
+               "{label}: drivers exercised constraints differently");
+    assert_eq!(sa.reads_done, sb.reads_done, "{label}: reads diverged");
+    assert_eq!(sa.writes_done, sb.writes_done, "{label}: writes diverged");
+    assert_eq!(sa.refreshes, sb.refreshes, "{label}: refreshes diverged");
+    assert!(ka.commands > 1_000, "{label}: audit saw only {} commands",
+            ka.commands);
+    (sa, ka)
+}
+
+fn exercised(sum: &CheckSummary, c: Constraint) -> bool {
+    sum.checks[c as usize] > 0
+}
+
+#[test]
+fn refresh_against_region_table() {
+    // The adversarial region grid (fast low rows, standard high rows)
+    // under default refresh cadence: the tRFC fence must compose with
+    // per-region tRP/tRCD at every refresh boundary — an ACT right after
+    // REF is gated by tRFC even when its region's own tRCD/tRP windows
+    // have long expired, and the checker resolves the post-refresh ACT
+    // against the *region's* set, not the module collapse.
+    let cfg = SystemConfig::uniform(
+        1, ChannelConfig::profiled_regions(mutate::harness_table(), 55.0));
+    let (stats, sum) = audit_both("refresh-x-region", &cfg,
+                                  AddrMap::ddr3_2gb(1), "rxr", CYCLES, None);
+    assert!(stats.refreshes > 0, "no refreshes in {} cycles", stats.cycles);
+    for c in [Constraint::Trfc, Constraint::Trefi, Constraint::Trcd,
+              Constraint::Trp, Constraint::Tras] {
+        assert!(exercised(&sum, c), "{} never exercised", c.name());
+    }
+    assert!(sum.region_hits.iter().filter(|&&h| h > 0).count() > 1,
+            "audit resolved only one region: {:?}", sum.region_hits);
+}
+
+#[test]
+fn scaled_refresh_against_region_table() {
+    // 10x refresh frequency: every bank sees a refresh boundary every
+    // ~624 cycles, so fuzz traffic constantly straddles the tRFC fence
+    // while region lookups stay active. Both drivers, zero violations,
+    // and the audit must have checked the scaled tREFI cadence.
+    let cfg = SystemConfig::uniform(
+        1, ChannelConfig::profiled_regions(mutate::harness_table(), 55.0));
+    let (stats, sum) = audit_both("scaled-refresh-x-region", &cfg,
+                                  AddrMap::ddr3_2gb(1), "srr", CYCLES,
+                                  Some(0.1));
+    assert!(stats.refreshes > 20,
+            "scaled refresh barely fired: {}", stats.refreshes);
+    assert!(exercised(&sum, Constraint::Trfc));
+    assert!(exercised(&sum, Constraint::Trefi));
+}
+
+#[test]
+fn refresh_while_placement_remap_active() {
+    // Region table + page-placement remap: logical rows are permuted so
+    // the fast region fills first, while refresh keeps fencing banks.
+    // The checker sees *physical* rows (commands are post-decode), so
+    // region resolution must stay correct through the remap.
+    // An explicit non-identity permutation: the harness table's fast
+    // region is already first, so `fastest_first` would be the identity.
+    let table = mutate::harness_table();
+    let base = AddrMap::ddr3_2gb(1);
+    let map = base.with_remap(RegionRemap::new(base.row_bits, &[1, 0]));
+    let cfg = SystemConfig::uniform(
+        1, ChannelConfig::profiled_regions(table, 55.0));
+    let (stats, sum) = audit_both("refresh-x-remap", &cfg, map, "rxm",
+                                  CYCLES, None);
+    assert!(stats.refreshes > 0);
+    assert!(sum.region_hits.iter().filter(|&&h| h > 0).count() > 1,
+            "remap collapsed the audit onto one region: {:?}",
+            sum.region_hits);
+}
+
+#[test]
+fn fuzz_property_zero_violations_across_table_shapes() {
+    // The property: for every seed and every table shape — uniform
+    // standard, uniform AL-DRAM, region-indexed, region + placement —
+    // the controller's command stream conforms. Each leg runs both
+    // drivers (audit_both) at a shorter horizon to bound test time.
+    let base = AddrMap::ddr3_2gb(1);
+    let cycles = 12_000;
+    for seed in ["p0", "p1", "p2"] {
+        let uniform = SystemConfig::paper_default();
+        audit_both(&format!("prop/{seed}/uniform"), &uniform, base, seed,
+                   cycles, None);
+
+        let aldram = SystemConfig::uniform(
+            1, ChannelConfig::profiled(AlDram::fixed(fast_timings()), 55.0));
+        audit_both(&format!("prop/{seed}/aldram"), &aldram, base, seed,
+                   cycles, None);
+
+        let table = mutate::harness_table();
+        let region = SystemConfig::uniform(
+            1, ChannelConfig::profiled_regions(table.clone(), 55.0));
+        audit_both(&format!("prop/{seed}/region"), &region, base, seed,
+                   cycles, None);
+
+        let map = base.with_remap(RegionRemap::new(base.row_bits, &[1, 0]));
+        audit_both(&format!("prop/{seed}/region+placement"), &region, map,
+                   seed, cycles, None);
+    }
+}
+
+#[test]
+fn workload_simulations_audit_clean() {
+    // Not just fuzz: the suite workloads the figures actually run must
+    // audit clean too, on both a standard and an AL-DRAM system.
+    for (label, cfg) in [
+        ("std", SystemConfig::paper_default()),
+        ("aldram", SystemConfig::paper_default()
+             .with_timings(fast_timings())),
+    ] {
+        for wname in ["stream.copy", "gups", "mcf"] {
+            let w = by_name(wname).unwrap();
+            let sources = (0..2)
+                .map(|i| w.named_source(&format!("chk/{label}/{i}")))
+                .collect();
+            let mut sys = System::with_sources(&cfg, sources);
+            sys.enable_check();
+            sys.run_fast(CYCLES);
+            let sum = sys.check_summary().unwrap();
+            assert_eq!(sum.violations, 0, "{label}/{wname}: {}", sum.line());
+            assert!(sum.commands > 0);
+        }
+    }
+}
+
+#[test]
+fn cmd_trace_capture_replay_round_trip() {
+    // Capture the command stream of a region-table fuzz run to an ALCT
+    // file, then audit it offline: same command count as a live audit of
+    // the identical run, zero violations, and the header geometry
+    // round-trips.
+    let map = AddrMap::ddr3_2gb(1);
+    let cfg = SystemConfig::uniform(
+        1, ChannelConfig::profiled_regions(mutate::harness_table(), 55.0));
+
+    // Live audit (reference command count).
+    let mut live = System::with_sources_map(&cfg, map,
+                                            fuzz_sources(map, "cap"));
+    live.enable_check();
+    live.run_fast(CYCLES);
+    let live_sum = live.check_summary().unwrap();
+    assert_eq!(live_sum.violations, 0, "{}", live_sum.line());
+
+    // Captured run (same sources, tap instead of checker).
+    let path = std::env::temp_dir()
+        .join(format!("alct_it_{}.alct", std::process::id()));
+    let mut sys = System::with_sources_map(&cfg, map,
+                                           fuzz_sources(map, "cap"));
+    let tck = sys.controllers()[0].tck_ns();
+    let w = cmd_trace::create_shared(map.ranks(), map.banks(), map.row_bits,
+                                     tck);
+    sys.attach_cmd_tap(0, w.clone());
+    sys.run_fast(CYCLES);
+    drop(sys);
+    let n = cmd_trace::finish_shared(w, &path).unwrap();
+    assert!(n > 0);
+
+    let info = cmd_trace::info(&path).unwrap();
+    assert_eq!((info.ranks, info.banks, info.row_bits),
+               (map.ranks(), map.banks(), map.row_bits));
+    assert_eq!(info.commands, live_sum.commands,
+               "offline trace carries a different command count than the \
+                live audit of the same run");
+    assert!(info.region_updates > 0, "region install was not captured");
+
+    let sum = cmd_trace::replay_summary(&path).unwrap();
+    assert_eq!(sum.violations, 0, "offline audit: {}", sum.line());
+    assert_eq!(sum.commands, live_sum.commands);
+    assert_eq!(sum.checks, live_sum.checks,
+               "offline audit exercised constraints differently");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn mutation_sweep_every_mutant_detected() {
+    // The full sensitivity sweep the CI gate runs: one clean baseline
+    // plus every seeded controller-gate mutant, each audited over
+    // DEFAULT_CYCLES of adversarial traffic. 100% detection required.
+    let report = mutate::run_harness(DEFAULT_CYCLES, "it",
+                                     exec::default_jobs());
+    assert!(report.results.len() >= 10,
+            "only {} mutants", report.results.len());
+    // The clean baseline must also prove the coverage matrix is full:
+    // every constraint the checker knows was exercised at least once.
+    assert_eq!(report.baseline.exercised(), N_CONSTRAINTS,
+               "baseline left constraints unexercised: {}",
+               report.baseline.line());
+    for r in &report.results {
+        assert!(r.detected(), "mutant {:?} escaped ({} commands audited)",
+                r.mutation, r.commands);
+    }
+    report.require_all_detected().unwrap();
+}
