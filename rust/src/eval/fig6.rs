@@ -13,9 +13,11 @@
 //! speedup (`SystemStats::weighted_speedup`): for a single-core unit it
 //! degenerates to the plain IPC ratio.
 
+use super::lockstep;
+use super::Driver;
 use crate::aldram::{AlDram, RegionTable, FULL_LOAD_RISE_C};
 use crate::exec::Pool;
-use crate::mem::{ChannelConfig, System, SystemConfig, SystemStats};
+use crate::mem::{ChannelConfig, SystemConfig, SystemStats};
 use crate::util;
 use crate::workloads::mix::MixSpec;
 use crate::workloads::{NamedSource, WorkloadSpec};
@@ -109,22 +111,28 @@ pub fn fig6_regions(cycles: u64, jobs: usize, table: &RegionTable,
         .chain(mixes.iter().cloned().map(Unit::Mix))
         .collect();
 
-    // Job index layout: ((unit * 2 + temp) * 2 + side).
-    let n_jobs = units.len() * FIG6_TEMPS.len() * 2;
-    let stats: Vec<SystemStats> = Pool::new(jobs).run(n_jobs, |i| {
-        let side = i % 2;
-        let ti = (i / 2) % FIG6_TEMPS.len();
-        let ui = i / (2 * FIG6_TEMPS.len());
-        let ambient = ambient_for(FIG6_TEMPS[ti], table.module().guard_c);
-        let ch = if side == 0 {
-            ChannelConfig::standard(ambient)
-        } else {
-            ChannelConfig::profiled_regions(table.clone(), ambient)
-        };
-        let cfg = SystemConfig::uniform(1, ch);
-        let mut sys = System::with_sources(&cfg, units[ui].sources(seed));
-        sys.run_fast(cycles)
-    });
+    // One lockstep pool job per unit: its four (temp, side) variants
+    // advance over a single shared generation of the unit's sources.
+    // Flattened stats layout: ((unit * 2 + temp) * 2 + side).
+    let variants: Vec<SystemConfig> = FIG6_TEMPS
+        .iter()
+        .flat_map(|&temp| {
+            let ambient = ambient_for(temp, table.module().guard_c);
+            [ChannelConfig::standard(ambient),
+             ChannelConfig::profiled_regions(table.clone(), ambient)]
+        })
+        .map(|ch| SystemConfig::uniform(1, ch))
+        .collect();
+    let cells = lockstep::default_cells(&variants);
+    let per_unit: Vec<Vec<SystemStats>> =
+        Pool::new(jobs).run(units.len(), |ui| {
+            lockstep::run_cells(&cells, units[ui].sources(seed), cycles,
+                                Driver::TimeSkip, false)
+                .into_iter()
+                .map(|(s, _)| s)
+                .collect()
+        });
+    let stats: Vec<SystemStats> = per_unit.into_iter().flatten().collect();
 
     let speedup_of = |ui: usize, ti: usize| -> f64 {
         let at = (ui * 2 + ti) * 2;

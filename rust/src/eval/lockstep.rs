@@ -1,0 +1,378 @@
+//! Lockstep multi-config simulation: run K config-variant `System`s over
+//! *one* shared generation of each workload's request stream.
+//!
+//! Every headline grid (Fig 4, Fig 6, §8.4 sensitivity) simulates the
+//! same request stream under several timing configurations. Spawning one
+//! independent `System` per (workload, config, rep) cell regenerates the
+//! stream — RNG, gap sampling, address synthesis — K times over. The
+//! reference sequence a core pulls is timing-independent (timings decide
+//! *when* references are pulled, not *what*), and the seed labels the
+//! harnesses use carry no config identity, so generation can be shared:
+//! each batch is produced once and every config's core reads it through
+//! its own cursor.
+//!
+//! The K systems advance in lockstep over shared chunk boundaries
+//! ([`LOCKSTEP_CHUNK`] cycles, a multiple of the thermal epoch so the
+//! chunked `run_fast` trajectory is bit-identical to an unchunked run —
+//! skips already stop at epoch boundaries). Configs drift apart *within*
+//! a chunk (a faster config drains its queues sooner and pulls
+//! references earlier), which is safe: a [`StreamBuf`] retains every
+//! batch between the laggard's and the leader's cursor and frees the
+//! prefix all consumers have passed after each chunk round, so the
+//! divergence window — not the run length — bounds buffered memory.
+//!
+//! Correctness contract (asserted by `tests/integration_lockstep.rs`):
+//! for every cell, the lockstep result is bit-identical `SystemStats` —
+//! and, with the protocol checker attached, identical audited command
+//! counts — to an independent `System` given its own freshly-built
+//! sources, under both drivers.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use super::{throughput, Driver};
+use crate::check::CheckSummary;
+use crate::exec::Pool;
+use crate::mem::system::THERMAL_EPOCH;
+use crate::mem::{AddrMap, System, SystemConfig, SystemStats};
+use crate::workloads::{MemRef, NamedSource, RequestSource, WorkloadSpec};
+
+/// Cycles each system advances per lockstep round. Must be a multiple of
+/// [`THERMAL_EPOCH`]: `run_fast` never skips across an epoch boundary,
+/// so cutting the run at epoch multiples reproduces the exact step/skip
+/// trajectory of an unchunked run (the final partial chunk ends at the
+/// caller's horizon, where the unchunked run ends too).
+pub const LOCKSTEP_CHUNK: u64 = 8 * THERMAL_EPOCH;
+
+/// One core's shared stream: batches generated once, read by K consumer
+/// cursors. Batches the slowest consumer has passed are freed by
+/// [`StreamBuf::trim`].
+struct StreamBuf {
+    source: Box<dyn RequestSource>,
+    /// Retained batches; `batches[0]` is batch index `base`.
+    batches: VecDeque<Vec<MemRef>>,
+    base: usize,
+    /// Next batch index per consumer.
+    cursors: Vec<usize>,
+    exhausted: bool,
+}
+
+impl StreamBuf {
+    /// Append consumer `id`'s next batch to `out`; generates it on first
+    /// demand. Returns the batch length (0 = source exhausted), exactly
+    /// the [`RequestSource::fill`] contract the underlying source obeys.
+    fn fill_for(&mut self, id: usize, out: &mut Vec<MemRef>) -> usize {
+        let c = self.cursors[id];
+        if c - self.base == self.batches.len() {
+            if self.exhausted {
+                return 0;
+            }
+            let mut batch = Vec::new();
+            if self.source.fill(&mut batch) == 0 {
+                self.exhausted = true;
+                return 0;
+            }
+            self.batches.push_back(batch);
+        }
+        let batch = &self.batches[c - self.base];
+        out.extend_from_slice(batch);
+        self.cursors[id] += 1;
+        batch.len()
+    }
+
+    /// Free batches every consumer has passed.
+    fn trim(&mut self) {
+        let min = self.cursors.iter().copied().min().unwrap_or(self.base);
+        while self.base < min {
+            self.batches.pop_front();
+            self.base += 1;
+        }
+    }
+}
+
+/// One consumer's view of a [`StreamBuf`] — what each lockstep system's
+/// core holds as its `RequestSource`.
+struct SharedStream {
+    buf: Rc<RefCell<StreamBuf>>,
+    id: usize,
+}
+
+impl RequestSource for SharedStream {
+    fn fill(&mut self, out: &mut Vec<MemRef>) -> usize {
+        self.buf.borrow_mut().fill_for(self.id, out)
+    }
+}
+
+/// A workload's source set shared across the K lockstep systems: one
+/// [`StreamBuf`] per core, with each system registered as one consumer
+/// over all of them.
+pub struct SharedSourceSet {
+    bufs: Vec<Rc<RefCell<StreamBuf>>>,
+    meta: Vec<(String, String, u64)>,
+}
+
+impl SharedSourceSet {
+    pub fn new(sources: Vec<NamedSource>) -> Self {
+        let meta = sources
+            .iter()
+            .map(|s| (s.name.clone(), s.seed.clone(), s.footprint))
+            .collect();
+        let bufs = sources
+            .into_iter()
+            .map(|s| {
+                Rc::new(RefCell::new(StreamBuf {
+                    source: s.source,
+                    batches: VecDeque::new(),
+                    base: 0,
+                    cursors: Vec::new(),
+                    exhausted: false,
+                }))
+            })
+            .collect();
+        SharedSourceSet { bufs, meta }
+    }
+
+    /// Register one more consumer and hand back its per-core sources —
+    /// same names/seeds/footprints as the originals, so the consuming
+    /// `System` carries identical source identity to an independent one.
+    pub fn consumer(&self) -> Vec<NamedSource> {
+        self.bufs
+            .iter()
+            .zip(&self.meta)
+            .map(|(buf, (name, seed, footprint))| {
+                let id = {
+                    let mut b = buf.borrow_mut();
+                    b.cursors.push(b.base);
+                    b.cursors.len() - 1
+                };
+                NamedSource {
+                    name: name.clone(),
+                    seed: seed.clone(),
+                    footprint: *footprint,
+                    source: Box::new(SharedStream { buf: buf.clone(), id }),
+                }
+            })
+            .collect()
+    }
+
+    /// Free batches every consumer has passed (called between rounds).
+    pub fn trim(&self) {
+        for buf in &self.bufs {
+            buf.borrow_mut().trim();
+        }
+    }
+}
+
+/// Run K config-variant systems over one shared generation of `sources`,
+/// advancing them in lockstep chunks; returns per-config stats (and the
+/// conformance summary when `check` attached the protocol checker) in
+/// config order. Each `(SystemConfig, AddrMap)` cell gets its own
+/// `System`; results are bit-identical to running each independently.
+pub fn run_cells(cells: &[(SystemConfig, AddrMap)],
+                 sources: Vec<NamedSource>, cycles: u64, driver: Driver,
+                 check: bool) -> Vec<(SystemStats, Option<CheckSummary>)> {
+    let shared = SharedSourceSet::new(sources);
+    let mut systems: Vec<System> = cells
+        .iter()
+        .map(|(cfg, map)| {
+            let mut sys =
+                System::with_sources_map(cfg, *map, shared.consumer());
+            if check {
+                sys.enable_check();
+            }
+            sys
+        })
+        .collect();
+    let mut left = cycles;
+    while left > 0 {
+        let span = LOCKSTEP_CHUNK.min(left);
+        for sys in &mut systems {
+            match driver {
+                Driver::CycleStepped => {
+                    sys.run(span);
+                }
+                Driver::TimeSkip => {
+                    sys.run_fast(span);
+                }
+            }
+        }
+        shared.trim();
+        left -= span;
+    }
+    systems
+        .iter()
+        .map(|s| (s.stats(), s.check_summary()))
+        .collect()
+}
+
+/// [`run_cells`] on each config's default address map, stats only.
+pub fn run_configs(cfgs: &[SystemConfig], sources: Vec<NamedSource>,
+                   cycles: u64, driver: Driver) -> Vec<SystemStats> {
+    let cells = default_cells(cfgs);
+    run_cells(&cells, sources, cycles, driver, false)
+        .into_iter()
+        .map(|(s, _)| s)
+        .collect()
+}
+
+/// Pair each config with its default address map (what `System::new` /
+/// `System::with_sources` would derive).
+pub fn default_cells(cfgs: &[SystemConfig]) -> Vec<(SystemConfig, AddrMap)> {
+    cfgs.iter()
+        .map(|c| (c.clone(), AddrMap::ddr3_2gb(c.ranks_per_channel)))
+        .collect()
+}
+
+/// Grid execution engine: the independent-system oracle (one `System`
+/// per cell, one pool job per cell) or the shared-generation lockstep
+/// engine (one pool job per (workload, core-config, rep), K systems per
+/// job). Both produce bit-identical throughput vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Independent,
+    Lockstep,
+}
+
+/// Fig-4-style throughput grid over arbitrary config sets: every
+/// (workload, core-config, rep) cell runs under all K configs with the
+/// harness-standard seed labels (`rep{rep}/core{c}`). Returns the flat
+/// SoA throughput vector indexed
+/// `(((wi * core_cfgs.len() + cc) * reps + rep) * K + k)` — config-minor,
+/// so a cell's K variants are adjacent and reductions index it exactly
+/// like the historical per-job layout.
+#[allow(clippy::too_many_arguments)]
+pub fn grid(cfgs: &[SystemConfig], workloads: &[WorkloadSpec],
+            core_cfgs: &[usize], cycles: u64, reps: usize, jobs: usize,
+            driver: Driver, engine: Engine) -> Vec<f64> {
+    let k = cfgs.len();
+    match engine {
+        Engine::Independent => {
+            let n_jobs = workloads.len() * core_cfgs.len() * reps * k;
+            Pool::new(jobs).run(n_jobs, |i| {
+                let ki = i % k;
+                let rep = (i / k) % reps;
+                let cc = (i / (k * reps)) % core_cfgs.len();
+                let wi = i / (k * reps * core_cfgs.len());
+                super::run_config(&workloads[wi], core_cfgs[cc], &cfgs[ki],
+                                  cycles, rep, driver)
+            })
+        }
+        Engine::Lockstep => {
+            let cells = default_cells(cfgs);
+            let n_jobs = workloads.len() * core_cfgs.len() * reps;
+            let per_cell: Vec<Vec<f64>> = Pool::new(jobs).run(n_jobs, |i| {
+                let rep = i % reps;
+                let cc = (i / reps) % core_cfgs.len();
+                let wi = i / (reps * core_cfgs.len());
+                let sources = (0..core_cfgs[cc])
+                    .map(|c| workloads[wi]
+                         .named_source(&format!("rep{rep}/core{c}")))
+                    .collect();
+                run_cells(&cells, sources, cycles, driver, false)
+                    .into_iter()
+                    .map(|(s, _)| throughput(&s))
+                    .collect()
+            });
+            per_cell.into_iter().flatten().collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::PAPER_REDUCTIONS_55C;
+    use crate::timing::TimingParams;
+    use crate::workloads::by_name;
+
+    fn two_cfgs() -> Vec<SystemConfig> {
+        let fast = TimingParams::ddr3_standard().reduced(
+            PAPER_REDUCTIONS_55C[0], PAPER_REDUCTIONS_55C[1],
+            PAPER_REDUCTIONS_55C[2], PAPER_REDUCTIONS_55C[3]);
+        vec![SystemConfig::paper_default(),
+             SystemConfig::paper_default().with_timings(fast)]
+    }
+
+    #[test]
+    fn shared_streams_replay_the_generator_stream() {
+        // Two consumers at different paces read byte-identical streams,
+        // equal to a fresh independent source.
+        let w = by_name("gups").unwrap();
+        let shared = SharedSourceSet::new(vec![w.named_source("ls")]);
+        let (a, b) = {
+            let mut cs = shared.consumer();
+            let mut ds = shared.consumer();
+            (cs.remove(0), ds.remove(0))
+        };
+        let mut sa = a.source;
+        let mut sb = b.source;
+        let mut va = Vec::new();
+        let mut vb = Vec::new();
+        for round in 0..6 {
+            assert!(sa.fill(&mut va) > 0);
+            if round % 2 == 0 {
+                // Consumer B lags by every other batch.
+                assert!(sb.fill(&mut vb) > 0);
+            }
+            shared.trim();
+        }
+        while vb.len() < va.len() {
+            assert!(sb.fill(&mut vb) > 0);
+        }
+        let mut fresh = w.source("ls");
+        let mut vf = Vec::new();
+        while vf.len() < va.len() {
+            assert!(fresh.fill(&mut vf) > 0);
+        }
+        let key = |r: &MemRef| (r.gap_insts, r.addr, r.is_write, r.dependent);
+        assert_eq!(va.iter().map(key).collect::<Vec<_>>(),
+                   vf[..va.len()].iter().map(key).collect::<Vec<_>>());
+        assert_eq!(va.iter().map(key).collect::<Vec<_>>(),
+                   vb.iter().map(key).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trim_frees_fully_consumed_batches() {
+        let w = by_name("stream.copy").unwrap();
+        let shared = SharedSourceSet::new(vec![w.named_source("tr")]);
+        let mut a = shared.consumer().remove(0).source;
+        let mut b = shared.consumer().remove(0).source;
+        let mut sink = Vec::new();
+        for _ in 0..8 {
+            a.fill(&mut sink);
+        }
+        shared.trim();
+        assert_eq!(shared.bufs[0].borrow().batches.len(), 8,
+                   "laggard pins every batch");
+        for _ in 0..8 {
+            b.fill(&mut sink);
+        }
+        shared.trim();
+        let buf = shared.bufs[0].borrow();
+        assert_eq!(buf.batches.len(), 0, "caught-up buffers are freed");
+        assert_eq!(buf.base, 8);
+    }
+
+    #[test]
+    fn lockstep_grid_matches_independent_grid() {
+        let cfgs = two_cfgs();
+        let w = vec![by_name("gups").unwrap(), by_name("povray").unwrap()];
+        let a = grid(&cfgs, &w, &[1, 2], 6_000, 2, 2, Driver::TimeSkip,
+                     Engine::Independent);
+        let b = grid(&cfgs, &w, &[1, 2], 6_000, 2, 2, Driver::TimeSkip,
+                     Engine::Lockstep);
+        assert_eq!(a, b, "lockstep grid must be bit-identical");
+    }
+
+    #[test]
+    fn lockstep_grid_is_jobs_invariant() {
+        let cfgs = two_cfgs();
+        let w = vec![by_name("mcf").unwrap()];
+        let one = grid(&cfgs, &w, &[2], 6_000, 2, 1, Driver::TimeSkip,
+                       Engine::Lockstep);
+        let four = grid(&cfgs, &w, &[2], 6_000, 2, 4, Driver::TimeSkip,
+                        Engine::Lockstep);
+        assert_eq!(one, four, "grid must be identical for any --jobs");
+    }
+}

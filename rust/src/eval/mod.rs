@@ -11,11 +11,12 @@
 //! and lets the per-channel thermal model drive the bin selection.
 
 pub mod fig6;
+pub mod lockstep;
 
 pub use fig6::{fig6, fig6_regions, Fig6Result, Fig6Row, RowKind};
+pub use lockstep::Engine;
 
 use crate::aldram::{AlDram, RegionTable, DEFAULT_BIN_C};
-use crate::exec::Pool;
 use crate::mem::{AddrMap, ChannelConfig, RegionRemap, RowPolicy, System,
                  SystemConfig, SystemStats};
 use crate::power::{power, IddSpec};
@@ -164,31 +165,26 @@ pub fn fig4_profiled_regions(cycles: u64, reps: usize, table: &RegionTable,
 
 /// The Fig-4 grid over an explicit (baseline, AL-DRAM) config pair.
 ///
-/// The grid is embarrassingly parallel: one pool job per (workload,
-/// core-count, rep, config) tuple — 35 × 2 × reps × 2 independent
-/// cycle-level simulations. Each job writes its throughput into an
-/// input-indexed slot and the speedup reduction below consumes them in
-/// the exact order the sequential loop would, so the result is
+/// The grid runs on the lockstep engine: one pool job per (workload,
+/// core-count, rep) cell, with both configs simulated over *one* shared
+/// generation of the cell's request stream (`eval::lockstep`). The
+/// throughput vector keeps the historical config-minor layout, each job
+/// writes input-indexed slots, and the speedup reduction below consumes
+/// them in the exact order the sequential loop would — so the result is
 /// bit-identical for every `jobs` value (asserted by
-/// `parallel_fig4_matches_sequential`).
+/// `parallel_fig4_matches_sequential`) and to the independent-system
+/// oracle (asserted by `tests/integration_lockstep.rs`).
 fn fig4_pair(cycles: u64, reps: usize, jobs: usize, driver: Driver,
              base_cfg: &SystemConfig, fast_cfg: &SystemConfig)
              -> Fig4Result {
     let workloads = suite();
-    let cfgs = [base_cfg, fast_cfg];
+    let cfgs = [base_cfg.clone(), fast_cfg.clone()];
 
-    // Job index layout: (((workload * 2 + core_cfg) * reps + rep) * 2
-    //                     + config).
+    // Throughput layout: (((workload * 2 + core_cfg) * reps + rep) * 2
+    //                      + config).
     let core_cfgs = [1usize, MULTI_CORES];
-    let n_jobs = workloads.len() * core_cfgs.len() * reps * 2;
-    let throughputs = Pool::new(jobs).run(n_jobs, |i| {
-        let set = i % 2;
-        let rep = (i / 2) % reps;
-        let cc = (i / (2 * reps)) % core_cfgs.len();
-        let wi = i / (2 * reps * core_cfgs.len());
-        run_config(&workloads[wi], core_cfgs[cc], cfgs[set], cycles, rep,
-                   driver)
-    });
+    let throughputs = lockstep::grid(&cfgs, &workloads, &core_cfgs, cycles,
+                                     reps, jobs, driver, Engine::Lockstep);
     let speedup_of = |wi: usize, cc: usize| -> (f64, f64) {
         let ratios: Vec<f64> = (0..reps)
             .map(|rep| {
@@ -316,8 +312,10 @@ pub fn sensitivity_profiled(cycles: u64, profiles: &[DimmProfile],
     sensitivity_pairs(cycles, jobs, &cfgs)
 }
 
-/// One pool job per (configuration, workload, side) simulation, with the
-/// same order-independent reduction as the Fig-4 grid.
+/// One lockstep pool job per workload: all grid configurations (both
+/// sides of every row) advance over one shared generation of the
+/// workload's stream, with the same order-independent reduction as the
+/// Fig-4 grid.
 fn sensitivity_pairs(cycles: u64, jobs: usize,
                      cfgs: &[(SystemConfig, SystemConfig)])
                      -> Vec<SensitivityRow> {
@@ -327,15 +325,16 @@ fn sensitivity_pairs(cycles: u64, jobs: usize,
         .take(6)
         .collect();
 
-    // Job index layout: ((config * picks + workload) * 2 + side).
-    let n_jobs = cfgs.len() * picks.len() * 2;
-    let throughputs = Pool::new(jobs).run(n_jobs, |i| {
-        let set = i % 2;
-        let wi = (i / 2) % picks.len();
-        let gi = i / (2 * picks.len());
-        let cfg = if set == 0 { &cfgs[gi].0 } else { &cfgs[gi].1 };
-        run_config(&picks[wi], MULTI_CORES, cfg, cycles, 0, Driver::TimeSkip)
-    });
+    // Config-minor throughput layout: (workload * K + config * 2 + side),
+    // K = 2 × grid rows.
+    let flat: Vec<SystemConfig> = cfgs
+        .iter()
+        .flat_map(|(base, fast)| [base.clone(), fast.clone()])
+        .collect();
+    let k = flat.len();
+    let throughputs = lockstep::grid(&flat, &picks, &[MULTI_CORES], cycles,
+                                     1, jobs, Driver::TimeSkip,
+                                     Engine::Lockstep);
 
     SENSITIVITY_GRID
         .iter()
@@ -343,7 +342,7 @@ fn sensitivity_pairs(cycles: u64, jobs: usize,
         .map(|(gi, (channels, ranks, policy, label))| {
             let speedups: Vec<f64> = (0..picks.len())
                 .map(|wi| {
-                    let at = (gi * picks.len() + wi) * 2;
+                    let at = wi * k + gi * 2;
                     throughputs[at + 1] / throughputs[at]
                 })
                 .collect();

@@ -82,7 +82,6 @@ use aldram::registry;
 use aldram::runtime::{artifacts_dir, auto_backend, NativeBackend,
                       ProfilingBackend, SimdBackend};
 use aldram::util::bench::SpeedupRecord;
-use aldram::util::json::Json;
 
 fn make_backend(kind: &str, cells: usize) -> Box<dyn ProfilingBackend> {
     match kind {
@@ -421,6 +420,49 @@ fn bench_sim(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
     bench.bench("check/off", || run_checked(false).0.reads_done);
     bench.bench("check/on", || run_checked(true).0.reads_done);
     records.extend(bench.speedup_record("CHECK", "check/off", "check/on"));
+
+    // Lockstep multi-config grid vs the independent-system oracle
+    // (DESIGN.md §14): a fig4-style grid at K config variants — the
+    // DDR3 standard plus K−1 progressively deeper reductions toward the
+    // paper's 55 °C point — run once per engine at equal `--jobs`.
+    // Bit-identical throughput for every cell is asserted before any
+    // timing; SPEEDUP[LOCKSTEP] is what sharing one stream generation
+    // (and one pool job) across a cell's K systems buys.
+    use aldram::eval::{lockstep, Driver, Engine, MULTI_CORES};
+    use aldram::workloads::suite;
+    let k = args.get("lockstep-k", 8usize);
+    let grid_cycles = args.get("lockstep-cycles", (cycles / 4).max(1));
+    let grid_wl = args.get("lockstep-workloads", 6usize);
+    let jobs = args.jobs();
+    anyhow::ensure!(k >= 2, "--lockstep-k must be at least 2");
+    let cfgs: Vec<SystemConfig> = (0..k)
+        .map(|i| {
+            let s = i as f64 / (k - 1) as f64;
+            let t = TimingParams::ddr3_standard()
+                .reduced(0.27 * s, 0.32 * s, 0.33 * s, 0.18 * s);
+            t.validate().map(|_| {
+                SystemConfig::paper_default().with_timings(t)
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let wls: Vec<_> = suite().into_iter().take(grid_wl).collect();
+    let core_cfgs = [1usize, MULTI_CORES];
+    let run_grid = |engine: Engine| {
+        lockstep::grid(&cfgs, &wls, &core_cfgs, grid_cycles, 1, jobs,
+                       Driver::TimeSkip, engine)
+    };
+    let ind = run_grid(Engine::Independent);
+    let lck = run_grid(Engine::Lockstep);
+    anyhow::ensure!(ind == lck,
+                    "lockstep grid diverged from the independent oracle");
+    let sum_bits = |v: Vec<f64>| v.iter().sum::<f64>().to_bits();
+    bench.bench(&format!("grid/independent/k{k}"),
+                || sum_bits(run_grid(Engine::Independent)));
+    bench.bench(&format!("grid/lockstep/k{k}"),
+                || sum_bits(run_grid(Engine::Lockstep)));
+    records.extend(bench.speedup_record(
+        "LOCKSTEP", &format!("grid/independent/k{k}"),
+        &format!("grid/lockstep/k{k}")));
     bench.finish();
     Ok(records)
 }
@@ -492,13 +534,18 @@ fn bench_profile(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
     Ok(records)
 }
 
-/// Serialize `bench all` speedup records as a top-level JSON array —
-/// the committed `BENCH_SIM.json` / `BENCH_PROFILE.json` baselines.
+/// Append `bench all`'s speedup records as a dated trajectory entry to
+/// the committed `BENCH_SIM.json` / `BENCH_PROFILE.json` baselines
+/// (`util::trajectory`); a missing or legacy flat-array file upgrades in
+/// place. The file is the SPEEDUP[*] history of the repo, newest last.
 fn write_bench_json(path: &std::path::Path, records: &[SpeedupRecord])
                     -> anyhow::Result<()> {
-    let j = Json::Arr(records.iter().map(|r| r.to_json()).collect());
-    std::fs::write(path, j.to_string_pretty() + "\n")?;
-    println!("wrote {} speedup records to {}", records.len(),
+    use aldram::util::trajectory;
+    let existing = std::fs::read_to_string(path).ok();
+    let body = trajectory::append(existing.as_deref(),
+                                  &trajectory::today_utc(), records)?;
+    std::fs::write(path, body)?;
+    println!("appended {} speedup records to {}", records.len(),
              path.display());
     Ok(())
 }
@@ -1305,21 +1352,49 @@ fn run(args: Args) -> anyhow::Result<()> {
         }
 
         Some("bench") => {
-            // `bench all`: both suites end to end, with every SPEEDUP[*]
-            // comparison also written as a structured JSON record. CI runs
-            // this in release and diffs the record *structure* (suite/
-            // tag/base/test) against the committed repo-root baselines,
-            // so a renamed or vanished comparison fails fast while
-            // wall-clock noise does not.
-            let which = args.sub(1).unwrap_or("all");
-            anyhow::ensure!(which == "all",
-                            "unknown bench subcommand `{which}` (all)");
-            let dir = PathBuf::from(args.str("json-dir", "."));
-            std::fs::create_dir_all(&dir)?;
-            let sim = bench_sim(&args)?;
-            write_bench_json(&dir.join("BENCH_SIM.json"), &sim)?;
-            let prof = bench_profile(&args)?;
-            write_bench_json(&dir.join("BENCH_PROFILE.json"), &prof)?;
+            match args.sub(1).unwrap_or("all") {
+                // `bench all`: both suites end to end, with every
+                // SPEEDUP[*] comparison appended as a dated trajectory
+                // entry to the json-dir baselines (newest last; see
+                // util::trajectory).
+                "all" => {
+                    let dir = PathBuf::from(args.str("json-dir", "."));
+                    std::fs::create_dir_all(&dir)?;
+                    let sim = bench_sim(&args)?;
+                    write_bench_json(&dir.join("BENCH_SIM.json"), &sim)?;
+                    let prof = bench_profile(&args)?;
+                    write_bench_json(&dir.join("BENCH_PROFILE.json"),
+                                     &prof)?;
+                }
+                // `bench compare --baseline A --fresh B`: compare the
+                // two files' *latest* entries — CI's regression gate. A
+                // comparison present in the baseline but missing from
+                // the fresh run (structure drift), or a fresh median
+                // speedup below (1 − --max-regression) of the
+                // baseline's, fails the command.
+                "compare" => {
+                    use aldram::util::trajectory;
+                    let baseline = args.str("baseline", "");
+                    let fresh = args.str("fresh", "");
+                    anyhow::ensure!(!baseline.is_empty() && !fresh.is_empty(),
+                                    "bench compare needs --baseline and \
+                                     --fresh");
+                    let tol = args.get("max-regression", 0.2f64);
+                    let fails = trajectory::compare_latest(
+                        &std::fs::read_to_string(&baseline)?,
+                        &std::fs::read_to_string(&fresh)?, tol)?;
+                    for f in &fails {
+                        println!("BENCH REGRESSION: {f}");
+                    }
+                    anyhow::ensure!(fails.is_empty(),
+                                    "{} bench comparison(s) failed against \
+                                     {baseline}", fails.len());
+                    println!("bench trajectory ok: {fresh} within {:.0}% of \
+                              {baseline}", tol * 100.0);
+                }
+                other => anyhow::bail!(
+                    "unknown bench subcommand `{other}` (all|compare)"),
+            }
         }
 
         _ => {

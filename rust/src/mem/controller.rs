@@ -3,9 +3,9 @@
 //! runtime-swappable timing set (the paper's evaluated system exposes
 //! exactly this through BIOS-visible config registers [10, 11]).
 
-use std::cell::RefCell;
-use std::collections::VecDeque;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
+use std::sync::Arc;
 
 use super::address::AddrMap;
 use super::dram::{Cycle, GateMutation, Rank, RegionCycles};
@@ -99,6 +99,114 @@ struct Pending {
     counted: bool,
 }
 
+/// Sentinel slot index for the slab queues' linked chains.
+const NIL: u32 = u32::MAX;
+
+/// Index-linked FIFO over a preallocated slab arena. FIFO order lives in
+/// a singly-linked chain of slot indices; slots never move, so FR-FCFS's
+/// mid-queue removal is an O(1) relink (against `VecDeque::remove`'s
+/// element shifting) and the arena is allocated once at queue capacity
+/// and never grows or reallocates on the hot path.
+struct SlabQueue {
+    slots: Vec<Pending>,
+    /// Chain link per slot: next-in-FIFO for live slots, next-free for
+    /// free-list slots, `NIL` at either tail.
+    next: Vec<u32>,
+    head: u32,
+    tail: u32,
+    free: u32,
+    len: usize,
+}
+
+impl SlabQueue {
+    fn new(capacity: usize) -> Self {
+        SlabQueue {
+            slots: Vec::with_capacity(capacity),
+            next: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            free: NIL,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append in FIFO order. The caller enforces capacity (`can_accept`),
+    /// so the arena vectors reach queue capacity once and are reused via
+    /// the free list from then on.
+    fn push_back(&mut self, p: Pending) {
+        let idx = if self.free != NIL {
+            let i = self.free;
+            self.free = self.next[i as usize];
+            self.slots[i as usize] = p;
+            i
+        } else {
+            self.slots.push(p);
+            self.next.push(NIL);
+            (self.slots.len() - 1) as u32
+        };
+        self.next[idx as usize] = NIL;
+        if self.tail == NIL {
+            self.head = idx;
+        } else {
+            self.next[self.tail as usize] = idx;
+        }
+        self.tail = idx;
+        self.len += 1;
+    }
+
+    /// Unlink slot `at`, whose FIFO predecessor is `prev` (`NIL` when
+    /// `at` is the head), and return its payload. The slot goes back on
+    /// the free list; relative order of the survivors is untouched.
+    fn remove_after(&mut self, prev: u32, at: u32) -> Pending {
+        let nxt = self.next[at as usize];
+        if prev == NIL {
+            self.head = nxt;
+        } else {
+            self.next[prev as usize] = nxt;
+        }
+        if self.tail == at {
+            self.tail = prev;
+        }
+        self.next[at as usize] = self.free;
+        self.free = at;
+        self.len -= 1;
+        self.slots[at as usize]
+    }
+
+    /// FIFO-order iteration (same order `VecDeque::iter` gave).
+    fn iter(&self) -> SlabIter<'_> {
+        SlabIter { q: self, cur: self.head }
+    }
+}
+
+struct SlabIter<'a> {
+    q: &'a SlabQueue,
+    cur: u32,
+}
+
+impl<'a> Iterator for SlabIter<'a> {
+    type Item = &'a Pending;
+
+    fn next(&mut self) -> Option<&'a Pending> {
+        if self.cur == NIL {
+            return None;
+        }
+        let p = &self.q.slots[self.cur as usize];
+        self.cur = self.q.next[self.cur as usize];
+        Some(p)
+    }
+}
+
 /// Aggregate controller statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CtrlStats {
@@ -136,8 +244,8 @@ pub struct Controller {
     pub map: AddrMap,
     ranks: Vec<Rank>,
     policy: RowPolicy,
-    read_q: VecDeque<Pending>,
-    write_q: VecDeque<Pending>,
+    read_q: SlabQueue,
+    write_q: SlabQueue,
     /// Write drain hysteresis (vLLM-router-style watermark batching, here
     /// the classic write-drain watermarks).
     draining_writes: bool,
@@ -165,6 +273,16 @@ pub struct Controller {
     tap: Option<Rc<RefCell<dyn CmdSink>>>,
     /// Seeded bug for the checker mutation harness (None = correct).
     mutation: Option<GateMutation>,
+    /// Completions retired by the latest `tick`, reused across calls so
+    /// the per-cycle hot path never allocates.
+    done: Vec<Completion>,
+    /// Bumped on every state change that can move a scheduling gate or
+    /// deadline (enqueue, any issued command, a retirement, a refresh
+    /// deadline coming due, a timing install). `next_event_hint` caches
+    /// its scan against this, so idle re-queries are O(1).
+    gen: u64,
+    /// `(gen at scan time, scanned bound)` — see `next_event_hint`.
+    hint: Cell<(u64, Cycle)>,
 }
 
 impl Controller {
@@ -173,16 +291,17 @@ impl Controller {
         let tc = timings.to_cycles(tck);
         let ranks = (0..map.ranks()).map(|_| Rank::new(map.banks(), tc)).collect();
         let n_ranks = map.ranks();
+        let capacity = 32;
         Controller {
             map,
             ranks,
             policy,
-            read_q: VecDeque::new(),
-            write_q: VecDeque::new(),
+            read_q: SlabQueue::new(capacity),
+            write_q: SlabQueue::new(capacity),
             draining_writes: false,
             wq_hi: 24,
             wq_lo: 8,
-            capacity: 32,
+            capacity,
             next_refresh: vec![tc.trefi as u64; n_ranks],
             refresh_due: vec![false; n_ranks],
             inflight: Vec::new(),
@@ -193,7 +312,19 @@ impl Controller {
             refresh_scale: 1.0,
             tap: None,
             mutation: None,
+            done: Vec::new(),
+            gen: 1,
+            hint: Cell::new((0, 0)),
         }
+    }
+
+    /// Record a state change that can move a scheduling gate or deadline;
+    /// invalidates the cached `next_event_hint` scan. Over-bumping is
+    /// safe (one extra scan); a missed bump would serve a stale hint and
+    /// corrupt a time skip, so every mutating site below calls this.
+    #[inline]
+    fn touch(&mut self) {
+        self.gen = self.gen.wrapping_add(1);
     }
 
     /// Attach a command sink (protocol checker / trace writer). The sink
@@ -226,6 +357,7 @@ impl Controller {
         for r in &mut self.ranks {
             r.set_mutation(m);
         }
+        self.touch();
     }
 
     pub fn timings(&self) -> &TimingParams {
@@ -245,6 +377,7 @@ impl Controller {
         for r in &mut self.ranks {
             r.set_timings(tc);
         }
+        self.touch();
         if let Some(tap) = &self.tap {
             tap.borrow_mut().on_timings(&timings);
         }
@@ -256,6 +389,7 @@ impl Controller {
                             timings: Option<TimingParams>) {
         let tc = timings.map(|t| t.to_cycles(self.tck_ns));
         self.ranks[rank].set_bank_timings(bank, tc);
+        self.touch();
     }
 
     /// Region-granular AL-DRAM: install per-(bank, row-region) core
@@ -272,6 +406,7 @@ impl Controller {
             for r in &mut self.ranks {
                 r.set_region_timings(None);
             }
+            self.touch();
             return;
         };
         assert!(regions_per_bank.is_power_of_two(),
@@ -283,14 +418,18 @@ impl Controller {
                 self.map.row_bits);
         assert_eq!(ts.len(), self.map.banks() * regions_per_bank,
                    "region timing vector does not tile the banks");
-        let rc = RegionCycles {
+        // One shared allocation per install: every rank holds the same
+        // table, so an AL-DRAM epoch switch clones `Arc`s, not the
+        // O(banks × regions) timing vector per rank.
+        let rc = Arc::new(RegionCycles {
             regions_per_bank,
             shift: self.map.row_bits - bits,
             t: ts.iter().map(|t| t.to_cycles(self.tck_ns)).collect(),
-        };
+        });
         for r in &mut self.ranks {
-            r.set_region_timings(Some(rc.clone()));
+            r.set_region_timings(Some(Arc::clone(&rc)));
         }
+        self.touch();
     }
 
     /// §7.1: scale the refresh interval (1.0 = standard 64 ms). Deadlines
@@ -307,6 +446,7 @@ impl Controller {
                 *deadline = (*deadline + new).saturating_sub(old);
             }
         }
+        self.touch();
         if let Some(tap) = &self.tap {
             tap.borrow_mut().on_refresh_scale(scale);
         }
@@ -357,6 +497,7 @@ impl Controller {
         } else {
             self.read_q.push_back(p);
         }
+        self.touch();
         true
     }
 
@@ -377,10 +518,13 @@ impl Controller {
     }
 
     /// Advance one controller cycle; returns completions whose data burst
-    /// finished this cycle.
-    pub fn tick(&mut self, now: Cycle) -> Vec<Completion> {
-        // 1. Retire finished bursts.
-        let mut done = Vec::new();
+    /// finished this cycle. The slice borrows a controller-owned buffer
+    /// (valid until the next `tick`), so the per-cycle path allocates
+    /// nothing.
+    pub fn tick(&mut self, now: Cycle) -> &[Completion] {
+        // 1. Retire finished bursts into the reused completion buffer.
+        self.done.clear();
+        let done = &mut self.done;
         self.inflight.retain(|(ready, c)| {
             if *ready <= now {
                 done.push(*c);
@@ -389,7 +533,10 @@ impl Controller {
                 true
             }
         });
-        for c in &done {
+        if !self.done.is_empty() {
+            self.touch();
+        }
+        for c in &self.done {
             if c.is_write {
                 self.stats.writes_done += 1;
             } else {
@@ -397,7 +544,14 @@ impl Controller {
                 self.stats.total_read_latency += c.finish - c.arrival;
             }
         }
+        self.tick_commands(now);
+        &self.done
+    }
 
+    /// The command-issue half of `tick` (split out so the early-exit
+    /// "one command per cycle" returns don't fight the borrow on the
+    /// completion buffer).
+    fn tick_commands(&mut self, now: Cycle) {
         // 2. Refresh management: when tREFI elapses, drain the rank and
         //    issue REF (highest priority — postponement is bounded).
         //    Scheduling below refuses new commands to a rank with a
@@ -406,8 +560,9 @@ impl Controller {
         //    column command pushes the bank's earliest-PRE out by tRTP /
         //    tWR) and REF is postponed unboundedly.
         for r in 0..self.ranks.len() {
-            if now >= self.next_refresh[r] {
+            if now >= self.next_refresh[r] && !self.refresh_due[r] {
                 self.refresh_due[r] = true;
+                self.touch();
             }
             if self.refresh_due[r] {
                 // Close open rows as they become precharge-able.
@@ -418,7 +573,8 @@ impl Controller {
                                 self.ranks[r].issue_pre(b, now);
                                 self.tap_cmd(CmdKind::Pre, r, b, row, now);
                                 self.stats.issued_cycles += 1;
-                                return done; // one command per cycle
+                                self.touch();
+                                return; // one command per cycle
                             }
                         }
                     }
@@ -429,7 +585,8 @@ impl Controller {
                     self.next_refresh[r] += self.trefi();
                     self.stats.refreshes += 1;
                     self.stats.issued_cycles += 1;
-                    return done;
+                    self.touch();
+                    return;
                 }
             }
         }
@@ -469,14 +626,13 @@ impl Controller {
                         if !wanted && self.ranks[r].can_pre(b, now) {
                             self.ranks[r].issue_pre(b, now);
                             self.tap_cmd(CmdKind::Pre, r, b, row, now);
+                            self.touch();
                             break 'outer;
                         }
                     }
                 }
             }
         }
-
-        done
     }
 
     /// FR-FCFS: (1) oldest row-hit column command, (2) oldest request's
@@ -494,27 +650,35 @@ impl Controller {
         }
 
         // First-ready: oldest request whose column command can go now.
-        let mut hit_idx = None;
-        for (i, p) in q.iter().enumerate() {
-            if self.refresh_due[p.rank] {
-                continue;
+        // Walk the slab chain tracking the predecessor so the removal
+        // below is a straight relink.
+        let mut hit = NIL;
+        let mut hit_prev = NIL;
+        let mut prev = NIL;
+        let mut cur = q.head;
+        while cur != NIL {
+            let p = &q.slots[cur as usize];
+            if !self.refresh_due[p.rank] {
+                let rk = &self.ranks[p.rank];
+                let ok = if writes {
+                    rk.can_write(p.bank, p.row, now)
+                } else {
+                    rk.can_read(p.bank, p.row, now)
+                };
+                if ok {
+                    hit = cur;
+                    hit_prev = prev;
+                    break;
+                }
             }
-            let rk = &self.ranks[p.rank];
-            let ok = if writes {
-                rk.can_write(p.bank, p.row, now)
-            } else {
-                rk.can_read(p.bank, p.row, now)
-            };
-            if ok {
-                hit_idx = Some(i);
-                break;
-            }
+            prev = cur;
+            cur = q.next[cur as usize];
         }
-        if let Some(i) = hit_idx {
+        if hit != NIL {
             let p = if writes {
-                self.write_q.remove(i).unwrap()
+                self.write_q.remove_after(hit_prev, hit)
             } else {
-                self.read_q.remove(i).unwrap()
+                self.read_q.remove_after(hit_prev, hit)
             };
             let rk = &mut self.ranks[p.rank];
             let data_end = if writes {
@@ -538,16 +702,26 @@ impl Controller {
                     finish: data_end,
                 },
             ));
+            self.touch();
             return true;
         }
 
         // Otherwise service the oldest request on a refresh-free rank:
         // open its row (ACT) or close a conflicting row (PRE).
-        let head_idx = match q.iter().position(|p| !self.refresh_due[p.rank]) {
-            Some(i) => i,
-            None => return false,
-        };
-        let head = q[head_idx];
+        let q = if writes { &self.write_q } else { &self.read_q };
+        let mut head_idx = NIL;
+        let mut cur = q.head;
+        while cur != NIL {
+            if !self.refresh_due[q.slots[cur as usize].rank] {
+                head_idx = cur;
+                break;
+            }
+            cur = q.next[cur as usize];
+        }
+        if head_idx == NIL {
+            return false;
+        }
+        let head = q.slots[head_idx as usize];
         match self.ranks[head.rank].banks[head.bank].open_row() {
             Some(row) if row != head.row => {
                 if self.ranks[head.rank].can_pre(head.bank, now) {
@@ -557,6 +731,7 @@ impl Controller {
                         self.stats.row_conflicts += 1;
                     }
                     self.mark_counted(writes, head_idx);
+                    self.touch();
                     return true;
                 }
             }
@@ -569,6 +744,7 @@ impl Controller {
                         self.stats.row_misses += 1;
                     }
                     self.mark_counted(writes, head_idx);
+                    self.touch();
                     return true;
                 }
             }
@@ -580,9 +756,9 @@ impl Controller {
         false
     }
 
-    fn mark_counted(&mut self, writes: bool, idx: usize) {
+    fn mark_counted(&mut self, writes: bool, slot: u32) {
         let q = if writes { &mut self.write_q } else { &mut self.read_q };
-        q[idx].counted = true;
+        q.slots[slot as usize].counted = true;
     }
 
     /// Requests moved from a queue into the in-flight set so far.
@@ -599,11 +775,29 @@ impl Controller {
     /// would corrupt the skip, so every gate `tick` consults is covered).
     /// Early-exits at `now` — on saturated phases this costs a handful of
     /// comparisons before the driver falls back to per-cycle stepping.
+    ///
+    /// The scan is cached against `gen`: while no gate-moving state
+    /// change happened (no enqueue, issue, retirement, or deadline flip),
+    /// the gate set is frozen, so the previously scanned bound is exact
+    /// and re-queries are O(1). A cached early-exit bound stays valid
+    /// too: the gate that was open at cache time stays open (≤ any later
+    /// `now`) until a command services it — which bumps `gen`.
     pub fn next_event_hint(&self, now: Cycle) -> Cycle {
+        let (gen, e) = self.hint.get();
+        if gen == self.gen {
+            return e.max(now);
+        }
+        let e = self.scan_next_event(now);
+        self.hint.set((self.gen, e));
+        e.max(now)
+    }
+
+    /// The uncached hint scan (see `next_event_hint`).
+    fn scan_next_event(&self, now: Cycle) -> Cycle {
         let mut e = Cycle::MAX;
         for (ready, _) in &self.inflight {
             if *ready <= now {
-                return now;
+                return *ready;
             }
             e = e.min(*ready);
         }
@@ -613,7 +807,7 @@ impl Controller {
             // command. Head identity is frozen until the next event, so
             // restricting ACT/PRE gates to it is exact, not a heuristic.
             let mut head = true;
-            for p in q {
+            for p in q.iter() {
                 if self.refresh_due[p.rank] {
                     continue;
                 }
@@ -629,7 +823,7 @@ impl Controller {
                 head = false;
                 if let Some(g) = gate {
                     if g <= now {
-                        return now;
+                        return g;
                     }
                     e = e.min(g);
                 }
@@ -657,7 +851,7 @@ impl Controller {
                 }
             }
         }
-        e.max(now)
+        e
     }
 
     /// Account for `span` cycles the time-skip driver proved idle: `tick`

@@ -6,6 +6,7 @@
 
 use crate::timing::TimingCycles;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 pub type Cycle = u64;
 
@@ -136,7 +137,9 @@ pub struct Rank {
     pub banks: Vec<Bank>,
     t: TimingCycles,
     /// Region-granular AL-DRAM timing (None = rank/bank granularity).
-    region: Option<RegionCycles>,
+    /// Shared: every rank of a channel holds the same table, so the
+    /// controller installs one `Arc` instead of per-rank copies.
+    region: Option<Arc<RegionCycles>>,
     /// ACT-to-ACT (tRRD) gate.
     next_act_any: Cycle,
     /// Sliding window of the last 4 ACT times (tFAW).
@@ -205,8 +208,9 @@ impl Rank {
 
     /// Install (or clear) region-granular timing. Like `set_timings`,
     /// applied at a refresh boundary; in-flight constraints keep their
-    /// already-computed deadlines.
-    pub fn set_region_timings(&mut self, region: Option<RegionCycles>) {
+    /// already-computed deadlines. The table arrives behind an `Arc`:
+    /// one allocation per epoch install, shared by all ranks.
+    pub fn set_region_timings(&mut self, region: Option<Arc<RegionCycles>>) {
         if let Some(r) = &region {
             debug_assert_eq!(r.t.len(),
                              self.banks.len() * r.regions_per_bank);
@@ -679,11 +683,11 @@ mod bank_override_tests {
             t.push(fast.to_cycles(1.25));
             t.push(std.to_cycles(1.25));
         }
-        r.set_region_timings(Some(RegionCycles {
+        r.set_region_timings(Some(Arc::new(RegionCycles {
             regions_per_bank: 2,
             shift: 14,
             t,
-        }));
+        })));
         let low_row = 100u64;
         let high_row = 1 << 14;
         assert_eq!(r.timings_for_row(0, low_row), fast.to_cycles(1.25));

@@ -6,6 +6,7 @@ pub mod bench;
 pub mod json;
 pub mod quick;
 pub mod rng;
+pub mod trajectory;
 
 /// Geometric mean of positive values (used for Fig 4 workload groups).
 pub fn geomean(xs: &[f64]) -> f64 {

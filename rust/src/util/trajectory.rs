@@ -1,0 +1,267 @@
+//! Persisted bench trajectory: `repro bench all --json-dir` appends one
+//! dated entry per run to `BENCH_SIM.json` / `BENCH_PROFILE.json`
+//! instead of overwriting, so the SPEEDUP[*] history of the repo is a
+//! first-class artifact. CI compares a fresh run's entry against the
+//! committed baseline's latest entry (`repro bench compare`) and fails
+//! on a vanished comparison or a >20% median speedup regression.
+//!
+//! File format: a top-level array of entries, newest last —
+//!
+//! ```json
+//! [ { "date": "2026-08-08",
+//!     "records": [ { "suite": "...", "tag": "TIMESKIP", ... } ] } ]
+//! ```
+//!
+//! Legacy baselines (a flat array of records, the pre-trajectory
+//! format) parse as a single undated entry, so appending to — or
+//! comparing against — an old checkout keeps working.
+
+use std::collections::BTreeMap;
+
+use super::bench::SpeedupRecord;
+use super::json::Json;
+
+/// One dated trajectory entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub date: String,
+    pub records: Vec<SpeedupRecord>,
+}
+
+impl Entry {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("date".into(), Json::Str(self.date.clone()));
+        m.insert("records".into(),
+                 Json::Arr(self.records.iter().map(|r| r.to_json())
+                           .collect()));
+        Json::Obj(m)
+    }
+}
+
+fn record_from_json(j: &Json) -> anyhow::Result<SpeedupRecord> {
+    for k in ["suite", "tag", "base", "test"] {
+        anyhow::ensure!(j.get(k).and_then(Json::as_str).is_some(),
+                        "speedup record missing string key `{k}`");
+    }
+    for k in ["speedup", "base_median_ns", "test_median_ns"] {
+        anyhow::ensure!(j.get(k).and_then(Json::as_f64).is_some(),
+                        "speedup record missing numeric key `{k}`");
+    }
+    Ok(SpeedupRecord {
+        suite: j.str("suite").to_string(),
+        tag: j.str("tag").to_string(),
+        base: j.str("base").to_string(),
+        test: j.str("test").to_string(),
+        speedup: j.f64("speedup"),
+        base_median_ns: j.f64("base_median_ns"),
+        test_median_ns: j.f64("test_median_ns"),
+    })
+}
+
+/// Parse a `BENCH_*.json` body into its entries (oldest first). A legacy
+/// flat record array becomes one entry with an empty date.
+pub fn parse(text: &str) -> anyhow::Result<Vec<Entry>> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let top = j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bench json is not an array"))?;
+    if top.iter().all(|e| e.get("records").is_some()) {
+        top.iter()
+            .map(|e| {
+                let records = e.arr("records")
+                    .iter()
+                    .map(record_from_json)
+                    .collect::<anyhow::Result<_>>()?;
+                Ok(Entry { date: e.str("date").to_string(), records })
+            })
+            .collect()
+    } else {
+        // Legacy flat array of records.
+        let records = top.iter()
+            .map(record_from_json)
+            .collect::<anyhow::Result<_>>()?;
+        Ok(vec![Entry { date: String::new(), records }])
+    }
+}
+
+/// Append a dated entry to an existing trajectory body (or start a new
+/// trajectory when `existing` is `None`); returns the serialized file.
+pub fn append(existing: Option<&str>, date: &str,
+              records: &[SpeedupRecord]) -> anyhow::Result<String> {
+    let mut entries = match existing {
+        Some(text) => parse(text)?,
+        None => Vec::new(),
+    };
+    entries.push(Entry {
+        date: date.to_string(),
+        records: records.to_vec(),
+    });
+    let j = Json::Arr(entries.iter().map(Entry::to_json).collect());
+    Ok(j.to_string_pretty() + "\n")
+}
+
+/// Compare the latest entries of a committed baseline and a fresh run.
+/// Returns human-readable failures: a baseline comparison missing from
+/// the fresh run (structure drift — a renamed or vanished SPEEDUP[*]
+/// line), or a fresh median speedup below `(1 - max_regression)` of the
+/// baseline's for the same (suite, tag, base, test). Extra fresh-side
+/// comparisons are allowed — new benchmarks land before their baseline.
+pub fn compare_latest(baseline: &str, fresh: &str, max_regression: f64)
+                      -> anyhow::Result<Vec<String>> {
+    let key = |r: &SpeedupRecord| {
+        (r.suite.clone(), r.tag.clone(), r.base.clone(), r.test.clone())
+    };
+    let base_entry = parse(baseline)?
+        .pop()
+        .ok_or_else(|| anyhow::anyhow!("baseline trajectory is empty"))?;
+    let fresh_entry = parse(fresh)?
+        .pop()
+        .ok_or_else(|| anyhow::anyhow!("fresh trajectory is empty"))?;
+    let fresh_by_key: BTreeMap<_, _> = fresh_entry
+        .records
+        .iter()
+        .map(|r| (key(r), r))
+        .collect();
+    let mut failures = Vec::new();
+    for b in &base_entry.records {
+        match fresh_by_key.get(&key(b)) {
+            None => failures.push(format!(
+                "missing comparison {}/{} ({} -> {})",
+                b.suite, b.tag, b.base, b.test)),
+            Some(f) => {
+                let floor = b.speedup * (1.0 - max_regression);
+                if f.speedup < floor {
+                    failures.push(format!(
+                        "{}/{} regressed: {:.3}x -> {:.3}x \
+                         (floor {:.3}x at {:.0}% tolerance)",
+                        b.suite, b.tag, b.speedup, f.speedup, floor,
+                        max_regression * 100.0));
+                }
+            }
+        }
+    }
+    Ok(failures)
+}
+
+/// `days` since 1970-01-01 → (year, month, day) in the proleptic
+/// Gregorian calendar (Howard Hinnant's `civil_from_days`; the offline
+/// mirror has no chrono).
+pub fn civil_from_days(days: i64) -> (i64, u32, u32) {
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = (if mp < 10 { mp + 3 } else { mp - 9 }) as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Today's UTC date as `YYYY-MM-DD`.
+pub fn today_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days(secs.div_euclid(86_400));
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(tag: &str, speedup: f64) -> SpeedupRecord {
+        SpeedupRecord {
+            suite: "bench-sim".into(),
+            tag: tag.into(),
+            base: format!("{tag}/base"),
+            test: format!("{tag}/test"),
+            speedup,
+            base_median_ns: 100.0 * speedup,
+            test_median_ns: 100.0,
+        }
+    }
+
+    #[test]
+    fn civil_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        // 2026-08-08 (this repo's trajectory epoch) and a leap day.
+        assert_eq!(civil_from_days(20_673), (2026, 8, 8));
+        assert_eq!(civil_from_days(18_321), (2020, 2, 29));
+        assert_eq!(civil_from_days(-1), (1969, 12, 31));
+    }
+
+    #[test]
+    fn today_is_well_formed() {
+        let d = today_utc();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.as_bytes()[4], b'-');
+        assert_eq!(d.as_bytes()[7], b'-');
+    }
+
+    #[test]
+    fn append_then_parse_roundtrips() {
+        let t1 = append(None, "2026-08-08", &[rec("TIMESKIP", 3.0)]).unwrap();
+        let t2 = append(Some(&t1), "2026-08-09",
+                        &[rec("TIMESKIP", 3.1), rec("LOCKSTEP", 2.2)])
+            .unwrap();
+        let entries = parse(&t2).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].date, "2026-08-08");
+        assert_eq!(entries[1].date, "2026-08-09");
+        assert_eq!(entries[1].records.len(), 2);
+        assert_eq!(entries[1].records[1].tag, "LOCKSTEP");
+        assert_eq!(entries[1].records[1].speedup, 2.2);
+    }
+
+    #[test]
+    fn legacy_flat_arrays_wrap_as_one_entry() {
+        let legacy = Json::Arr(vec![rec("SOURCE", 1.5).to_json()])
+            .to_string_pretty();
+        let entries = parse(&legacy).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].date, "");
+        assert_eq!(entries[0].records[0].tag, "SOURCE");
+        // Appending to a legacy file upgrades it in place.
+        let t = append(Some(&legacy), "2026-08-08", &[rec("SOURCE", 1.6)])
+            .unwrap();
+        let entries = parse(&t).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[1].date, "2026-08-08");
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = append(None, "d1", &[rec("TIMESKIP", 3.0)]).unwrap();
+        let fresh = append(None, "d2", &[rec("TIMESKIP", 2.5),
+                                         rec("LOCKSTEP", 2.0)])
+            .unwrap();
+        // 2.5 ≥ 3.0 × 0.8 → ok; extra fresh-side LOCKSTEP is allowed.
+        assert!(compare_latest(&base, &fresh, 0.2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn compare_fails_on_regression_and_missing() {
+        let base = append(None, "d1", &[rec("TIMESKIP", 3.0),
+                                        rec("LOCKSTEP", 2.0)])
+            .unwrap();
+        let fresh = append(None, "d2", &[rec("TIMESKIP", 2.0)]).unwrap();
+        let fails = compare_latest(&base, &fresh, 0.2).unwrap();
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("regressed")));
+        assert!(fails.iter().any(|f| f.contains("missing comparison")));
+    }
+
+    #[test]
+    fn compare_uses_the_latest_entry_only() {
+        let old = append(None, "d1", &[rec("TIMESKIP", 9.0)]).unwrap();
+        let base = append(Some(&old), "d2", &[rec("TIMESKIP", 2.0)]).unwrap();
+        let fresh = append(None, "d3", &[rec("TIMESKIP", 1.9)]).unwrap();
+        // Against d2's 2.0x, 1.9x is fine; d1's 9.0x is history, not a bar.
+        assert!(compare_latest(&base, &fresh, 0.2).unwrap().is_empty());
+    }
+}

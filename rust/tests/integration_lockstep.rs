@@ -1,0 +1,295 @@
+//! Lockstep-engine equivalence matrix: `eval::lockstep::run_cells` must
+//! produce *bit-identical* statistics to the independent-system oracle
+//! (one freshly-sourced `System` per cell, run unchunked) for every
+//! cell, across {uniform, region-indexed, region+placement} config
+//! sets × {run, run_fast} × {protocol checker on, off} — and, with the
+//! checker attached, identical audited command counts. Sharing one
+//! stream generation across K systems, and advancing them in
+//! `LOCKSTEP_CHUNK` rounds, must be invisible in every counter.
+
+use aldram::aldram::{AlDram, RegionTable};
+use aldram::check::CheckSummary;
+use aldram::eval::lockstep::{grid, run_cells, Engine};
+use aldram::eval::Driver;
+use aldram::mem::{AddrMap, RegionRemap, System, SystemConfig, SystemStats};
+use aldram::timing::TimingParams;
+use aldram::workloads::{by_name, NamedSource};
+
+const CYCLES: u64 = 30_000;
+
+fn fast_timings() -> TimingParams {
+    TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18)
+}
+
+/// The non-uniform 8-bank × 2-region grid from the time-skip matrix:
+/// region 0 fast with a per-bank wobble, region 1 mildly reduced.
+fn region_grid() -> RegionTable {
+    let entries: Vec<AlDram> = (0..16)
+        .map(|i| {
+            let (bank, region) = (i / 2, i % 2);
+            let f = 1.0 - 0.02 * bank as f64;
+            let t = if region == 0 {
+                fast_timings().with_core(
+                    fast_timings().trcd_ns * f,
+                    fast_timings().tras_ns * f,
+                    fast_timings().twr_ns * f,
+                    fast_timings().trp_ns * f,
+                )
+            } else {
+                TimingParams::ddr3_standard().reduced(0.10, 0.12, 0.15, 0.08)
+            };
+            AlDram::fixed(t)
+        })
+        .collect();
+    RegionTable::from_regions(8, 2, entries).unwrap()
+}
+
+fn sources(names: &[&str], seed: &str) -> Vec<NamedSource> {
+    names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| by_name(n).unwrap()
+             .named_source(&format!("lockstep/{seed}/core{i}")))
+        .collect()
+}
+
+fn assert_stats_identical(label: &str, a: &SystemStats, b: &SystemStats) {
+    assert_eq!(a.cycles, b.cycles, "{label}: cycles");
+    assert_eq!(a.reads_done, b.reads_done, "{label}: reads_done");
+    assert_eq!(a.writes_done, b.writes_done, "{label}: writes_done");
+    assert_eq!(a.refreshes, b.refreshes, "{label}: refreshes");
+    assert_eq!(a.avg_read_latency_cycles, b.avg_read_latency_cycles,
+               "{label}: avg_read_latency");
+    assert_eq!(a.row_hit_rate, b.row_hit_rate, "{label}: row_hit_rate");
+    assert_eq!(a.bus_utilization, b.bus_utilization,
+               "{label}: bus_utilization");
+    assert_eq!(a.mean_temp_c, b.mean_temp_c, "{label}: mean_temp_c");
+    assert_eq!(a.final_temp_c, b.final_temp_c, "{label}: final_temp_c");
+    assert_eq!(a.channels.len(), b.channels.len(), "{label}: channel count");
+    for (i, (ha, hb)) in a.channels.iter().zip(&b.channels).enumerate() {
+        assert_eq!(ha.reads_done, hb.reads_done, "{label}/ch{i}: reads");
+        assert_eq!(ha.writes_done, hb.writes_done, "{label}/ch{i}: writes");
+        assert_eq!(ha.avg_read_latency_cycles, hb.avg_read_latency_cycles,
+                   "{label}/ch{i}: read latency");
+        assert_eq!(ha.mean_temp_c, hb.mean_temp_c, "{label}/ch{i}: mean temp");
+        assert_eq!(ha.final_temp_c, hb.final_temp_c,
+                   "{label}/ch{i}: final temp");
+        assert_eq!(ha.timing_switches, hb.timing_switches,
+                   "{label}/ch{i}: timing switches");
+    }
+    assert_eq!(a.cores.len(), b.cores.len(), "{label}: core count");
+    for (ca, cb) in a.cores.iter().zip(&b.cores) {
+        assert_eq!(ca.insts, cb.insts, "{label}/{}: insts", ca.name);
+        assert_eq!(ca.ipc, cb.ipc, "{label}/{}: ipc", ca.name);
+        assert_eq!(ca.reads, cb.reads, "{label}/{}: reads", ca.name);
+        assert_eq!(ca.writes, cb.writes, "{label}/{}: writes", ca.name);
+        assert_eq!(ca.stall_cycles, cb.stall_cycles,
+                   "{label}/{}: stall_cycles", ca.name);
+    }
+    for (i, (pa, pb)) in
+        a.power_inputs.iter().zip(&b.power_inputs).enumerate()
+    {
+        assert_eq!(pa.n_act, pb.n_act, "{label}/ch{i}: n_act");
+        assert_eq!(pa.n_read, pb.n_read, "{label}/ch{i}: n_read");
+        assert_eq!(pa.n_write, pb.n_write, "{label}/ch{i}: n_write");
+        assert_eq!(pa.n_refresh, pb.n_refresh, "{label}/ch{i}: n_refresh");
+        assert_eq!(pa.open_bank_cycles, pb.open_bank_cycles,
+                   "{label}/ch{i}: open_bank_cycles");
+    }
+}
+
+/// The audited coverage counters must match exactly: same command count,
+/// same violation count, same per-constraint check counts, same
+/// per-region hit histogram.
+fn assert_summaries_identical(label: &str, a: &CheckSummary,
+                              b: &CheckSummary) {
+    assert_eq!(a.systems, b.systems, "{label}: audited systems");
+    assert_eq!(a.commands, b.commands, "{label}: audited commands");
+    assert_eq!(a.violations, b.violations, "{label}: violations");
+    assert_eq!(a.checks, b.checks, "{label}: per-constraint checks");
+    assert_eq!(a.region_hits, b.region_hits, "{label}: region hits");
+}
+
+/// Run `cells` both ways — lockstep (shared generation, chunked
+/// advance) and the independent oracle (fresh sources per cell, one
+/// unchunked run) — and require bit-identical stats and, when checking,
+/// identical audit counters for every cell.
+fn check_matrix(label: &str, cells: &[(SystemConfig, AddrMap)],
+                names: &[&str], driver: Driver, check: bool) {
+    let lockstep = run_cells(cells, sources(names, label), CYCLES, driver,
+                             check);
+    assert_eq!(lockstep.len(), cells.len());
+    for (k, ((cfg, map), (stats, summary))) in
+        cells.iter().zip(&lockstep).enumerate()
+    {
+        let mut sys =
+            System::with_sources_map(cfg, *map, sources(names, label));
+        if check {
+            sys.enable_check();
+        }
+        let oracle = match driver {
+            Driver::CycleStepped => sys.run(CYCLES),
+            Driver::TimeSkip => sys.run_fast(CYCLES),
+        };
+        let cell = format!("{label}/cell{k}");
+        assert_stats_identical(&cell, &oracle, stats);
+        match (sys.check_summary(), summary) {
+            (None, None) => assert!(!check, "{cell}: checker missing"),
+            (Some(a), Some(b)) => {
+                assert!(check || aldram::check::inline_enabled());
+                assert_summaries_identical(&cell, &a, b);
+                assert_eq!(a.violations, 0, "{cell}: protocol violations");
+            }
+            _ => panic!("{cell}: checker attached on one side only"),
+        }
+    }
+}
+
+fn uniform_cells() -> Vec<(SystemConfig, AddrMap)> {
+    // Three uniform-timing variants: JEDEC standard, the paper's 55 °C
+    // point, and a mild midpoint — one shared stream, K=3 systems.
+    let map = AddrMap::ddr3_2gb(1);
+    [TimingParams::ddr3_standard(),
+     TimingParams::ddr3_standard().reduced(0.10, 0.12, 0.15, 0.08),
+     fast_timings()]
+        .into_iter()
+        .map(|t| (SystemConfig::paper_default().with_timings(t), map))
+        .collect()
+}
+
+fn region_cells() -> Vec<(SystemConfig, AddrMap)> {
+    // Baseline vs region-granular table: per-(bank, row-region) timing
+    // lookups diverge the two systems' command schedules maximally.
+    let map = AddrMap::ddr3_2gb(1);
+    vec![
+        (SystemConfig::paper_default().with_ambient(30.0), map),
+        (SystemConfig::paper_default()
+             .with_region_table(Some(region_grid()))
+             .with_ambient(30.0),
+         map),
+    ]
+}
+
+fn placement_cells() -> Vec<(SystemConfig, AddrMap)> {
+    // Region timing plus variation-aware page placement on the AL-DRAM
+    // cell only — per-cell address maps, the page-placement axis the
+    // FLY-DRAM follow-up multiplies.
+    let table = region_grid();
+    let base_map = AddrMap::ddr3_2gb(1);
+    let remapped = base_map
+        .with_remap(RegionRemap::fastest_first(&table, base_map.row_bits));
+    let mut cells = region_cells();
+    cells[1].0 = SystemConfig::paper_default()
+        .with_region_table(Some(table))
+        .with_ambient(30.0);
+    cells[1].1 = remapped;
+    cells
+}
+
+const WORKLOADS: [&str; 2] = ["gups", "stream.copy"];
+
+#[test]
+fn uniform_run_fast() {
+    check_matrix("uniform/fast", &uniform_cells(), &WORKLOADS,
+                 Driver::TimeSkip, false);
+}
+
+#[test]
+fn uniform_run_fast_checked() {
+    check_matrix("uniform/fast/check", &uniform_cells(), &WORKLOADS,
+                 Driver::TimeSkip, true);
+}
+
+#[test]
+fn uniform_cycle_stepped() {
+    check_matrix("uniform/step", &uniform_cells(), &WORKLOADS,
+                 Driver::CycleStepped, false);
+}
+
+#[test]
+fn uniform_cycle_stepped_checked() {
+    check_matrix("uniform/step/check", &uniform_cells(), &WORKLOADS,
+                 Driver::CycleStepped, true);
+}
+
+#[test]
+fn regions_run_fast() {
+    check_matrix("regions/fast", &region_cells(), &WORKLOADS,
+                 Driver::TimeSkip, false);
+}
+
+#[test]
+fn regions_run_fast_checked() {
+    check_matrix("regions/fast/check", &region_cells(), &WORKLOADS,
+                 Driver::TimeSkip, true);
+}
+
+#[test]
+fn regions_cycle_stepped() {
+    check_matrix("regions/step", &region_cells(), &WORKLOADS,
+                 Driver::CycleStepped, false);
+}
+
+#[test]
+fn regions_cycle_stepped_checked() {
+    check_matrix("regions/step/check", &region_cells(), &WORKLOADS,
+                 Driver::CycleStepped, true);
+}
+
+#[test]
+fn placement_run_fast() {
+    check_matrix("placement/fast", &placement_cells(), &WORKLOADS,
+                 Driver::TimeSkip, false);
+}
+
+#[test]
+fn placement_run_fast_checked() {
+    check_matrix("placement/fast/check", &placement_cells(), &WORKLOADS,
+                 Driver::TimeSkip, true);
+}
+
+#[test]
+fn placement_cycle_stepped() {
+    check_matrix("placement/step", &placement_cells(), &WORKLOADS,
+                 Driver::CycleStepped, false);
+}
+
+#[test]
+fn placement_cycle_stepped_checked() {
+    check_matrix("placement/step/check", &placement_cells(), &WORKLOADS,
+                 Driver::CycleStepped, true);
+}
+
+#[test]
+fn lockstep_grid_is_jobs_invariant() {
+    // The pool fans lockstep jobs by (workload, core-config, rep); the
+    // input-indexed slots make the grid identical for any worker count.
+    let cfgs: Vec<SystemConfig> = [TimingParams::ddr3_standard(),
+                                   fast_timings()]
+        .into_iter()
+        .map(|t| SystemConfig::paper_default().with_timings(t))
+        .collect();
+    let w = vec![by_name("gups").unwrap(), by_name("mcf").unwrap()];
+    let one = grid(&cfgs, &w, &[1, 2], 8_000, 2, 1, Driver::TimeSkip,
+                   Engine::Lockstep);
+    let four = grid(&cfgs, &w, &[1, 2], 8_000, 2, 4, Driver::TimeSkip,
+                    Engine::Lockstep);
+    assert_eq!(one, four, "lockstep grid varied with --jobs");
+}
+
+#[test]
+fn lockstep_grid_matches_the_independent_oracle() {
+    let cfgs: Vec<SystemConfig> = [TimingParams::ddr3_standard(),
+                                   TimingParams::ddr3_standard()
+                                       .reduced(0.10, 0.12, 0.15, 0.08),
+                                   fast_timings()]
+        .into_iter()
+        .map(|t| SystemConfig::paper_default().with_timings(t))
+        .collect();
+    let w = vec![by_name("milc").unwrap()];
+    let ind = grid(&cfgs, &w, &[1, 4], 8_000, 2, 2, Driver::TimeSkip,
+                   Engine::Independent);
+    let lck = grid(&cfgs, &w, &[1, 4], 8_000, 2, 2, Driver::TimeSkip,
+                   Engine::Lockstep);
+    assert_eq!(ind, lck, "lockstep grid diverged from the oracle");
+}

@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Profile-guided optimization build for the `repro` binary.
+#
+# Three stages (DESIGN.md §14, "PGO recipe"):
+#   1. instrumented build (-Cprofile-generate)
+#   2. training run: `bench-sim` + `bench-profile` — the two suites that
+#      cover the simulator hot path (controller slab queues, time-skip
+#      scans, lockstep grids) and the profiler kernels
+#   3. merge profiles with llvm-profdata, rebuild with -Cprofile-use
+#
+# Usage:
+#   scripts/pgo.sh                # full pipeline, optimized binary in
+#                                 # target/release/repro
+#   scripts/pgo.sh --train-only   # stages 1–2 only (the CI smoke: proves
+#                                 # the instrumented binary runs and
+#                                 # emits .profraw without needing
+#                                 # llvm-profdata on the runner)
+#
+# Env:
+#   PGO_DIR     profile data directory (default: target/pgo-profiles)
+#   PGO_CYCLES  training-run simulated cycles (default: 40000)
+#   PGO_CELLS   training-run profiler cells  (default: 192)
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PGO_DIR="${PGO_DIR:-$PWD/target/pgo-profiles}"
+PGO_CYCLES="${PGO_CYCLES:-40000}"
+PGO_CELLS="${PGO_CELLS:-192}"
+TRAIN_ONLY=0
+[ "${1:-}" = "--train-only" ] && TRAIN_ONLY=1
+
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+echo "== PGO stage 1: instrumented build =="
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" cargo build --release
+
+echo "== PGO stage 2: training run (bench-sim + bench-profile) =="
+BIN=target/release/repro
+BENCH_FAST=1 "$BIN" bench-sim --cycles "$PGO_CYCLES"
+BENCH_FAST=1 "$BIN" bench-profile --cells "$PGO_CELLS"
+
+ls "$PGO_DIR"/*.profraw >/dev/null 2>&1 || {
+    echo "PGO training produced no .profraw files" >&2
+    exit 1
+}
+echo "training profiles: $(ls "$PGO_DIR"/*.profraw | wc -l) file(s)"
+
+if [ "$TRAIN_ONLY" = 1 ]; then
+    echo "== PGO --train-only: stopping before merge/rebuild =="
+    exit 0
+fi
+
+echo "== PGO stage 3: merge + optimized rebuild =="
+# llvm-profdata must match the rustc LLVM major; prefer the one shipped
+# with the toolchain when present.
+PROFDATA=$(find "$(rustc --print sysroot)" -name llvm-profdata 2>/dev/null \
+           | head -n1)
+PROFDATA="${PROFDATA:-llvm-profdata}"
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"/*.profraw
+
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" cargo build --release
+echo "== PGO done: optimized binary rebuilt with merged profile =="
