@@ -39,6 +39,19 @@ impl ThermalModel {
         self.temp_c
     }
 
+    pub fn ambient(&self) -> f64 {
+        self.ambient_c
+    }
+
+    /// Move the ambient setpoint without touching the current DIMM
+    /// temperature — the fleet's per-node ambient model (inlet + seasonal
+    /// + diurnal drift) retargets the first-order system between steps,
+    /// and the DIMM then relaxes toward the new ambient under the same
+    /// drift-rate bound as any other excursion.
+    pub fn set_ambient(&mut self, ambient_c: f64) {
+        self.ambient_c = ambient_c;
+    }
+
     /// Advance `dt_s` seconds at the given bus utilization; returns the
     /// new temperature.
     pub fn step(&mut self, dt_s: f64, utilization: f64) -> f64 {
@@ -85,6 +98,25 @@ mod tests {
                     "drift {} degC/s", (now - prev).abs());
             prev = now;
         }
+    }
+
+    #[test]
+    fn ambient_retarget_relaxes_under_the_drift_bound() {
+        let mut t = ThermalModel::new(25.0);
+        for _ in 0..10_000 {
+            t.step(0.01, 0.0);
+        }
+        // A diurnal swing retargets the setpoint; temperature follows
+        // gradually (bounded drift), not as a jump.
+        t.set_ambient(31.0);
+        assert_eq!(t.ambient(), 31.0);
+        let before = t.temperature();
+        let after = t.step(1.0, 0.0);
+        assert!(after > before && after - before <= 0.1 + 1e-12);
+        for _ in 0..100_000 {
+            t.step(0.01, 0.0);
+        }
+        assert!((t.temperature() - 31.0).abs() < 0.01);
     }
 
     #[test]

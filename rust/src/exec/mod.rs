@@ -115,6 +115,87 @@ impl Pool {
             .collect()
     }
 
+    /// Fold `0..n` into a single accumulator across the pool, claiming
+    /// work in contiguous chunks of `chunk` indices (0 is clamped to 1).
+    ///
+    /// This is the bounded-memory sibling of [`Pool::run_init`], built for
+    /// campaigns whose per-job results must never be materialized: each
+    /// worker folds every job it claims into one worker-local accumulator
+    /// (`zero()` makes an empty one, `fold` absorbs one job into it), and
+    /// the worker accumulators are merged at the end. Peak memory is
+    /// O(workers × |A|) — independent of `n`.
+    ///
+    /// Chunked claiming amortizes the atomic traffic and keeps workers
+    /// load-balanced under heterogeneous job costs (a worker stuck on an
+    /// expensive chunk simply claims fewer chunks); `chunk = 1` degrades
+    /// to per-job claiming.
+    ///
+    /// **Determinism contract:** which worker folds which chunk depends on
+    /// scheduling, so the result is bit-identical across `jobs` and
+    /// `chunk` choices *iff* `fold`/`merge` form an exactly commutative
+    /// monoid — all-integer or fixed-point accumulators such as
+    /// [`crate::util::hist::StreamHist`], not `f64` sums. The fleet
+    /// campaign's determinism tests pin exactly this property.
+    pub fn run_fold<S, A, FI, FA, F, M>(&self, n: usize, chunk: usize,
+                                        init: FI, zero: FA, fold: F,
+                                        merge: M) -> A
+    where
+        A: Send,
+        FI: Fn() -> S + Sync,
+        FA: Fn() -> A + Sync,
+        F: Fn(&mut S, &mut A, usize) + Sync,
+        M: Fn(A, A) -> A + Sync,
+    {
+        if self.jobs == 1 || n <= 1 {
+            let mut state = init();
+            let mut acc = zero();
+            for i in 0..n {
+                fold(&mut state, &mut acc, i);
+            }
+            return acc;
+        }
+        let chunk = chunk.max(1);
+        let n_chunks = n.div_ceil(chunk);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<A>>> =
+            (0..self.jobs.min(n_chunks)).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            let (next, init, zero, fold) = (&next, &init, &zero, &fold);
+            for slot in &slots {
+                s.spawn(move || {
+                    // Both lazy: a worker that never claims a chunk pays
+                    // for neither state nor accumulator construction.
+                    let mut state: Option<S> = None;
+                    let mut acc: Option<A> = None;
+                    loop {
+                        let c = next.fetch_add(1, Ordering::Relaxed);
+                        if c >= n_chunks {
+                            break;
+                        }
+                        let st = state.get_or_insert_with(init);
+                        let a = acc.get_or_insert_with(zero);
+                        let lo = c * chunk;
+                        for i in lo..(lo + chunk).min(n) {
+                            fold(st, a, i);
+                        }
+                    }
+                    if let Some(a) = acc {
+                        *slot.lock().unwrap() = Some(a);
+                    }
+                });
+            }
+        });
+        let mut out = zero();
+        for m in slots {
+            if let Some(a) = m.into_inner()
+                .expect("worker panicked would have propagated")
+            {
+                out = merge(out, a);
+            }
+        }
+        out
+    }
+
     /// Fallible variant of [`Pool::run`]: runs everything, then surfaces
     /// the first error in input order (later results are dropped). Errors
     /// do not cancel in-flight jobs — fan-outs here are short and
@@ -210,6 +291,60 @@ mod tests {
             },
         );
         assert_eq!(out, (0..32).collect::<Vec<_>>());
+        let n = built.load(Ordering::Relaxed);
+        assert!(n >= 1 && n <= jobs, "built {n} states for {jobs} workers");
+    }
+
+    #[test]
+    fn run_fold_matches_sequential_for_any_shape() {
+        // Integer accumulators ⇒ the fold is an exact commutative monoid,
+        // so every (jobs, chunk) shape must produce the identical result.
+        let fold = |_: &mut (), acc: &mut (u64, u64), i: usize| {
+            acc.0 += (i as u64) * (i as u64);
+            acc.1 += 1;
+        };
+        let merge =
+            |a: (u64, u64), b: (u64, u64)| (a.0 + b.0, a.1 + b.1);
+        let want = Pool::sequential()
+            .run_fold(257, 8, || (), || (0, 0), fold, merge);
+        assert_eq!(want.1, 257);
+        for jobs in [2usize, 4, 8] {
+            for chunk in [1usize, 3, 64, 1000] {
+                let got = Pool::new(jobs)
+                    .run_fold(257, chunk, || (), || (0, 0), fold, merge);
+                assert_eq!(got, want, "jobs {jobs} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_fold_clamps_chunk_and_handles_empty() {
+        let sum = Pool::new(4).run_fold(
+            10, 0, // chunk 0 clamps to 1
+            || (),
+            || 0u64,
+            |_, acc, i| *acc += i as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(sum, 45);
+        let none = Pool::new(4)
+            .run_fold(0, 32, || (), || 7u64, |_, _, _| (), |a, b| a + b);
+        assert_eq!(none, 7, "empty fold returns zero()");
+    }
+
+    #[test]
+    fn run_fold_builds_at_most_one_state_per_worker() {
+        let built = AtomicUsize::new(0);
+        let jobs = 3;
+        let count = Pool::new(jobs).run_fold(
+            64,
+            4,
+            || built.fetch_add(1, Ordering::Relaxed),
+            || 0u64,
+            |_, acc, _| *acc += 1,
+            |a, b| a + b,
+        );
+        assert_eq!(count, 64);
         let n = built.load(Ordering::Relaxed);
         assert!(n >= 1 && n <= jobs, "built {n} states for {jobs} workers");
     }

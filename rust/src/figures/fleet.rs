@@ -1,0 +1,104 @@
+//! Fleet campaign report: speedup CDF, per-archetype breakdown with the
+//! slowest decile, and the re-profiling-budget sweep — all derived from
+//! the streamed [`FleetSummary`] alone (no per-node data exists to read).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::fleet::FleetSummary;
+
+use super::csv::Csv;
+
+/// Print the campaign report and write `fleet_cdf.csv`,
+/// `fleet_archetypes.csv`, and `fleet_budget.csv` under `out`.
+pub fn report(s: &FleetSummary, out: &Path) -> Result<()> {
+    anyhow::ensure!(s.nodes > 0, "fleet summary is empty");
+    println!("== Fleet campaign: {} nodes x {} archetypes ==",
+             s.nodes, s.archetypes());
+
+    println!("speedup: mean {:.4}  p10 {:.4}  p50 {:.4}  p90 {:.4}  \
+              [{:.4}, {:.4}]",
+             s.speedup.mean(), s.speedup.quantile(0.1),
+             s.speedup.quantile(0.5), s.speedup.quantile(0.9),
+             s.speedup.min(), s.speedup.max());
+    println!("read latency (cycles): mean {:.1}  p50 {:.1}  p90 {:.1}",
+             s.latency.mean(), s.latency.quantile(0.5),
+             s.latency.quantile(0.9));
+    println!("peak DIMM temp (degC): mean {:.1}  p90 {:.1}  max {:.1}",
+             s.peak_temp.mean(), s.peak_temp.quantile(0.9), s.peak_temp.max());
+    println!("error budget: {} bin-crossing nodes ({:.2}%), {} fallback \
+              nodes ({:.2}%)",
+             s.bin_crossing_nodes,
+             100.0 * s.bin_crossing_nodes as f64 / s.nodes as f64,
+             s.fallback_nodes,
+             100.0 * s.fallback_nodes as f64 / s.nodes as f64);
+
+    let mut cdf = Csv::new(&["speedup", "cum_frac"]);
+    for (x, f) in s.speedup.cdf() {
+        cdf.rowf(&[x, f]);
+    }
+    cdf.write(out, "fleet_cdf.csv")?;
+
+    let mut arch = Csv::new(&["archetype", "nodes", "mean_speedup",
+                              "p10_speedup"]);
+    println!("{:<10} {:>7} {:>12} {:>12}",
+             "archetype", "nodes", "mean", "p10");
+    for i in 0..s.archetypes() {
+        let n = s.archetype_nodes[i];
+        let (mean, p10) = if n > 0 {
+            (s.archetype_speedup[i].mean(), s.archetype_speedup[i].quantile(0.1))
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        if n > 0 {
+            println!("{:<10} {:>7} {:>12.4} {:>12.4}", i, n, mean, p10);
+        }
+        arch.rowf(&[i as f64, n as f64, mean, p10]);
+    }
+    arch.write(out, "fleet_archetypes.csv")?;
+    if let Some((p10, worst, mean, share)) = s.slowest_decile() {
+        println!("slowest decile: fleet p10 {:.4}; weakest archetype {} \
+                  (mean {:.4}, {:.1}% of nodes)",
+                 p10, worst, mean, 100.0 * share);
+    }
+
+    let mut budget = Csv::new(&["profiled_archetypes", "fleet_mean_speedup"]);
+    println!("re-profiling budget sweep (profile top-K archetypes by \
+              population, rest run standard timings):");
+    for (k, mean) in s.budget_sweep() {
+        println!("  K={k:<3} fleet mean speedup {mean:.4}");
+        budget.rowf(&[k as f64, mean]);
+    }
+    budget.write(out, "fleet_budget.csv")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::NodeOutcome;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn report_smoke() {
+        let mut rng = Rng::from_label("figures/fleet");
+        let mut s = FleetSummary::new(3);
+        for _ in 0..120 {
+            s.record(&NodeOutcome {
+                archetype: rng.below(3) as usize,
+                speedup: rng.range(1.02, 1.25),
+                read_latency_cycles: rng.range(50.0, 200.0),
+                peak_temp_c: rng.range(25.0, 45.0),
+                bin_crossing: rng.chance(0.1),
+                fallback: false,
+            });
+        }
+        let dir = std::env::temp_dir().join("aldram_fleet_report_test");
+        report(&s, &dir).unwrap();
+        for f in ["fleet_cdf.csv", "fleet_archetypes.csv", "fleet_budget.csv"] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        assert!(report(&FleetSummary::new(2), &dir).is_err());
+    }
+}

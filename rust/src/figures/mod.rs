@@ -9,3 +9,4 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig6;
+pub mod fleet;

@@ -1,0 +1,409 @@
+//! Fleet-scale campaign engine (DESIGN.md §15).
+//!
+//! Scales the single-DIMM pipeline (profile → install → simulate) to
+//! O(10^3..10^4) nodes: each node is one server drawing its DIMM from an
+//! archetype catalog ([`crate::population::archetype_catalog`]) and its
+//! environment from a per-node ambient model (rack position, season,
+//! diurnal cycle). Nodes are sharded over [`crate::exec::Pool::run_fold`]
+//! in bounded chunks and folded online into a fixed-memory
+//! [`FleetSummary`] — per-node results are never materialized, so a
+//! 10^4-node campaign uses the same memory as a 10-node one.
+//!
+//! The perf core is profile memoization: every node of an archetype bin
+//! shares bit-identical silicon, so a content-keyed
+//! [`crate::registry::ProfileStore`] collapses 10^4 characterizations to
+//! O(archetypes) — a miss runs the probed-SIMD sweep battery warm-seeded
+//! from the nearest cached archetype, a hit reuses the stored table
+//! outright. `repro fleet run` reports the hit rate and benches the
+//! memoized characterization against the profile-every-node baseline
+//! (`SPEEDUP[FLEET]`, trajectory in `BENCH_FLEET.json`).
+//!
+//! Determinism: every per-node quantity is a pure function of
+//! `(campaign seed, node index)`, and the summary fold is an exact
+//! commutative monoid, so campaign results are bit-identical across
+//! `--jobs`, `--chunk`, and cache hit/miss paths (the cache stores what
+//! profiling would have produced). Only the hit/miss *counts* are
+//! schedule-dependent (concurrent first touches of one archetype can
+//! both miss); `tests/integration_fleet.rs` pins all of this.
+
+pub mod summary;
+
+pub use summary::{FleetSummary, NodeOutcome};
+
+use std::sync::Arc;
+
+use crate::aldram::{AlDram, ThermalModel, DEFAULT_BIN_C};
+use crate::exec::Pool;
+use crate::mem::{System, SystemConfig};
+use crate::model::params;
+use crate::population::{archetype_catalog, generate_dimm, Archetype};
+use crate::profiler::profile_dimm_seeded;
+use crate::registry::{ProfileStore, StoredProfile};
+use crate::runtime::SimdBackend;
+use crate::util::rng::Rng;
+use crate::workloads::{suite, WorkloadSpec};
+
+/// Steps in the simulated-day thermal sweep (15-minute resolution).
+const DAY_STEPS: usize = 96;
+const DAY_STEP_S: f64 = 900.0;
+/// Hottest profiled anchor: a node whose DIMM exceeds this falls back to
+/// standard timings (error-budget counter, not a simulated path).
+const PROFILE_CEILING_C: f64 = 85.0;
+
+/// Campaign parameters. `Default` is the `repro fleet run` baseline shape
+/// (overridable per flag); tests shrink `cells`/`cycles` for speed.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub nodes: usize,
+    /// Catalog size — distinct DIMM designs fielded across the fleet.
+    pub archetypes: usize,
+    /// Per-chip-bank sampling resolution of each archetype's arrays.
+    pub cells: usize,
+    /// Simulated controller cycles per (base, AL-DRAM) run.
+    pub cycles: u64,
+    /// Campaign seed label; every node derives from `fleet/<seed>/node/<i>`.
+    pub seed: String,
+    /// Nodes per work-claim (`Pool::run_fold` chunk).
+    pub chunk: usize,
+    /// Content-keyed profile memoization (off = profile every node; the
+    /// bench baseline).
+    pub memoize: bool,
+    /// Workload variety: nodes draw from the first `workloads` entries of
+    /// the suite.
+    pub workloads: usize,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            nodes: 1000,
+            archetypes: 12,
+            cells: 96,
+            cycles: 12_000,
+            seed: "0".into(),
+            chunk: 32,
+            memoize: true,
+            workloads: 6,
+        }
+    }
+}
+
+/// Per-node ambient temperature model: rack inlet (cold-aisle temperature
+/// plus vertical stratification), a seasonal offset, and a diurnal
+/// sinusoid. All parameters are sampled once per node from its seed
+/// stream, so a node's environment is part of its identity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AmbientModel {
+    /// Rack inlet at this node's height, degC.
+    pub inlet_c: f64,
+    /// Seasonal offset, degC.
+    pub seasonal_c: f64,
+    /// Diurnal swing amplitude, degC.
+    pub diurnal_amp_c: f64,
+    /// Diurnal phase, fraction of a day.
+    pub phase: f64,
+    /// Cooling-fault excess, degC — 0 for healthy nodes. A few percent
+    /// of fleet nodes sit behind a failed fan or blocked tile and run
+    /// far above the aisle setpoint; they are what the error-budget
+    /// counters (bin crossings, >85degC fallbacks) exist to count —
+    /// healthy racks never leave the coolest timing bin.
+    pub hotspot_c: f64,
+}
+
+/// Fraction of nodes with a cooling fault, and its excess range.
+const HOTSPOT_RATE: f64 = 0.03;
+const HOTSPOT_RANGE_C: (f64, f64) = (8.0, 45.0);
+
+impl AmbientModel {
+    fn sample(rng: &mut Rng) -> Self {
+        // Cold-aisle setpoint varies by row; hot air stratifies upward so
+        // higher rack positions run ~4degC warmer at the top.
+        let row_inlet = rng.range(18.0, 24.0);
+        let height = rng.f64();
+        let inlet_c = row_inlet + 4.0 * height;
+        let seasonal_c = rng.range(-3.0, 5.0);
+        let diurnal_amp_c = rng.range(0.5, 2.5);
+        let phase = rng.f64();
+        let hotspot_c = if rng.chance(HOTSPOT_RATE) {
+            rng.range(HOTSPOT_RANGE_C.0, HOTSPOT_RANGE_C.1)
+        } else {
+            0.0
+        };
+        AmbientModel { inlet_c, seasonal_c, diurnal_amp_c, phase, hotspot_c }
+    }
+
+    /// Ambient at `day_frac` in [0, 1) of the simulated day.
+    pub fn ambient_at(&self, day_frac: f64) -> f64 {
+        self.inlet_c + self.hotspot_c + self.seasonal_c
+            + self.diurnal_amp_c
+                * (std::f64::consts::TAU * (day_frac + self.phase)).sin()
+    }
+}
+
+/// Everything a node is, derived purely from `(campaign seed, index)`:
+/// which archetype it fields, which workload it runs, its ambient model,
+/// and the time of day its speedup window is observed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub index: usize,
+    pub archetype: usize,
+    pub workload: usize,
+    pub ambient: AmbientModel,
+    /// Day fraction at which the (base, AL-DRAM) windows are simulated.
+    pub obs: f64,
+}
+
+/// Derive node `i`'s spec. Draw order is part of the campaign format —
+/// reordering draws changes every node identity.
+pub fn node_spec(spec: &FleetSpec, i: usize) -> NodeSpec {
+    let mut rng = Rng::from_label(&format!("fleet/{}/node/{i}", spec.seed));
+    let archetype = rng.below(spec.archetypes as u64) as usize;
+    let workload = rng.below(spec.workloads as u64) as usize;
+    let ambient = AmbientModel::sample(&mut rng);
+    let obs = rng.f64();
+    NodeSpec { index: i, archetype, workload, ambient, obs }
+}
+
+/// Characterize one archetype through the store: identity fast path
+/// (repeat node of a known `(dimm_id, cells)` — no array regeneration),
+/// then content-key lookup, then a real profiling run warm-seeded from
+/// the nearest cached neighbor. With `store == None` (memoization off)
+/// every call profiles from scratch — the bench baseline.
+fn characterize(backend: &mut SimdBackend, at: &Archetype, cells: usize,
+                store: Option<&ProfileStore>) -> Arc<StoredProfile> {
+    if let Some(store) = store {
+        if let Some(sp) = store.cached_key(at.dimm_id, cells)
+            .and_then(|key| store.get(key)) {
+            return sp;
+        }
+    }
+    let dimm = generate_dimm(at.dimm_id, cells, params());
+    let key = dimm.arrays.content_key();
+    if let Some(store) = store {
+        if let Some(sp) = store.get(key) {
+            return sp;
+        }
+    }
+    let seed = store.and_then(|s| s.nearest_seed(at.vendor_idx, at.speed_bin));
+    let (profile, read85, write85) = profile_dimm_seeded(
+        backend, &dimm,
+        seed.as_deref().map(|sp| (&sp.read85, &sp.write85)))
+        .expect("archetype characterization failed");
+    let table = AlDram::from_profile(&profile, DEFAULT_BIN_C);
+    let sp = StoredProfile {
+        profile,
+        table,
+        read85,
+        write85,
+        vendor_idx: at.vendor_idx,
+        speed_bin: at.speed_bin,
+    };
+    match store {
+        Some(store) => store.insert(key, at.dimm_id, cells, sp),
+        None => Arc::new(sp),
+    }
+}
+
+/// Simulate node `ns` with its installed table and fold the outcome.
+/// The speedup window runs at the node's observation-time ambient; the
+/// error-budget counters come from sweeping its DIMM temperature across
+/// the whole simulated day under the AL-DRAM run's bus load.
+fn simulate_node(spec: &FleetSpec, ns: &NodeSpec, sp: &StoredProfile,
+                 workloads: &[WorkloadSpec]) -> NodeOutcome {
+    let w = &workloads[ns.workload];
+    let label = format!("fleet/{}/node/{}", spec.seed, ns.index);
+    let ambient_now = ns.ambient.ambient_at(ns.obs);
+    let run = |aldram: Option<AlDram>| {
+        let cfg = SystemConfig::paper_default()
+            .with_aldram(aldram)
+            .with_ambient(ambient_now);
+        System::new(&cfg, &[(w.clone(), label.clone())]).run_fast(spec.cycles)
+    };
+    let base = run(None);
+    let fast = run(Some(sp.table.clone()));
+    let throughput = |s: &crate::mem::SystemStats|
+        s.cores.iter().map(|c| c.ipc).sum::<f64>();
+    let speedup = throughput(&fast) / throughput(&base);
+
+    // Day sweep: track the DIMM temperature envelope under the AL-DRAM
+    // run's bus load as the ambient walks the node's diurnal cycle.
+    let mut thermal = ThermalModel::new(ns.ambient.ambient_at(0.0));
+    let (mut peak, mut trough) = (f64::NEG_INFINITY, f64::INFINITY);
+    for s in 0..DAY_STEPS {
+        let frac = s as f64 / DAY_STEPS as f64;
+        thermal.set_ambient(ns.ambient.ambient_at(frac));
+        let t = thermal.step(DAY_STEP_S, fast.bus_utilization);
+        peak = peak.max(t);
+        trough = trough.min(t);
+    }
+    NodeOutcome {
+        archetype: ns.archetype,
+        speedup,
+        read_latency_cycles: fast.avg_read_latency_cycles,
+        peak_temp_c: peak,
+        bin_crossing: sp.table.bin_index(peak) != sp.table.bin_index(trough),
+        fallback: peak > PROFILE_CEILING_C,
+    }
+}
+
+/// What a campaign returns: the streamed aggregate plus cache telemetry.
+/// `hits`/`misses` are schedule-dependent (see module docs); `summary`
+/// is not.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub summary: FleetSummary,
+    pub hits: u64,
+    pub misses: u64,
+    /// Distinct characterizations held at the end (O(archetypes)).
+    pub unique_profiles: usize,
+}
+
+impl CampaignResult {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 { 0.0 } else { self.hits as f64 / total as f64 }
+    }
+}
+
+/// Run the campaign: shard `spec.nodes` over `jobs` workers in
+/// `spec.chunk`-node claims, characterize through the shared store, and
+/// fold every node into one [`FleetSummary`].
+pub fn run_campaign(spec: &FleetSpec, jobs: usize) -> CampaignResult {
+    assert!(spec.nodes >= 1 && spec.archetypes >= 1 && spec.workloads >= 1);
+    let catalog = archetype_catalog(spec.archetypes, params());
+    let workloads: Vec<WorkloadSpec> =
+        suite().into_iter().take(spec.workloads).collect();
+    assert_eq!(workloads.len(), spec.workloads,
+               "suite has fewer than {} workloads", spec.workloads);
+    let store = spec.memoize.then(ProfileStore::new);
+
+    let summary = Pool::new(jobs).run_fold(
+        spec.nodes,
+        spec.chunk,
+        SimdBackend::new,
+        || FleetSummary::new(spec.archetypes),
+        |backend, acc, i| {
+            let ns = node_spec(spec, i);
+            let sp = characterize(backend, &catalog[ns.archetype], spec.cells,
+                                  store.as_ref());
+            acc.record(&simulate_node(spec, &ns, &sp, &workloads));
+        },
+        |mut a, b| {
+            a.merge(&b);
+            a
+        },
+    );
+    let (hits, misses, unique) = match &store {
+        Some(s) => (s.hits(), s.misses(), s.len()),
+        None => (0, spec.nodes as u64, spec.nodes),
+    };
+    CampaignResult { summary, hits, misses, unique_profiles: unique }
+}
+
+/// Characterization-only sweep for the bench: walk every node's
+/// characterize step (no simulation) and return cache telemetry plus an
+/// order-independent fingerprint of the tables each node would install.
+/// `SPEEDUP[FLEET]` times this with `spec.memoize` on vs off; the
+/// fingerprints must match first — the cache must be invisible in
+/// results.
+pub fn characterize_fleet(spec: &FleetSpec, jobs: usize) -> (u64, u64, u64) {
+    let catalog = archetype_catalog(spec.archetypes, params());
+    let store = spec.memoize.then(ProfileStore::new);
+    let fingerprint = Pool::new(jobs).run_fold(
+        spec.nodes,
+        spec.chunk,
+        SimdBackend::new,
+        || 0u64,
+        |backend, acc, i| {
+            let ns = node_spec(spec, i);
+            let sp = characterize(backend, &catalog[ns.archetype], spec.cells,
+                                  store.as_ref());
+            // wrapping_add is commutative, so the fingerprint is
+            // schedule-independent even though per-worker partials vary.
+            *acc = acc.wrapping_add(table_fingerprint(&sp.table));
+        },
+        |a, b| a.wrapping_add(b),
+    );
+    match &store {
+        Some(s) => (s.hits(), s.misses(), fingerprint),
+        None => (0, spec.nodes as u64, fingerprint),
+    }
+}
+
+/// FNV-1a over an installed table's observable content.
+fn table_fingerprint(t: &AlDram) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(t.guard_c.to_bits());
+    for e in t.entries() {
+        eat(e.max_c.to_bits());
+        eat(e.timings.trcd_ns.to_bits());
+        eat(e.timings.tras_ns.to_bits());
+        eat(e.timings.twr_ns.to_bits());
+        eat(e.timings.trp_ns.to_bits());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_specs_are_deterministic_and_in_range() {
+        let spec = FleetSpec { nodes: 64, archetypes: 5, workloads: 4,
+                               seed: "t".into(), ..FleetSpec::default() };
+        for i in 0..spec.nodes {
+            let a = node_spec(&spec, i);
+            let b = node_spec(&spec, i);
+            assert_eq!(a, b);
+            assert!(a.archetype < 5 && a.workload < 4);
+            assert!((0.0..1.0).contains(&a.obs));
+            // Ambient stays within the rack envelope across the day:
+            // healthy nodes under 36degC, cooling faults bounded by the
+            // hotspot ceiling.
+            let cap = if a.ambient.hotspot_c > 0.0 { 81.0 } else { 36.0 };
+            for s in 0..24 {
+                let t = a.ambient.ambient_at(s as f64 / 24.0);
+                assert!((12.0..82.0).contains(&t), "ambient {t} off-model");
+                assert!(t < cap, "ambient {t} above class ceiling {cap}");
+            }
+        }
+        // Different seeds decorrelate node identities.
+        let other = FleetSpec { seed: "u".into(), ..spec.clone() };
+        assert!((0..64).any(|i| node_spec(&spec, i) != node_spec(&other, i)));
+    }
+
+    #[test]
+    fn ambient_model_cycles_with_the_day() {
+        let m = AmbientModel { inlet_c: 22.0, seasonal_c: 2.0,
+                               diurnal_amp_c: 1.5, phase: 0.25,
+                               hotspot_c: 0.0 };
+        // Half a day apart the diurnal term flips sign.
+        let a = m.ambient_at(0.0);
+        let b = m.ambient_at(0.5);
+        assert!(((a + b) / 2.0 - 24.0).abs() < 1e-9);
+        assert!((a - b).abs() > 1.0);
+    }
+
+    #[test]
+    fn table_fingerprint_tracks_table_content() {
+        let p = params();
+        let mut backend = SimdBackend::new();
+        let d0 = generate_dimm(0, 32, p);
+        let d1 = generate_dimm(1, 32, p);
+        let t0 = AlDram::from_profile(
+            &crate::profiler::profile_dimm(&mut backend, &d0).unwrap(),
+            DEFAULT_BIN_C);
+        let t1 = AlDram::from_profile(
+            &crate::profiler::profile_dimm(&mut backend, &d1).unwrap(),
+            DEFAULT_BIN_C);
+        assert_eq!(table_fingerprint(&t0), table_fingerprint(&t0));
+        assert_ne!(table_fingerprint(&t0), table_fingerprint(&t1));
+    }
+}

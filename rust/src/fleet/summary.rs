@@ -1,0 +1,333 @@
+//! Fixed-memory fleet aggregates.
+//!
+//! A campaign folds every node into one [`FleetSummary`] — streaming
+//! histograms plus per-archetype sub-histograms and error-budget
+//! counters. The struct's size is O(archetypes × bins), independent of
+//! how many nodes were simulated; per-node results are never
+//! materialized. Every field is an exact commutative accumulator (see
+//! `util::hist`), so [`FleetSummary::merge`] is partition-invariant and
+//! the campaign is bit-identical across `--jobs` and `--chunk` choices —
+//! the property `tests/integration_fleet.rs` pins.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::util::hist::StreamHist;
+use crate::util::json::Json;
+
+/// Histogram grids `(lo, hi, bins)` — fixed per format version so
+/// summaries from different runs always merge.
+pub const SPEEDUP_GRID: (f64, f64, usize) = (0.5, 2.0, 150);
+pub const LATENCY_GRID: (f64, f64, usize) = (0.0, 400.0, 100);
+pub const TEMP_GRID: (f64, f64, usize) = (10.0, 100.0, 90);
+/// Per-archetype speedup sub-histograms are coarser — there are
+/// `archetypes` of them and they only feed mean/decile analysis.
+pub const ARCHETYPE_BINS: usize = 50;
+
+/// What one simulated node contributes to the aggregate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeOutcome {
+    pub archetype: usize,
+    /// AL-DRAM over standard-timing IPC ratio on the node's workload.
+    pub speedup: f64,
+    /// Average read latency (controller cycles) of the AL-DRAM run.
+    pub read_latency_cycles: f64,
+    /// Worst DIMM temperature across the node's simulated day.
+    pub peak_temp_c: f64,
+    /// The node's day crosses a timing-table bin boundary, so its
+    /// controller must re-bin at runtime.
+    pub bin_crossing: bool,
+    /// The node's peak temperature exceeds the hottest profiled anchor
+    /// (85degC) — its profile is unusable there and it falls back to
+    /// standard timings.
+    pub fallback: bool,
+}
+
+/// The campaign aggregate. All counters are exact and commutative;
+/// `PartialEq` is bitwise on every accumulator, which is what the
+/// determinism tests compare.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSummary {
+    pub nodes: u64,
+    pub speedup: StreamHist,
+    pub latency: StreamHist,
+    pub peak_temp: StreamHist,
+    pub archetype_nodes: Vec<u64>,
+    pub archetype_speedup: Vec<StreamHist>,
+    /// Error-budget counters (see [`NodeOutcome`]).
+    pub bin_crossing_nodes: u64,
+    pub fallback_nodes: u64,
+}
+
+impl FleetSummary {
+    pub fn new(archetypes: usize) -> Self {
+        assert!(archetypes >= 1);
+        let hist = |(lo, hi, bins): (f64, f64, usize)| StreamHist::new(lo, hi, bins);
+        FleetSummary {
+            nodes: 0,
+            speedup: hist(SPEEDUP_GRID),
+            latency: hist(LATENCY_GRID),
+            peak_temp: hist(TEMP_GRID),
+            archetype_nodes: vec![0; archetypes],
+            archetype_speedup: (0..archetypes)
+                .map(|_| StreamHist::new(SPEEDUP_GRID.0, SPEEDUP_GRID.1,
+                                         ARCHETYPE_BINS))
+                .collect(),
+            bin_crossing_nodes: 0,
+            fallback_nodes: 0,
+        }
+    }
+
+    pub fn archetypes(&self) -> usize {
+        self.archetype_nodes.len()
+    }
+
+    pub fn record(&mut self, o: &NodeOutcome) {
+        assert!(o.archetype < self.archetypes(),
+                "archetype {} out of range", o.archetype);
+        self.nodes += 1;
+        self.speedup.record(o.speedup);
+        self.latency.record(o.read_latency_cycles);
+        self.peak_temp.record(o.peak_temp_c);
+        self.archetype_nodes[o.archetype] += 1;
+        self.archetype_speedup[o.archetype].record(o.speedup);
+        self.bin_crossing_nodes += o.bin_crossing as u64;
+        self.fallback_nodes += o.fallback as u64;
+    }
+
+    /// Merge a worker partial into this one (exact, commutative — see
+    /// module docs).
+    pub fn merge(&mut self, other: &FleetSummary) {
+        assert_eq!(self.archetypes(), other.archetypes(),
+                   "merging summaries over different catalogs");
+        self.nodes += other.nodes;
+        self.speedup.merge(&other.speedup);
+        self.latency.merge(&other.latency);
+        self.peak_temp.merge(&other.peak_temp);
+        for (a, b) in self.archetype_nodes.iter_mut()
+            .zip(&other.archetype_nodes) {
+            *a += b;
+        }
+        for (a, b) in self.archetype_speedup.iter_mut()
+            .zip(&other.archetype_speedup) {
+            a.merge(b);
+        }
+        self.bin_crossing_nodes += other.bin_crossing_nodes;
+        self.fallback_nodes += other.fallback_nodes;
+    }
+
+    /// Re-profiling-budget sweep: with a budget of `K` characterizations,
+    /// an operator profiles the `K` most-populous archetypes (ties to the
+    /// lower index) and leaves the rest on standard timings (speedup 1.0).
+    /// Returns `(K, fleet mean speedup)` for `K = 0..=archetypes` —
+    /// computed from the per-archetype sub-histograms alone, no
+    /// re-simulation.
+    pub fn budget_sweep(&self) -> Vec<(usize, f64)> {
+        let a = self.archetypes();
+        let mut order: Vec<usize> = (0..a).collect();
+        order.sort_by_key(|i| (std::cmp::Reverse(self.archetype_nodes[*i]), *i));
+        let mut out = Vec::with_capacity(a + 1);
+        if self.nodes == 0 {
+            return (0..=a).map(|k| (k, 1.0)).collect();
+        }
+        // Start from "everyone standard" and add archetypes in
+        // population order.
+        let mut covered_sum = 0.0;
+        let mut covered_nodes = 0u64;
+        for k in 0..=a {
+            if k > 0 {
+                let i = order[k - 1];
+                let n = self.archetype_nodes[i];
+                if n > 0 {
+                    covered_sum += self.archetype_speedup[i].mean() * n as f64;
+                    covered_nodes += n;
+                }
+            }
+            let uncovered = (self.nodes - covered_nodes) as f64;
+            out.push((k, (covered_sum + uncovered) / self.nodes as f64));
+        }
+        out
+    }
+
+    /// Slowest-decile analysis: the fleet-wide p10 speedup and the
+    /// archetype with the lowest mean speedup (index, mean, node share).
+    pub fn slowest_decile(&self) -> Option<(f64, usize, f64, f64)> {
+        if self.nodes == 0 {
+            return None;
+        }
+        let p10 = self.speedup.quantile(0.1);
+        let worst = (0..self.archetypes())
+            .filter(|i| self.archetype_nodes[*i] > 0)
+            .min_by(|a, b| {
+                self.archetype_speedup[*a].mean()
+                    .total_cmp(&self.archetype_speedup[*b].mean())
+            })?;
+        Some((p10, worst, self.archetype_speedup[worst].mean(),
+              self.archetype_nodes[worst] as f64 / self.nodes as f64))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("format_version".into(), Json::Num(1.0));
+        m.insert("nodes".into(), Json::Num(self.nodes as f64));
+        m.insert("speedup".into(), self.speedup.to_json());
+        m.insert("latency".into(), self.latency.to_json());
+        m.insert("peak_temp".into(), self.peak_temp.to_json());
+        m.insert("archetype_nodes".into(),
+                 Json::Arr(self.archetype_nodes.iter()
+                           .map(|n| Json::Num(*n as f64)).collect()));
+        m.insert("archetype_speedup".into(),
+                 Json::Arr(self.archetype_speedup.iter()
+                           .map(StreamHist::to_json).collect()));
+        m.insert("bin_crossing_nodes".into(),
+                 Json::Num(self.bin_crossing_nodes as f64));
+        m.insert("fallback_nodes".into(),
+                 Json::Num(self.fallback_nodes as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetSummary> {
+        let count = |k: &str| -> Result<u64> {
+            let x = j.get(k).and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("summary missing `{k}`"))?;
+            anyhow::ensure!(x >= 0.0 && x.fract() == 0.0,
+                            "summary `{k}` is not a count: {x}");
+            Ok(x as u64)
+        };
+        let version = count("format_version")?;
+        anyhow::ensure!(version == 1, "unknown fleet summary version {version}");
+        let hist = |k: &str| -> Result<StreamHist> {
+            StreamHist::from_json(
+                j.get(k).ok_or_else(|| anyhow::anyhow!("summary missing `{k}`"))?)
+        };
+        let archetype_nodes = j.get("archetype_nodes").and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("summary missing `archetype_nodes`"))?
+            .iter()
+            .map(|v| {
+                let x = v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("non-number archetype count"))?;
+                anyhow::ensure!(x >= 0.0 && x.fract() == 0.0,
+                                "archetype count is not a count: {x}");
+                Ok(x as u64)
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        let archetype_speedup = j.get("archetype_speedup").and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("summary missing `archetype_speedup`"))?
+            .iter()
+            .map(StreamHist::from_json)
+            .collect::<Result<Vec<StreamHist>>>()?;
+        let s = FleetSummary {
+            nodes: count("nodes")?,
+            speedup: hist("speedup")?,
+            latency: hist("latency")?,
+            peak_temp: hist("peak_temp")?,
+            archetype_nodes,
+            archetype_speedup,
+            bin_crossing_nodes: count("bin_crossing_nodes")?,
+            fallback_nodes: count("fallback_nodes")?,
+        };
+        anyhow::ensure!(!s.archetype_nodes.is_empty(), "summary has no archetypes");
+        anyhow::ensure!(s.archetype_nodes.len() == s.archetype_speedup.len(),
+                        "archetype arrays disagree");
+        anyhow::ensure!(s.archetype_nodes.iter().sum::<u64>() == s.nodes,
+                        "archetype node counts do not add up");
+        anyhow::ensure!(s.speedup.count() == s.nodes,
+                        "speedup histogram count disagrees with nodes");
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn outcome(rng: &mut Rng, archetypes: usize) -> NodeOutcome {
+        let archetype = rng.below(archetypes as u64) as usize;
+        NodeOutcome {
+            archetype,
+            // Per-archetype speedup level + noise, all above 1.0 so the
+            // budget sweep's monotonicity precondition holds.
+            speedup: 1.05 + 0.05 * archetype as f64 + rng.range(0.0, 0.04),
+            read_latency_cycles: rng.range(40.0, 220.0),
+            peak_temp_c: rng.range(24.0, 48.0),
+            bin_crossing: rng.chance(0.2),
+            fallback: false,
+        }
+    }
+
+    fn filled(label: &str, n: usize, archetypes: usize) -> FleetSummary {
+        let mut rng = Rng::from_label(label);
+        let mut s = FleetSummary::new(archetypes);
+        for _ in 0..n {
+            s.record(&outcome(&mut rng, archetypes));
+        }
+        s
+    }
+
+    #[test]
+    fn merge_is_partition_invariant() {
+        let whole = filled("fleet-summary/part", 300, 5);
+        let mut rng = Rng::from_label("fleet-summary/part");
+        for cut in [1usize, 37, 150, 299] {
+            let mut lo = FleetSummary::new(5);
+            let mut hi = FleetSummary::new(5);
+            for i in 0..300 {
+                let o = outcome(&mut rng, 5);
+                if i < cut { lo.record(&o) } else { hi.record(&o) }
+            }
+            // Merge in both orders — commutativity.
+            let mut a = FleetSummary::new(5);
+            a.merge(&hi);
+            a.merge(&lo);
+            assert_eq!(a, whole, "cut {cut}");
+            rng = Rng::from_label("fleet-summary/part");
+        }
+    }
+
+    #[test]
+    fn budget_sweep_is_monotone_and_anchored() {
+        let s = filled("fleet-summary/budget", 400, 6);
+        let sweep = s.budget_sweep();
+        assert_eq!(sweep.len(), 7);
+        assert_eq!(sweep[0], (0, 1.0), "no budget means everyone standard");
+        // Every archetype mean is > 1.0 by construction, so coverage can
+        // only help; the full budget hits the unconstrained fleet mean.
+        for w in sweep.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12,
+                    "budget sweep not monotone: {sweep:?}");
+        }
+        let full = sweep.last().unwrap().1;
+        assert!((full - s.speedup.mean()).abs() < 1e-6,
+                "full budget {full} != fleet mean {}", s.speedup.mean());
+    }
+
+    #[test]
+    fn slowest_decile_points_at_the_weakest_archetype() {
+        let s = filled("fleet-summary/decile", 400, 4);
+        let (p10, worst, mean, share) = s.slowest_decile().unwrap();
+        // Archetype 0 has the lowest speedup level by construction.
+        assert_eq!(worst, 0);
+        assert!(p10 >= 1.0 && mean >= 1.0 && share > 0.0 && share < 1.0);
+        assert!(FleetSummary::new(3).slowest_decile().is_none());
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let s = filled("fleet-summary/json", 250, 4);
+        let text = s.to_json().to_string_pretty();
+        let back =
+            FleetSummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn corrupt_summary_fails_loudly() {
+        let s = filled("fleet-summary/corrupt", 50, 3);
+        let good = s.to_json().to_string_pretty();
+        let bad = good.replace("\"nodes\": 50", "\"nodes\": 51");
+        assert!(FleetSummary::from_json(&Json::parse(&bad).unwrap()).is_err(),
+                "node count mismatch accepted");
+    }
+}

@@ -20,6 +20,7 @@ pub mod cli;
 pub mod eval;
 pub mod exec;
 pub mod figures;
+pub mod fleet;
 pub mod mem;
 pub mod model;
 pub mod population;

@@ -534,6 +534,130 @@ fn bench_profile(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
     Ok(records)
 }
 
+/// `fleet run`: the full campaign — shard the nodes over the pool,
+/// characterize each through the content-keyed profile store, simulate,
+/// and stream-fold into one fixed-memory summary — then the report (CDF /
+/// archetype / budget CSVs), the persisted summary for `fleet report`,
+/// and the SPEEDUP[FLEET] characterization bench (memoized vs
+/// profile-every-node), appended to `BENCH_FLEET.json`.
+fn fleet_run(args: &Args, out: &std::path::Path) -> anyhow::Result<()> {
+    use aldram::fleet::{characterize_fleet, run_campaign, FleetSpec};
+    use aldram::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let jobs = args.jobs();
+    let spec = FleetSpec {
+        nodes: args.get("nodes", 1000usize),
+        archetypes: args.get("archetypes", 12usize),
+        cells: args.get("cells", 96usize),
+        cycles: args.get("cycles", 12_000u64),
+        seed: args.seed(),
+        chunk: args.get("chunk", 32usize),
+        memoize: !args.has("no-memoize"),
+        workloads: args.get("workloads", 6usize),
+    };
+    println!("== fleet campaign: {} nodes x {} archetypes ({jobs} jobs, \
+              chunk {}, seed {}, memoize {}) ==",
+             spec.nodes, spec.archetypes, spec.chunk, spec.seed,
+             spec.memoize);
+    let t0 = Instant::now();
+    let r = run_campaign(&spec, jobs);
+    let wall_s = t0.elapsed().as_secs_f64();
+    println!("campaign: {} nodes in {:.1} s ({:.1} nodes/s)",
+             spec.nodes, wall_s, spec.nodes as f64 / wall_s.max(1e-9));
+    println!("archetype cache: {} hits / {} misses (hit rate {:.1}%), \
+              {} unique profiles",
+             r.hits, r.misses, 100.0 * r.hit_rate(), r.unique_profiles);
+    aldram::figures::fleet::report(&r.summary, out)?;
+
+    // Persist the streamed summary (+ provenance) for `fleet report`.
+    let mut m = BTreeMap::new();
+    m.insert("nodes".to_string(), Json::Num(spec.nodes as f64));
+    m.insert("archetypes".to_string(), Json::Num(spec.archetypes as f64));
+    m.insert("cells".to_string(), Json::Num(spec.cells as f64));
+    m.insert("cycles".to_string(), Json::Num(spec.cycles as f64));
+    m.insert("seed".to_string(), Json::Str(spec.seed.clone()));
+    m.insert("jobs".to_string(), Json::Num(jobs as f64));
+    m.insert("chunk".to_string(), Json::Num(spec.chunk as f64));
+    m.insert("memoize".to_string(), Json::Bool(spec.memoize));
+    m.insert("cache_hits".to_string(), Json::Num(r.hits as f64));
+    m.insert("cache_misses".to_string(), Json::Num(r.misses as f64));
+    m.insert("summary".to_string(), r.summary.to_json());
+    std::fs::create_dir_all(out)?;
+    let path = out.join("fleet_summary.json");
+    std::fs::write(&path, Json::Obj(m).to_string_pretty())?;
+    println!("wrote {}", path.display());
+
+    if args.has("no-bench") {
+        return Ok(());
+    }
+
+    // SPEEDUP[FLEET]: characterization-only sweep over a small fleet,
+    // profile-every-node vs memoized. Like TIMESKIP this is a single-shot
+    // wall-clock comparison (the baseline is far too slow to window), and
+    // like every SPEEDUP[*] the result equivalence is asserted before any
+    // timing: both paths must install bit-identical tables on every node.
+    let bench_nodes = args.get("bench-nodes", 24usize);
+    let bench = FleetSpec {
+        nodes: bench_nodes,
+        archetypes: args.get("bench-archetypes", (bench_nodes / 6).max(2)),
+        cells: args.get("bench-cells", 64usize),
+        chunk: args.get("bench-chunk", 4usize),
+        memoize: false,
+        ..spec.clone()
+    };
+    let t0 = Instant::now();
+    let (_, _, fp_fresh) = characterize_fleet(&bench, jobs);
+    let fresh_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let memo = FleetSpec { memoize: true, ..bench.clone() };
+    let t0 = Instant::now();
+    let (hits, misses, fp_memo) = characterize_fleet(&memo, jobs);
+    let memo_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(fp_fresh == fp_memo,
+                    "memoized characterization diverged from the \
+                     profile-every-node baseline");
+    let ratio = fresh_ms / memo_ms.max(1e-9);
+    println!("SPEEDUP[FLEET] {:<30} -> {:<30} {ratio:>6.2}x  \
+              ({fresh_ms:.1} ms -> {memo_ms:.1} ms)",
+             "characterize/fresh", "characterize/memoized");
+    println!("  bench fleet: {} nodes x {} archetypes, {hits} hits / \
+              {misses} misses memoized",
+             bench.nodes, bench.archetypes);
+    let rec = SpeedupRecord {
+        suite: "fleet".into(),
+        tag: "FLEET".into(),
+        base: "characterize/fresh".into(),
+        test: "characterize/memoized".into(),
+        speedup: ratio,
+        base_median_ns: fresh_ms * 1e6,
+        test_median_ns: memo_ms * 1e6,
+    };
+    let dir = PathBuf::from(args.str("json-dir", "."));
+    std::fs::create_dir_all(&dir)?;
+    write_bench_json(&dir.join("BENCH_FLEET.json"), &[rec])?;
+    Ok(())
+}
+
+/// `fleet report`: reload a persisted campaign summary and regenerate the
+/// report + CSVs — no re-simulation (the summary is all that exists; see
+/// fleet::summary).
+fn fleet_report(args: &Args, out: &std::path::Path) -> anyhow::Result<()> {
+    use aldram::fleet::FleetSummary;
+    use aldram::util::json::Json;
+    let default = out.join("fleet_summary.json");
+    let path = PathBuf::from(args.str("summary",
+                                      &default.to_string_lossy()));
+    let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+    let s = FleetSummary::from_json(
+        j.get("summary")
+            .ok_or_else(|| anyhow::anyhow!("{} has no `summary` object",
+                                           path.display()))?)?;
+    println!("loaded {} ({} nodes, seed {})", path.display(), s.nodes,
+             j.get("seed").and_then(Json::as_str).unwrap_or("?"));
+    aldram::figures::fleet::report(&s, out)
+}
+
 /// Append `bench all`'s speedup records as a dated trajectory entry to
 /// the committed `BENCH_SIM.json` / `BENCH_PROFILE.json` baselines
 /// (`util::trajectory`); a missing or legacy flat-array file upgrades in
@@ -1343,6 +1467,15 @@ fn run(args: Args) -> anyhow::Result<()> {
             }
         }
 
+        Some("fleet") => {
+            match args.sub(1).unwrap_or("run") {
+                "run" => fleet_run(&args, &out)?,
+                "report" => fleet_report(&args, &out)?,
+                other => anyhow::bail!(
+                    "unknown fleet subcommand `{other}` (run|report)"),
+            }
+        }
+
         Some("bench-sim") => {
             bench_sim(&args)?;
         }
@@ -1399,7 +1532,7 @@ fn run(args: Args) -> anyhow::Result<()> {
 
         _ => {
             println!("repro — AL-DRAM reproduction (see DESIGN.md)");
-            println!("commands: calibrate | profile | figure | ablate | eval | trace | check | bench all | bench-sim | bench-profile");
+            println!("commands: calibrate | profile | figure | ablate | eval | trace | check | fleet run|report | bench all | bench-sim | bench-profile");
             println!("global flags: --jobs N (parallel fan-out width, \
                       default {}), --seed S (workload/mix RNG label, \
                       default 0), --check (attach the protocol-conformance \

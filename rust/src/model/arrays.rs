@@ -161,6 +161,33 @@ impl CellArrays {
     pub fn screening(&self) -> Option<&[u32]> {
         (self.screen.len() == self.len()).then_some(self.screen.as_slice())
     }
+
+    /// Content key over the sampled silicon: FNV-1a across the geometry
+    /// and the raw f32 bit patterns of every per-cell parameter. Two
+    /// arrays hash equal iff they describe bit-identical cells at the
+    /// same resolution, which is exactly the fleet profile cache's
+    /// memoization question — archetype bins regenerate the same
+    /// `generate_dimm` output, so their keys collide by construction
+    /// (and the screening order, a derived heuristic, is excluded).
+    pub fn content_key(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.banks as u64);
+        eat(self.chips as u64);
+        eat(self.cells as u64);
+        for arr in [&self.qcap, &self.tau_s, &self.tau_r, &self.tau_p,
+                    &self.lam85] {
+            for x in arr.iter() {
+                eat(x.to_bits() as u64);
+            }
+        }
+        h
+    }
 }
 
 /// Result of one profiling batch: per-(combo, bank, chip) reductions plus
@@ -256,6 +283,22 @@ impl ProfileOutput {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn content_key_tracks_cell_content() {
+        let mut a = CellArrays::zeroed(2, 3, 4);
+        let b = CellArrays::zeroed(2, 3, 4);
+        assert_eq!(a.content_key(), b.content_key());
+        // Geometry is part of the key even when the flat length matches.
+        assert_ne!(a.content_key(), CellArrays::zeroed(3, 2, 4).content_key());
+        // A single-cell change moves the key; the screening order does not.
+        let i = a.idx(1, 2, 3);
+        a.tau_s[i] = 1.0;
+        let changed = a.content_key();
+        assert_ne!(changed, b.content_key());
+        a.compute_screening();
+        assert_eq!(a.content_key(), changed);
+    }
 
     #[test]
     fn indexing_roundtrip() {

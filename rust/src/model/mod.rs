@@ -12,4 +12,4 @@ pub mod profile_simd;
 
 pub use arrays::{CellArrays, ProfileOutput};
 pub use charge::{Cell, Combo};
-pub use params::{params, ModelParams};
+pub use params::{params, params_arc, ModelParams};

@@ -3,7 +3,7 @@
 //! `rust/tests/runtime_native_xcheck.rs` guards against drift between the
 //! two readers.
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use crate::util::json::Json;
 
@@ -196,12 +196,21 @@ impl ModelParams {
     }
 }
 
-static PARAMS: OnceLock<ModelParams> = OnceLock::new();
+static PARAMS: OnceLock<Arc<ModelParams>> = OnceLock::new();
 
 /// Process-wide parameters (the common case; calibration constructs its
 /// own instances instead).
 pub fn params() -> &'static ModelParams {
-    PARAMS.get_or_init(ModelParams::load)
+    &**PARAMS.get_or_init(|| Arc::new(ModelParams::load()))
+}
+
+/// The same process-wide parameters behind a cheap `Arc` clone — this is
+/// what fan-outs hand to per-worker backends so `model_params.json` is
+/// parsed once per process instead of deep-cloned (vendors `Vec` and all)
+/// per worker. Both accessors share one `OnceLock`, so the underlying
+/// allocation is the same either way.
+pub fn params_arc() -> Arc<ModelParams> {
+    Arc::clone(PARAMS.get_or_init(|| Arc::new(ModelParams::load())))
 }
 
 #[cfg(test)]

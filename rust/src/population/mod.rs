@@ -131,6 +131,51 @@ pub fn generate_dimm(id: usize, cells_per_chip_bank: usize,
     Dimm { id, vendor: vendor.name.clone(), vendor_idx: vi, arrays, spatial }
 }
 
+/// One manufacturer/speed-bin archetype of the fleet model: a module
+/// design that a datacenter bought by the pallet, so thousands of nodes
+/// carry *the same* silicon characterization target. Fleet nodes sample
+/// an archetype index, and the archetype's module silicon is simply
+/// `generate_dimm(dimm_id, …)` — identical content for every node of the
+/// bin, which is what makes the fleet's content-keyed profile cache hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Archetype {
+    /// Index into the catalog (what fleet nodes sample).
+    pub idx: usize,
+    pub vendor_idx: usize,
+    pub vendor: String,
+    /// Ordinal of this archetype within its vendor (its "speed bin"):
+    /// bin 0 is the vendor's first design, bin 1 the next, … — used by
+    /// the profile cache to pick the nearest warm-seed neighbor.
+    pub speed_bin: usize,
+    /// The population DIMM id whose generated arrays are this
+    /// archetype's silicon.
+    pub dimm_id: usize,
+}
+
+/// Build a catalog of `n` archetypes by walking the deterministic vendor
+/// striping of the population: DIMM ids 0, 1, 2, … are assigned to their
+/// `vendor_of` vendor in order, so the catalog's vendor mix follows the
+/// configured market shares and the whole catalog is a pure function of
+/// `n` (no RNG state beyond the per-id vendor draw).
+pub fn archetype_catalog(n: usize, p: &ModelParams) -> Vec<Archetype> {
+    assert!(n >= 1, "a fleet needs at least one archetype");
+    let mut per_vendor = vec![0usize; p.population.vendors.len()];
+    (0..n)
+        .map(|idx| {
+            let vi = vendor_of(idx, p);
+            let speed_bin = per_vendor[vi];
+            per_vendor[vi] += 1;
+            Archetype {
+                idx,
+                vendor_idx: vi,
+                vendor: p.population.vendors[vi].name.clone(),
+                speed_bin,
+                dimm_id: idx,
+            }
+        })
+        .collect()
+}
+
 /// The full population at a given per-chip-bank sampling resolution.
 pub fn generate_population(cells_per_chip_bank: usize) -> Vec<Dimm> {
     let p = params();
@@ -242,6 +287,29 @@ mod tests {
             let far = over(a.cells - q, a.cells);
             assert!(far > near, "bank {b}: far {far} <= near {near}");
         }
+    }
+
+    #[test]
+    fn archetype_catalog_is_deterministic_and_striped() {
+        let p = params();
+        let a = archetype_catalog(12, p);
+        let b = archetype_catalog(12, p);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 12);
+        // Prefix property: a bigger catalog extends a smaller one, so a
+        // fleet grown from 12 to 16 archetypes keeps bins 0..12 stable.
+        let big = archetype_catalog(16, p);
+        assert_eq!(&big[..12], &a[..]);
+        // Vendor striping matches the population assignment, and speed
+        // bins count up within each vendor.
+        let mut per_vendor = vec![0usize; p.population.vendors.len()];
+        for at in &a {
+            assert_eq!(at.vendor_idx, vendor_of(at.dimm_id, p));
+            assert_eq!(at.speed_bin, per_vendor[at.vendor_idx]);
+            per_vendor[at.vendor_idx] += 1;
+        }
+        // At 12 archetypes every vendor should field at least one design.
+        assert!(per_vendor.iter().all(|c| *c > 0), "{per_vendor:?}");
     }
 
     #[test]

@@ -11,8 +11,8 @@ pub mod sweep;
 
 pub use refresh::{profile_refresh, RefreshProfile, SAFETY_MARGIN_MS};
 pub use repeat::{repeatability, RepeatabilityReport};
-pub use results::{profile_dimm, profile_dimm_regions, summarize,
-                  verify_timings, DimmProfile, PopulationSummary,
+pub use results::{profile_dimm, profile_dimm_regions, profile_dimm_seeded,
+                  summarize, verify_timings, DimmProfile, PopulationSummary,
                   RegionDimmProfile, RegionProfile, TimingProfile};
 pub use sweep::{sweep, sweep_bank, sweep_ecc, sweep_exhaustive, sweep_par,
                 sweep_seeded, sweep_with, sweep_with_seed, BestCombo,

@@ -70,24 +70,39 @@ pub struct DimmProfile {
 /// to cold sweeps (see `sweep::sweep_seeded`).
 pub fn profile_dimm(backend: &mut dyn ProfilingBackend, dimm: &Dimm)
                     -> Result<DimmProfile> {
+    Ok(profile_dimm_seeded(backend, dimm, None)?.0)
+}
+
+/// [`profile_dimm`] with cache-aware warm seeding: the 85degC sweeps can
+/// open at another module's 85degC frontiers (the fleet engine passes the
+/// nearest cached archetype's), and this module's own 85degC frontiers are
+/// returned alongside the profile so a cache can keep them as seed
+/// material. Cross-silicon seeding is sound for the same reason the
+/// region profiler's spatial-neighbor seeding is: `sweep_seeded` re-proves
+/// every seeded boundary, so a seed only changes the search cost — a seed
+/// from similar silicon converges in a couple of probe waves, a bad one
+/// degrades to the cold bisection — never the result.
+pub fn profile_dimm_seeded(backend: &mut dyn ProfilingBackend, dimm: &Dimm,
+                           seed: Option<(&SweepResult, &SweepResult)>)
+                           -> Result<(DimmProfile, SweepResult, SweepResult)> {
     let refresh85 = profile_refresh(backend, &dimm.arrays, 85.0)?;
     let tref_r = refresh85.safe_read_ms();
     let tref_w = refresh85.safe_write_ms();
 
     let a = &dimm.arrays;
-    let read85 =
-        sweep_seeded(backend, a, TestKind::Read, 85.0, tref_r, None)?;
-    let write85 =
-        sweep_seeded(backend, a, TestKind::Write, 85.0, tref_w, None)?;
+    let read85 = sweep_seeded(backend, a, TestKind::Read, 85.0, tref_r,
+                              seed.map(|s| s.0))?;
+    let write85 = sweep_seeded(backend, a, TestKind::Write, 85.0, tref_w,
+                               seed.map(|s| s.1))?;
     let read55 =
         sweep_seeded(backend, a, TestKind::Read, 55.0, tref_r, Some(&read85))?;
     let write55 = sweep_seeded(backend, a, TestKind::Write, 55.0, tref_w,
                                Some(&write85))?;
 
-    let at = |temp: f64, read: SweepResult, write: SweepResult|
+    let at = |temp: f64, read: &SweepResult, write: &SweepResult|
      -> Result<TimingProfile> {
-        let best = |s: SweepResult, what: &str| {
-            s.best.ok_or_else(|| anyhow::anyhow!(
+        let best = |s: &SweepResult, what: &str| {
+            s.best.clone().ok_or_else(|| anyhow::anyhow!(
                 "dimm {} infeasible {what} sweep at {temp}C", dimm.id))
         };
         Ok(TimingProfile {
@@ -99,13 +114,14 @@ pub fn profile_dimm(backend: &mut dyn ProfilingBackend, dimm: &Dimm)
         })
     };
 
-    Ok(DimmProfile {
+    let profile = DimmProfile {
         id: dimm.id,
         vendor: dimm.vendor.clone(),
         refresh85: refresh85.clone(),
-        at85: at(85.0, read85, write85)?,
-        at55: at(55.0, read55, write55)?,
-    })
+        at85: at(85.0, &read85, &write85)?,
+        at55: at(55.0, &read55, &write55)?,
+    };
+    Ok((profile, read85, write85))
 }
 
 /// Timing characterization of one (bank, row-region) cell sub-population

@@ -22,7 +22,8 @@ use anyhow::{Context, Result};
 
 use crate::aldram::{AlDram, RegionTable, TableEntry};
 use crate::profiler::{BestCombo, DimmProfile, RefreshProfile,
-                      RegionDimmProfile, RegionProfile, TimingProfile};
+                      RegionDimmProfile, RegionProfile, SweepResult,
+                      TimingProfile};
 use crate::timing::TimingParams;
 use crate::util::json::Json;
 
@@ -485,6 +486,124 @@ fn load_dir<T>(dir: &Path, load: impl Fn(&Path) -> Result<T>)
     Ok(out)
 }
 
+// ---------------------------------------------------------------------
+// In-memory content-keyed store: the fleet's profile memoization cache.
+// ---------------------------------------------------------------------
+
+/// One cached characterization: everything a fleet node needs to install
+/// timings without re-profiling (the profile and its derived table), plus
+/// the 85degC sweep frontiers kept as warm-seed material for future
+/// misses (`profiler::profile_dimm_seeded`) and the archetype coordinates
+/// `nearest_seed` searches over.
+#[derive(Debug, Clone)]
+pub struct StoredProfile {
+    pub profile: DimmProfile,
+    pub table: AlDram,
+    pub read85: SweepResult,
+    pub write85: SweepResult,
+    pub vendor_idx: usize,
+    pub speed_bin: usize,
+}
+
+/// Content-keyed profile cache, shared across `exec::Pool` workers behind
+/// one `Arc` (interior mutability; all methods take `&self`). Keys are
+/// [`crate::model::CellArrays::content_key`] hashes, so two nodes share a
+/// characterization exactly when their module silicon is bit-identical —
+/// the archetype-bin case. A second identity index `(dimm_id, cells) →
+/// key` lets repeat nodes of an already-characterized archetype skip even
+/// the array regeneration that computing a content key would need
+/// (`generate_dimm` is deterministic, so the identity pair pins the
+/// content).
+///
+/// Concurrent misses of the same key may both profile and insert; the
+/// first insert wins and the results are identical (profiling is
+/// deterministic), so the race costs duplicated work, never divergent
+/// state.
+#[derive(Debug, Default)]
+pub struct ProfileStore {
+    by_key: std::sync::Mutex<BTreeMap<u64, std::sync::Arc<StoredProfile>>>,
+    key_of: std::sync::Mutex<BTreeMap<(usize, usize), u64>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl ProfileStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The content key of an already-characterized `(dimm_id, cells)`
+    /// identity, if any — the regeneration-free fast path.
+    pub fn cached_key(&self, dimm_id: usize, cells: usize) -> Option<u64> {
+        self.key_of.lock().unwrap().get(&(dimm_id, cells)).copied()
+    }
+
+    /// Look a content key up; a hit is counted toward the hit rate.
+    pub fn get(&self, key: u64) -> Option<std::sync::Arc<StoredProfile>> {
+        let found = self.by_key.lock().unwrap().get(&key).cloned();
+        if found.is_some() {
+            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Record a freshly profiled characterization (counted as a miss) and
+    /// return the stored copy — the existing one if a concurrent worker
+    /// got there first.
+    pub fn insert(&self, key: u64, dimm_id: usize, cells: usize,
+                  sp: StoredProfile) -> std::sync::Arc<StoredProfile> {
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let arc = std::sync::Arc::new(sp);
+        let stored = self.by_key.lock().unwrap()
+            .entry(key)
+            .or_insert_with(|| std::sync::Arc::clone(&arc))
+            .clone();
+        self.key_of.lock().unwrap().insert((dimm_id, cells), key);
+        stored
+    }
+
+    /// The cached characterization nearest to `(vendor_idx, speed_bin)`:
+    /// same vendor and closest bin if the vendor is represented, else the
+    /// closest bin of any vendor. Used to warm-seed a miss's 85degC
+    /// sweeps; seeding never changes sweep results, so the choice only
+    /// affects probe cost.
+    pub fn nearest_seed(&self, vendor_idx: usize, speed_bin: usize)
+                        -> Option<std::sync::Arc<StoredProfile>> {
+        let map = self.by_key.lock().unwrap();
+        let dist = |sp: &StoredProfile| {
+            let bin_gap = sp.speed_bin.abs_diff(speed_bin);
+            // Vendor mismatch dominates any bin gap.
+            (sp.vendor_idx != vendor_idx, bin_gap, sp.speed_bin)
+        };
+        map.values()
+            .min_by_key(|sp| dist(sp))
+            .cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups served from cache (0 when nothing was looked
+    /// up yet).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 { 0.0 } else { h as f64 / (h + m) as f64 }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -574,6 +693,43 @@ mod tests {
         fs::write(&path, j.to_string_pretty()).unwrap();
         let err = load_profile(&path).unwrap_err();
         assert!(format!("{err:#}").contains("vendor"), "{err:#}");
+    }
+
+    #[test]
+    fn profile_store_memoizes_and_counts() {
+        let store = ProfileStore::new();
+        let d = generate_dimm(1, 64, params());
+        let key = d.arrays.content_key();
+        assert!(store.cached_key(1, 64).is_none());
+        assert!(store.get(key).is_none());
+        assert_eq!(store.hit_rate(), 0.0);
+
+        let mut b = NativeBackend::new();
+        let (p, r85, w85) =
+            crate::profiler::profile_dimm_seeded(&mut b, &d, None).unwrap();
+        let table = AlDram::from_profile(&p, 10.0);
+        store.insert(key, 1, 64, StoredProfile {
+            profile: p,
+            table,
+            read85: r85,
+            write85: w85,
+            vendor_idx: d.vendor_idx,
+            speed_bin: 0,
+        });
+
+        assert_eq!(store.cached_key(1, 64), Some(key));
+        let got = store.get(key).expect("content hit");
+        assert_eq!(got.profile.id, 1);
+        assert_eq!((store.hits(), store.misses()), (1, 1));
+        assert!((store.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(store.len(), 1);
+
+        // nearest_seed prefers the stored vendor over a bin-0 stranger.
+        let seed = store.nearest_seed(d.vendor_idx, 3).expect("non-empty");
+        assert_eq!(seed.vendor_idx, d.vendor_idx);
+        let other = (d.vendor_idx + 1) % params().population.vendors.len();
+        assert!(store.nearest_seed(other, 0).is_some(),
+                "cross-vendor fallback must still seed");
     }
 
     fn region_profile(id: usize) -> RegionDimmProfile {

@@ -1,21 +1,25 @@
 //! Pure-rust profiling backend (mirror of the AOT artifact's math).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::model::{profile, CellArrays, Combo, ModelParams, ProfileOutput};
 
 pub struct NativeBackend {
-    params: ModelParams,
+    /// Shared, not owned: per-worker backends in a fan-out all point at
+    /// the one process-wide `ModelParams` (see `model::params_arc`).
+    params: Arc<ModelParams>,
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
-        NativeBackend { params: crate::model::params().clone() }
+        NativeBackend { params: crate::model::params_arc() }
     }
 
     /// Calibration path: evaluate under experimental constants.
     pub fn with_params(params: ModelParams) -> Self {
-        NativeBackend { params }
+        NativeBackend { params: Arc::new(params) }
     }
 }
 

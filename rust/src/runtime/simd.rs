@@ -8,6 +8,8 @@
 //! screening order instead of the whole array. Both paths are
 //! cross-checked against `NativeBackend` by `tests/runtime_simd_xcheck.rs`.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::model::{profile_simd, CellArrays, Combo, ModelParams,
@@ -16,17 +18,19 @@ use crate::model::{profile_simd, CellArrays, Combo, ModelParams,
 use super::backend::{PassCriterion, ProbeKind, ProfilingBackend};
 
 pub struct SimdBackend {
-    params: ModelParams,
+    /// Shared, not owned: per-worker backends in a fan-out all point at
+    /// the one process-wide `ModelParams` (see `model::params_arc`).
+    params: Arc<ModelParams>,
 }
 
 impl SimdBackend {
     pub fn new() -> Self {
-        SimdBackend { params: crate::model::params().clone() }
+        SimdBackend { params: crate::model::params_arc() }
     }
 
     /// Calibration path: evaluate under experimental constants.
     pub fn with_params(params: ModelParams) -> Self {
-        SimdBackend { params }
+        SimdBackend { params: Arc::new(params) }
     }
 }
 

@@ -29,7 +29,7 @@ pub struct BenchResult {
 /// collects these into `BENCH_SIM.json` / `BENCH_PROFILE.json`, which CI
 /// diffs structurally (suite/tag/base/test) against the committed
 /// baselines at the repo root.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SpeedupRecord {
     pub suite: String,
     pub tag: String,

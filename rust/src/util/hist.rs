@@ -1,0 +1,334 @@
+//! Mergeable streaming histogram — the fixed-memory aggregation unit of
+//! the fleet campaign engine (`fleet`).
+//!
+//! A campaign over O(10^4) nodes must never materialize per-node results,
+//! so every distribution the fleet reports (speedup, latency, DIMM
+//! temperature) is accumulated into one of these: a fixed bin grid plus
+//! exact extremes and a fixed-point sum. The design constraint is the
+//! determinism contract of `exec::Pool::run_fold` — merging per-worker
+//! partials must give bit-identical results for *any* partition of the
+//! input, so every field is an exact commutative monoid:
+//!
+//! * bin/underflow/overflow counts — `u64` addition,
+//! * `min`/`max` — exact and order-free on finite floats,
+//! * the sum — fixed-point `i128` (value × 2^32, ties-to-even at record
+//!   time), so addition is associative, unlike `f64` accumulation whose
+//!   rounding depends on grouping.
+//!
+//! The price is ~2^-33 relative quantization on means — invisible at the
+//! 3-digit precision any report prints — and quantile resolution limited
+//! to the bin width, which is the point of a histogram.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Fixed-point scale for the exact sum: 32 fractional bits.
+const FX_SCALE: f64 = 4294967296.0; // 2^32
+
+/// A streaming histogram over `[lo, hi)` with `bins` equal-width bins
+/// plus underflow/overflow counters. See the module docs for why every
+/// field is an exact commutative accumulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamHist {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    n: u64,
+    min: f64,
+    max: f64,
+    /// Sum of recorded values in 32.32-ish fixed point (i128 is wide
+    /// enough for ~2^64 samples of magnitude 2^32).
+    sum_fx: i128,
+}
+
+impl StreamHist {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins >= 1, "histogram needs at least one bin");
+        assert!(lo.is_finite() && hi.is_finite() && lo < hi,
+                "bad histogram range [{lo}, {hi})");
+        StreamHist {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum_fx: 0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        assert!(x.is_finite(), "histogram got a non-finite sample: {x}");
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let w = (self.hi - self.lo) / self.counts.len() as f64;
+            let i = (((x - self.lo) / w) as usize).min(self.counts.len() - 1);
+            self.counts[i] += 1;
+        }
+        self.n += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.sum_fx += (x * FX_SCALE).round() as i128;
+    }
+
+    /// Merge another histogram over the *same* grid into this one.
+    /// Exact and commutative — the partition of samples across partials
+    /// never shows in the merged result.
+    pub fn merge(&mut self, other: &StreamHist) {
+        assert!(self.lo == other.lo && self.hi == other.hi
+                    && self.counts.len() == other.counts.len(),
+                "merging histograms over different grids");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum_fx += other.sum_fx;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Mean of every recorded sample (fixed-point exact up to the 2^-32
+    /// per-sample quantization).
+    pub fn mean(&self) -> f64 {
+        assert!(self.n > 0, "mean of an empty histogram");
+        (self.sum_fx as f64 / FX_SCALE) / self.n as f64
+    }
+
+    /// Nearest-rank quantile at bin resolution: the center of the bin the
+    /// rank lands in (the exact `min`/`max` for the under/overflow tails).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!(self.n > 0, "quantile of an empty histogram");
+        assert!((0.0..=1.0).contains(&q));
+        let rank = ((self.n - 1) as f64 * q).round() as u64;
+        let mut seen = self.underflow;
+        if rank < seen {
+            return self.min;
+        }
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if rank < seen {
+                return self.lo + (i as f64 + 0.5) * w;
+            }
+        }
+        self.max
+    }
+
+    /// CDF points `(bin upper edge, cumulative fraction)` for plotting;
+    /// the under/overflow tails fold into the first/last point.
+    pub fn cdf(&self) -> Vec<(f64, f64)> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut cum = self.underflow;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            let mut frac = cum;
+            if i == self.counts.len() - 1 {
+                frac += self.overflow;
+            }
+            out.push((self.lo + (i as f64 + 1.0) * w,
+                      frac as f64 / self.n.max(1) as f64));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("lo".into(), Json::Num(self.lo));
+        m.insert("hi".into(), Json::Num(self.hi));
+        m.insert("counts".into(),
+                 Json::Arr(self.counts.iter()
+                           .map(|c| Json::Num(*c as f64)).collect()));
+        m.insert("underflow".into(), Json::Num(self.underflow as f64));
+        m.insert("overflow".into(), Json::Num(self.overflow as f64));
+        m.insert("n".into(), Json::Num(self.n as f64));
+        // An empty histogram has infinite sentinels, which JSON cannot
+        // spell; follow the registry's convention (infinite `max_c`) and
+        // write them as null.
+        let extreme = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        m.insert("min".into(), extreme(self.min));
+        m.insert("max".into(), extreme(self.max));
+        // i128 exceeds f64's exact-integer range; store as a decimal
+        // string so the round trip stays bit-exact.
+        m.insert("sum_fx".into(), Json::Str(self.sum_fx.to_string()));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<StreamHist> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            j.get(k).and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("hist missing number `{k}`"))
+        };
+        let count = |k: &str| -> anyhow::Result<u64> {
+            let x = num(k)?;
+            anyhow::ensure!(x >= 0.0 && x.fract() == 0.0,
+                            "hist `{k}` is not a count: {x}");
+            Ok(x as u64)
+        };
+        let counts = j.get("counts").and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("hist missing `counts`"))?
+            .iter()
+            .map(|c| {
+                let x = c.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("non-number bin count"))?;
+                anyhow::ensure!(x >= 0.0 && x.fract() == 0.0,
+                                "bin count is not a count: {x}");
+                Ok(x as u64)
+            })
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+        anyhow::ensure!(!counts.is_empty(), "hist has no bins");
+        let sum_fx = j.get("sum_fx").and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("hist missing `sum_fx`"))?
+            .parse::<i128>()
+            .map_err(|e| anyhow::anyhow!("bad hist sum_fx: {e}"))?;
+        // Null min/max are the empty-histogram sentinels.
+        let extreme = |k: &str, empty: f64| -> anyhow::Result<f64> {
+            match j.get(k) {
+                Some(Json::Null) => Ok(empty),
+                Some(v) => v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("hist `{k}` is not a number")),
+                None => Err(anyhow::anyhow!("hist missing `{k}`")),
+            }
+        };
+        let h = StreamHist {
+            lo: num("lo")?,
+            hi: num("hi")?,
+            counts,
+            underflow: count("underflow")?,
+            overflow: count("overflow")?,
+            n: count("n")?,
+            min: extreme("min", f64::INFINITY)?,
+            max: extreme("max", f64::NEG_INFINITY)?,
+            sum_fx,
+        };
+        anyhow::ensure!(h.lo.is_finite() && h.hi.is_finite() && h.lo < h.hi,
+                        "bad hist range [{}, {})", h.lo, h.hi);
+        let binned: u64 = h.counts.iter().sum();
+        anyhow::ensure!(binned + h.underflow + h.overflow == h.n,
+                        "hist counts do not add up to n");
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut h = StreamHist::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 2.5, 9.99, -1.0, 12.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), -1.0);
+        assert_eq!(h.max(), 12.0);
+        assert!((h.mean() - (0.5 + 1.5 + 2.5 + 9.99 - 1.0 + 12.0) / 6.0).abs()
+                < 1e-6);
+        // CDF is monotone and ends at 1.
+        let cdf = h.cdf();
+        for w in cdf.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(cdf.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn merge_is_partition_invariant() {
+        // The determinism contract: any split of the sample stream into
+        // partials merges to the bit-identical histogram, in any order.
+        let mut rng = Rng::from_label("hist/partition");
+        let xs: Vec<f64> = (0..500).map(|_| rng.range(-0.5, 3.5)).collect();
+        let mut whole = StreamHist::new(0.0, 3.0, 24);
+        for x in &xs {
+            whole.record(*x);
+        }
+        for chunk in [1usize, 7, 64, 500] {
+            let mut parts: Vec<StreamHist> = xs
+                .chunks(chunk)
+                .map(|c| {
+                    let mut h = StreamHist::new(0.0, 3.0, 24);
+                    for x in c {
+                        h.record(*x);
+                    }
+                    h
+                })
+                .collect();
+            // Merge in reverse order too — commutativity.
+            parts.reverse();
+            let mut merged = StreamHist::new(0.0, 3.0, 24);
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged, whole, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn quantiles_land_in_bins() {
+        let mut h = StreamHist::new(0.0, 100.0, 100);
+        for i in 0..1000 {
+            h.record(i as f64 / 10.0);
+        }
+        assert!((h.quantile(0.5) - 50.0).abs() <= 1.0);
+        assert!((h.quantile(0.1) - 10.0).abs() <= 1.0);
+        assert_eq!(h.quantile(0.0), 0.5); // center of the first bin
+        assert!(h.quantile(1.0) >= 99.0);
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let mut h = StreamHist::new(0.8, 1.6, 32);
+        let mut rng = Rng::from_label("hist/json");
+        for _ in 0..200 {
+            h.record(rng.range(0.7, 1.7));
+        }
+        let j = h.to_json();
+        let text = j.to_string_pretty();
+        let back = StreamHist::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(h, back);
+
+        // An empty histogram (infinite min/max sentinels) must round-trip
+        // too — `fleet report` may load summaries with unused sub-hists.
+        let empty = StreamHist::new(0.0, 1.0, 4);
+        let text = empty.to_json().to_string_pretty();
+        let back = StreamHist::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(empty, back);
+    }
+
+    #[test]
+    fn corrupt_json_fails_loudly() {
+        let h = StreamHist::new(0.0, 1.0, 4);
+        let good = h.to_json().to_string_pretty();
+        let bad = good.replace("\"n\": 0", "\"n\": 7");
+        let j = Json::parse(&bad).unwrap();
+        assert!(StreamHist::from_json(&j).is_err(), "count mismatch accepted");
+    }
+}

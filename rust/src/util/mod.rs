@@ -3,6 +3,7 @@
 //! formatting/statistics helpers shared across the crate.
 
 pub mod bench;
+pub mod hist;
 pub mod json;
 pub mod quick;
 pub mod rng;

@@ -92,6 +92,17 @@ pub fn append(existing: Option<&str>, date: &str,
         Some(text) => parse(text)?,
         None => Vec::new(),
     };
+    // The pre-trajectory flat files were committed once more as the first
+    // dated entry, so legacy baselines start with an undated entry whose
+    // records are a strict duplicate of the first dated one. Collapse that
+    // duplicate the next time the file is appended to; a legacy entry with
+    // records of its own is history and stays.
+    if entries.len() >= 2
+        && entries[0].date.is_empty()
+        && entries[0].records.iter().all(|r| entries[1].records.contains(r))
+    {
+        entries.remove(0);
+    }
     entries.push(Entry {
         date: date.to_string(),
         records: records.to_vec(),
@@ -232,6 +243,45 @@ mod tests {
         let entries = parse(&t).unwrap();
         assert_eq!(entries.len(), 2);
         assert_eq!(entries[1].date, "2026-08-08");
+    }
+
+    #[test]
+    fn legacy_duplicate_of_first_dated_entry_collapses_on_append() {
+        // The committed BENCH_*.json shape before the fix: an undated
+        // legacy entry whose records duplicate (a prefix of) the first
+        // dated entry's.
+        let legacy = Json::Arr(vec![rec("TIMESKIP", 3.0).to_json()])
+            .to_string_pretty();
+        let dup = append(Some(&legacy), "2026-08-07",
+                         &[rec("TIMESKIP", 3.0), rec("SOURCE", 1.5)])
+            .unwrap();
+        assert_eq!(parse(&dup).unwrap().len(), 2, "dup not yet collapsible");
+        let t = append(Some(&dup), "2026-08-08", &[rec("TIMESKIP", 3.1)])
+            .unwrap();
+        let entries = parse(&t).unwrap();
+        assert_eq!(entries.len(), 2, "legacy duplicate survived: {t}");
+        assert_eq!(entries[0].date, "2026-08-07");
+        assert_eq!(entries[1].date, "2026-08-08");
+        // And the collapse happens at most once — appending again is stable.
+        let t2 = append(Some(&t), "2026-08-09", &[rec("TIMESKIP", 3.2)])
+            .unwrap();
+        assert_eq!(parse(&t2).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn legacy_entry_with_unique_records_is_kept() {
+        // An undated entry that is *not* a duplicate is real history.
+        let legacy = Json::Arr(vec![rec("SOURCE", 9.9).to_json()])
+            .to_string_pretty();
+        let dated = append(Some(&legacy), "2026-08-07",
+                           &[rec("TIMESKIP", 3.0)])
+            .unwrap();
+        let t = append(Some(&dated), "2026-08-08", &[rec("TIMESKIP", 3.1)])
+            .unwrap();
+        let entries = parse(&t).unwrap();
+        assert_eq!(entries.len(), 3, "unique legacy entry was dropped: {t}");
+        assert_eq!(entries[0].date, "");
+        assert_eq!(entries[0].records[0].tag, "SOURCE");
     }
 
     #[test]

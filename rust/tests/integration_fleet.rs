@@ -1,0 +1,73 @@
+//! Fleet campaign determinism: a campaign's streamed summary must be a
+//! pure function of `(spec, nodes)` — bit-identical across worker
+//! counts, chunk sizes, and the profile-memoization path (cache on vs
+//! off), because the fold is an exact commutative monoid and the cache
+//! stores exactly what profiling would have produced. Also pins the
+//! summary's JSON round-trip (what `fleet report` reloads) and the
+//! budget sweep's anchoring.
+
+use aldram::fleet::{run_campaign, FleetSpec, FleetSummary};
+use aldram::util::json::Json;
+
+/// Small enough to profile a few archetypes quickly, big enough that
+/// every archetype and workload is drawn and chunk boundaries land
+/// mid-fleet.
+fn small_spec() -> FleetSpec {
+    FleetSpec {
+        nodes: 24,
+        archetypes: 4,
+        cells: 48,
+        cycles: 3_000,
+        seed: "itest".into(),
+        chunk: 5,
+        memoize: true,
+        workloads: 3,
+    }
+}
+
+#[test]
+fn summary_is_identical_across_jobs_and_chunks() {
+    let spec = small_spec();
+    let baseline = run_campaign(&spec, 1);
+    assert_eq!(baseline.summary.nodes, spec.nodes as u64);
+    for (jobs, chunk) in [(1, 1), (4, 1), (4, 5), (4, 64), (2, 7)] {
+        let r = run_campaign(&FleetSpec { chunk, ..spec.clone() }, jobs);
+        assert_eq!(r.summary, baseline.summary,
+                   "summary diverged at jobs={jobs} chunk={chunk}");
+    }
+}
+
+#[test]
+fn memoized_campaign_matches_profile_every_node() {
+    let spec = small_spec();
+    let memo = run_campaign(&spec, 2);
+    let fresh = run_campaign(&FleetSpec { memoize: false, ..spec.clone() }, 2);
+    assert_eq!(memo.summary, fresh.summary,
+               "profile cache changed campaign results");
+    // The cache collapses the fleet to O(archetypes) characterizations;
+    // the baseline profiles every node.
+    assert_eq!(memo.unique_profiles, spec.archetypes);
+    assert_eq!(memo.hits + memo.misses, fresh.misses);
+    assert!(memo.hits > 0, "no cache hits over {} nodes", spec.nodes);
+}
+
+#[test]
+fn summary_round_trips_through_fleet_report_json() {
+    let spec = small_spec();
+    let r = run_campaign(&spec, 2);
+    let text = r.summary.to_json().to_string_pretty();
+    let back = FleetSummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, r.summary);
+}
+
+#[test]
+fn budget_sweep_is_anchored_and_complete() {
+    let spec = small_spec();
+    let r = run_campaign(&spec, 2);
+    let sweep = r.summary.budget_sweep();
+    assert_eq!(sweep.len(), spec.archetypes + 1);
+    assert_eq!(sweep[0], (0, 1.0), "zero budget must mean standard timings");
+    let full = sweep.last().unwrap().1;
+    assert!((full - r.summary.speedup.mean()).abs() < 1e-9,
+            "full budget {full} != fleet mean {}", r.summary.speedup.mean());
+}
