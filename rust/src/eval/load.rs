@@ -1,0 +1,298 @@
+//! Open-loop load sweeps: latency-vs-throughput curves and the
+//! saturation-knee search (`repro eval load`, DESIGN.md §16).
+//!
+//! The question AL-DRAM's Fig 4 cannot answer is what reduced timings
+//! buy *under offered load*: how far the sustainable-throughput knee
+//! moves, and what happens to p99/p99.9 below it. This module drives
+//! open-loop systems (`System::set_open_loop` + `workloads::arrival`
+//! sources) two ways:
+//!
+//! * [`run_point`] — ONE load point, K timing-table configs, run in
+//!   lockstep over one shared arrival-stream generation through the
+//!   `SharedSourceSet` machinery of DESIGN.md §14. Every config sees
+//!   bit-identical arrivals (asserted in `tests/integration_load.rs`),
+//!   so curve differences are purely the timing tables' doing, and the
+//!   stream is generated once instead of K times (the
+//!   `SPEEDUP[LOADSWEEP]` comparison).
+//! * [`knee_search`] — the adaptive sweep: a coarse geometric ascent
+//!   brackets the saturation knee (each probe is one bounded run that
+//!   halts early past saturation), then geometric bisection narrows the
+//!   bracket to `tol`. A full curve costs O(log(range)/log(1+tol))
+//!   full-length runs instead of a dense load grid.
+//!
+//! A point is *saturated* when any core's bounded arrival FIFO
+//! overflows within the cycle budget — the fail-loud divergence
+//! condition: offered load exceeds what the config can drain, so
+//! latency has no steady state and the run halts at the next thermal
+//! epoch rather than growing memory. The knee reported here is thus a
+//! deterministic function of (config, workload, arrival seed, cycle
+//! budget, FIFO bound); EXPERIMENTS.md records the defaults.
+
+use crate::mem::{System, SystemConfig, SystemStats};
+use crate::workloads::arrival::{ArrivalKind, ArrivalSpec};
+use crate::workloads::{NamedSource, WorkloadSpec};
+
+use super::lockstep::{SharedSourceSet, LOCKSTEP_CHUNK};
+use super::Driver;
+
+/// Default open-loop arrival-queue bound for eval runs (re-exported so
+/// the CLI and the bound used by regression tests agree).
+pub const LOAD_BOUND: usize = crate::mem::cpu::OPEN_LOOP_BOUND;
+
+/// Lowest load the knee ascent starts from (requests/cycle/core);
+/// every DDR3 config sustains this.
+pub const KNEE_FLOOR: f64 = 0.005;
+
+/// Default relative knee-bracket tolerance.
+pub const KNEE_TOL: f64 = 0.05;
+
+/// One measured load point: offered load in, throughput and tail
+/// latency out. `PartialEq` is exact (bit-level floats) — the
+/// shared-stream lockstep engine must match the independent oracle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadPoint {
+    /// Offered load, requests per controller cycle per core.
+    pub load: f64,
+    /// Cycles actually simulated (short of the budget iff saturated).
+    pub cycles: u64,
+    /// Arrivals admitted to the arrival FIFOs.
+    pub offered: u64,
+    pub reads_done: u64,
+    pub writes_done: u64,
+    /// Completed requests per cycle — the sustained-throughput measure.
+    pub throughput: f64,
+    /// Arrival-to-completion read-latency percentiles (cycles),
+    /// `StreamHist::quantile_interp` of the merged histogram.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    /// The arrival FIFO overflowed: this load is past the knee.
+    pub saturated: bool,
+}
+
+/// One timing table's measured curve plus its knee.
+#[derive(Debug, Clone)]
+pub struct LoadCurve {
+    pub table: String,
+    pub points: Vec<LoadPoint>,
+    /// Highest probed load the table sustained (see [`knee_search`]).
+    pub knee: f64,
+}
+
+/// Everything one load point needs besides the config: workload,
+/// arrival process, scale and seeds.
+#[derive(Debug, Clone)]
+pub struct LoadSetup {
+    pub workload: WorkloadSpec,
+    pub kind: ArrivalKind,
+    pub cores: usize,
+    pub cycles: u64,
+    pub seed: String,
+    pub bound: usize,
+}
+
+impl LoadSetup {
+    fn sources(&self, load: f64) -> Vec<NamedSource> {
+        let spec = ArrivalSpec { kind: self.kind, load };
+        (0..self.cores)
+            .map(|c| {
+                spec.named_source(&self.workload,
+                                  &format!("{}/core{c}", self.seed))
+            })
+            .collect()
+    }
+}
+
+fn point_from(load: f64, s: &SystemStats) -> LoadPoint {
+    let ol = s.open_loop.as_ref()
+        .expect("load points come from open-loop runs");
+    let q = |p: f64| {
+        if ol.hist.is_empty() { 0.0 } else { ol.hist.quantile_interp(p) }
+    };
+    LoadPoint {
+        load,
+        cycles: s.cycles,
+        offered: ol.offered,
+        reads_done: s.reads_done,
+        writes_done: s.writes_done,
+        throughput: (s.reads_done + s.writes_done) as f64
+            / s.cycles.max(1) as f64,
+        p50: q(0.5),
+        p95: q(0.95),
+        p99: q(0.99),
+        p999: q(0.999),
+        saturated: ol.saturated,
+    }
+}
+
+/// One load point across K configs, lockstep over ONE shared
+/// arrival-stream generation: every config consumes bit-identical
+/// arrivals, each batch is generated once, and passed batches are freed
+/// as the slowest consumer moves on (`SharedSourceSet::trim`). A config
+/// that saturates halts at its next thermal epoch and simply stops
+/// consuming; the others run out their budget.
+pub fn run_point(cfgs: &[SystemConfig], setup: &LoadSetup, load: f64,
+                 driver: Driver) -> Vec<LoadPoint> {
+    let shared = SharedSourceSet::new(setup.sources(load));
+    let mut systems: Vec<System> = cfgs
+        .iter()
+        .map(|cfg| {
+            let mut sys = System::with_sources(cfg, shared.consumer());
+            sys.set_open_loop(setup.bound);
+            sys
+        })
+        .collect();
+    let mut left = setup.cycles;
+    while left > 0 && !systems.iter().all(System::halted) {
+        let span = LOCKSTEP_CHUNK.min(left);
+        for sys in &mut systems {
+            match driver {
+                Driver::TimeSkip => sys.run_fast(span),
+                Driver::CycleStepped => sys.run(span),
+            };
+        }
+        shared.trim();
+        left -= span;
+    }
+    systems.iter().map(|s| point_from(load, &s.stats())).collect()
+}
+
+/// The independent-system oracle for [`run_point`]: same seeds, one
+/// full-length run and one private stream generation per config.
+/// Bit-identical results (the `SPEEDUP[LOADSWEEP]` equivalence gate);
+/// K× the generation work.
+pub fn run_point_independent(cfgs: &[SystemConfig], setup: &LoadSetup,
+                             load: f64, driver: Driver) -> Vec<LoadPoint> {
+    cfgs.iter()
+        .map(|cfg| {
+            let mut sys = System::with_sources(cfg, setup.sources(load));
+            sys.set_open_loop(setup.bound);
+            let stats = match driver {
+                Driver::TimeSkip => sys.run_fast(setup.cycles),
+                Driver::CycleStepped => sys.run(setup.cycles),
+            };
+            point_from(load, &stats)
+        })
+        .collect()
+}
+
+/// The adaptive knee search for one config: geometric ascent from
+/// [`KNEE_FLOOR`] (doubling until a probe saturates) brackets the knee,
+/// then geometric bisection narrows the bracket until `hi/lo <= 1+tol`.
+/// Returns the curve of every probe (sorted by load) with `knee` = the
+/// highest sustained load. O(log) full-length runs total; saturated
+/// probes are cheaper still because the run halts at the next epoch
+/// after the FIFO overflows.
+pub fn knee_search(cfg: &SystemConfig, setup: &LoadSetup, tol: f64,
+                   driver: Driver) -> LoadCurve {
+    assert!(tol > 0.0, "knee tolerance must be positive");
+    let cfgs = std::slice::from_ref(cfg);
+    let mut points: Vec<LoadPoint> = Vec::new();
+    let mut probe = |load: f64, points: &mut Vec<LoadPoint>| -> bool {
+        let p = run_point(cfgs, setup, load, driver).pop().unwrap();
+        let sat = p.saturated;
+        points.push(p);
+        sat
+    };
+    let mut lo = KNEE_FLOOR;
+    // Descend if even the floor saturates (a pathological config —
+    // report a zero-ish knee rather than looping).
+    let mut floor_tries = 0;
+    while probe(lo, &mut points) {
+        lo /= 4.0;
+        floor_tries += 1;
+        if floor_tries >= 4 {
+            points.sort_by(|a, b| a.load.total_cmp(&b.load));
+            return LoadCurve {
+                table: String::new(),
+                points,
+                knee: 0.0,
+            };
+        }
+    }
+    // Geometric ascent: double until saturation (cap well past any
+    // physical DDR3 per-core rate).
+    let mut hi = lo * 2.0;
+    while !probe(hi, &mut points) {
+        lo = hi;
+        hi *= 2.0;
+        if hi > 8.0 {
+            break; // sustained everything we can offer
+        }
+    }
+    // Geometric bisection on the bracket.
+    while hi / lo > 1.0 + tol {
+        let mid = (lo * hi).sqrt();
+        if probe(mid, &mut points) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    points.sort_by(|a, b| a.load.total_cmp(&b.load));
+    LoadCurve { table: String::new(), points, knee: lo }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::TimingParams;
+    use crate::workloads::by_name;
+
+    fn setup(cycles: u64) -> LoadSetup {
+        LoadSetup {
+            workload: by_name("gups").unwrap(),
+            kind: ArrivalKind::Poisson,
+            cores: 1,
+            cycles,
+            seed: "t".into(),
+            bound: 256,
+        }
+    }
+
+    #[test]
+    fn lockstep_point_matches_independent_oracle() {
+        let cfgs = [
+            SystemConfig::paper_default(),
+            SystemConfig::paper_default().with_timings(
+                TimingParams::ddr3_standard()
+                    .reduced(0.27, 0.32, 0.33, 0.18)),
+        ];
+        let s = setup(40_000);
+        for load in [0.01, 0.08] {
+            let a = run_point(&cfgs, &s, load, Driver::TimeSkip);
+            let b = run_point_independent(&cfgs, &s, load, Driver::TimeSkip);
+            assert_eq!(a, b, "shared-stream lockstep diverged at {load}");
+        }
+    }
+
+    #[test]
+    fn drivers_agree_on_points() {
+        let cfgs = [SystemConfig::paper_default()];
+        let s = setup(30_000);
+        for load in [0.02, 0.3] {
+            let fast = run_point(&cfgs, &s, load, Driver::TimeSkip);
+            let step = run_point(&cfgs, &s, load, Driver::CycleStepped);
+            assert_eq!(fast, step, "drivers diverged at load {load}");
+        }
+    }
+
+    #[test]
+    fn knee_is_bracketed_and_monotone() {
+        let s = setup(30_000);
+        let curve = knee_search(&SystemConfig::paper_default(), &s,
+                                0.1, Driver::TimeSkip);
+        assert!(curve.knee > 0.0, "gups must sustain some load");
+        // Every sustained probe sits at or below every saturated probe.
+        let max_ok = curve.points.iter().filter(|p| !p.saturated)
+            .map(|p| p.load).fold(0.0f64, f64::max);
+        let min_sat = curve.points.iter().filter(|p| p.saturated)
+            .map(|p| p.load).fold(f64::INFINITY, f64::min);
+        assert!(max_ok <= min_sat,
+                "saturation is not monotone: ok {max_ok} > sat {min_sat}");
+        assert_eq!(curve.knee, max_ok);
+        assert!(min_sat / curve.knee <= 1.1 + 1e-9,
+                "bracket wider than tol: {} vs {}", curve.knee, min_sat);
+    }
+}

@@ -11,9 +11,11 @@
 //! and lets the per-channel thermal model drive the bin selection.
 
 pub mod fig6;
+pub mod load;
 pub mod lockstep;
 
 pub use fig6::{fig6, fig6_regions, Fig6Result, Fig6Row, RowKind};
+pub use load::{LoadCurve, LoadPoint};
 pub use lockstep::Engine;
 
 use crate::aldram::{AlDram, RegionTable, DEFAULT_BIN_C};

@@ -15,12 +15,17 @@
 //!                    region-indexed vs module-uniform delta)
 //!   repro ablate     refresh-latency|interdependence|repeatability|
 //!                    bank-granularity|ecc|sweep|ode [--jobs N]
-//!   repro eval       sensitivity|hetero|power|stress|fig6 [--cycles N]
+//!   repro eval       sensitivity|hetero|power|stress|fig6|load [--cycles N]
 //!                    [--jobs N] [--profiles DIR]  (profile-driven variants;
 //!                    hetero/fig6 profile modules when --profiles is absent;
 //!                    fig6: --workloads a,b,c --mixes N --seed S;
 //!                    hetero: --regions R [--placement] scores region-
-//!                    indexed tables against their module-uniform collapse)
+//!                    indexed tables against their module-uniform collapse;
+//!                    load: open-loop latency-vs-throughput curves +
+//!                    adaptive knee search across JEDEC/profiled[/region]
+//!                    tables over one shared arrival stream — --workload W
+//!                    --arrival poisson|bursty|diurnal --cores N --points K
+//!                    --bound B --tol T --seed S [--regions R] [--no-bench])
 //!   repro trace      record|replay|info|convert   (trace capture/replay:
 //!                    record --workload W|--mix M [--cores N] --out FILE;
 //!                    replay --trace FILE; --trace accepts ALDT binary or
@@ -36,10 +41,17 @@
 //!   repro bench-profile [--cells N]        (profiling-engine smoke; prints
 //!                    the SPEEDUP[PROFILE] and SPEEDUP[SWEEP] lines:
 //!                    scalar native vs vectorized simd / probed+warm sweep)
-//!   repro bench all  [--json-dir DIR]      (run both bench suites and
+//!   repro bench-load [--cycles N] [--load L] [--load-k K]  (open-loop
+//!                    perf smoke; prints the SPEEDUP[LOAD] line:
+//!                    arrival-aware time-skip vs the cycle-stepped oracle
+//!                    at low offered load, and the SPEEDUP[LOADSWEEP]
+//!                    line: K-config shared-stream lockstep vs
+//!                    independent stream generations)
+//!   repro bench all  [--json-dir DIR]      (run every bench suite and
 //!                    write their SPEEDUP[*] comparisons as structured
-//!                    records to BENCH_SIM.json / BENCH_PROFILE.json — the
-//!                    repo-root baselines CI diffs structurally)
+//!                    records to BENCH_SIM.json / BENCH_PROFILE.json /
+//!                    BENCH_LOAD.json — the repo-root baselines CI diffs
+//!                    structurally)
 //!   repro check      run|capture|replay|info|mutate   (independent JEDEC
 //!                    protocol-conformance audit, DESIGN.md §13: `run`
 //!                    audits a simulation inline (--driver fast|step|both
@@ -531,6 +543,275 @@ fn bench_profile(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
     records.extend(bench.speedup_record("SWEEP", "sweep/native-cold",
                                         "sweep/simd-probe-warm"));
     bench.finish();
+    Ok(records)
+}
+
+/// `repro eval load` (DESIGN.md §16): knee search per timing table,
+/// then a shared geometric load grid where every point runs all K
+/// tables lockstep over ONE shared arrival-stream generation. Prints
+/// per-table curves, `KNEE` lines, the `LOADGATE` comparison CI greps
+/// (profiled knee/p99 vs JEDEC), writes `load_curves.csv`, and unless
+/// `--no-bench` runs the `bench-load` suite for the `SPEEDUP[LOAD]` /
+/// `SPEEDUP[LOADSWEEP]` lines.
+fn eval_load(args: &Args, jobs: usize, out: &std::path::Path)
+             -> anyhow::Result<()> {
+    use aldram::eval::load::{self as load_eval, LoadCurve, LoadPoint,
+                             KNEE_TOL, LOAD_BOUND};
+    use aldram::eval::Driver;
+    use aldram::figures::csv::Csv;
+    use aldram::mem::SystemConfig;
+    use aldram::timing::TimingParams;
+    use aldram::workloads::arrival::ArrivalKind;
+    use aldram::workloads::by_name;
+
+    let wname = args.str("workload", "gups");
+    let w = by_name(&wname)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{wname}`"))?;
+    let kname = args.str("arrival", "poisson");
+    let kind = ArrivalKind::by_name(&kname).ok_or_else(|| {
+        anyhow::anyhow!("unknown arrival process `{kname}` \
+                         (poisson|bursty|diurnal)")
+    })?;
+    let setup = load_eval::LoadSetup {
+        workload: w,
+        kind,
+        cores: args.get("cores", 1usize),
+        cycles: args.get("cycles", 200_000u64),
+        seed: args.seed(),
+        bound: args.get("bound", LOAD_BOUND),
+    };
+    let tol = args.get("tol", KNEE_TOL);
+    let points_n = args.get("points", 5usize).max(2);
+
+    // The K timing tables: JEDEC baseline, the profiled (reduced)
+    // point — a registry module's own thermally-managed table under
+    // --profiles, the paper's 55 °C reductions otherwise — and, under
+    // --regions, the region-indexed table.
+    let [r_trcd, r_tras, r_twr, r_trp] = aldram::eval::PAPER_REDUCTIONS_55C;
+    let mut tables: Vec<(String, SystemConfig)> =
+        vec![("jedec".into(), SystemConfig::paper_default())];
+    if args.has("profiles") {
+        let (label, table) = table_or_profile(args)?;
+        tables.push((format!("profiled[{label}]"),
+                     SystemConfig::paper_default()
+                         .with_aldram(Some(table))));
+    } else {
+        let t = TimingParams::ddr3_standard()
+            .reduced(r_trcd, r_tras, r_twr, r_trp);
+        t.validate()?;
+        tables.push(("profiled".into(),
+                     SystemConfig::paper_default().with_timings(t)));
+    }
+    if let Some(regions) = regions_flag(args)? {
+        let (label, table) = region_table_or_profile(args, regions)?;
+        tables.push((format!("region[{label}]"),
+                     SystemConfig::paper_default()
+                         .with_region_table(Some(table))));
+    }
+
+    println!("== open-loop load sweep: {wname} under {kname} arrivals, \
+              {} core(s), {} cycles/point (seed {}, bound {}, {} \
+              tables) ==",
+             setup.cores, setup.cycles, setup.seed, setup.bound,
+             tables.len());
+
+    // Adaptive knee per table (independent searches — pool fan-out).
+    let knees: Vec<LoadCurve> =
+        exec::Pool::new(jobs).run(tables.len(), |i| {
+            let mut c = load_eval::knee_search(&tables[i].1, &setup, tol,
+                                               Driver::TimeSkip);
+            c.table = tables[i].0.clone();
+            c
+        });
+    for c in &knees {
+        println!("KNEE table={} load={:.4} ({} probes, tol {:.0}%)",
+                 c.table, c.knee, c.points.len(), 100.0 * tol);
+    }
+
+    // Shared load grid spanning the knees: every grid point runs all K
+    // tables lockstep over one shared arrival stream.
+    let kmin = knees.iter().map(|c| c.knee)
+        .fold(f64::INFINITY, f64::min).max(1e-4);
+    let kmax = knees.iter().map(|c| c.knee).fold(0.0, f64::max).max(1e-4);
+    let (glo, ghi) = (kmin * 0.25, kmax * 1.25);
+    let grid: Vec<f64> = (0..points_n)
+        .map(|i| glo * (ghi / glo)
+             .powf(i as f64 / (points_n - 1) as f64))
+        .collect();
+    let cfgs: Vec<SystemConfig> =
+        tables.iter().map(|(_, c)| c.clone()).collect();
+    let rows: Vec<Vec<LoadPoint>> =
+        exec::Pool::new(jobs).run(grid.len(), |i| {
+            load_eval::run_point(&cfgs, &setup, grid[i], Driver::TimeSkip)
+        });
+
+    let mut csv = Csv::new(&["table", "arrival", "phase", "load", "cycles",
+                             "offered", "reads", "writes", "throughput",
+                             "p50", "p95", "p99", "p999", "saturated"]);
+    let mut push_row = |table: &str, phase: &str, p: &LoadPoint| {
+        csv.row(&[table.to_string(), kname.clone(), phase.to_string(),
+                  format!("{:.6}", p.load), p.cycles.to_string(),
+                  p.offered.to_string(), p.reads_done.to_string(),
+                  p.writes_done.to_string(),
+                  format!("{:.6}", p.throughput), format!("{:.2}", p.p50),
+                  format!("{:.2}", p.p95), format!("{:.2}", p.p99),
+                  format!("{:.2}", p.p999),
+                  (p.saturated as u8).to_string()]);
+    };
+    for (ti, (name, _)) in tables.iter().enumerate() {
+        println!("-- {name} --");
+        println!("{:>9} {:>9} {:>8} {:>8} {:>8} {:>8} {:>9}  {}",
+                 "load", "thru", "p50", "p95", "p99", "p99.9", "offered",
+                 "state");
+        for (gi, _) in grid.iter().enumerate() {
+            let p = &rows[gi][ti];
+            println!("{:>9.4} {:>9.4} {:>8.1} {:>8.1} {:>8.1} {:>8.1} \
+                      {:>9}  {}",
+                     p.load, p.throughput, p.p50, p.p95, p.p99, p.p999,
+                     p.offered,
+                     if p.saturated { "SATURATED" } else { "ok" });
+            push_row(name, "grid", p);
+        }
+        for p in &knees[ti].points {
+            push_row(name, "probe", p);
+        }
+    }
+    csv.write(out, "load_curves.csv")?;
+
+    // The acceptance comparison: profiled vs JEDEC knee, and p99 at the
+    // highest grid load both tables sustain with completed reads.
+    let (kj, kp) = (knees[0].knee, knees[1].knee);
+    let common = grid.iter().enumerate().rev().find(|(gi, _)| {
+        let (a, b) = (&rows[*gi][0], &rows[*gi][1]);
+        !a.saturated && !b.saturated && a.reads_done > 0 && b.reads_done > 0
+    });
+    let (p99j, p99p) = common
+        .map(|(gi, _)| (rows[gi][0].p99, rows[gi][1].p99))
+        .unwrap_or((f64::NAN, f64::NAN));
+    println!("LOADGATE jedec_knee={kj:.4} profiled_knee={kp:.4} \
+              knee_ge={} p99_jedec={p99j:.1} p99_profiled={p99p:.1} \
+              p99_lower={} profiled_beats_jedec={}",
+             if kp > kj { "yes" } else { "no" },
+             if p99p < p99j { "yes" } else { "no" },
+             if kp > kj && p99p < p99j { "yes" } else { "no" });
+
+    if !args.has("no-bench") {
+        bench_load(args)?;
+    }
+    Ok(())
+}
+
+/// The `bench-load` suite: open-loop perf comparisons, results asserted
+/// bit-identical before any timing (both are single-shot wall-clock
+/// comparisons like TIMESKIP/FLEET — the slow side is far too slow to
+/// window). SPEEDUP[LOAD]: the arrival-aware time-skip driver vs the
+/// cycle-stepped oracle at low offered load, where nearly every cycle
+/// is an idle inter-arrival gap the driver can skip. SPEEDUP[LOADSWEEP]:
+/// one load point across K timing configs, shared-stream lockstep vs
+/// independent systems (K stream generations).
+fn bench_load(args: &Args) -> anyhow::Result<Vec<SpeedupRecord>> {
+    use aldram::eval::load::{self as load_eval, LOAD_BOUND};
+    use aldram::eval::Driver;
+    use aldram::mem::{System, SystemConfig};
+    use aldram::timing::TimingParams;
+    use aldram::workloads::arrival::{ArrivalKind, ArrivalSpec};
+    use aldram::workloads::by_name;
+    use std::time::Instant;
+
+    let cycles = args.get("cycles", 200_000u64);
+    let seed = args.seed();
+    let wname = args.str("workload", "gups");
+    let w = by_name(&wname)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{wname}`"))?;
+    let mut records: Vec<SpeedupRecord> = Vec::new();
+
+    // SPEEDUP[LOAD]: run vs run_fast at a low offered load.
+    let load = args.get("load", 0.02f64);
+    let cfg = SystemConfig::paper_default();
+    let spec = ArrivalSpec { kind: ArrivalKind::Poisson, load };
+    let build = || {
+        let mut sys = System::with_sources(
+            &cfg, vec![spec.named_source(&w, &format!("{seed}/core0"))]);
+        sys.set_open_loop(LOAD_BOUND);
+        sys
+    };
+    let mut seq = build();
+    let t0 = Instant::now();
+    let s = seq.run(cycles);
+    let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut fast = build();
+    let t0 = Instant::now();
+    let f = fast.run_fast(cycles);
+    let fast_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(stats_line(&s) == stats_line(&f)
+                    && s.open_loop == f.open_loop,
+                    "open-loop drivers diverged at load {load}");
+    let ratio = step_ms / fast_ms.max(1e-9);
+    println!("SPEEDUP[LOAD] {:<30} -> {:<30} {ratio:>6.2}x  \
+              ({step_ms:.1} ms -> {fast_ms:.1} ms, identical stats + \
+              histograms)",
+             format!("run@load{load}"), format!("run_fast@load{load}"));
+    records.push(SpeedupRecord {
+        suite: "bench-load".into(),
+        tag: "LOAD".into(),
+        base: "open-loop/run".into(),
+        test: "open-loop/run_fast".into(),
+        speedup: ratio,
+        base_median_ns: step_ms * 1e6,
+        test_median_ns: fast_ms * 1e6,
+    });
+
+    // SPEEDUP[LOADSWEEP]: K configs at one load point — shared-stream
+    // lockstep vs the independent-system oracle.
+    let k = args.get("load-k", 4usize);
+    anyhow::ensure!(k >= 2, "--load-k must be at least 2");
+    let cfgs: Vec<SystemConfig> = (0..k)
+        .map(|i| {
+            let sc = i as f64 / (k - 1) as f64;
+            let t = TimingParams::ddr3_standard()
+                .reduced(0.27 * sc, 0.32 * sc, 0.33 * sc, 0.18 * sc);
+            t.validate()
+                .map(|_| SystemConfig::paper_default().with_timings(t))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let setup = load_eval::LoadSetup {
+        workload: w,
+        kind: ArrivalKind::Poisson,
+        cores: 1,
+        cycles,
+        seed: seed.clone(),
+        bound: LOAD_BOUND,
+    };
+    let sweep_load = args.get("sweep-load", 0.05f64);
+    let ind = load_eval::run_point_independent(&cfgs, &setup, sweep_load,
+                                               Driver::TimeSkip);
+    let lck = load_eval::run_point(&cfgs, &setup, sweep_load,
+                                   Driver::TimeSkip);
+    anyhow::ensure!(ind == lck,
+                    "shared-stream load point diverged from the \
+                     independent oracle");
+    let t0 = Instant::now();
+    let _ = load_eval::run_point_independent(&cfgs, &setup, sweep_load,
+                                             Driver::TimeSkip);
+    let ind_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let _ = load_eval::run_point(&cfgs, &setup, sweep_load,
+                                 Driver::TimeSkip);
+    let lck_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let ratio = ind_ms / lck_ms.max(1e-9);
+    println!("SPEEDUP[LOADSWEEP] {:<26} -> {:<26} {ratio:>6.2}x  \
+              ({ind_ms:.1} ms -> {lck_ms:.1} ms)",
+             format!("point/independent/k{k}"),
+             format!("point/lockstep/k{k}"));
+    records.push(SpeedupRecord {
+        suite: "bench-load".into(),
+        tag: "LOADSWEEP".into(),
+        base: format!("point/independent/k{k}"),
+        test: format!("point/lockstep/k{k}"),
+        speedup: ratio,
+        base_median_ns: ind_ms * 1e6,
+        test_median_ns: lck_ms * 1e6,
+    });
     Ok(records)
 }
 
@@ -1093,6 +1374,9 @@ fn run(args: Args) -> anyhow::Result<()> {
                     );
                     anyhow::ensure!(r.errors == 0, "stress run saw errors");
                 }
+                "load" => {
+                    eval_load(&args, jobs, &out)?;
+                }
                 other => anyhow::bail!("unknown eval `{other}`"),
             }
         }
@@ -1484,6 +1768,10 @@ fn run(args: Args) -> anyhow::Result<()> {
             bench_profile(&args)?;
         }
 
+        Some("bench-load") => {
+            bench_load(&args)?;
+        }
+
         Some("bench") => {
             match args.sub(1).unwrap_or("all") {
                 // `bench all`: both suites end to end, with every
@@ -1498,6 +1786,8 @@ fn run(args: Args) -> anyhow::Result<()> {
                     let prof = bench_profile(&args)?;
                     write_bench_json(&dir.join("BENCH_PROFILE.json"),
                                      &prof)?;
+                    let load = bench_load(&args)?;
+                    write_bench_json(&dir.join("BENCH_LOAD.json"), &load)?;
                 }
                 // `bench compare --baseline A --fresh B`: compare the
                 // two files' *latest* entries — CI's regression gate. A
@@ -1532,7 +1822,7 @@ fn run(args: Args) -> anyhow::Result<()> {
 
         _ => {
             println!("repro — AL-DRAM reproduction (see DESIGN.md)");
-            println!("commands: calibrate | profile | figure | ablate | eval | trace | check | fleet run|report | bench all | bench-sim | bench-profile");
+            println!("commands: calibrate | profile | figure | ablate | eval | trace | check | fleet run|report | bench all | bench-sim | bench-profile | bench-load");
             println!("global flags: --jobs N (parallel fan-out width, \
                       default {}), --seed S (workload/mix RNG label, \
                       default 0), --check (attach the protocol-conformance \

@@ -11,8 +11,27 @@
 //! difference). A source that returns 0 from `fill` is exhausted — e.g.
 //! a replayed trace run past its recorded horizon — and the core then
 //! retires nothing further and stalls deterministically.
+//!
+//! **Open-loop mode** ([`Core::set_open_loop`], DESIGN.md §16) replaces
+//! the retire/ROB/MLP machinery with an arrival queue: each reference's
+//! `gap_insts` is reinterpreted as an inter-arrival gap in controller
+//! cycles (see `workloads::arrival`), arrivals join a bounded FIFO at
+//! their arrival timestamp regardless of memory progress, and the core
+//! drains the FIFO into the controller in order. Per-read
+//! enqueue-to-completion latency (measured from the *arrival* timestamp,
+//! so queueing delay in the arrival FIFO counts) is recorded into a
+//! fixed-memory [`StreamHist`]. When an arrival finds the FIFO full the
+//! core latches `saturated` — offered load exceeds sustainable
+//! throughput — and the system halts the run at the next thermal-epoch
+//! boundary instead of growing memory or silently wedging. The
+//! `next_event`/`skip` contract carries over: with an empty FIFO the
+//! next event is exactly the next arrival timestamp, which is what lets
+//! the time-skip driver jump over idle inter-arrival gaps at low load.
+
+use std::collections::VecDeque;
 
 use super::controller::Request;
+use crate::util::hist::StreamHist;
 use crate::workloads::{MemRef, RequestSource};
 
 /// CPU-to-DRAM-controller clock ratio (3.2 GHz core, 800 MHz controller).
@@ -24,10 +43,38 @@ pub const ROB_INSTS: u64 = 192;
 /// Max outstanding read misses (MSHRs).
 pub const MAX_MLP: usize = 6;
 
+/// Open-loop latency histogram range (controller cycles). Latencies at
+/// or past the upper edge land in the top bin; quantiles past the
+/// histogrammed mass report the exact observed maximum (the overflow
+/// policy of `StreamHist::quantile_interp`).
+pub const LAT_HIST_MAX: f64 = 4096.0;
+/// Open-loop latency histogram resolution (8-cycle bins).
+pub const LAT_HIST_BINS: usize = 512;
+/// Default open-loop arrival-queue bound.
+pub const OPEN_LOOP_BOUND: usize = 4096;
+
 #[derive(Debug, Clone, Copy)]
 struct Outstanding {
     id: u64,
     inst_pos: u64,
+}
+
+/// Open-loop state: the arrival FIFO and its instrumentation.
+struct OpenLoop {
+    /// Absolute arrival cycle of `next_ref` (cumulative gap sum).
+    next_at: u64,
+    /// The next not-yet-admitted arrival, pulled ahead so `next_at` is
+    /// known to `next_event`.
+    next_ref: Option<MemRef>,
+    /// Admitted arrivals waiting to enqueue: (arrival cycle, reference).
+    pending: VecDeque<(u64, MemRef)>,
+    /// FIFO capacity; an arrival finding it full latches `saturated`.
+    bound: usize,
+    saturated: bool,
+    /// Arrivals admitted to the FIFO so far.
+    offered: u64,
+    /// Read enqueue-to-completion latency, from arrival timestamp.
+    hist: StreamHist,
 }
 
 pub struct Core {
@@ -53,6 +100,8 @@ pub struct Core {
     /// successful send, a completion, or by the time-skip driver when any
     /// controller dequeues (queue space can only open up then).
     queue_blocked: bool,
+    /// `Some` puts the core in open-loop mode (module docs).
+    open_loop: Option<OpenLoop>,
 }
 
 impl Core {
@@ -72,30 +121,85 @@ impl Core {
             reads_issued: 0,
             writes_issued: 0,
             queue_blocked: false,
+            open_loop: None,
         }
+    }
+
+    /// Switch this core to open-loop mode with the given arrival-queue
+    /// bound. Must run before the first cycle — the closed-loop retire
+    /// state and the arrival clock both start from zero.
+    pub fn set_open_loop(&mut self, bound: usize) {
+        assert!(bound > 0, "arrival queue bound must be positive");
+        assert!(self.insts == 0 && self.next_ref.is_none(),
+                "set_open_loop after the core already ran");
+        self.open_loop = Some(OpenLoop {
+            next_at: 0,
+            next_ref: None,
+            pending: VecDeque::new(),
+            bound,
+            saturated: false,
+            offered: 0,
+            hist: StreamHist::new(0.0, LAT_HIST_MAX, LAT_HIST_BINS),
+        });
+    }
+
+    pub fn is_open_loop(&self) -> bool {
+        self.open_loop.is_some()
+    }
+
+    /// Open-loop saturation latch: an arrival found the FIFO full.
+    pub fn open_loop_saturated(&self) -> bool {
+        self.open_loop.as_ref().is_some_and(|ol| ol.saturated)
+    }
+
+    /// Arrivals admitted to the open-loop FIFO so far (0 closed-loop).
+    pub fn arrivals_offered(&self) -> u64 {
+        self.open_loop.as_ref().map_or(0, |ol| ol.offered)
+    }
+
+    /// The open-loop read-latency histogram (None closed-loop).
+    pub fn latency_hist(&self) -> Option<&StreamHist> {
+        self.open_loop.as_ref().map(|ol| &ol.hist)
+    }
+
+    /// Pull the next reference through the batched transport.
+    fn pull_ref(&mut self) -> Option<MemRef> {
+        if self.buf_pos == self.buf.len() {
+            self.buf.clear();
+            self.buf_pos = 0;
+            if self.exhausted || self.source.fill(&mut self.buf) == 0 {
+                self.exhausted = true;
+                return None;
+            }
+        }
+        let r = self.buf[self.buf_pos];
+        self.buf_pos += 1;
+        Some(r)
     }
 
     fn refill(&mut self) {
         if self.next_ref.is_some() {
             return;
         }
-        if self.buf_pos == self.buf.len() {
-            self.buf.clear();
-            self.buf_pos = 0;
-            if self.exhausted || self.source.fill(&mut self.buf) == 0 {
-                self.exhausted = true;
-                return;
-            }
+        if let Some(r) = self.pull_ref() {
+            self.gap_left = r.gap_insts as u64;
+            self.next_ref = Some(r);
         }
-        let r = self.buf[self.buf_pos];
-        self.buf_pos += 1;
-        self.gap_left = r.gap_insts as u64;
-        self.next_ref = Some(r);
     }
 
     pub fn on_completion(&mut self, req_id: u64) {
         self.outstanding.retain(|o| o.id != req_id);
         self.queue_blocked = false;
+    }
+
+    /// Read-completion hook with timing: in open-loop mode the
+    /// arrival-to-finish latency is recorded before the completion is
+    /// applied; closed-loop this is exactly [`Self::on_completion`].
+    pub fn complete_read(&mut self, req_id: u64, arrival: u64, finish: u64) {
+        if let Some(ol) = &mut self.open_loop {
+            ol.hist.record((finish - arrival) as f64);
+        }
+        self.on_completion(req_id);
     }
 
     pub fn outstanding(&self) -> usize {
@@ -137,13 +241,117 @@ impl Core {
             .unwrap_or(u64::MAX)
     }
 
+    /// Make sure the head-of-stream arrival (and its timestamp) is known.
+    fn ol_refill(&mut self) {
+        if self.open_loop.as_ref().is_some_and(|ol| ol.next_ref.is_some()) {
+            return;
+        }
+        if let Some(r) = self.pull_ref() {
+            let ol = self.open_loop.as_mut().unwrap();
+            ol.next_at += r.gap_insts as u64;
+            ol.next_ref = Some(r);
+        }
+    }
+
+    /// Admit every arrival due by `now` into the FIFO, in timestamp
+    /// order, up to the bound. An arrival finding the FIFO full latches
+    /// `saturated` and stays un-admitted (it keeps its true timestamp,
+    /// so if room opens before the run halts its recorded queueing delay
+    /// is the real one). Admission depends only on timestamps and FIFO
+    /// occupancy — never on when within a span it runs — so the
+    /// time-skip driver may defer it to the next stepped cycle and still
+    /// admit exactly the same set (the §16 equivalence argument).
+    fn ol_admit(&mut self, now: u64) {
+        loop {
+            self.ol_refill();
+            let ol = self.open_loop.as_mut().unwrap();
+            let Some(r) = ol.next_ref else { return };
+            if ol.next_at > now {
+                return;
+            }
+            if ol.pending.len() >= ol.bound {
+                ol.saturated = true; // fail-loud: halts at the next epoch
+                return;
+            }
+            ol.pending.push_back((ol.next_at, r));
+            ol.offered += 1;
+            ol.next_ref = None;
+        }
+    }
+
+    /// Open-loop cycle: admit due arrivals, then drain the FIFO head
+    /// into the controller (FIFO order — head-of-line blocking is the
+    /// model: an offered-load stream has no reorder window).
+    fn ol_step(&mut self, now: u64,
+               try_send: &mut dyn FnMut(Request) -> bool) {
+        self.ol_admit(now);
+        let mut budget = (CPU_PER_DRAM * IPC_MAX) as u64;
+        let mut progressed = false;
+        while budget > 0 {
+            let Some(&(at, r)) =
+                self.open_loop.as_ref().unwrap().pending.front()
+            else {
+                break;
+            };
+            let req = Request {
+                id: self.next_req_id,
+                core: self.id,
+                addr: r.addr,
+                is_write: r.is_write,
+                // The *arrival* timestamp, not `now`: the controller's
+                // completion then carries finish − arrival = queueing
+                // delay in this FIFO + service, the latency that matters
+                // under offered load.
+                arrival: at,
+            };
+            if try_send(req) {
+                self.queue_blocked = false;
+                self.next_req_id += 1;
+                if r.is_write {
+                    self.writes_issued += 1;
+                } else {
+                    self.reads_issued += 1;
+                }
+                self.insts += 1; // one injected request (IPC is a proxy)
+                self.open_loop.as_mut().unwrap().pending.pop_front();
+                budget -= 1;
+                progressed = true;
+            } else {
+                self.queue_blocked = true;
+                break;
+            }
+        }
+        if !progressed
+            && !self.open_loop.as_ref().unwrap().pending.is_empty()
+        {
+            self.stall_cycles += 1;
+        }
+    }
+
     /// Earliest cycle >= `now` at which this core will next attempt to
     /// enqueue a memory request, or `u64::MAX` when it cannot act until an
     /// external event (a completion frees an MSHR / ROB or dependence
     /// slot, or a controller dequeue frees queue space). Until then the
     /// core only retires instructions and stalls deterministically, which
     /// `skip` replays in O(1) — the time-skip driver contract.
+    ///
+    /// Open-loop, the same contract with arrival awareness: a non-empty
+    /// FIFO wants to enqueue *now* (unless a refused enqueue pins the
+    /// core until a controller dequeue re-arms it), and an empty FIFO's
+    /// next event is exactly the next arrival timestamp — the hint that
+    /// lets `run_fast` skip whole inter-arrival gaps at low load.
     pub fn next_event(&mut self, now: u64) -> u64 {
+        if self.open_loop.is_some() {
+            self.ol_refill();
+            let ol = self.open_loop.as_ref().unwrap();
+            if !ol.pending.is_empty() {
+                return if self.queue_blocked { u64::MAX } else { now };
+            }
+            return match ol.next_ref {
+                Some(_) => ol.next_at.max(now),
+                None => u64::MAX, // source exhausted
+            };
+        }
         self.refill();
         if self.queue_blocked {
             return u64::MAX;
@@ -171,6 +379,17 @@ impl Core {
         if span == 0 {
             return;
         }
+        if let Some(ol) = &self.open_loop {
+            // Blocked with a waiting FIFO: every skipped cycle is a
+            // stall, exactly as per-cycle stepping records. Idle (empty
+            // FIFO): nothing changes — arrivals due by the end of the
+            // span are admitted by the next stepped cycle's ol_admit,
+            // which reaches the same state as cycle-by-cycle admission.
+            if !ol.pending.is_empty() {
+                self.stall_cycles += span;
+            }
+            return;
+        }
         self.refill();
         let width = (CPU_PER_DRAM * IPC_MAX) as u64;
         let headroom = self.rob_limit().saturating_sub(self.insts);
@@ -189,6 +408,10 @@ impl Core {
     /// the memory system and returns the request id on acceptance.
     pub fn step(&mut self, now: u64,
                 try_send: &mut dyn FnMut(Request) -> bool) {
+        if self.open_loop.is_some() {
+            self.ol_step(now, try_send);
+            return;
+        }
         let mut budget = (CPU_PER_DRAM * IPC_MAX) as u64;
         let mut progressed = false;
 
@@ -507,6 +730,131 @@ mod tests {
         assert_eq!(core.insts, insts);
         assert_eq!(core.stall_cycles, stalls);
         assert_eq!(reads_fast, total);
+    }
+
+    #[test]
+    fn open_loop_skip_replays_stepping_exactly() {
+        // The open-loop leg of the time-skip contract: next_event + skip
+        // must reproduce step()'s exact trajectory — issue cycles,
+        // request arrival stamps, stalls — including across spans where
+        // admission is deferred.
+        let mk = || {
+            let mut c = Core::new(0, Box::new(FixedSource {
+                gap: 23, addr: 0, dependent: false }));
+            c.set_open_loop(4);
+            c
+        };
+        let horizon = 2_000u64;
+        // Memory that accepts every 3rd attempt: forces refused
+        // enqueues, head-of-line blocking, and saturation stretches.
+        let mut a = mk();
+        let mut issues_a = Vec::new();
+        {
+            let mut n = 0u64;
+            let mut send = |req: Request| {
+                n += 1;
+                if n % 3 == 0 {
+                    issues_a.push((req.addr, req.arrival));
+                    true
+                } else {
+                    false
+                }
+            };
+            for now in 0..horizon {
+                a.step(now, &mut send);
+                a.clear_queue_block(); // model: space may open any cycle
+            }
+        }
+        let mut b = mk();
+        let mut issues_b = Vec::new();
+        let mut now = 0u64;
+        let mut n = 0u64;
+        while now < horizon {
+            let e = b.next_event(now).min(horizon);
+            if e > now {
+                b.skip(e - now);
+                now = e;
+                continue;
+            }
+            let mut send = |req: Request| {
+                n += 1;
+                if n % 3 == 0 {
+                    issues_b.push((req.addr, req.arrival));
+                    true
+                } else {
+                    false
+                }
+            };
+            b.step(now, &mut send);
+            b.clear_queue_block();
+            now += 1;
+        }
+        assert_eq!(issues_a, issues_b);
+        assert_eq!(a.stall_cycles, b.stall_cycles);
+        assert_eq!(a.arrivals_offered(), b.arrivals_offered());
+        assert_eq!(a.open_loop_saturated(), b.open_loop_saturated());
+    }
+
+    #[test]
+    fn open_loop_saturation_latches_and_bounds_memory() {
+        // Memory that never accepts: the FIFO fills to its bound and
+        // the saturation latch fires; pending never exceeds the bound.
+        let mut c = Core::new(0, Box::new(FixedSource {
+            gap: 1, addr: 0, dependent: false }));
+        c.set_open_loop(8);
+        let mut send = |_req: Request| false;
+        for now in 0..100u64 {
+            c.step(now, &mut send);
+        }
+        assert!(c.open_loop_saturated());
+        assert_eq!(c.open_loop.as_ref().unwrap().pending.len(), 8);
+        assert_eq!(c.arrivals_offered(), 8);
+        assert!(c.stall_cycles > 0);
+    }
+
+    #[test]
+    fn open_loop_latency_counts_arrival_queue_wait() {
+        // One arrival at cycle 0, accepted at cycle 10, completed at
+        // cycle 50: the recorded latency is 50, not 40 — the FIFO wait
+        // is part of what the user experiences.
+        let mut c = Core::new(0, Box::new(FiniteSource { left: 1, addr: 0 }));
+        c.set_open_loop(4);
+        // FiniteSource gaps are 3: arrival lands at cycle 3.
+        let mut got = Vec::new();
+        for now in 0..10u64 {
+            let mut send = |req: Request| {
+                if now < 9 {
+                    return false;
+                }
+                got.push((req.id, req.arrival));
+                true
+            };
+            c.step(now, &mut send);
+            c.clear_queue_block();
+        }
+        assert_eq!(got.len(), 1);
+        let (id, arrival) = got[0];
+        assert_eq!(arrival, 3);
+        c.complete_read(id, arrival, 53);
+        let h = c.latency_hist().unwrap();
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), 50.0);
+    }
+
+    #[test]
+    fn open_loop_idle_gaps_are_skippable() {
+        // Empty FIFO: next_event is exactly the next arrival timestamp,
+        // so at low load almost every cycle is skippable.
+        let mut c = Core::new(0, Box::new(FixedSource {
+            gap: 1000, addr: 0, dependent: false }));
+        c.set_open_loop(4);
+        assert_eq!(c.next_event(0), 1000);
+        let mut send = |_req: Request| true;
+        c.skip(1000);
+        c.step(1000, &mut send);
+        assert_eq!(c.reads_issued, 1);
+        assert_eq!(c.stall_cycles, 0);
+        assert_eq!(c.next_event(1001), 2000);
     }
 
     #[test]

@@ -14,5 +14,5 @@ pub use controller::{Cmd, CmdKind, CmdSink, Controller, CtrlStats, Request,
 pub use cpu::Core;
 pub use dram::{Bank, BankState, Cycle, GateMutation, Rank, RegionCycles,
                MUTATION_SLACK};
-pub use system::{ChannelConfig, ChannelStats, System, SystemConfig,
-                 SystemStats};
+pub use system::{ChannelConfig, ChannelStats, OpenLoopStats, System,
+                 SystemConfig, SystemStats};

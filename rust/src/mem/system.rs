@@ -182,6 +182,27 @@ pub struct SystemStats {
     pub mean_temp_c: f64,
     /// Average across channels of the end-of-run DIMM temperature.
     pub final_temp_c: f64,
+    /// Open-loop instrumentation (None for closed-loop runs).
+    pub open_loop: Option<OpenLoopStats>,
+}
+
+/// What an open-loop run adds on top of `SystemStats`: the offered /
+/// completed accounting, the saturation verdict, and the merged
+/// read-latency histogram all tail quantiles come from (DESIGN.md §16).
+/// `PartialEq` is exact — the run/run_fast equivalence tests compare
+/// the whole struct, histogram bins included.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenLoopStats {
+    /// Arrivals admitted to the cores' arrival queues.
+    pub offered: u64,
+    /// An arrival queue overflowed: the offered load is past the knee
+    /// (the run halts at the next thermal epoch when this latches).
+    pub saturated: bool,
+    /// The saturation halt ended the run before its cycle budget.
+    pub halted: bool,
+    /// Arrival-to-completion read latency, merged across cores (all
+    /// cores share one grid: `cpu::LAT_HIST_MAX` × `LAT_HIST_BINS`).
+    pub hist: crate::util::hist::StreamHist,
 }
 
 impl SystemStats {
@@ -249,6 +270,11 @@ pub struct System {
     /// controller is `None` and costs one branch per issued command.
     checkers: Vec<Rc<RefCell<ProtocolChecker>>>,
     now: u64,
+    /// An open-loop saturation halt fired: the run ended early and any
+    /// further `run`/`run_fast` call returns immediately (so chunked
+    /// drivers like the lockstep engine stop at the same cycle as a
+    /// single-call run — DESIGN.md §16).
+    halted: bool,
 }
 
 impl System {
@@ -329,6 +355,7 @@ impl System {
             row_bytes: map.row_bytes(),
             checkers: Vec::new(),
             now: 0,
+            halted: false,
         };
         // `--check` attaches a conformance audit to every System any
         // harness builds, without threading a flag through each one.
@@ -447,11 +474,14 @@ impl System {
             core.step(now, &mut try_send);
         }
 
-        // Memory advances; completions wake cores.
+        // Memory advances; completions wake cores (open-loop cores also
+        // record arrival-to-finish latency — complete_read is exactly
+        // on_completion for closed-loop cores).
         for ctrl in &mut self.controllers {
             for c in ctrl.tick(now) {
                 if !c.is_write {
-                    self.cores[c.core].on_completion(c.id);
+                    self.cores[c.core].complete_read(c.id, c.arrival,
+                                                     c.finish);
                 }
             }
         }
@@ -497,10 +527,48 @@ impl System {
         self.now += 1;
     }
 
+    /// Switch every core to open-loop mode (bounded arrival queue of
+    /// `bound`, per-read latency histograms — see `mem::cpu` and
+    /// DESIGN.md §16). Must run before the first cycle; pair the system
+    /// with `workloads::arrival` sources, whose `gap_insts` carry
+    /// inter-arrival gaps in controller cycles.
+    pub fn set_open_loop(&mut self, bound: usize) {
+        assert_eq!(self.now, 0, "set_open_loop after the system ran");
+        for core in &mut self.cores {
+            core.set_open_loop(bound);
+        }
+    }
+
+    /// Any open-loop core's arrival queue overflowed: offered load
+    /// exceeds sustainable throughput (always false closed-loop).
+    pub fn open_loop_saturated(&self) -> bool {
+        self.cores.iter().any(Core::open_loop_saturated)
+    }
+
+    /// The run was terminated early by the saturation halt.
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
+    /// The saturation halt, identical under both drivers: fire only
+    /// right after an epoch-boundary cycle was *stepped* (the time-skip
+    /// driver steps every epoch boundary — its skip target is clamped
+    /// to the next one — and by then deferred admission has caught up,
+    /// so the latch state agrees with per-cycle stepping there).
+    fn halt_check(&mut self) -> bool {
+        if self.now % THERMAL_EPOCH == 1 && self.open_loop_saturated() {
+            self.halted = true;
+        }
+        self.halted
+    }
+
     pub fn run(&mut self, cycles: u64) -> SystemStats {
         let start = self.now;
-        while self.now - start < cycles {
+        while self.now - start < cycles && !self.halted {
             self.step();
+            if self.halt_check() {
+                break;
+            }
         }
         self.stats()
     }
@@ -515,10 +583,13 @@ impl System {
     /// oracle; `tests/integration_timeskip.rs` asserts the equivalence.
     pub fn run_fast(&mut self, cycles: u64) -> SystemStats {
         let end = self.now + cycles;
-        while self.now < end {
+        while self.now < end && !self.halted {
             let deq_before: u64 =
                 self.controllers.iter().map(|c| c.dequeues()).sum();
             self.step();
+            if self.halt_check() {
+                break;
+            }
             let deq_after: u64 =
                 self.controllers.iter().map(|c| c.dequeues()).sum();
             if deq_after > deq_before {
@@ -628,9 +699,28 @@ impl System {
             });
         }
         let n_ch = self.controllers.len() as f64;
+        let open_loop = if self.cores.iter().any(Core::is_open_loop) {
+            let mut hist = crate::util::hist::StreamHist::new(
+                0.0, super::cpu::LAT_HIST_MAX, super::cpu::LAT_HIST_BINS);
+            for c in &self.cores {
+                hist.merge(c.latency_hist()
+                    .expect("open-loop mode is per-system: set_open_loop \
+                             converts every core"));
+            }
+            Some(OpenLoopStats {
+                offered: self.cores.iter()
+                    .map(Core::arrivals_offered).sum(),
+                saturated: self.open_loop_saturated(),
+                halted: self.halted,
+                hist,
+            })
+        } else {
+            None
+        };
         SystemStats {
             cycles,
             cores,
+            open_loop,
             avg_read_latency_cycles: if reads > 0 {
                 lat_num / reads as f64
             } else {

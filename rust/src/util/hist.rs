@@ -105,6 +105,19 @@ impl StreamHist {
         self.n == 0
     }
 
+    /// Samples recorded below `lo` (they count toward `n`, carry exact
+    /// `min`/mean contributions, and anchor the underflow tail policy
+    /// of [`Self::quantile_interp`]).
+    pub fn underflow_count(&self) -> u64 {
+        self.underflow
+    }
+
+    /// Samples recorded at or above `hi` — see [`Self::quantile_interp`]
+    /// for the overflow tail policy.
+    pub fn overflow_count(&self) -> u64 {
+        self.overflow
+    }
+
     pub fn min(&self) -> f64 {
         self.min
     }
@@ -138,6 +151,50 @@ impl StreamHist {
             }
         }
         self.max
+    }
+
+    /// Interpolated quantile, the tail-latency extractor (p50/p95/p99/
+    /// p99.9 of the open-loop latency histograms — DESIGN.md §16).
+    ///
+    /// The continuous rank `r = q·(n−1)` is located in the cumulative
+    /// mass. The tail policy is explicit: a rank in the underflow tail
+    /// returns the exact `min`, a rank in the **overflow tail returns
+    /// the exact observed `max`** (a conservative upper bound — the
+    /// histogram cannot resolve past its top edge, and under-reporting
+    /// a tail latency is the one unacceptable failure), and `q = 0`/`q
+    /// = 1` return the exact extremes. A rank inside bin `i` assumes
+    /// the bin's `c` samples sit uniformly at `lo_i + w·(j+0.5)/c` and
+    /// interpolates linearly between them, then clamps to the exact
+    /// `[min, max]` so a sparse edge bin cannot extrapolate past real
+    /// data. Resolution is the bin width; the unit tests pin the
+    /// percentiles against exact sorted-sample quantiles.
+    ///
+    /// (The older [`Self::quantile`] keeps its nearest-rank bin-center
+    /// behavior — fleet summaries were recorded against it.)
+    pub fn quantile_interp(&self, q: f64) -> f64 {
+        assert!(self.n > 0, "quantile of an empty histogram");
+        assert!((0.0..=1.0).contains(&q));
+        if q == 0.0 {
+            return self.min;
+        }
+        if q == 1.0 {
+            return self.max;
+        }
+        let rank = (self.n - 1) as f64 * q;
+        if rank < self.underflow as f64 {
+            return self.min;
+        }
+        let mut seen = self.underflow as f64;
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 && rank < seen + c as f64 {
+                let bin_lo = self.lo + i as f64 * w;
+                let v = bin_lo + w * (rank - seen + 0.5) / c as f64;
+                return v.clamp(self.min, self.max);
+            }
+            seen += c as f64;
+        }
+        self.max // overflow tail
     }
 
     /// CDF points `(bin upper edge, cumulative fraction)` for plotting;
@@ -301,6 +358,83 @@ mod tests {
         assert!((h.quantile(0.1) - 10.0).abs() <= 1.0);
         assert_eq!(h.quantile(0.0), 0.5); // center of the first bin
         assert!(h.quantile(1.0) >= 99.0);
+    }
+
+    /// Exact sorted-sample quantile (linear interpolation between order
+    /// statistics at rank q·(n−1)) — the reference quantile_interp is
+    /// pinned against.
+    fn exact_quantile(xs: &[f64], q: f64) -> f64 {
+        let mut s = xs.to_vec();
+        s.sort_by(f64::total_cmp);
+        let h = q * (s.len() - 1) as f64;
+        let i = h.floor() as usize;
+        let frac = h - i as f64;
+        if i + 1 < s.len() {
+            s[i] + frac * (s[i + 1] - s[i])
+        } else {
+            s[i]
+        }
+    }
+
+    #[test]
+    fn quantile_interp_pins_to_exact_sorted_quantiles() {
+        // Uniform samples, everything in range: p50/p95/p99/p99.9 must
+        // land within one bin width of the exact sorted-sample value.
+        let mut rng = Rng::from_label("hist/interp-uniform");
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.range(0.0, 100.0)).collect();
+        let mut h = StreamHist::new(0.0, 100.0, 200);
+        for x in &xs {
+            h.record(*x);
+        }
+        let w = 100.0 / 200.0;
+        for q in [0.5, 0.95, 0.99, 0.999] {
+            let exact = exact_quantile(&xs, q);
+            let got = h.quantile_interp(q);
+            assert!((got - exact).abs() <= w,
+                    "q={q}: interp {got} vs exact {exact} (bin width {w})");
+        }
+        assert_eq!(h.quantile_interp(0.0), h.min());
+        assert_eq!(h.quantile_interp(1.0), h.max());
+    }
+
+    #[test]
+    fn quantile_interp_overflow_policy_is_the_exact_max() {
+        // Exponential samples with the histogram top edge inside the
+        // tail: ~0.7% of the mass overflows. Quantiles that resolve in
+        // the binned mass stay within a bin of exact; a quantile landing
+        // in the overflow tail reports the exact observed max — the
+        // conservative bound, never an under-report.
+        let mut rng = Rng::from_label("hist/interp-exp");
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| -20.0 * rng.f64().max(1e-12).ln())
+            .collect();
+        let mut h = StreamHist::new(0.0, 100.0, 100);
+        for x in &xs {
+            h.record(*x);
+        }
+        assert!(h.overflow_count() > 0, "tail must overflow for this test");
+        for q in [0.5, 0.95, 0.99] {
+            let exact = exact_quantile(&xs, q);
+            let got = h.quantile_interp(q);
+            assert!((got - exact).abs() <= 1.0,
+                    "q={q}: interp {got} vs exact {exact}");
+        }
+        // p99.9 of Exp(20) sits near 138 — past the top edge.
+        assert_eq!(h.quantile_interp(0.999), h.max());
+        assert!(h.max() > 100.0);
+    }
+
+    #[test]
+    fn quantile_interp_underflow_policy_is_the_exact_min() {
+        let mut h = StreamHist::new(0.0, 10.0, 10);
+        for x in [-5.0, -4.0, -3.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] {
+            h.record(x);
+        }
+        // Ranks 0..3 are underflow mass: the exact min comes back.
+        assert_eq!(h.quantile_interp(0.1), -5.0);
+        assert_eq!(h.quantile_interp(0.2), -5.0);
+        // In-range mass interpolates normally.
+        assert!(h.quantile_interp(0.9) > 4.0);
     }
 
     #[test]

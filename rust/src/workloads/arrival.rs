@@ -1,0 +1,289 @@
+//! Open-loop arrival processes (DESIGN.md §16).
+//!
+//! Closed-loop cores retire instructions and issue the next reference
+//! only when the previous one allows it, so the offered request rate is
+//! a *consequence* of memory latency. A latency-vs-throughput curve —
+//! the knee where queueing delay diverges, and the p99/p99.9 tail below
+//! it — needs the opposite: an *offered load* in requests per
+//! controller cycle that arrives regardless of how the memory system is
+//! doing. An [`ArrivalSource`] provides exactly that by wrapping any
+//! workload's [`RequestSource`] and rewriting each reference's
+//! `gap_insts` field to carry an inter-arrival gap in **controller
+//! cycles** drawn from an arrival process (the address / read-write
+//! pattern of the inner workload is kept untouched, so "gups under
+//! Poisson load" stresses the same rows and banks as closed-loop gups).
+//!
+//! Three processes cover the shapes that matter for tail latency:
+//!
+//! * [`ArrivalKind::Poisson`] — memoryless: i.i.d. exponential gaps
+//!   with mean `1/load`. The M/D/c-ish baseline.
+//! * [`ArrivalKind::Bursty`] — a two-state Markov-modulated process:
+//!   after every arrival the state flips with probability `1 - stay`,
+//!   and the on-state draws gaps `burst` times shorter than the
+//!   off-state. Long-run rate is still `load`; the clustering is what
+//!   drives p99.9 away from p50 at equal mean load.
+//! * [`ArrivalKind::Diurnal`] — a deterministic sinusoid modulating the
+//!   instantaneous rate, `r(t) = load * (1 + amp * sin(2πt/period))`,
+//!   evaluated at the stream's own accumulated arrival time (a scaled
+//!   stand-in for day-scale load swings; `period` is in controller
+//!   cycles). Exercises slow load drift across thermal epochs.
+//!
+//! Every draw comes from the source's own [`Rng`] labelled
+//! `arrival/{kind}/{seed}` — deliberately *without* the load in the
+//! label, so sweeping load over one seed reuses the same underlying
+//! uniform stream (common random numbers: the Poisson gap at load L is
+//! exactly the load-L' gap scaled by L'/L, which smooths knee searches).
+//! The stream is timing-independent — gaps depend only on the rng and
+//! the process, never on simulated state — which is what lets K lockstep
+//! systems share ONE generation through `eval::lockstep::SharedSourceSet`
+//! (the `repro eval load` sweep) and what keeps `run`/`run_fast`
+//! bit-identical (DESIGN.md §16 sketches the proof).
+
+use crate::util::rng::Rng;
+use crate::workloads::{MemRef, NamedSource, RequestSource, WorkloadSpec};
+
+/// Default off/on mean-gap ratio for [`ArrivalKind::Bursty`].
+pub const BURST_RATIO: f64 = 8.0;
+/// Default per-arrival probability of *staying* in the current burst
+/// state (mean run length 32 arrivals).
+pub const BURST_STAY: f64 = 1.0 - 1.0 / 32.0;
+/// Default modulation amplitude for [`ArrivalKind::Diurnal`].
+pub const DIURNAL_AMP: f64 = 0.8;
+/// Default modulation period for [`ArrivalKind::Diurnal`], in
+/// controller cycles (64 thermal epochs).
+pub const DIURNAL_PERIOD: u64 = 1 << 16;
+
+/// The arrival-process family. See the module docs for semantics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    Poisson,
+    Bursty { burst: f64, stay: f64 },
+    Diurnal { amp: f64, period: u64 },
+}
+
+impl ArrivalKind {
+    /// CLI name → kind with the module-level default parameters.
+    pub fn by_name(name: &str) -> Option<ArrivalKind> {
+        match name {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "bursty" => Some(ArrivalKind::Bursty {
+                burst: BURST_RATIO,
+                stay: BURST_STAY,
+            }),
+            "diurnal" => Some(ArrivalKind::Diurnal {
+                amp: DIURNAL_AMP,
+                period: DIURNAL_PERIOD,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty { .. } => "bursty",
+            ArrivalKind::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// An offered-load point: `load` requests per controller cycle (per
+/// core), shaped by `kind`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalSpec {
+    pub kind: ArrivalKind,
+    pub load: f64,
+}
+
+impl ArrivalSpec {
+    /// The open-loop source: `w`'s address/read-write stream with gaps
+    /// redrawn from this arrival process. Feed it to a core running in
+    /// open-loop mode ([`crate::mem::System::set_open_loop`]) — the
+    /// closed-loop core would misread the gaps as instruction counts.
+    pub fn source(&self, w: &WorkloadSpec, seed_label: &str)
+                  -> Box<dyn RequestSource> {
+        assert!(self.load > 0.0 && self.load.is_finite(),
+                "offered load must be positive, got {}", self.load);
+        Box::new(ArrivalSource {
+            inner: w.source(seed_label),
+            rng: Rng::from_label(
+                &format!("arrival/{}/{seed_label}", self.kind.name())),
+            kind: self.kind,
+            load: self.load,
+            on_state: true,
+            t: 0,
+        })
+    }
+
+    /// [`Self::source`] with the stream metadata the lockstep sharing
+    /// and trace machinery key on.
+    pub fn named_source(&self, w: &WorkloadSpec, seed_label: &str)
+                        -> NamedSource {
+        NamedSource {
+            name: format!("{}+{}", w.name, self.kind.name()),
+            seed: seed_label.to_string(),
+            footprint: w.footprint,
+            source: self.source(w, seed_label),
+        }
+    }
+}
+
+/// Gap-rewriting wrapper: the inner workload supplies addresses and
+/// read/write flags, the arrival process supplies timing.
+struct ArrivalSource {
+    inner: Box<dyn RequestSource>,
+    rng: Rng,
+    kind: ArrivalKind,
+    load: f64,
+    /// Bursty: current modulation state (on = short gaps).
+    on_state: bool,
+    /// Diurnal: accumulated arrival time (sum of emitted gaps).
+    t: u64,
+}
+
+impl ArrivalSource {
+    /// Exponential gap with the given mean, rounded to whole cycles and
+    /// clamped exactly as the closed-loop `Generator::gap` clamps (so a
+    /// pathological draw cannot overflow downstream u64 arithmetic).
+    fn exp_gap(&mut self, mean: f64) -> u32 {
+        let u = self.rng.f64().max(1e-12);
+        (-mean * u.ln()).round().min(1e7) as u32
+    }
+
+    fn draw_gap(&mut self) -> u32 {
+        match self.kind {
+            ArrivalKind::Poisson => {
+                let mean = 1.0 / self.load;
+                self.exp_gap(mean)
+            }
+            ArrivalKind::Bursty { burst, stay } => {
+                if !self.rng.chance(stay) {
+                    self.on_state = !self.on_state;
+                }
+                // Means chosen so the two states average to 1/load:
+                // g_on + g_off = 2/load with g_off = burst * g_on.
+                let g_on = (2.0 / self.load) / (1.0 + burst);
+                let mean = if self.on_state { g_on } else { g_on * burst };
+                self.exp_gap(mean)
+            }
+            ArrivalKind::Diurnal { amp, period } => {
+                let phase = (self.t % period) as f64 / period as f64;
+                let rate = self.load
+                    * (1.0 + amp * (2.0 * std::f64::consts::PI * phase).sin());
+                // amp < 1 keeps the rate positive; clamp defensively so
+                // a user-supplied amp >= 1 degrades to huge gaps rather
+                // than NaN/negative means.
+                let mean = 1.0 / rate.max(self.load * 1e-3);
+                self.exp_gap(mean)
+            }
+        }
+    }
+}
+
+impl RequestSource for ArrivalSource {
+    fn fill(&mut self, out: &mut Vec<MemRef>) -> usize {
+        let start = out.len();
+        let n = self.inner.fill(out);
+        for r in &mut out[start..] {
+            let gap = self.draw_gap();
+            r.gap_insts = gap; // reinterpreted: controller cycles
+            r.dependent = false; // open-loop has no dependence semantics
+            self.t += gap as u64;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    fn pull(spec: &ArrivalSpec, seed: &str, n: usize) -> Vec<MemRef> {
+        let w = by_name("gups").unwrap();
+        let mut src = spec.source(&w, seed);
+        let mut out = Vec::new();
+        while out.len() < n {
+            if src.fill(&mut out) == 0 {
+                break;
+            }
+        }
+        out.truncate(n);
+        out
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_offered_load() {
+        for load in [0.01, 0.1, 0.5] {
+            let spec = ArrivalSpec { kind: ArrivalKind::Poisson, load };
+            let refs = pull(&spec, "t", 20_000);
+            let mean: f64 = refs.iter().map(|r| r.gap_insts as f64)
+                .sum::<f64>() / refs.len() as f64;
+            let want = 1.0 / load;
+            assert!((mean - want).abs() / want < 0.05,
+                    "load {load}: mean gap {mean} vs {want}");
+        }
+    }
+
+    #[test]
+    fn bursty_and_diurnal_hold_the_long_run_rate() {
+        for name in ["bursty", "diurnal"] {
+            let kind = ArrivalKind::by_name(name).unwrap();
+            let spec = ArrivalSpec { kind, load: 0.1 };
+            let refs = pull(&spec, "t", 50_000);
+            let mean: f64 = refs.iter().map(|r| r.gap_insts as f64)
+                .sum::<f64>() / refs.len() as f64;
+            assert!((mean - 10.0).abs() < 1.0,
+                    "{name}: mean gap {mean} vs 10");
+        }
+    }
+
+    #[test]
+    fn bursty_clusters_more_than_poisson() {
+        // Squared coefficient of variation of gaps: Poisson ≈ 1, the
+        // two-state MMPP must sit clearly above it at equal mean load.
+        let scv = |kind: ArrivalKind| {
+            let refs = pull(&ArrivalSpec { kind, load: 0.1 }, "t", 50_000);
+            let gaps: Vec<f64> =
+                refs.iter().map(|r| r.gap_insts as f64).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>()
+                / gaps.len() as f64;
+            v / (m * m)
+        };
+        let poisson = scv(ArrivalKind::Poisson);
+        let bursty = scv(ArrivalKind::by_name("bursty").unwrap());
+        assert!(poisson < 1.3, "poisson scv {poisson}");
+        assert!(bursty > 1.5 * poisson,
+                "bursty scv {bursty} vs poisson {poisson}");
+    }
+
+    #[test]
+    fn addresses_are_the_inner_workloads_regardless_of_kind() {
+        // The arrival process must only touch timing: same seed, same
+        // workload → identical address / read-write sequences across
+        // kinds (and across loads).
+        let base: Vec<(u64, bool)> =
+            pull(&ArrivalSpec { kind: ArrivalKind::Poisson, load: 0.1 },
+                 "s", 2_000)
+                .iter().map(|r| (r.addr, r.is_write)).collect();
+        for (name, load) in [("poisson", 0.5), ("bursty", 0.1),
+                             ("diurnal", 0.1)] {
+            let kind = ArrivalKind::by_name(name).unwrap();
+            let got: Vec<(u64, bool)> =
+                pull(&ArrivalSpec { kind, load }, "s", 2_000)
+                    .iter().map(|r| (r.addr, r.is_write)).collect();
+            assert_eq!(base, got, "{name}@{load} changed the access stream");
+        }
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_distinct() {
+        let spec = ArrivalSpec { kind: ArrivalKind::Poisson, load: 0.05 };
+        let a = pull(&spec, "seed-a", 1_000);
+        let b = pull(&spec, "seed-a", 1_000);
+        let c = pull(&spec, "seed-b", 1_000);
+        assert_eq!(a, b, "same seed must replay bit-identically");
+        assert_ne!(a, c, "different seeds must differ");
+    }
+}

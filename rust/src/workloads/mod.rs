@@ -15,6 +15,7 @@
 //! * [`mix`] — named multi-programmed mixes (intensive × non-intensive
 //!   pairings) for the paper's multi-core evaluation.
 
+pub mod arrival;
 pub mod fuzz;
 pub mod mix;
 pub mod trace;

@@ -1,0 +1,233 @@
+//! Open-loop equivalence matrix (DESIGN.md §16): with arrival-driven
+//! cores, the event-driven `System::run_fast` driver must produce
+//! *bit-identical* statistics — every counter, every derived float, and
+//! the whole latency histogram (`OpenLoopStats`, `PartialEq` down to
+//! the bins) — to the cycle-stepped oracle `System::run`, across
+//! {Poisson, bursty, diurnal} arrivals x {uniform, region-indexed}
+//! timing. Plus the saturation fail-loud contract (bounded FIFO, halt
+//! at the next epoch), arrival-seed determinism, and the
+//! shared-stream guarantee that K lockstep consumers see identical
+//! arrivals. (The Python mirror carries the same matrix in
+//! `.claude/skills/verify/mirror/load_checks.py`.)
+
+use aldram::aldram::AlDram;
+use aldram::eval::load::{self, LoadSetup};
+use aldram::eval::lockstep::SharedSourceSet;
+use aldram::eval::Driver;
+use aldram::mem::system::THERMAL_EPOCH;
+use aldram::mem::{System, SystemConfig, SystemStats};
+use aldram::timing::TimingParams;
+use aldram::workloads::arrival::{ArrivalKind, ArrivalSpec};
+use aldram::workloads::{by_name, MemRef, NamedSource};
+
+const CYCLES: u64 = 30_000;
+const BOUND: usize = 256;
+
+fn kind(name: &str) -> ArrivalKind {
+    ArrivalKind::by_name(name).unwrap()
+}
+
+fn fast_timings() -> TimingParams {
+    TimingParams::ddr3_standard().reduced(0.27, 0.32, 0.33, 0.18)
+}
+
+/// A deliberately non-uniform region grid (8 banks x 2 row regions with
+/// a per-bank wobble), as in `integration_timeskip`.
+fn region_grid() -> aldram::aldram::RegionTable {
+    let entries: Vec<AlDram> = (0..16)
+        .map(|i| {
+            let (bank, region) = (i / 2, i % 2);
+            let f = 1.0 - 0.02 * bank as f64;
+            let t = if region == 0 {
+                fast_timings().with_core(
+                    fast_timings().trcd_ns * f,
+                    fast_timings().tras_ns * f,
+                    fast_timings().twr_ns * f,
+                    fast_timings().trp_ns * f,
+                )
+            } else {
+                TimingParams::ddr3_standard()
+                    .reduced(0.10, 0.12, 0.15, 0.08)
+            };
+            AlDram::fixed(t)
+        })
+        .collect();
+    aldram::aldram::RegionTable::from_regions(8, 2, entries).unwrap()
+}
+
+fn sources(kind: ArrivalKind, load: f64, cores: usize, seed: &str)
+           -> Vec<NamedSource> {
+    let spec = ArrivalSpec { kind, load };
+    let w = by_name("gups").unwrap();
+    (0..cores)
+        .map(|c| spec.named_source(&w, &format!("{seed}/core{c}")))
+        .collect()
+}
+
+fn open_system(cfg: &SystemConfig, kind: ArrivalKind, load: f64,
+               cores: usize, seed: &str) -> System {
+    let mut sys = System::with_sources(cfg, sources(kind, load, cores, seed));
+    sys.set_open_loop(BOUND);
+    sys
+}
+
+/// Field-by-field bit-exact equality, including the open-loop block
+/// (offered/saturated/halted and every histogram bin).
+fn assert_stats_identical(label: &str, a: &SystemStats, b: &SystemStats) {
+    assert_eq!(a.cycles, b.cycles, "{label}: cycles");
+    assert_eq!(a.reads_done, b.reads_done, "{label}: reads_done");
+    assert_eq!(a.writes_done, b.writes_done, "{label}: writes_done");
+    assert_eq!(a.refreshes, b.refreshes, "{label}: refreshes");
+    assert_eq!(a.avg_read_latency_cycles, b.avg_read_latency_cycles,
+               "{label}: avg_read_latency");
+    assert_eq!(a.row_hit_rate, b.row_hit_rate, "{label}: row_hit_rate");
+    assert_eq!(a.bus_utilization, b.bus_utilization,
+               "{label}: bus_utilization");
+    assert_eq!(a.mean_temp_c, b.mean_temp_c, "{label}: mean_temp_c");
+    assert_eq!(a.final_temp_c, b.final_temp_c, "{label}: final_temp_c");
+    for (ca, cb) in a.cores.iter().zip(&b.cores) {
+        assert_eq!(ca.insts, cb.insts, "{label}/{}: insts", ca.name);
+        assert_eq!(ca.ipc, cb.ipc, "{label}/{}: ipc", ca.name);
+        assert_eq!(ca.reads, cb.reads, "{label}/{}: reads", ca.name);
+        assert_eq!(ca.writes, cb.writes, "{label}/{}: writes", ca.name);
+        assert_eq!(ca.stall_cycles, cb.stall_cycles,
+                   "{label}/{}: stall_cycles", ca.name);
+    }
+    assert_eq!(a.open_loop, b.open_loop, "{label}: open-loop block");
+    let ol = a.open_loop.as_ref().expect("open-loop stats present");
+    assert!(ol.offered >= a.reads_done + a.writes_done,
+            "{label}: completions exceed arrivals");
+}
+
+fn check(label: &str, cfg: &SystemConfig, kind: ArrivalKind, load: f64) {
+    let sa = open_system(cfg, kind, load, 2, "eqv").run(CYCLES);
+    let sb = open_system(cfg, kind, load, 2, "eqv").run_fast(CYCLES);
+    assert_stats_identical(label, &sa, &sb);
+}
+
+#[test]
+fn drivers_agree_uniform_timing_all_arrival_kinds() {
+    let cfg = SystemConfig::paper_default();
+    for name in ["poisson", "bursty", "diurnal"] {
+        for load in [0.01, 0.08] {
+            check(&format!("uniform/{name}/{load}"), &cfg, kind(name),
+                  load);
+        }
+    }
+}
+
+#[test]
+fn drivers_agree_region_indexed_timing_all_arrival_kinds() {
+    let cfg = SystemConfig::paper_default()
+        .with_region_table(Some(region_grid()))
+        .with_ambient(30.0);
+    for name in ["poisson", "bursty", "diurnal"] {
+        check(&format!("regions/{name}"), &cfg, kind(name), 0.05);
+    }
+}
+
+#[test]
+fn drivers_agree_past_saturation() {
+    // Past the knee both drivers must latch saturation and halt at the
+    // *same* epoch boundary with identical partial stats.
+    let cfg = SystemConfig::paper_default();
+    let sa = open_system(&cfg, kind("poisson"), 4.0, 1, "sat").run(CYCLES);
+    let sb = open_system(&cfg, kind("poisson"), 4.0, 1, "sat")
+        .run_fast(CYCLES);
+    assert_stats_identical("saturated", &sa, &sb);
+    let ol = sa.open_loop.as_ref().unwrap();
+    assert!(ol.saturated && ol.halted, "overload must saturate and halt");
+}
+
+#[test]
+fn saturation_at_twice_the_knee_halts_early() {
+    // The fail-loud regression: at 2x the measured knee the run must
+    // (a) latch the saturated marker, (b) halt well short of the cycle
+    // budget (at an epoch boundary + 1), and (c) never have held more
+    // than `bound` queued arrivals — offered stays within completions +
+    // in-flight capacity + FIFO bound per core.
+    let cfg = SystemConfig::paper_default();
+    let setup = LoadSetup {
+        workload: by_name("gups").unwrap(),
+        kind: kind("poisson"),
+        cores: 1,
+        cycles: CYCLES,
+        seed: "knee".into(),
+        bound: BOUND,
+    };
+    let curve = load::knee_search(&cfg, &setup, 0.1, Driver::TimeSkip);
+    assert!(curve.knee > 0.0);
+    let stats = open_system(&cfg, kind("poisson"), 2.0 * curve.knee,
+                            1, "knee").run_fast(CYCLES);
+    let ol = stats.open_loop.as_ref().unwrap();
+    assert!(ol.saturated, "2x knee must saturate");
+    assert!(ol.halted, "saturation must halt the run");
+    assert!(stats.cycles < CYCLES, "halt must cut the budget short");
+    assert_eq!((stats.cycles - 1) % THERMAL_EPOCH, 0,
+               "halt lands right after an epoch boundary");
+    let in_flight_cap = 64; // generous bound on per-core MLP
+    assert!(ol.offered
+            <= stats.reads_done + stats.writes_done
+                + (BOUND + in_flight_cap) as u64,
+            "admissions exceeded the bounded-FIFO contract: {} offered, \
+             {} done", ol.offered, stats.reads_done + stats.writes_done);
+}
+
+#[test]
+fn same_seed_is_bit_identical_and_seeds_differ() {
+    let cfg = SystemConfig::paper_default();
+    let a = open_system(&cfg, kind("bursty"), 0.05, 1, "s1")
+        .run_fast(CYCLES);
+    let b = open_system(&cfg, kind("bursty"), 0.05, 1, "s1")
+        .run_fast(CYCLES);
+    assert_stats_identical("same-seed", &a, &b);
+    let c = open_system(&cfg, kind("bursty"), 0.05, 1, "s2")
+        .run_fast(CYCLES);
+    assert!(a.open_loop != c.open_loop
+                || a.reads_done != c.reads_done
+                || a.cycles != c.cycles,
+            "distinct seeds must yield distinct arrival streams");
+}
+
+#[test]
+fn lockstep_consumers_see_identical_arrival_streams() {
+    // The shared-stream guarantee `eval load` rests on: K consumers of
+    // one SharedSourceSet yield bit-identical MemRef sequences
+    // (addresses AND arrival gaps), so per-table differences are purely
+    // the timing tables' doing.
+    let shared = SharedSourceSet::new(sources(kind("diurnal"), 0.03,
+                                              2, "lk"));
+    let mut consumers: Vec<Vec<NamedSource>> =
+        (0..3).map(|_| shared.consumer()).collect();
+    for core in 0..2 {
+        let mut streams: Vec<Vec<MemRef>> = Vec::new();
+        for consumer in &mut consumers {
+            let mut buf: Vec<MemRef> = Vec::new();
+            while buf.len() < 4096 {
+                assert!(consumer[core].source.fill(&mut buf) > 0);
+            }
+            streams.push(buf);
+        }
+        for s in &streams[1..] {
+            assert_eq!(&streams[0], s,
+                       "consumers diverged on core {core}'s stream");
+        }
+    }
+}
+
+#[test]
+fn chunked_lockstep_run_matches_single_call() {
+    // run_point drives systems in LOCKSTEP_CHUNK spans; a chunked
+    // run_fast must land on the same stats as one full-length call.
+    let cfg = SystemConfig::paper_default();
+    let whole = open_system(&cfg, kind("poisson"), 0.05, 1, "ck")
+        .run_fast(CYCLES);
+    let mut sys = open_system(&cfg, kind("poisson"), 0.05, 1, "ck");
+    let mut left = CYCLES;
+    while left > 7_000 {
+        sys.run_fast(7_000);
+        left -= 7_000;
+    }
+    let chunked = sys.run_fast(left);
+    assert_stats_identical("chunked", &whole, &chunked);
+}
